@@ -1,0 +1,68 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Run the *native* SLA kernel (pure Rust, true block skipping) and
+//!    compare against full attention: accuracy + FLOPs gain.
+//! 2. Load the AOT'd Pallas SLA kernel through PJRT and cross-check the
+//!    numerics against the native kernel.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use sla_dit::attention::{flops::FlopsReport, full, SlaConfig, SlaKernel};
+use sla_dit::metrics;
+use sla_dit::runtime::{HostTensor, Runtime};
+use sla_dit::tensor::Mat;
+use sla_dit::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---------- 1. native kernel ----------
+    let (n, d) = (1024, 64);
+    let mut rng = Rng::new(0);
+    let q = Mat::randn(n, d, &mut rng);
+    let k = Mat::randn(n, d, &mut rng);
+    let v = Mat::randn(n, d, &mut rng);
+
+    let cfg = SlaConfig { bq: 64, bkv: 64, kh_pct: 5.0, kl_pct: 10.0, ..Default::default() };
+    let kernel = SlaKernel::new(cfg, d);
+
+    let t0 = std::time::Instant::now();
+    let out = kernel.forward(&q, &k, &v, None);
+    let t_sla = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let (o_full, _) = full::flash_forward(&q, &k, &v, 64, 64);
+    let t_full = t0.elapsed();
+
+    let rep = FlopsReport::sla(&out.mask, n, 64, 64, d);
+    println!("== native SLA kernel (N={n}, d={d}) ==");
+    println!("sparsity          : {:.1}%", 100.0 * out.mask.sparsity());
+    println!("FLOPs gain        : {:.1}x (full {:.2} MF -> {:.2} MF)",
+             rep.gain(), rep.full as f64 / 1e6, rep.total() as f64 / 1e6);
+    println!("wall-clock        : full {:.1} ms, SLA {:.1} ms ({:.1}x)",
+             t_full.as_secs_f64() * 1e3, t_sla.as_secs_f64() * 1e3,
+             t_full.as_secs_f64() / t_sla.as_secs_f64());
+    println!("rel-L1 vs full    : {:.4} (zero-init proj == sparse component)",
+             metrics::rel_l1(&out.o.data, &o_full.data));
+
+    // ---------- 2. AOT Pallas kernel via PJRT ----------
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\n(skipping PJRT half: {e}; run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    println!("\n== AOT Pallas SLA kernel via PJRT ({}) ==", rt.platform());
+    let art = rt.load("attn_sla_n1024_d64")?;
+    let proj = HostTensor::zeros(vec![d, d]);
+    let outs = art.execute(&[
+        HostTensor::from_mat(&q),
+        HostTensor::from_mat(&k),
+        HostTensor::from_mat(&v),
+        proj,
+    ])?;
+    let o_pjrt = outs[0].to_mat()?;
+    let diff = o_pjrt.max_abs_diff(&out.o);
+    println!("max |native - pallas| = {diff:.2e}  (two independent implementations)");
+    anyhow::ensure!(diff < 1e-3, "kernel implementations disagree");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Serving demo (Fig. 6b shape): run the coordinator over the same Poisson
+//! request trace with the full-attention model and the SLA model, and
+//! compare end-to-end latency / throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_video [-- <requests>]`
+
+use sla_dit::coordinator::{ArtifactBackend, Coordinator, CoordinatorConfig};
+use sla_dit::runtime::Runtime;
+use sla_dit::workload::{RequestGen, WorkloadConfig};
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    let trace = RequestGen::generate(&WorkloadConfig {
+        requests,
+        rate: 2.0,
+        steps_choices: vec![6, 8],
+        cfg_fraction: 0.5,
+        seed: 99,
+    });
+    println!("trace: {} requests, {} total model calls\n",
+             trace.len(), RequestGen::total_nfe(&trace));
+
+    let mut results = Vec::new();
+    for variant in ["full", "sla"] {
+        let backend = ArtifactBackend::new(&rt, variant, 0)?;
+        let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+        let report = coord.run_trace(&trace, None)?;
+        println!("[{variant:>6}] {}", report.summary());
+        results.push((variant, report));
+    }
+    let (_, full) = &results[0];
+    let (_, sla) = &results[1];
+    println!(
+        "\nend-to-end speedup (SLA vs full): {:.2}x mean latency, {:.2}x makespan",
+        full.mean_latency() / sla.mean_latency().max(1e-9),
+        full.total_s / sla.total_s.max(1e-9),
+    );
+    Ok(())
+}

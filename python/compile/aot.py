@@ -1,0 +1,299 @@
+"""AOT compile path: lower L2/L1 JAX functions to HLO *text* + manifest.
+
+Emits, per attention variant:
+  * dit_denoise_<variant>      (params..., x, t, cond) -> (velocity,)
+  * dit_train_step_<variant>   (params..., m..., v..., step, x0, cond, t, noise)
+                               -> (params'..., m'..., v'..., step', loss)
+and standalone attention micro-executables for the kernel benches:
+  * attn_<variant>_nN_dD       (q, k, v[, proj]) -> (o,)
+
+Interchange format is HLO TEXT, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the rust `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+`artifacts/manifest.json` describes every artifact: file, config, ordered
+input/output specs (name/shape/dtype), so the Rust runtime can feed and
+unpack executables by name. Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import features, flash, linear, mask as mask_mod, sla, sparse
+
+# ---------------------------------------------------------------------------
+# configs: every variant the evaluation section needs
+# ---------------------------------------------------------------------------
+
+BASE = dict(video=(4, 8, 8), channels=8, dim=128, depth=4, heads=4,
+            cond_dim=16, bq=16, bkv=16)
+
+# name -> DiTConfig. Tn = 256/16 = 16 KV blocks, so kh=5/10/20% map to
+# 1/2/3 critical blocks per row (distinct ablation points).
+CONFIGS = {
+    "full":       model_mod.DiTConfig(**BASE, attn="full"),
+    "sla":        model_mod.DiTConfig(**BASE, attn="sla", kh_pct=5.0, kl_pct=10.0),
+    "sparse":     model_mod.DiTConfig(**BASE, attn="sparse", kh_pct=5.0, kl_pct=10.0),
+    "linear":     model_mod.DiTConfig(**BASE, attn="linear"),
+    "ls":         model_mod.DiTConfig(**BASE, attn="ls", kh_pct=5.0, kl_pct=10.0),
+    "sla_elu1":   model_mod.DiTConfig(**BASE, attn="sla", phi="elu1"),
+    "sla_relu":   model_mod.DiTConfig(**BASE, attn="sla", phi="relu"),
+    "sla_kh10":   model_mod.DiTConfig(**BASE, attn="sla", kh_pct=10.0, kl_pct=10.0),
+    "sla_kh20":   model_mod.DiTConfig(**BASE, attn="sla", kh_pct=20.0, kl_pct=10.0),
+    # sparse baseline at higher budget (Sparge-T-like operating point)
+    "sparse_k15": model_mod.DiTConfig(**BASE, attn="sparse", kh_pct=15.0, kl_pct=10.0),
+}
+
+# 2-D image-generation variants (Table 3 / LightningDiT substitution): same
+# token budget on a single-frame 16x16 patch grid. The paper's Table-3
+# baselines sit at 75% sparsity -> kh=25% for the sparse comparator.
+IMG = dict(BASE, video=(1, 16, 16))
+CONFIGS.update({
+    "img_full":   model_mod.DiTConfig(**IMG, attn="full"),
+    "img_sla":    model_mod.DiTConfig(**IMG, attn="sla", kh_pct=12.5, kl_pct=10.0),
+    "img_sparse": model_mod.DiTConfig(**IMG, attn="sparse", kh_pct=25.0, kl_pct=10.0),
+})
+
+TRAIN_BATCH = 4
+TRAIN_LR = 1e-3
+
+# standalone attention micro-executables (for Fig. 6 kernel benches / rust
+# numerics cross-checks): (variant, N, d, bq, bkv)
+ATTN_SIZES = [
+    ("full", 1024, 64, 64, 64),
+    ("sla", 1024, 64, 64, 64),
+    ("sparse", 1024, 64, 64, 64),
+    ("linear", 1024, 64, 64, 64),
+    ("full", 256, 32, 16, 16),
+    ("sla", 256, 32, 16, 16),
+]
+ATTN_KH, ATTN_KL = 5.0, 10.0
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def leaf_specs(tree, prefix: str):
+    """Flatten a pytree into (name, ShapeDtypeStruct) leaves with stable,
+    path-derived names like `blocks.0.qkv.w`."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = prefix + jax.tree_util.keystr(path, simple=True, separator=".")
+        out.append((name, jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)))
+    return out
+
+
+def spec_json(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def _write(out_dir, fname, text):
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# artifact builders
+# ---------------------------------------------------------------------------
+
+def build_denoise(cfg_name: str, cfg: model_mod.DiTConfig, out_dir: str, manifest):
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    treedef = jax.tree_util.tree_structure(params)
+    pspecs = leaf_specs(params, "params.")
+    n, c = cfg.seq_len, cfg.channels
+
+    def fn(*flat):
+        np_ = len(pspecs)
+        p = jax.tree_util.tree_unflatten(treedef, flat[:np_])
+        x, t, cond = flat[np_], flat[np_ + 1], flat[np_ + 2]
+        return (model_mod.dit_forward(cfg, p, x, t, cond),)
+
+    in_specs = [s for _, s in pspecs] + [
+        jax.ShapeDtypeStruct((n, c), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.cond_dim,), jnp.float32),
+    ]
+    in_names = [nm for nm, _ in pspecs] + ["x", "t", "cond"]
+    lowered = jax.jit(fn).lower(*in_specs)
+    name = f"dit_denoise_{cfg_name}"
+    sha = _write(out_dir, f"{name}.hlo.txt", to_hlo_text(lowered))
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "kind": "denoise",
+        "config": cfg_name,
+        "sha256_16": sha,
+        "inputs": [spec_json(nm, s) for nm, s in zip(in_names, in_specs)],
+        "outputs": [spec_json("velocity", jax.ShapeDtypeStruct((n, c), jnp.float32))],
+    }
+
+
+def build_train_step(cfg_name: str, cfg: model_mod.DiTConfig, out_dir: str, manifest):
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    state = train_mod.adam_init(params)
+    treedef = jax.tree_util.tree_structure(params)
+    pspecs = leaf_specs(params, "params.")
+    mspecs = leaf_specs(state.m, "adam_m.")
+    vspecs = leaf_specs(state.v, "adam_v.")
+    n, c, b = cfg.seq_len, cfg.channels, TRAIN_BATCH
+    step_fn = train_mod.make_train_step(cfg, lr=TRAIN_LR)
+
+    np_ = len(pspecs)
+
+    def fn(*flat):
+        p = jax.tree_util.tree_unflatten(treedef, flat[:np_])
+        m = jax.tree_util.tree_unflatten(treedef, flat[np_:2 * np_])
+        v = jax.tree_util.tree_unflatten(treedef, flat[2 * np_:3 * np_])
+        step, x0, cond, t, noise = flat[3 * np_:3 * np_ + 5]
+        st = train_mod.AdamState(m=m, v=v, step=step)
+        new_p, new_st, loss = step_fn(p, st, x0, cond, t, noise)
+        return (
+            tuple(jax.tree_util.tree_leaves(new_p))
+            + tuple(jax.tree_util.tree_leaves(new_st.m))
+            + tuple(jax.tree_util.tree_leaves(new_st.v))
+            + (new_st.step, loss)
+        )
+
+    data_specs = [
+        ("step", jax.ShapeDtypeStruct((), jnp.float32)),
+        ("x0", jax.ShapeDtypeStruct((b, n, c), jnp.float32)),
+        ("cond", jax.ShapeDtypeStruct((b, cfg.cond_dim), jnp.float32)),
+        ("t", jax.ShapeDtypeStruct((b,), jnp.float32)),
+        ("noise", jax.ShapeDtypeStruct((b, n, c), jnp.float32)),
+    ]
+    all_in = pspecs + mspecs + vspecs + data_specs
+    lowered = jax.jit(fn).lower(*[s for _, s in all_in])
+    name = f"dit_train_step_{cfg_name}"
+    sha = _write(out_dir, f"{name}.hlo.txt", to_hlo_text(lowered))
+    out_specs = (
+        pspecs + mspecs + vspecs
+        + [("step", jax.ShapeDtypeStruct((), jnp.float32)),
+           ("loss", jax.ShapeDtypeStruct((), jnp.float32))]
+    )
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "kind": "train_step",
+        "config": cfg_name,
+        "sha256_16": sha,
+        "batch": b,
+        "lr": TRAIN_LR,
+        "inputs": [spec_json(nm, s) for nm, s in all_in],
+        "outputs": [spec_json(nm, s) for nm, s in out_specs],
+    }
+
+
+def build_attn(variant: str, n: int, d: int, bq: int, bkv: int, out_dir, manifest):
+    qs = jax.ShapeDtypeStruct((n, d), jnp.float32)
+
+    if variant == "full":
+        def fn(q, k, v):
+            return (flash.flash_attention_pallas(q, k, v, bq=bq, bkv=bkv),)
+        in_specs = [("q", qs), ("k", qs), ("v", qs)]
+    elif variant == "sla":
+        op = sla.make_sla_attention(bq=bq, bkv=bkv, kh_pct=ATTN_KH,
+                                    kl_pct=ATTN_KL, phi="softmax")
+        def fn(q, k, v, proj):
+            return (op(q, k, v, proj),)
+        in_specs = [("q", qs), ("k", qs), ("v", qs),
+                    ("proj", jax.ShapeDtypeStruct((d, d), jnp.float32))]
+    elif variant == "sparse":
+        def fn(q, k, v):
+            mc = mask_mod.predict_mask(q, k, bq, bkv, ATTN_KH, ATTN_KL)
+            return (sparse.sparse_attention_pallas(q, k, v, mc, bq=bq, bkv=bkv),)
+        in_specs = [("q", qs), ("k", qs), ("v", qs)]
+    elif variant == "linear":
+        def fn(q, k, v):
+            qphi = features.phi_apply("softmax", q)
+            kphi = features.phi_apply("softmax", k)
+            return (linear.linear_attention_pallas(qphi, kphi, v, bq=bq, bkv=bkv),)
+        in_specs = [("q", qs), ("k", qs), ("v", qs)]
+    else:
+        raise ValueError(variant)
+
+    lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+    name = f"attn_{variant}_n{n}_d{d}"
+    sha = _write(out_dir, f"{name}.hlo.txt", to_hlo_text(lowered))
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "kind": "attn",
+        "variant": variant,
+        "sha256_16": sha,
+        "n": n, "d": d, "bq": bq, "bkv": bkv,
+        "kh_pct": ATTN_KH, "kl_pct": ATTN_KL,
+        "inputs": [spec_json(nm, s) for nm, s in in_specs],
+        "outputs": [spec_json("o", qs)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def build_all(out_dir: str, only: str | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "train_batch": TRAIN_BATCH,
+        "configs": {
+            name: {**dataclasses.asdict(cfg), "seq_len": cfg.seq_len,
+                   "head_dim": cfg.head_dim}
+            for name, cfg in CONFIGS.items()
+        },
+        "artifacts": {},
+    }
+    for name, cfg in CONFIGS.items():
+        if only and only not in (name, "configs"):
+            continue
+        print(f"[aot] lowering denoise + train_step for {name!r} (attn={cfg.attn})")
+        build_denoise(name, cfg, out_dir, manifest)
+        build_train_step(name, cfg, out_dir, manifest)
+    for variant, n, d, bq, bkv in ATTN_SIZES:
+        if only and only != f"attn_{variant}_n{n}_d{d}":
+            continue
+        print(f"[aot] lowering attn kernel {variant} N={n} d={d}")
+        build_attn(variant, n, d, bq, bkv, out_dir, manifest)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(os.path.getsize(os.path.join(out_dir, a["file"]))
+                for a in manifest["artifacts"].values())
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts "
+          f"({total / 1e6:.1f} MB HLO text) + manifest.json to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--only", default=None,
+                    help="build a single named config/artifact (debugging)")
+    args = ap.parse_args()
+    build_all(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Feature maps phi(.) for the linear-attention component of SLA.
+
+The paper ablates phi in {softmax, elu+1, hedgehog} (Table 2) and finds
+softmax best. All maps here are applied along the feature (last) dimension
+and keep the feature dimension unchanged, which is what the fused kernel
+supports. Hedgehog (2d features) lives in `ref.hedgehog_feature` and is used
+only by the ref/ablation path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Names accepted by `phi_apply` / the kernels.
+PHI_NAMES = ("softmax", "elu1", "relu")
+
+
+def phi_softmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise softmax feature map (paper's default / ablation winner)."""
+    return jax.nn.softmax(x, axis=-1)
+
+
+def phi_elu1(x: jnp.ndarray) -> jnp.ndarray:
+    """elu(x) + 1, the classic positive feature map of Katharopoulos et al."""
+    return jax.nn.elu(x) + 1.0
+
+
+def phi_relu(x: jnp.ndarray) -> jnp.ndarray:
+    """ReLU feature map (Performer-style positivity, cheapest)."""
+    return jax.nn.relu(x)
+
+
+_PHI = {"softmax": phi_softmax, "elu1": phi_elu1, "relu": phi_relu}
+
+
+def phi_apply(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply the named feature map along the last axis."""
+    try:
+        return _PHI[name](x)
+    except KeyError:
+        raise ValueError(f"unknown phi {name!r}; expected one of {PHI_NAMES}")
+
+
+def phi_vjp(name: str, x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """VJP of the named feature map: given upstream grad `g` w.r.t. phi(x),
+    return the grad w.r.t. x. Used by the manual backward pass (Algorithm 2
+    returns dQ^phi / dK^phi; this chains them back to dQ / dK)."""
+    if name == "softmax":
+        p = jax.nn.softmax(x, axis=-1)
+        return p * (g - jnp.sum(g * p, axis=-1, keepdims=True))
+    if name == "elu1":
+        # d/dx (elu(x)+1) = 1 for x > 0 else exp(x)
+        return g * jnp.where(x > 0, 1.0, jnp.exp(x))
+    if name == "relu":
+        return g * (x > 0).astype(x.dtype)
+    raise ValueError(f"unknown phi {name!r}; expected one of {PHI_NAMES}")

@@ -1,0 +1,124 @@
+"""FlashAttention-style full-attention Pallas kernel (baseline).
+
+One program per b_q query tile; the KV loop runs the standard online-softmax
+recurrence (Milakov & Gimelshein) over every tile — this is the dense
+baseline that the sparse / SLA kernels specialize.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, tn: int, scale: float):
+    q = q_ref[0]
+    bq, d = q.shape
+    dv = v_ref.shape[-1]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kj = k_ref[j]
+        vj = v_ref[j]
+        s = jnp.dot(q, kj.T, preferred_element_type=jnp.float32) * scale
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, vj, preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dv), dtype=jnp.float32)
+    m, l, acc = lax.fori_loop(0, tn, body, (m0, l0, acc0))
+    o_ref[0] = acc / l[:, None]
+    lse_ref[0] = m + jnp.log(l)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    bq: int = 64,
+    bkv: int = 64,
+    interpret: bool = True,
+    with_lse: bool = False,
+):
+    """Full attention via the blocked online-softmax kernel. q,k: (N,d)."""
+    n, d = q.shape
+    dv = v.shape[-1]
+    tm, tn = n // bq, n // bkv
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_flash_kernel, tn=tn, scale=scale)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(tm,),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tn, bkv, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, bkv, dv), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq), lambda i: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((tm, bq, dv), jnp.float32),
+            jax.ShapeDtypeStruct((tm, bq), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q.reshape(tm, bq, d), k.reshape(tn, bkv, d), v.reshape(tn, bkv, dv))
+    o = o.reshape(n, dv)
+    if with_lse:
+        return o, lse.reshape(n)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Trainable wrapper (custom_vjp): interpret-mode pallas_call does not support
+# reverse-mode autodiff through the online-softmax fori_loop, so the backward
+# reuses the Algorithm-2 sparse pass with an all-critical mask (FlashAttention
+# backward is exactly that special case).
+# ---------------------------------------------------------------------------
+
+def make_flash_attention(*, bq: int, bkv: int, interpret: bool = True):
+    """Differentiable full attention: (q, k, v) -> O."""
+    from . import sla_bwd
+
+    @jax.custom_vjp
+    def flash_op(q, k, v):
+        return flash_attention_pallas(q, k, v, bq=bq, bkv=bkv, interpret=interpret)
+
+    def _fwd(q, k, v):
+        o, lse = flash_attention_pallas(q, k, v, bq=bq, bkv=bkv,
+                                        interpret=interpret, with_lse=True)
+        return o, (q, k, v, o, lse)
+
+    def _bwd(res, do):
+        q, k, v, o, lse = res
+        n, d = q.shape
+        tm, tn = n // bq, n // bkv
+        mc = jnp.ones((tm, tn), dtype=jnp.int32)
+        zeros_nd = jnp.zeros_like(q)
+        dv_dim = v.shape[-1]
+        hi = jnp.zeros((tm, d, dv_dim), jnp.float32)
+        zi = jnp.zeros((tm, d), jnp.float32)
+        ol = jnp.zeros_like(o)
+        dol = jnp.zeros_like(o)
+        dq, dk, dvv, _, _ = sla_bwd.sla_backward_pallas(
+            q, k, v, zeros_nd, zeros_nd, mc, lse, hi, zi, o, ol, do, dol,
+            bq=bq, bkv=bkv, interpret=interpret,
+        )
+        return dq, dk, dvv
+
+    flash_op.defvjp(_fwd, _bwd)
+    return flash_op

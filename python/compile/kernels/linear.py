@@ -1,0 +1,135 @@
+"""Linear attention Pallas kernel (the Linear-Only baseline, Sec. 2.2).
+
+Computes O = phi(Q) (phi(K)^T V) / (phi(Q) rowsum(phi(K)^T) + eps) without
+ever materializing the N x N score matrix. The reduction phase (H, Z) is a
+single-program Pallas kernel over KV tiles; the apply phase is blocked over
+query tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _reduce_kernel(kphi_ref, v_ref, h_ref, z_ref, *, tn: int):
+    d = kphi_ref.shape[-1]
+    dv = v_ref.shape[-1]
+
+    def body(j, carry):
+        h, z = carry
+        kj = kphi_ref[j]
+        vj = v_ref[j]
+        h = h + jnp.dot(kj.T, vj, preferred_element_type=jnp.float32)
+        z = z + jnp.sum(kj, axis=0)
+        return h, z
+
+    h0 = jnp.zeros((d, dv), dtype=jnp.float32)
+    z0 = jnp.zeros((d,), dtype=jnp.float32)
+    h, z = lax.fori_loop(0, tn, body, (h0, z0))
+    h_ref[...] = h
+    z_ref[...] = z
+
+
+def _apply_kernel(qphi_ref, h_ref, z_ref, o_ref):
+    q = qphi_ref[0]
+    num = jnp.dot(q, h_ref[...], preferred_element_type=jnp.float32)
+    den = jnp.dot(q, z_ref[...], preferred_element_type=jnp.float32)[:, None] + EPS
+    o_ref[0] = num / den
+
+
+def linear_attention_pallas(
+    qphi: jnp.ndarray,
+    kphi: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    bq: int = 64,
+    bkv: int = 64,
+    interpret: bool = True,
+):
+    """O(N d^2) linear attention; inputs are already feature-mapped."""
+    n, d = qphi.shape
+    dv = v.shape[-1]
+    tm, tn = n // bq, n // bkv
+
+    h, z = pl.pallas_call(
+        functools.partial(_reduce_kernel, tn=tn),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((tn, bkv, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, bkv, dv), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, dv), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((d, dv), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(kphi.reshape(tn, bkv, d), v.reshape(tn, bkv, dv))
+
+    o = pl.pallas_call(
+        _apply_kernel,
+        grid=(tm,),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, dv), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tm, bq, dv), jnp.float32),
+        interpret=interpret,
+    )(qphi.reshape(tm, bq, d), h, z)
+    return o.reshape(n, dv)
+
+
+# ---------------------------------------------------------------------------
+# Trainable wrapper. The backward is the closed-form linear-attention VJP
+# (the all-marginal special case of Algorithm 2), written directly in jnp:
+# H and Z are rank-d globals, so no blocked kernel is needed.
+# ---------------------------------------------------------------------------
+
+def make_linear_attention(*, phi: str, bq: int = 64, bkv: int = 64,
+                          interpret: bool = True):
+    """Differentiable Linear-Only attention: (q, k, v) -> O (phi applied inside)."""
+    from . import features
+
+    @jax.custom_vjp
+    def linear_op(q, k, v):
+        qphi = features.phi_apply(phi, q)
+        kphi = features.phi_apply(phi, k)
+        return linear_attention_pallas(qphi, kphi, v, bq=bq, bkv=bkv,
+                                       interpret=interpret)
+
+    def _fwd(q, k, v):
+        return linear_op(q, k, v), (q, k, v)
+
+    def _bwd(res, do):
+        q, k, v = res
+        qphi = features.phi_apply(phi, q)
+        kphi = features.phi_apply(phi, k)
+        h = kphi.T @ v                      # (d, dv)
+        z = jnp.sum(kphi, axis=0)           # (d,)
+        den = qphi @ z + EPS                # (N,)
+        o = (qphi @ h) / den[:, None]
+        dl = jnp.sum(do * o, axis=-1)       # D^l (N,)
+        qn = qphi / den[:, None]
+        dh = qn.T @ do                      # (d, dv)
+        dz = -(qn.T @ dl)                   # (d,)
+        dqphi = (do @ h.T - dl[:, None] * z[None, :]) / den[:, None]
+        dkphi = v @ dh.T + dz[None, :]
+        dv = kphi @ dh
+        dq = features.phi_vjp(phi, q, dqphi)
+        dk = features.phi_vjp(phi, k, dkphi)
+        return dq, dk, dv
+
+    linear_op.defvjp(_fwd, _bwd)
+    return linear_op

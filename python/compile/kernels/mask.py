@@ -1,0 +1,88 @@
+"""Compressed attention-weight prediction and 3-way block classification.
+
+SLA (Eq. 2-3): pool Q and K along the token dimension with block-mean
+pooling, form the compressed attention weights
+
+    P_c = softmax( pool(Q) pool(K)^T / sqrt(d) )   in R^{Tm x Tn},
+
+then label each block per *row*:
+
+    M_c[i, j] = 1   if P_c[i, j] is among the top  k_h% of row i  (critical)
+    M_c[i, j] = -1  if P_c[i, j] is among the bottom k_l% of row i (negligible)
+    M_c[i, j] = 0   otherwise                                      (marginal)
+
+Critical blocks get exact block FlashAttention, marginal blocks the linear
+path, negligible blocks are skipped. When ceil(kh*Tn) + ceil(kl*Tn) > Tn the
+critical set wins ties (it is assigned first).
+
+This runs in plain jnp: it is O(N^2 / (bq*bkv)) work on pooled tensors and
+sorting is awkward inside a Pallas program; it lowers into the same HLO
+module as the kernels at AOT time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pool_tokens(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Mean-pool an (N, d) array along tokens into (N/block, d)."""
+    n, d = x.shape
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    return x.reshape(n // block, block, d).mean(axis=1)
+
+
+def predict_pc(q: jnp.ndarray, k: jnp.ndarray, bq: int, bkv: int) -> jnp.ndarray:
+    """Compressed attention weights P_c (Eq. 2). q, k: (N, d)."""
+    d = q.shape[-1]
+    qc = pool_tokens(q, bq)
+    kc = pool_tokens(k, bkv)
+    s = (qc @ kc.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    return jax.nn.softmax(s, axis=-1)
+
+
+def counts_for(tn: int, kh_pct: float, kl_pct: float) -> tuple[int, int]:
+    """Per-row number of critical / negligible blocks for given percentages.
+
+    Critical count is at least 1 when kh_pct > 0 (a row must keep its top
+    block, matching the paper's intent that critical weights dominate);
+    negligible count is clipped so the two sets never overlap.
+    """
+    ch = int(round(tn * kh_pct / 100.0))
+    if kh_pct > 0:
+        ch = max(ch, 1)
+    ch = min(ch, tn)
+    cl = int(round(tn * kl_pct / 100.0))
+    cl = min(cl, tn - ch)
+    return ch, cl
+
+
+def classify(pc: jnp.ndarray, kh_pct: float, kl_pct: float) -> jnp.ndarray:
+    """3-way per-row classification of P_c into M_c in {1, 0, -1} (Eq. 3)."""
+    tm, tn = pc.shape
+    ch, cl = counts_for(tn, kh_pct, kl_pct)
+    # Rank of each entry within its row, descending by value. argsort of
+    # argsort gives the rank; jnp.argsort is stable so ties resolve by index.
+    order = jnp.argsort(-pc, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)  # 0 = largest
+    mc = jnp.zeros((tm, tn), dtype=jnp.int32)
+    mc = jnp.where(ranks < ch, 1, mc)
+    mc = jnp.where(ranks >= tn - cl, -1, mc)
+    return mc
+
+
+def predict_mask(
+    q: jnp.ndarray, k: jnp.ndarray, bq: int, bkv: int, kh_pct: float, kl_pct: float
+) -> jnp.ndarray:
+    """P_c + classification in one call; gradient-stopped (mask selection is
+    a discrete routing decision, as in the paper's fused kernel). Gradients
+    are cut at the *inputs* so autodiff never linearizes the top-k sort."""
+    pc = predict_pc(jax.lax.stop_gradient(q), jax.lax.stop_gradient(k), bq, bkv)
+    return jax.lax.stop_gradient(classify(pc, kh_pct, kl_pct))
+
+
+def mask_sparsity(mc: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of blocks NOT computed exactly: 1 - |critical| / total."""
+    crit = jnp.sum((mc == 1).astype(jnp.float32))
+    return 1.0 - crit / mc.size

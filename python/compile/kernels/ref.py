@@ -1,0 +1,172 @@
+"""Pure-jnp correctness oracles for every kernel in this repo.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+simulator kernels) are tested against. They are written for clarity, not
+speed: masks are materialized densely and softmax is computed globally.
+
+Semantics notes (shared with the kernels, see DESIGN.md §6):
+  * The sparse component normalizes softmax over *critical blocks only*
+    (mask-guided FlashAttention); rows with no critical block output zeros.
+  * The linear component sums phi(K_j)^T V_j over *marginal* blocks only and
+    divides by phi(Q_i)·Z_i + EPS.
+  * SLA output: O = O^s + O^l @ W_proj (per-head learnable d x d projection).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import features
+from . import mask as mask_mod
+
+EPS = 1e-6
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# dense helpers
+# ---------------------------------------------------------------------------
+
+def expand_block_mask(mc: jnp.ndarray, bq: int, bkv: int, label: int) -> jnp.ndarray:
+    """Expand the (Tm, Tn) compressed mask to a dense (N, N) 0/1 mask that is
+    1 where the block label equals `label`."""
+    sel = (mc == label).astype(jnp.float32)
+    return jnp.kron(sel, jnp.ones((bq, bkv), dtype=jnp.float32))
+
+
+def scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    d = q.shape[-1]
+    return (q @ k.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# full attention
+# ---------------------------------------------------------------------------
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Standard softmax attention, O = softmax(QK^T/sqrt(d)) V."""
+    p = jax.nn.softmax(scores(q, k), axis=-1)
+    return p @ v
+
+
+def attention_weights(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """The attention weight matrix P (used by Fig. 1 / Fig. 3 analyses)."""
+    return jax.nn.softmax(scores(q, k), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# sparse component (mask-guided FlashAttention semantics)
+# ---------------------------------------------------------------------------
+
+def sparse_component(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, mc: jnp.ndarray, bq: int, bkv: int
+) -> jnp.ndarray:
+    """O^s: softmax restricted to critical blocks (M_c == 1).
+
+    Mathematically identical to the online-softmax block loop of Algorithm 1
+    lines 9-11 + 16. Rows whose critical set is empty produce zeros.
+    """
+    m = expand_block_mask(mc, bq, bkv, 1)
+    s = jnp.where(m > 0, scores(q, k), NEG_INF)
+    row_max = jnp.max(s, axis=-1, keepdims=True)
+    # Guard rows with no critical blocks: all NEG_INF -> exp(0) but zeroed by m.
+    p = jnp.exp(s - jnp.maximum(row_max, NEG_INF / 2)) * m
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.where(l > 0, (p @ v) / jnp.maximum(l, EPS), 0.0)
+
+
+def sparse_lse(
+    q: jnp.ndarray, k: jnp.ndarray, mc: jnp.ndarray, bq: int, bkv: int
+) -> jnp.ndarray:
+    """Row log-sum-exp over critical blocks (the L_i saved for backward)."""
+    m = expand_block_mask(mc, bq, bkv, 1)
+    s = jnp.where(m > 0, scores(q, k), NEG_INF)
+    row_max = jnp.max(s, axis=-1)
+    l = jnp.sum(jnp.exp(s - row_max[:, None]) * m, axis=-1)
+    return row_max + jnp.log(jnp.maximum(l, EPS))
+
+
+# ---------------------------------------------------------------------------
+# linear component
+# ---------------------------------------------------------------------------
+
+def linear_component(
+    qphi: jnp.ndarray,
+    kphi: jnp.ndarray,
+    v: jnp.ndarray,
+    mc: jnp.ndarray,
+    bq: int,
+    bkv: int,
+) -> jnp.ndarray:
+    """O^l per Eq. 5: block-restricted linear attention over marginal blocks."""
+    tm, tn = mc.shape
+    d = qphi.shape[-1]
+    kb = kphi.reshape(tn, bkv, d)
+    vb = v.reshape(tn, bkv, -1)
+    # h_j = phi(K_j)^T V_j  (Tn, d, dv); z_j = rowsum(phi(K_j)^T) (Tn, d)
+    h = jnp.einsum("jbd,jbe->jde", kb, vb)
+    z = jnp.sum(kb, axis=1)
+    marg = (mc == 0).astype(jnp.float32)
+    hi = jnp.einsum("ij,jde->ide", marg, h)  # (Tm, d, dv)
+    zi = marg @ z  # (Tm, d)
+    qb = qphi.reshape(tm, bq, d)
+    num = jnp.einsum("ibd,ide->ibe", qb, hi)
+    den = jnp.einsum("ibd,id->ib", qb, zi)[..., None] + EPS
+    return (num / den).reshape(tm * bq, -1)
+
+
+def linear_attention(qphi: jnp.ndarray, kphi: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Plain (unmasked) linear attention — the Linear-Only baseline (Sec. 2.2)."""
+    h = kphi.T @ v
+    z = jnp.sum(kphi, axis=0)
+    return (qphi @ h) / ((qphi @ z)[:, None] + EPS)
+
+
+def hedgehog_feature(x: jnp.ndarray) -> jnp.ndarray:
+    """Hedgehog-style feature map (ablation, ref-only): concat of softmax(x)
+    and softmax(-x), giving 2d positive features that better mimic the spiky
+    softmax kernel."""
+    return jnp.concatenate(
+        [jax.nn.softmax(x, axis=-1), jax.nn.softmax(-x, axis=-1)], axis=-1
+    ) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# SLA forward (oracle for the fused kernel)
+# ---------------------------------------------------------------------------
+
+def sla_forward(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    proj: jnp.ndarray,
+    *,
+    bq: int,
+    bkv: int,
+    kh_pct: float,
+    kl_pct: float,
+    phi: str = "softmax",
+    mc: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Reference SLA forward pass (Algorithm 1 + Eq. 6).
+
+    q, k, v: (N, d); proj: (d, d) learnable compensation projection.
+    Returns O = O^s + O^l @ proj. If `mc` is given it overrides prediction.
+    """
+    if mc is None:
+        mc = mask_mod.predict_mask(q, k, bq, bkv, kh_pct, kl_pct)
+    qphi = features.phi_apply(phi, q)
+    kphi = features.phi_apply(phi, k)
+    os_ = sparse_component(q, k, v, mc, bq, bkv)
+    ol = linear_component(qphi, kphi, v, mc, bq, bkv)
+    return os_ + ol @ proj
+
+
+def sla_components(q, k, v, mc, *, bq, bkv, phi="softmax"):
+    """(O^s, O^l) for a fixed mask — used by kernel tests."""
+    qphi = features.phi_apply(phi, q)
+    kphi = features.phi_apply(phi, k)
+    os_ = sparse_component(q, k, v, mc, bq, bkv)
+    ol = linear_component(qphi, kphi, v, mc, bq, bkv)
+    return os_, ol

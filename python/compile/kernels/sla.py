@@ -1,0 +1,246 @@
+"""Fused SLA (Sparse-Linear Attention) Pallas kernels — forward pass.
+
+Implements Algorithm 1 of the paper as a single Pallas program per query
+block: the KV loop performs mask-guided online-softmax FlashAttention for
+critical blocks (M_c == 1) and accumulates the precomputed linear-attention
+state (h_j, z_j) for marginal blocks (M_c == 0); negligible blocks (-1)
+contribute nothing.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * grid = (Tm,): one program per b_q query tile (the CUDA threadblock
+    analogue); the Q tile and all accumulators live in VMEM.
+  * K/V/h/z are HBM-resident refs streamed tile-by-tile inside a fori_loop;
+    the (b_q x d) @ (d x b_kv) products are MXU-shaped.
+  * interpret=True is mandatory here: real-TPU lowering emits Mosaic
+    custom-calls that the CPU PJRT plugin cannot execute. Structural
+    skipping is expressed with `where` masks (interpret mode cannot
+    early-exit); true skipping is measured by the Rust simulator kernels.
+
+The public entry points:
+  * sla_forward_pallas(q, k, v, mc, ...)  -> (O^s, O^l, lse, H_i, Z_i)
+  * make_sla_attention(...)               -> differentiable fused op with a
+    manual backward (Algorithm 2, see sla_bwd.py) wired via jax.custom_vjp.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import features
+from . import mask as mask_mod
+from . import sla_bwd
+
+EPS = 1e-6
+NEG_INF = -1e30
+
+
+def _fwd_kernel(
+    q_ref,      # (1, bq, d)    VMEM tile of Q for this program
+    qphi_ref,   # (1, bq, d)    VMEM tile of phi(Q)
+    k_ref,      # (Tn, bkv, d)  streamed K tiles
+    v_ref,      # (Tn, bkv, dv) streamed V tiles
+    h_ref,      # (Tn, d, dv)   precomputed phi(K_j)^T V_j
+    z_ref,      # (Tn, d)       precomputed rowsum(phi(K_j)^T)
+    mc_ref,     # (1, Tn)       this query block's row of M_c
+    os_ref,     # out: (1, bq, dv)  sparse component O^s
+    ol_ref,     # out: (1, bq, dv)  linear component O^l
+    lse_ref,    # out: (1, bq)      log-sum-exp over critical blocks
+    hi_ref,     # out: (1, d, dv)   aggregated H_i (saved for backward)
+    zi_ref,     # out: (1, d)       aggregated Z_i (saved for backward)
+    *,
+    tn: int,
+    scale: float,
+):
+    q = q_ref[0]
+    qphi = qphi_ref[0]
+    mc = mc_ref[0]
+    bq, d = q.shape
+    dv = v_ref.shape[-1]
+
+    def body(j, carry):
+        m, l, acc, hi, zi = carry
+        kj = k_ref[j]
+        vj = v_ref[j]
+        crit = mc[j] == 1
+        marg = (mc[j] == 0).astype(q.dtype)
+        # --- critical path: one online-softmax step (Alg. 1 lines 10-11) ---
+        s = jnp.dot(q, kj.T, preferred_element_type=jnp.float32) * scale
+        m_new = jnp.where(crit, jnp.maximum(m, jnp.max(s, axis=-1)), m)
+        # `where` guards the exp against the -1e30 running max before any
+        # critical block has been seen (inf would otherwise poison 0-mults).
+        p = jnp.where(crit, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, vj, preferred_element_type=jnp.float32
+        )
+        # --- marginal path: a single matrix addition (Alg. 1 line 13) ---
+        hi = hi + h_ref[j] * marg
+        zi = zi + z_ref[j] * marg
+        return m_new, l, acc, hi, zi
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dv), dtype=jnp.float32)
+    hi0 = jnp.zeros((d, dv), dtype=jnp.float32)
+    zi0 = jnp.zeros((d,), dtype=jnp.float32)
+    m, l, acc, hi, zi = lax.fori_loop(0, tn, body, (m0, l0, acc0, hi0, zi0))
+
+    # Alg. 1 line 16: normalize; rows with an empty critical set output 0.
+    os = jnp.where(l[:, None] > 0, acc / jnp.maximum(l, EPS)[:, None], 0.0)
+    lse = m + jnp.log(jnp.maximum(l, EPS))
+    ol = jnp.dot(qphi, hi, preferred_element_type=jnp.float32) / (
+        jnp.dot(qphi, zi, preferred_element_type=jnp.float32)[:, None] + EPS
+    )
+    os_ref[0] = os
+    ol_ref[0] = ol
+    lse_ref[0] = lse
+    hi_ref[0] = hi
+    zi_ref[0] = zi
+
+
+def precompute_linear_state(kphi: jnp.ndarray, v: jnp.ndarray, bkv: int):
+    """h_j = phi(K_j)^T V_j and z_j = rowsum(phi(K_j)^T) per KV tile
+    (Alg. 1 line 4). Cheap O(N d dv) einsums, lowered into the same HLO."""
+    n, d = kphi.shape
+    dv = v.shape[-1]
+    tn = n // bkv
+    kb = kphi.reshape(tn, bkv, d)
+    vb = v.reshape(tn, bkv, dv)
+    h = jnp.einsum("jbd,jbe->jde", kb, vb)
+    z = jnp.sum(kb, axis=1)
+    return h, z
+
+
+def sla_forward_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    qphi: jnp.ndarray,
+    kphi: jnp.ndarray,
+    mc: jnp.ndarray,
+    *,
+    bq: int,
+    bkv: int,
+    interpret: bool = True,
+):
+    """Run the fused forward kernel. q,k: (N, d); v: (N, dv); mc: (Tm, Tn).
+
+    Returns (O^s, O^l, lse, H_i, Z_i) with O^* of shape (N, dv).
+    """
+    n, d = q.shape
+    dv = v.shape[-1]
+    tm, tn = n // bq, n // bkv
+    assert mc.shape == (tm, tn), (mc.shape, (tm, tn))
+    scale = 1.0 / math.sqrt(d)
+
+    h, z = precompute_linear_state(kphi, v, bkv)
+    qb = q.reshape(tm, bq, d)
+    qphib = qphi.reshape(tm, bq, d)
+    kb = k.reshape(tn, bkv, d)
+    vb = v.reshape(tn, bkv, dv)
+
+    kernel = functools.partial(_fwd_kernel, tn=tn, scale=scale)
+    out_shapes = (
+        jax.ShapeDtypeStruct((tm, bq, dv), jnp.float32),  # O^s
+        jax.ShapeDtypeStruct((tm, bq, dv), jnp.float32),  # O^l
+        jax.ShapeDtypeStruct((tm, bq), jnp.float32),      # lse
+        jax.ShapeDtypeStruct((tm, d, dv), jnp.float32),   # H_i
+        jax.ShapeDtypeStruct((tm, d), jnp.float32),       # Z_i
+    )
+    grid = (tm,)
+    block = lambda *shape: shape  # readability helper
+
+    os_, ol, lse, hi, zi = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tn, bkv, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, bkv, dv), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, d, dv), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq), lambda i: (i, 0)),
+            pl.BlockSpec((1, d, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(qb, qphib, kb, vb, h, z, mc)
+
+    return (
+        os_.reshape(n, dv),
+        ol.reshape(n, dv),
+        lse.reshape(n),
+        hi,
+        zi,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused op (custom_vjp: Alg. 1 forward / Alg. 2 backward)
+# ---------------------------------------------------------------------------
+
+def make_sla_attention(
+    *,
+    bq: int,
+    bkv: int,
+    kh_pct: float,
+    kl_pct: float,
+    phi: str = "softmax",
+    interpret: bool = True,
+):
+    """Build the differentiable SLA attention op for fixed hyper-parameters.
+
+    Returned fn maps (q, k, v, proj) -> O = O^s + O^l @ proj, with the mask
+    predicted internally (Eq. 2-3, gradient-stopped) and gradients computed
+    by the fused Algorithm-2 kernels (not autodiff).
+    """
+
+    @jax.custom_vjp
+    def sla_attention(q, k, v, proj):
+        out, _ = _fwd(q, k, v, proj)
+        return out
+
+    def _fwd(q, k, v, proj):
+        mc = mask_mod.predict_mask(q, k, bq, bkv, kh_pct, kl_pct)
+        qphi = features.phi_apply(phi, q)
+        kphi = features.phi_apply(phi, k)
+        os_, ol, lse, hi, zi = sla_forward_pallas(
+            q, k, v, qphi, kphi, mc, bq=bq, bkv=bkv, interpret=interpret
+        )
+        out = os_ + ol @ proj
+        res = (q, k, v, proj, mc, lse, hi, zi, os_, ol)
+        return out, res
+
+    def _bwd(res, dout):
+        q, k, v, proj, mc, lse, hi, zi, os_, ol = res
+        qphi = features.phi_apply(phi, q)
+        kphi = features.phi_apply(phi, k)
+        # Chain through O = O^s + O^l proj.
+        dos = dout
+        dol = dout @ proj.T
+        dproj = ol.T @ dout
+        dq_s, dk_s, dv_s, dqphi, dkphi = sla_bwd.sla_backward_pallas(
+            q, k, v, qphi, kphi, mc, lse, hi, zi, os_, ol, dos, dol,
+            bq=bq, bkv=bkv, interpret=interpret,
+        )
+        # Chain dQ^phi / dK^phi back through the feature map phi.
+        dq = dq_s + features.phi_vjp(phi, q, dqphi)
+        dk = dk_s + features.phi_vjp(phi, k, dkphi)
+        return dq, dk, dv_s, dproj
+
+    sla_attention.defvjp(_fwd, _bwd)
+    return sla_attention

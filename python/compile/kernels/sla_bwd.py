@@ -1,0 +1,247 @@
+"""Fused SLA backward Pallas kernels — Algorithm 2 of the paper.
+
+Two programs mirror the CUDA kernel's two passes:
+
+  * `_bwd_dq_kernel` (grid over query blocks i): sparse-path dQ_i, the
+    linear-path dQ^phi_i, and the per-query-block dH_i / dZ_i that the
+    second pass aggregates (Alg. 2 lines 3-6 + 11-12 for dQ).
+  * `_bwd_dkv_kernel` (grid over KV blocks j): sparse-path dK_j / dV_j, and
+    the aggregation dH = sum_{i: M_c[i,j]=0} dH_i (likewise dZ) feeding
+    dK^phi_j = V_j dH^T + dZ^T and dV_j += K^phi_j dH (Alg. 2 lines 7-18).
+
+Both recompute P_ij from the saved log-sum-exp L_i exactly as
+FlashAttention-2 does, and both apply the 1/sqrt(d) score scale that the
+paper's pseudo-code leaves implicit (required to match autodiff).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _bwd_dq_kernel(
+    q_ref,     # (1, bq, d)
+    qphi_ref,  # (1, bq, d)
+    k_ref,     # (Tn, bkv, d)
+    v_ref,     # (Tn, bkv, dv)
+    mc_ref,    # (1, Tn)
+    lse_ref,   # (1, bq)
+    hi_ref,    # (1, d, dv)
+    zi_ref,    # (1, d)
+    dos_ref,   # (1, bq, dv)
+    dol_ref,   # (1, bq, dv)
+    dssum_ref, # (1, bq)   D^s_i = rowsum(dO^s ⊙ O^s)
+    dlsum_ref, # (1, bq)   D^l_i = rowsum(dO^l ⊙ O^l)
+    dq_ref,    # out (1, bq, d)
+    dqphi_ref, # out (1, bq, d)
+    dhi_ref,   # out (1, d, dv)
+    dzi_ref,   # out (1, d)
+    *,
+    tn: int,
+    scale: float,
+):
+    q = q_ref[0]
+    qphi = qphi_ref[0]
+    mc = mc_ref[0]
+    lse = lse_ref[0]
+    hi = hi_ref[0]
+    zi = zi_ref[0]
+    dos = dos_ref[0]
+    dol = dol_ref[0]
+    dssum = dssum_ref[0]
+    dlsum = dlsum_ref[0]
+    bq, d = q.shape
+
+    # ---- linear path (Alg. 2 lines 4-5) ----
+    den = jnp.dot(qphi, zi, preferred_element_type=jnp.float32) + EPS  # (bq,)
+    qn = qphi / den[:, None]
+    dhi = jnp.dot(qn.T, dol, preferred_element_type=jnp.float32)        # (d, dv)
+    dzi = -jnp.dot(qn.T, dlsum, preferred_element_type=jnp.float32)     # (d,)
+    dqphi = (
+        jnp.dot(dol, hi.T, preferred_element_type=jnp.float32)
+        - dlsum[:, None] * zi[None, :]
+    ) / den[:, None]
+
+    # ---- sparse path dQ (Alg. 2 lines 11-12) ----
+    def body(j, dq):
+        kj = k_ref[j]
+        vj = v_ref[j]
+        crit = mc[j] == 1
+        s = jnp.dot(q, kj.T, preferred_element_type=jnp.float32) * scale
+        p = jnp.where(crit, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jnp.dot(dos, vj.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - dssum[:, None])
+        return dq + jnp.dot(ds, kj, preferred_element_type=jnp.float32) * scale
+
+    dq = lax.fori_loop(0, tn, body, jnp.zeros((bq, d), dtype=jnp.float32))
+
+    dq_ref[0] = dq
+    dqphi_ref[0] = dqphi
+    dhi_ref[0] = dhi
+    dzi_ref[0] = dzi
+
+
+def _bwd_dkv_kernel(
+    q_ref,     # (Tm, bq, d)
+    k_ref,     # (1, bkv, d)
+    v_ref,     # (1, bkv, dv)
+    kphi_ref,  # (1, bkv, d)
+    mc_ref,    # (Tm, 1)  column j of M_c
+    lse_ref,   # (Tm, bq)
+    dos_ref,   # (Tm, bq, dv)
+    dssum_ref, # (Tm, bq)
+    dhi_ref,   # (Tm, d, dv)  per-i dH_i from the first pass
+    dzi_ref,   # (Tm, d)
+    dk_ref,    # out (1, bkv, d)
+    dv_ref,    # out (1, bkv, dv)
+    dkphi_ref, # out (1, bkv, d)
+    *,
+    tm: int,
+    scale: float,
+):
+    kj = k_ref[0]
+    vj = v_ref[0]
+    kphij = kphi_ref[0]
+    bkv, d = kj.shape
+    dv_dim = vj.shape[-1]
+
+    def body(i, carry):
+        dk, dvv, dh, dz = carry
+        qi = q_ref[i]
+        lse = lse_ref[i]
+        dos = dos_ref[i]
+        dssum = dssum_ref[i]
+        crit = mc_ref[i, 0] == 1
+        marg = (mc_ref[i, 0] == 0).astype(jnp.float32)
+        # sparse contributions (Alg. 2 lines 10-12)
+        s = jnp.dot(qi, kj.T, preferred_element_type=jnp.float32) * scale
+        p = jnp.where(crit, jnp.exp(s - lse[:, None]), 0.0)
+        dvv = dvv + jnp.dot(p.T, dos, preferred_element_type=jnp.float32)
+        dp = jnp.dot(dos, vj.T, preferred_element_type=jnp.float32)
+        ds = p * (dp - dssum[:, None])
+        dk = dk + jnp.dot(ds.T, qi, preferred_element_type=jnp.float32) * scale
+        # marginal aggregation (Alg. 2 line 14)
+        dh = dh + dhi_ref[i] * marg
+        dz = dz + dzi_ref[i] * marg
+        return dk, dvv, dh, dz
+
+    dk0 = jnp.zeros((bkv, d), dtype=jnp.float32)
+    dv0 = jnp.zeros((bkv, dv_dim), dtype=jnp.float32)
+    dh0 = jnp.zeros((d, dv_dim), dtype=jnp.float32)
+    dz0 = jnp.zeros((d,), dtype=jnp.float32)
+    dk, dvv, dh, dz = lax.fori_loop(0, tm, body, (dk0, dv0, dh0, dz0))
+
+    # Alg. 2 line 17: dK^phi_j = V_j dH^T + dZ^T (broadcast), dV_j += K^phi_j dH
+    dkphi = jnp.dot(vj, dh.T, preferred_element_type=jnp.float32) + dz[None, :]
+    dvv = dvv + jnp.dot(kphij, dh, preferred_element_type=jnp.float32)
+
+    dk_ref[0] = dk
+    dv_ref[0] = dvv
+    dkphi_ref[0] = dkphi
+
+
+def sla_backward_pallas(
+    q, k, v, qphi, kphi, mc, lse, hi, zi, os_, ol, dos, dol,
+    *,
+    bq: int,
+    bkv: int,
+    interpret: bool = True,
+):
+    """Run both Algorithm-2 passes. Returns (dQ_s, dK_s, dV, dQ^phi, dK^phi)
+    where dQ_s/dK_s are the sparse-path grads (the caller chains dQ^phi and
+    dK^phi through the feature map and adds them)."""
+    n, d = q.shape
+    dv_dim = v.shape[-1]
+    tm, tn = n // bq, n // bkv
+    scale = 1.0 / math.sqrt(d)
+
+    qb = q.reshape(tm, bq, d)
+    qphib = qphi.reshape(tm, bq, d)
+    kb = k.reshape(tn, bkv, d)
+    vb = v.reshape(tn, bkv, dv_dim)
+    kphib = kphi.reshape(tn, bkv, d)
+    lseb = lse.reshape(tm, bq)
+    dosb = dos.reshape(tm, bq, dv_dim)
+    dolb = dol.reshape(tm, bq, dv_dim)
+    dssum = jnp.sum(dos * os_, axis=-1).reshape(tm, bq)
+    dlsum = jnp.sum(dol * ol, axis=-1).reshape(tm, bq)
+
+    # ---- pass 1: per-query-block grads ----
+    kern1 = functools.partial(_bwd_dq_kernel, tn=tn, scale=scale)
+    dqb, dqphib, dhib, dzib = pl.pallas_call(
+        kern1,
+        grid=(tm,),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tn, bkv, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, bkv, dv_dim), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (i, 0)),
+            pl.BlockSpec((1, bq), lambda i: (i, 0)),
+            pl.BlockSpec((1, d, dv_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, bq, dv_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq, dv_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq), lambda i: (i, 0)),
+            pl.BlockSpec((1, bq), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, dv_dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((tm, bq, d), jnp.float32),
+            jax.ShapeDtypeStruct((tm, bq, d), jnp.float32),
+            jax.ShapeDtypeStruct((tm, d, dv_dim), jnp.float32),
+            jax.ShapeDtypeStruct((tm, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )(qb, qphib, kb, vb, mc, lseb, hi, zi, dosb, dolb, dssum, dlsum)
+
+    # ---- pass 2: per-KV-block grads ----
+    kern2 = functools.partial(_bwd_dkv_kernel, tm=tm, scale=scale)
+    dkb, dvb, dkphib = pl.pallas_call(
+        kern2,
+        grid=(tn,),
+        in_specs=[
+            pl.BlockSpec((tm, bq, d), lambda j: (0, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, bkv, dv_dim), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda j: (j, 0, 0)),
+            pl.BlockSpec((tm, 1), lambda j: (0, j)),
+            pl.BlockSpec((tm, bq), lambda j: (0, 0)),
+            pl.BlockSpec((tm, bq, dv_dim), lambda j: (0, 0, 0)),
+            pl.BlockSpec((tm, bq), lambda j: (0, 0)),
+            pl.BlockSpec((tm, d, dv_dim), lambda j: (0, 0, 0)),
+            pl.BlockSpec((tm, d), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bkv, d), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, bkv, dv_dim), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda j: (j, 0, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((tn, bkv, d), jnp.float32),
+            jax.ShapeDtypeStruct((tn, bkv, dv_dim), jnp.float32),
+            jax.ShapeDtypeStruct((tn, bkv, d), jnp.float32),
+        ),
+        interpret=interpret,
+    )(qb, kb, vb, kphib, mc, lseb, dosb, dssum, dhib, dzib)
+
+    return (
+        dqb.reshape(n, d),
+        dkb.reshape(n, d),
+        dvb.reshape(n, dv_dim),
+        dqphib.reshape(n, d),
+        dkphib.reshape(n, d),
+    )

@@ -1,0 +1,135 @@
+"""Block-sparse FlashAttention Pallas kernel (the Sparse-Only baseline and
+the sparse component of SLA taken in isolation).
+
+Identical online-softmax loop to flash.py, but contributions are gated by
+the compressed mask row: only blocks labeled critical (M_c == 1) enter the
+softmax. This is also the computational skeleton of the VSA-like and
+VMoBA-like baselines — they differ only in how the mask is produced (see
+python/compile/kernels/mask.py and the Rust `attention::sparse` policies).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+NEG_INF = -1e30
+
+
+def _sparse_kernel(q_ref, k_ref, v_ref, mc_ref, o_ref, lse_ref, *, tn: int, scale: float):
+    q = q_ref[0]
+    mc = mc_ref[0]
+    bq, d = q.shape
+    dv = v_ref.shape[-1]
+
+    def body(j, carry):
+        m, l, acc = carry
+        kj = k_ref[j]
+        vj = v_ref[j]
+        crit = mc[j] == 1
+        s = jnp.dot(q, kj.T, preferred_element_type=jnp.float32) * scale
+        m_new = jnp.where(crit, jnp.maximum(m, jnp.max(s, axis=-1)), m)
+        p = jnp.where(crit, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, vj, preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dv), dtype=jnp.float32)
+    m, l, acc = lax.fori_loop(0, tn, body, (m0, l0, acc0))
+    o_ref[0] = jnp.where(l[:, None] > 0, acc / jnp.maximum(l, EPS)[:, None], 0.0)
+    lse_ref[0] = m + jnp.log(jnp.maximum(l, EPS))
+
+
+def sparse_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mc: jnp.ndarray,
+    *,
+    bq: int = 64,
+    bkv: int = 64,
+    interpret: bool = True,
+    with_lse: bool = False,
+):
+    """Mask-guided block-sparse attention. mc: (Tm, Tn) with 1 = compute."""
+    n, d = q.shape
+    dv = v.shape[-1]
+    tm, tn = n // bq, n // bkv
+    assert mc.shape == (tm, tn)
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_sparse_kernel, tn=tn, scale=scale)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(tm,),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tn, bkv, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tn, bkv, dv), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, tn), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bq), lambda i: (i, 0)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((tm, bq, dv), jnp.float32),
+            jax.ShapeDtypeStruct((tm, bq), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q.reshape(tm, bq, d), k.reshape(tn, bkv, d), v.reshape(tn, bkv, dv), mc)
+    o = o.reshape(n, dv)
+    if with_lse:
+        return o, lse.reshape(n)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Trainable wrapper (custom_vjp reusing the Algorithm-2 sparse pass).
+# The mask is predicted inside (Eq. 2-3) and gradient-stopped, mirroring the
+# paper's Sparse-Only / Sparge-T-style baselines.
+# ---------------------------------------------------------------------------
+
+def make_sparse_attention(*, bq: int, bkv: int, kh_pct: float, kl_pct: float,
+                          interpret: bool = True):
+    """Differentiable mask-guided block-sparse attention: (q, k, v) -> O."""
+    from . import mask as mask_mod
+    from . import sla_bwd
+
+    @jax.custom_vjp
+    def sparse_op(q, k, v):
+        out, _ = _fwd(q, k, v)
+        return out
+
+    def _fwd(q, k, v):
+        mc = mask_mod.predict_mask(q, k, bq, bkv, kh_pct, kl_pct)
+        o, lse = sparse_attention_pallas(q, k, v, mc, bq=bq, bkv=bkv,
+                                         interpret=interpret, with_lse=True)
+        return o, (q, k, v, o, lse, mc)
+
+    def _bwd(res, do):
+        q, k, v, o, lse, mc = res
+        n, d = q.shape
+        tm = n // bq
+        zeros_nd = jnp.zeros_like(q)
+        dv_dim = v.shape[-1]
+        hi = jnp.zeros((tm, d, dv_dim), jnp.float32)
+        zi = jnp.zeros((tm, d), jnp.float32)
+        ol = jnp.zeros_like(o)
+        dol = jnp.zeros_like(o)
+        dq, dk, dvv, _, _ = sla_bwd.sla_backward_pallas(
+            q, k, v, zeros_nd, zeros_nd, mc, lse, hi, zi, o, ol, do, dol,
+            bq=bq, bkv=bkv, interpret=interpret,
+        )
+        return dq, dk, dvv
+
+    sparse_op.defvjp(_fwd, _bwd)
+    return sparse_op

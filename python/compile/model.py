@@ -1,0 +1,270 @@
+"""L2: Wan-style video Diffusion Transformer in JAX, calling the L1 kernels.
+
+A faithful (small) DiT-for-video skeleton:
+
+    latent video (F, H, W, C) --patchify--> N = F*H*W tokens of width `dim`
+    -> depth x [adaLN-zero DiT block: LN -> modulate -> MHA(variant)
+                -> gate -> +res ; LN -> modulate -> MLP -> gate -> +res]
+    -> final adaLN + linear head back to C channels.
+
+The attention variant is a first-class plug-in — exactly how the paper drops
+SLA into Wan2.1: `full` (FlashAttention kernel), `sla` (fused sparse-linear,
+Alg. 1/2 custom_vjp), `sparse` (sparse component only), `linear`
+(linear-only baseline), plus `ls` (L+S ablation: sum of linear-only and
+sparse-only outputs).
+
+Everything is pure-pytree JAX (no flax): params are nested dicts so they
+flatten to a stable, manifest-addressable list for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import features, flash, linear, mask as mask_mod, ref, sla, sparse
+
+Params = Any  # nested dict pytree of jnp arrays
+
+ATTN_VARIANTS = ("full", "sla", "sparse", "linear", "ls")
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    """Model + SLA hyper-parameters. `video` gives (frames, height, width) in
+    patches; sequence length N = f*h*w must be divisible by bq and bkv."""
+
+    video: tuple[int, int, int] = (4, 8, 8)   # (F, Hp, Wp) patch grid
+    channels: int = 8                          # latent channels per patch
+    dim: int = 128                             # token width
+    depth: int = 4                             # DiT blocks
+    heads: int = 4
+    cond_dim: int = 16                         # conditioning embedding width
+    mlp_ratio: int = 4
+    # attention variant + SLA hyper-parameters
+    attn: str = "sla"                          # full|sla|sparse|linear|ls
+    bq: int = 32
+    bkv: int = 32
+    kh_pct: float = 5.0
+    kl_pct: float = 10.0
+    phi: str = "softmax"
+
+    @property
+    def seq_len(self) -> int:
+        f, h, w = self.video
+        return f * h * w
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    def validate(self) -> None:
+        n = self.seq_len
+        assert n % self.bq == 0 and n % self.bkv == 0, (n, self.bq, self.bkv)
+        assert self.attn in ATTN_VARIANTS, self.attn
+        if self.attn in ("sla", "linear", "ls"):
+            assert self.phi in features.PHI_NAMES
+
+    def with_attn(self, attn: str) -> "DiTConfig":
+        return dataclasses.replace(self, attn=attn)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, din, dout, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(din)
+    return {
+        "w": jax.random.normal(key, (din, dout), jnp.float32) * scale,
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def init_params(cfg: DiTConfig, key: jax.Array) -> Params:
+    """Initialize the full parameter pytree (adaLN-zero style: gates start
+    at zero so each block is initially near-identity; the SLA compensation
+    projection starts at zero so SLA == its sparse component at step 0)."""
+    cfg.validate()
+    keys = iter(jax.random.split(key, 16 + 8 * cfg.depth))
+    d, dh = cfg.dim, cfg.head_dim
+    params: dict[str, Any] = {
+        "patch": _dense_init(next(keys), cfg.channels, d),
+        "t_mlp1": _dense_init(next(keys), 64, d),
+        "t_mlp2": _dense_init(next(keys), d, d),
+        "c_mlp1": _dense_init(next(keys), cfg.cond_dim, d),
+        "c_mlp2": _dense_init(next(keys), d, d),
+        "head": {
+            "mod": _dense_init(next(keys), d, 2 * d, scale=0.0),
+            "out": _dense_init(next(keys), d, cfg.channels, scale=0.0),
+        },
+    }
+    blocks = []
+    for _ in range(cfg.depth):
+        blk = {
+            "qkv": _dense_init(next(keys), d, 3 * d),
+            "attn_out": _dense_init(next(keys), d, d),
+            "mlp1": _dense_init(next(keys), d, cfg.mlp_ratio * d),
+            "mlp2": _dense_init(next(keys), cfg.mlp_ratio * d, d),
+            # adaLN modulation: 6*d (shift/scale/gate for attn + mlp), zero-init
+            "mod": _dense_init(next(keys), d, 6 * d, scale=0.0),
+        }
+        if cfg.attn in ("sla", "ls"):
+            # learnable per-head compensation Proj (Eq. 6), zero-init
+            blk["sla_proj"] = jnp.zeros((cfg.heads, dh, dh), jnp.float32)
+        blocks.append(blk)
+    params["blocks"] = blocks
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def timestep_embedding(t: jnp.ndarray, dim: int = 64) -> jnp.ndarray:
+    """Sinusoidal embedding of diffusion time t in [0, 1]."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[..., None] * freqs * 1000.0
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _layernorm(x: jnp.ndarray) -> jnp.ndarray:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6)
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale) + shift
+
+
+def _head_attention(cfg: DiTConfig, q, k, v, proj_h, impl: str, interpret: bool):
+    """Single-head attention dispatch, shapes (N, dh).
+
+    impl = "pallas" uses the L1 kernels; impl = "ref" uses the pure-jnp
+    oracles (for end-to-end cross-checks in tests)."""
+    if cfg.attn == "full":
+        if impl == "ref":
+            return ref.full_attention(q, k, v)
+        op = flash.make_flash_attention(bq=cfg.bq, bkv=cfg.bkv, interpret=interpret)
+        return op(q, k, v)
+    if cfg.attn == "sla":
+        if impl == "ref":
+            return ref.sla_forward(q, k, v, proj_h, bq=cfg.bq, bkv=cfg.bkv,
+                                   kh_pct=cfg.kh_pct, kl_pct=cfg.kl_pct, phi=cfg.phi)
+        op = sla.make_sla_attention(
+            bq=cfg.bq, bkv=cfg.bkv, kh_pct=cfg.kh_pct, kl_pct=cfg.kl_pct,
+            phi=cfg.phi, interpret=interpret,
+        )
+        return op(q, k, v, proj_h)
+    if cfg.attn == "sparse":
+        if impl == "ref":
+            mc = mask_mod.predict_mask(q, k, cfg.bq, cfg.bkv, cfg.kh_pct, cfg.kl_pct)
+            return ref.sparse_component(q, k, v, mc, cfg.bq, cfg.bkv)
+        op = sparse.make_sparse_attention(bq=cfg.bq, bkv=cfg.bkv,
+                                          kh_pct=cfg.kh_pct, kl_pct=cfg.kl_pct,
+                                          interpret=interpret)
+        return op(q, k, v)
+    if cfg.attn == "linear":
+        if impl == "ref":
+            qphi = features.phi_apply(cfg.phi, q)
+            kphi = features.phi_apply(cfg.phi, k)
+            return ref.linear_attention(qphi, kphi, v)
+        op = linear.make_linear_attention(phi=cfg.phi, bq=cfg.bq, bkv=cfg.bkv,
+                                          interpret=interpret)
+        return op(q, k, v)
+    if cfg.attn == "ls":
+        # L+S ablation: direct sum of Sparse-Only and Linear-Only outputs,
+        # with the same learnable projection on the linear branch.
+        if impl == "ref":
+            mc = mask_mod.predict_mask(q, k, cfg.bq, cfg.bkv, cfg.kh_pct, cfg.kl_pct)
+            qphi = features.phi_apply(cfg.phi, q)
+            kphi = features.phi_apply(cfg.phi, k)
+            o_s = ref.sparse_component(q, k, v, mc, cfg.bq, cfg.bkv)
+            o_l = ref.linear_attention(qphi, kphi, v)
+        else:
+            s_op = sparse.make_sparse_attention(bq=cfg.bq, bkv=cfg.bkv,
+                                                kh_pct=cfg.kh_pct, kl_pct=cfg.kl_pct,
+                                                interpret=interpret)
+            l_op = linear.make_linear_attention(phi=cfg.phi, bq=cfg.bq, bkv=cfg.bkv,
+                                                interpret=interpret)
+            o_s = s_op(q, k, v)
+            o_l = l_op(q, k, v)
+        return o_s + o_l @ proj_h
+    raise ValueError(cfg.attn)
+
+
+def _attention(cfg, blk, x, impl, interpret):
+    """Multi-head attention over (N, dim) tokens."""
+    n, d = x.shape
+    h, dh = cfg.heads, cfg.head_dim
+    qkv = _dense(blk["qkv"], x)  # (N, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(n, h, dh).transpose(1, 0, 2)
+    k = k.reshape(n, h, dh).transpose(1, 0, 2)
+    v = v.reshape(n, h, dh).transpose(1, 0, 2)
+    outs = []
+    for hd in range(h):
+        proj = blk.get("sla_proj")
+        proj_h = proj[hd] if proj is not None else None
+        outs.append(_head_attention(cfg, q[hd], k[hd], v[hd], proj_h, impl, interpret))
+    o = jnp.stack(outs, axis=0).transpose(1, 0, 2).reshape(n, d)
+    return _dense(blk["attn_out"], o)
+
+
+def _block(cfg, blk, x, c, impl, interpret):
+    """One adaLN-zero DiT block. x: (N, d); c: (d,) conditioning vector."""
+    mod = _dense(blk["mod"], jax.nn.silu(c))  # (6d,)
+    sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6)
+    h = _modulate(_layernorm(x), sh_a, sc_a)
+    x = x + g_a * _attention(cfg, blk, h, impl, interpret)
+    h = _modulate(_layernorm(x), sh_m, sc_m)
+    h = _dense(blk["mlp2"], jax.nn.gelu(_dense(blk["mlp1"], h)))
+    return x + g_m * h
+
+
+# ---------------------------------------------------------------------------
+# model forward
+# ---------------------------------------------------------------------------
+
+def dit_forward(
+    cfg: DiTConfig,
+    params: Params,
+    x: jnp.ndarray,          # (N, C) latent tokens
+    t: jnp.ndarray,          # scalar diffusion time in [0, 1]
+    cond: jnp.ndarray,       # (cond_dim,) conditioning vector
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Predict the flow-matching velocity field v(x_t, t, cond), (N, C)."""
+    temb = timestep_embedding(t)
+    temb = _dense(params["t_mlp2"], jax.nn.silu(_dense(params["t_mlp1"], temb)))
+    cemb = _dense(params["c_mlp2"], jax.nn.silu(_dense(params["c_mlp1"], cond)))
+    c = temb + cemb
+    h = _dense(params["patch"], x)
+    for blk in params["blocks"]:
+        h = _block(cfg, blk, h, c, impl, interpret)
+    sh, sc = jnp.split(_dense(params["head"]["mod"], jax.nn.silu(c)), 2)
+    h = _modulate(_layernorm(h), sh, sc)
+    return _dense(params["head"]["out"], h)
+
+
+def dit_forward_batch(cfg, params, xs, ts, conds, impl="pallas", interpret=True):
+    """Batched forward via vmap over the leading batch axis."""
+    return jax.vmap(lambda x, t, c: dit_forward(cfg, params, x, t, c, impl, interpret))(
+        xs, ts, conds
+    )

@@ -1,0 +1,105 @@
+"""Flow-matching fine-tuning objective + Adam, as pure jittable functions.
+
+This is the training half of the paper's recipe: replace attention with SLA
+and fine-tune briefly on data matching pretraining. Both the loss and the
+optimizer are expressed as pytree->pytree functions so a single AOT'd
+`train_step` artifact carries the full fwd+bwd+update; randomness (t, noise)
+is passed *in* so the Rust driver owns the RNG and runs are reproducible.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    m: Params
+    v: Params
+    step: jnp.ndarray  # scalar f32 step counter
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(m=zeros, v=jax.tree_util.tree_map(jnp.zeros_like, params),
+                     step=jnp.zeros((), jnp.float32))
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state: AdamState,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[Params, AdamState]:
+    step = state.step + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state.v, grads)
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params, m, v,
+    )
+    return new_params, AdamState(m=m, v=v, step=step)
+
+
+# ---------------------------------------------------------------------------
+# flow matching
+# ---------------------------------------------------------------------------
+
+def fm_interpolate(x0: jnp.ndarray, noise: jnp.ndarray, t: jnp.ndarray):
+    """Rectified-flow interpolation x_t = (1-t) x0 + t eps and its target
+    velocity eps - x0 (dx_t/dt)."""
+    xt = (1.0 - t) * x0 + t * noise
+    target = noise - x0
+    return xt, target
+
+
+def fm_loss(
+    cfg: model_mod.DiTConfig,
+    params: Params,
+    x0: jnp.ndarray,     # (B, N, C) clean latents
+    cond: jnp.ndarray,   # (B, cond_dim)
+    t: jnp.ndarray,      # (B,) times in (0, 1)
+    noise: jnp.ndarray,  # (B, N, C)
+    impl: str = "pallas",
+) -> jnp.ndarray:
+    """Mean-squared flow-matching loss over the batch."""
+    tb = t[:, None, None]
+    xt, target = fm_interpolate(x0, noise, tb)
+    pred = model_mod.dit_forward_batch(cfg, params, xt, t, cond, impl=impl)
+    return jnp.mean((pred - target) ** 2)
+
+
+def make_train_step(cfg: model_mod.DiTConfig, lr: float = 1e-3, impl: str = "pallas"):
+    """Build the jittable train step:
+        (params, adam_state, x0, cond, t, noise) -> (params', adam_state', loss)
+    """
+
+    def step(params, state: AdamState, x0, cond, t, noise):
+        loss, grads = jax.value_and_grad(
+            lambda p: fm_loss(cfg, p, x0, cond, t, noise, impl=impl)
+        )(params)
+        new_params, new_state = adam_update(params, grads, state, lr=lr)
+        return new_params, new_state, loss
+
+    return step
+
+
+def make_eval_loss(cfg: model_mod.DiTConfig, impl: str = "pallas"):
+    """Validation loss with fixed (t, noise) — the quality proxy used by the
+    Table 1/2 harness."""
+
+    def eval_loss(params, x0, cond, t, noise):
+        return fm_loss(cfg, params, x0, cond, t, noise, impl=impl)
+
+    return eval_loss

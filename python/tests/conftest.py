@@ -1,0 +1,37 @@
+"""Shared fixtures/strategies for the kernel test suite.
+
+Interpret-mode Pallas is slow, so hypothesis sweeps use modest example
+counts; shapes stay small but cover non-square blocks, single-block rows,
+and d != dv-style corner cases where applicable.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.fixture(scope="session")
+def qkv_small():
+    """(q, k, v) at N=128, d=32 — the workhorse size."""
+    return rand(0, 128, 32), rand(1, 128, 32), rand(2, 128, 32)
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5, what=""):
+    import numpy as np
+
+    a = np.asarray(a)
+    b = np.asarray(b)
+    err = np.abs(a - b).max()
+    denom = max(np.abs(b).max(), 1e-8)
+    assert err <= atol + rtol * denom, f"{what}: max abs err {err} (ref scale {denom})"

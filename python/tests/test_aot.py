@@ -1,0 +1,110 @@
+"""AOT path tests: HLO-text generation, manifest integrity, and (when
+artifacts/ exists) consistency between the manifest and the emitted files."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from conftest import ARTIFACTS
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot" in text  # the matmul survived
+
+
+def test_leaf_specs_stable_names():
+    cfg = M.DiTConfig(video=(2, 4, 8), channels=4, dim=32, depth=2, heads=2,
+                      cond_dim=8, bq=8, bkv=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    specs = aot.leaf_specs(params, "params.")
+    names = [n for n, _ in specs]
+    assert len(names) == len(set(names)), "duplicate leaf names"
+    assert any(n.startswith("params.blocks.0.qkv") for n in names)
+    assert any("sla_proj" in n for n in names)
+    # flattening is deterministic
+    assert names == [n for n, _ in aot.leaf_specs(params, "params.")]
+
+
+def test_configs_cover_paper_ablations():
+    """The config registry must span Table 1 + Table 2's rows."""
+    names = set(aot.CONFIGS)
+    assert {"full", "sla", "sparse", "linear", "ls"} <= names      # Table 1/2
+    assert {"sla_elu1", "sla_relu"} <= names                        # phi ablation
+    assert {"sla_kh10", "sla_kh20"} <= names                        # k_h ablation
+    for cfg in aot.CONFIGS.values():
+        cfg.validate()
+    # the kh ablation points must be distinct in critical-block counts
+    from compile.kernels import mask
+    tn = aot.CONFIGS["sla"].seq_len // aot.CONFIGS["sla"].bkv
+    chs = [mask.counts_for(tn, c.kh_pct, c.kl_pct)[0]
+           for c in (aot.CONFIGS["sla"], aot.CONFIGS["sla_kh10"],
+                     aot.CONFIGS["sla_kh20"])]
+    assert chs[0] < chs[1] < chs[2], chs
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts/ not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_files_exist_and_nonempty():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) >= 20
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ARTIFACTS, art["file"])
+        assert os.path.exists(path), f"{name}: missing {art['file']}"
+        assert os.path.getsize(path) > 1000, f"{name}: suspiciously small"
+        assert art["inputs"] and art["outputs"]
+
+
+@needs_artifacts
+def test_manifest_train_step_signature():
+    """Train-step artifacts must have params/m/v in, params'/m'/v'+loss out,
+    with matching leaf counts — the contract the Rust driver relies on."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    art = manifest["artifacts"]["dit_train_step_sla"]
+    ins = [i["name"] for i in art["inputs"]]
+    outs = [o["name"] for o in art["outputs"]]
+    np_ = sum(1 for n in ins if n.startswith("params."))
+    nm = sum(1 for n in ins if n.startswith("adam_m."))
+    nv = sum(1 for n in ins if n.startswith("adam_v."))
+    assert np_ == nm == nv > 0
+    assert ins[-4:] == ["x0", "cond", "t", "noise"]
+    assert outs[-1] == "loss" and outs[-2] == "step"
+    assert sum(1 for n in outs if n.startswith("params.")) == np_
+    # in/out param specs agree shape-wise
+    in_shapes = {i["name"]: i["shape"] for i in art["inputs"]}
+    for o in art["outputs"]:
+        if o["name"].startswith("params."):
+            assert o["shape"] == in_shapes[o["name"]]
+
+
+@needs_artifacts
+def test_manifest_hlo_entry_params_match():
+    """The HLO text's ENTRY signature has exactly as many parameters as the
+    manifest declares inputs."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name in ("dit_denoise_sla", "attn_full_n256_d32"):
+        art = manifest["artifacts"][name]
+        with open(os.path.join(ARTIFACTS, art["file"])) as f:
+            text = f.read()
+        entry = [ln for ln in text.splitlines() if ln.startswith("ENTRY")]
+        assert entry, f"{name}: no ENTRY line"
+        n_params = entry[0].count("parameter") or text.count(" parameter(")
+        assert n_params >= len(art["inputs"]), (name, n_params, len(art["inputs"]))

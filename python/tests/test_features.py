@@ -1,0 +1,61 @@
+"""Feature-map (phi) unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import features
+from conftest import assert_close, rand
+
+
+@pytest.mark.parametrize("name", features.PHI_NAMES)
+def test_phi_nonnegative(name):
+    x = rand(0, 64, 16, scale=3.0)
+    y = features.phi_apply(name, x)
+    assert (jnp.asarray(y) >= 0).all(), f"{name} produced negative features"
+
+
+def test_phi_softmax_rows_sum_to_one():
+    x = rand(1, 32, 8)
+    y = features.phi_apply("softmax", x)
+    assert_close(jnp.sum(y, axis=-1), jnp.ones(32), what="softmax rowsum")
+
+
+def test_phi_unknown_raises():
+    with pytest.raises(ValueError):
+        features.phi_apply("nope", jnp.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        features.phi_vjp("nope", jnp.zeros((2, 2)), jnp.zeros((2, 2)))
+
+
+@pytest.mark.parametrize("name", features.PHI_NAMES)
+def test_phi_vjp_matches_autodiff(name):
+    x = rand(2, 16, 8)
+    g = rand(3, 16, 8)
+    _, vjp = jax.vjp(lambda x_: features.phi_apply(name, x_), x)
+    expected = vjp(g)[0]
+    got = features.phi_vjp(name, x, g)
+    assert_close(got, expected, what=f"phi_vjp[{name}]")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    name=st.sampled_from(features.PHI_NAMES),
+    rows=st.integers(1, 8),
+    d=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_phi_vjp_matches_autodiff_prop(name, rows, d, seed):
+    x = rand(seed, rows, d, scale=2.0)
+    g = rand(seed + 1, rows, d)
+    _, vjp = jax.vjp(lambda x_: features.phi_apply(name, x_), x)
+    assert_close(features.phi_vjp(name, x, g), vjp(g)[0],
+                 what=f"phi_vjp[{name}] rows={rows} d={d}")
+
+
+def test_relu_vjp_zero_below_zero():
+    x = jnp.array([[-1.0, 2.0]])
+    g = jnp.ones_like(x)
+    out = features.phi_vjp("relu", x, g)
+    assert out[0, 0] == 0.0 and out[0, 1] == 1.0

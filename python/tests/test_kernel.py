@@ -1,0 +1,168 @@
+"""Kernel-vs-ref allclose — the CORE correctness signal for L1.
+
+Covers the flash (full), sparse-only, linear-only Pallas kernels against the
+pure-jnp oracles in ref.py, including hypothesis sweeps over shapes/blocks
+and the degenerate masks (all-critical / all-negligible / no-critical).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import features, flash, linear, mask, ref, sparse
+from conftest import assert_close, rand
+
+
+# ---------------------------------------------------------------------------
+# full attention (flash kernel)
+# ---------------------------------------------------------------------------
+
+def test_flash_matches_ref(qkv_small):
+    q, k, v = qkv_small
+    o = flash.flash_attention_pallas(q, k, v, bq=16, bkv=16)
+    assert_close(o, ref.full_attention(q, k, v), what="flash fwd")
+
+
+def test_flash_lse_matches_dense():
+    q, k, v = rand(0, 64, 16), rand(1, 64, 16), rand(2, 64, 16)
+    _, lse = flash.flash_attention_pallas(q, k, v, bq=8, bkv=8, with_lse=True)
+    s = np.asarray(ref.scores(q, k))
+    expect = np.log(np.exp(s - s.max(-1, keepdims=True)).sum(-1)) + s.max(-1)
+    assert_close(lse, expect, what="flash lse")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    shape=st.sampled_from([(64, 8, 8, 8), (64, 16, 8, 16), (128, 32, 32, 16),
+                           (96, 24, 32, 12), (64, 8, 16, 32)]),
+)
+def test_flash_matches_ref_prop(seed, shape):
+    n, bq, bkv, d = shape
+    q, k, v = rand(seed, n, d), rand(seed + 1, n, d), rand(seed + 2, n, d)
+    o = flash.flash_attention_pallas(q, k, v, bq=bq, bkv=bkv)
+    assert_close(o, ref.full_attention(q, k, v), what=f"flash {shape}")
+
+
+def test_flash_dv_not_equal_d():
+    """Value width may differ from query/key width."""
+    q, k = rand(0, 64, 16), rand(1, 64, 16)
+    v = rand(2, 64, 24)
+    o = flash.flash_attention_pallas(q, k, v, bq=8, bkv=8)
+    assert o.shape == (64, 24)
+    assert_close(o, ref.full_attention(q, k, v), what="flash dv!=d")
+
+
+# ---------------------------------------------------------------------------
+# sparse kernel
+# ---------------------------------------------------------------------------
+
+def test_sparse_matches_ref(qkv_small):
+    q, k, v = qkv_small
+    mc = mask.predict_mask(q, k, 16, 16, 25.0, 25.0)
+    o = sparse.sparse_attention_pallas(q, k, v, mc, bq=16, bkv=16)
+    assert_close(o, ref.sparse_component(q, k, v, mc, 16, 16), what="sparse fwd")
+
+
+def test_sparse_all_critical_equals_full(qkv_small):
+    q, k, v = qkv_small
+    mc = jnp.ones((8, 8), dtype=jnp.int32)
+    o = sparse.sparse_attention_pallas(q, k, v, mc, bq=16, bkv=16)
+    assert_close(o, ref.full_attention(q, k, v), what="sparse all-crit == full")
+
+
+def test_sparse_no_critical_is_zero(qkv_small):
+    q, k, v = qkv_small
+    mc = jnp.zeros((8, 8), dtype=jnp.int32)
+    o = sparse.sparse_attention_pallas(q, k, v, mc, bq=16, bkv=16)
+    assert float(jnp.abs(o).max()) == 0.0
+
+
+def test_sparse_single_block_rows():
+    """Each row keeps exactly its top block — the kh=5% regime."""
+    q, k, v = rand(0, 64, 8), rand(1, 64, 8), rand(2, 64, 8)
+    mc = mask.predict_mask(q, k, 8, 8, 12.5, 25.0)
+    assert ((np.asarray(mc) == 1).sum(axis=1) == 1).all()
+    o = sparse.sparse_attention_pallas(q, k, v, mc, bq=8, bkv=8)
+    assert_close(o, ref.sparse_component(q, k, v, mc, 8, 8), what="sparse 1-block")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    shape=st.sampled_from([(64, 8, 8, 8), (128, 16, 16, 16), (96, 12, 24, 8)]),
+    kh=st.sampled_from([12.5, 25.0, 50.0]),
+    kl=st.sampled_from([0.0, 25.0]),
+)
+def test_sparse_matches_ref_prop(seed, shape, kh, kl):
+    n, bq, bkv, d = shape
+    q, k, v = rand(seed, n, d), rand(seed + 1, n, d), rand(seed + 2, n, d)
+    mc = mask.predict_mask(q, k, bq, bkv, kh, kl)
+    o = sparse.sparse_attention_pallas(q, k, v, mc, bq=bq, bkv=bkv)
+    assert_close(o, ref.sparse_component(q, k, v, mc, bq, bkv),
+                 what=f"sparse {shape} kh={kh}")
+
+
+def test_sparse_trainable_grads_match_ref():
+    q, k, v = rand(0, 64, 16), rand(1, 64, 16), rand(2, 64, 16)
+    op = sparse.make_sparse_attention(bq=8, bkv=8, kh_pct=25.0, kl_pct=25.0)
+    mc = mask.predict_mask(q, k, 8, 8, 25.0, 25.0)
+    g_k = jax.grad(lambda *a: jnp.sum(jnp.sin(op(*a))), argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(
+        lambda q, k, v: jnp.sum(jnp.sin(ref.sparse_component(q, k, v, mc, 8, 8))),
+        argnums=(0, 1, 2),
+    )(q, k, v)
+    for name, a, b in zip("qkv", g_k, g_r):
+        assert_close(a, b, what=f"sparse grad d{name}")
+
+
+# ---------------------------------------------------------------------------
+# linear kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("phi", features.PHI_NAMES)
+def test_linear_matches_ref(phi, qkv_small):
+    q, k, v = qkv_small
+    qphi = features.phi_apply(phi, q)
+    kphi = features.phi_apply(phi, k)
+    o = linear.linear_attention_pallas(qphi, kphi, v, bq=16, bkv=16)
+    assert_close(o, ref.linear_attention(qphi, kphi, v), what=f"linear[{phi}]")
+
+
+def test_linear_rank_bound():
+    """Linear attention output lives in a rank <= d subspace spanned by H."""
+    q, k, v = rand(0, 128, 8), rand(1, 128, 8), rand(2, 128, 8)
+    qphi = features.phi_apply("softmax", q)
+    kphi = features.phi_apply("softmax", k)
+    o = np.asarray(ref.linear_attention(qphi, kphi, v))
+    # numerator rank <= d = 8; denominators are per-row scalings
+    rank = np.linalg.matrix_rank(o, tol=1e-5)
+    assert rank <= 8
+
+
+def test_linear_trainable_grads_match_autodiff():
+    q, k, v = rand(3, 64, 16), rand(4, 64, 16), rand(5, 64, 16)
+    op = linear.make_linear_attention(phi="elu1", bq=8, bkv=8)
+
+    def f_ref(q, k, v):
+        return ref.linear_attention(
+            features.phi_apply("elu1", q), features.phi_apply("elu1", k), v
+        )
+
+    g_k = jax.grad(lambda *a: jnp.sum(jnp.cos(op(*a))), argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(lambda *a: jnp.sum(jnp.cos(f_ref(*a))), argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", g_k, g_r):
+        assert_close(a, b, what=f"linear grad d{name}")
+
+
+def test_flash_trainable_grads_match_autodiff():
+    q, k, v = rand(6, 64, 16), rand(7, 64, 16), rand(8, 64, 16)
+    op = flash.make_flash_attention(bq=8, bkv=8)
+    g_k = jax.grad(lambda *a: jnp.sum(jnp.tanh(op(*a))), argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(
+        lambda *a: jnp.sum(jnp.tanh(ref.full_attention(*a))), argnums=(0, 1, 2)
+    )(q, k, v)
+    for name, a, b in zip("qkv", g_k, g_r):
+        assert_close(a, b, what=f"flash grad d{name}")

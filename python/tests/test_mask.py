@@ -1,0 +1,107 @@
+"""Mask prediction (Eq. 2) + 3-way classification (Eq. 3) tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mask
+from conftest import assert_close, rand
+
+
+def test_pool_tokens_mean():
+    x = jnp.arange(12.0).reshape(4, 3)
+    pooled = mask.pool_tokens(x, 2)
+    assert pooled.shape == (2, 3)
+    assert_close(pooled[0], (x[0] + x[1]) / 2, what="pool mean")
+
+
+def test_pc_rows_sum_to_one():
+    q, k = rand(0, 64, 16), rand(1, 64, 16)
+    pc = mask.predict_pc(q, k, 8, 8)
+    assert pc.shape == (8, 8)
+    assert_close(jnp.sum(pc, axis=-1), jnp.ones(8), what="P_c rowsum")
+
+
+def test_counts_for_basics():
+    # paper setting at Tn=16: kh=5% -> at least 1 critical, kl=10% -> 2
+    assert mask.counts_for(16, 5.0, 10.0) == (1, 2)
+    assert mask.counts_for(16, 10.0, 10.0) == (2, 2)
+    assert mask.counts_for(16, 20.0, 10.0) == (3, 2)
+    # degenerate: everything critical leaves nothing negligible
+    assert mask.counts_for(8, 100.0, 50.0) == (8, 0)
+    assert mask.counts_for(8, 0.0, 0.0) == (0, 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tn=st.integers(2, 64),
+    kh=st.floats(0.0, 100.0),
+    kl=st.floats(0.0, 100.0),
+)
+def test_counts_never_overlap(tn, kh, kl):
+    ch, cl = mask.counts_for(tn, kh, kl)
+    assert 0 <= ch <= tn
+    assert 0 <= cl <= tn - ch
+
+
+def test_classify_labels_and_counts():
+    q, k = rand(2, 128, 16), rand(3, 128, 16)
+    pc = mask.predict_pc(q, k, 16, 16)  # (8, 8)
+    mc = np.asarray(mask.classify(pc, 25.0, 25.0))
+    ch, cl = mask.counts_for(8, 25.0, 25.0)
+    for i in range(8):
+        row = mc[i]
+        assert (row == 1).sum() == ch
+        assert (row == -1).sum() == cl
+        assert set(np.unique(row)) <= {-1, 0, 1}
+
+
+def test_classify_critical_are_largest():
+    q, k = rand(4, 64, 8), rand(5, 64, 8)
+    pc = np.asarray(mask.predict_pc(q, k, 8, 8))
+    mc = np.asarray(mask.classify(pc, 25.0, 25.0))
+    for i in range(pc.shape[0]):
+        crit_vals = pc[i][mc[i] == 1]
+        other_vals = pc[i][mc[i] != 1]
+        negl_vals = pc[i][mc[i] == -1]
+        marg_vals = pc[i][mc[i] == 0]
+        assert crit_vals.min() >= other_vals.max() - 1e-7
+        if len(negl_vals) and len(marg_vals):
+            assert negl_vals.max() <= marg_vals.min() + 1e-7
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    tb=st.sampled_from([(64, 8, 8), (64, 16, 8), (128, 16, 32)]),
+    kh=st.sampled_from([0.0, 5.0, 12.5, 50.0, 100.0]),
+    kl=st.sampled_from([0.0, 10.0, 25.0, 50.0]),
+)
+def test_classify_counts_prop(seed, tb, kh, kl):
+    n, bq, bkv = tb
+    q, k = rand(seed, n, 8), rand(seed + 1, n, 8)
+    mc = np.asarray(mask.predict_mask(q, k, bq, bkv, kh, kl))
+    tm, tn = n // bq, n // bkv
+    assert mc.shape == (tm, tn)
+    ch, cl = mask.counts_for(tn, kh, kl)
+    assert ((mc == 1).sum(axis=1) == ch).all()
+    assert ((mc == -1).sum(axis=1) == cl).all()
+
+
+def test_mask_sparsity():
+    mc = jnp.array([[1, 0, -1, 0], [1, 1, 0, -1]], dtype=jnp.int32)
+    # 3 critical of 8 blocks -> sparsity 1 - 3/8
+    assert_close(mask.mask_sparsity(mc), 1 - 3 / 8, what="sparsity")
+
+
+def test_predict_mask_is_gradient_stopped():
+    q, k = rand(6, 32, 8), rand(7, 32, 8)
+
+    def f(q):
+        mc = mask.predict_mask(q, k, 8, 8, 25.0, 25.0)
+        return jnp.sum(mc.astype(jnp.float32))
+
+    g = jax.grad(f)(q)
+    assert float(jnp.abs(g).max()) == 0.0

@@ -1,0 +1,138 @@
+"""L2 model tests: shapes, pallas-vs-ref end-to-end equality per variant,
+training-step behaviour (loss decreases, params update), determinism."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from conftest import assert_close, rand
+
+CFG = M.DiTConfig(video=(2, 4, 8), channels=4, dim=32, depth=2, heads=2,
+                  cond_dim=8, bq=8, bkv=8, kh_pct=12.5, kl_pct=25.0)
+
+
+def _inputs(cfg, seed=0):
+    x = rand(seed, cfg.seq_len, cfg.channels)
+    t = jnp.float32(0.3)
+    c = rand(seed + 1, cfg.cond_dim)
+    return x, t, c
+
+
+@pytest.mark.parametrize("attn", M.ATTN_VARIANTS)
+def test_forward_shapes_all_variants(attn):
+    cfg = dataclasses.replace(CFG, attn=attn)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x, t, c = _inputs(cfg)
+    out = M.dit_forward(cfg, params, x, t, c)
+    assert out.shape == (cfg.seq_len, cfg.channels)
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("attn", M.ATTN_VARIANTS)
+def test_pallas_matches_ref_end_to_end(attn):
+    cfg = dataclasses.replace(CFG, attn=attn)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    # non-zero proj so the SLA/L+S linear branch actually contributes
+    if attn in ("sla", "ls"):
+        params = dict(params)
+        params["blocks"] = [
+            {**blk, "sla_proj": 0.2 * rand(7 + i, cfg.heads, cfg.head_dim,
+                                           cfg.head_dim)}
+            for i, blk in enumerate(params["blocks"])
+        ]
+    x, t, c = _inputs(cfg, seed=3)
+    o_pallas = M.dit_forward(cfg, params, x, t, c, impl="pallas")
+    o_ref = M.dit_forward(cfg, params, x, t, c, impl="ref")
+    assert_close(o_pallas, o_ref, atol=1e-4, rtol=1e-4,
+                 what=f"e2e pallas vs ref [{attn}]")
+
+
+def test_param_count_and_structure():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    n = M.param_count(params)
+    assert n > 10_000
+    # sla variant has per-head proj, full does not
+    full_params = M.init_params(dataclasses.replace(CFG, attn="full"),
+                                jax.random.PRNGKey(0))
+    assert M.param_count(full_params) == n - CFG.depth * CFG.heads * CFG.head_dim ** 2
+
+
+def test_zero_init_sla_equals_sparse_model():
+    """Fresh SLA params (proj=0) produce the same output as the sparse-only
+    model with the same weights — the fine-tune starting point is stable."""
+    cfg_sla = dataclasses.replace(CFG, attn="sla")
+    cfg_sp = dataclasses.replace(CFG, attn="sparse")
+    params = M.init_params(cfg_sla, jax.random.PRNGKey(2))
+    params_sp = jax.tree_util.tree_map(lambda x: x, params)
+    params_sp["blocks"] = [
+        {k: v for k, v in blk.items() if k != "sla_proj"}
+        for blk in params_sp["blocks"]
+    ]
+    x, t, c = _inputs(cfg_sla, seed=5)
+    o_sla = M.dit_forward(cfg_sla, params, x, t, c)
+    o_sp = M.dit_forward(cfg_sp, params_sp, x, t, c)
+    assert_close(o_sla, o_sp, what="SLA(proj=0) == sparse model")
+
+
+def test_timestep_embedding_distinct():
+    e1 = M.timestep_embedding(jnp.float32(0.1))
+    e2 = M.timestep_embedding(jnp.float32(0.9))
+    assert e1.shape == (64,)
+    assert float(jnp.abs(e1 - e2).max()) > 0.1
+
+
+def test_fm_interpolate_endpoints():
+    x0 = rand(0, 8, 4)
+    noise = rand(1, 8, 4)
+    xt, tgt = T.fm_interpolate(x0, noise, jnp.float32(0.0))
+    assert_close(xt, x0, what="t=0 endpoint")
+    xt, _ = T.fm_interpolate(x0, noise, jnp.float32(1.0))
+    assert_close(xt, noise, what="t=1 endpoint")
+    assert_close(tgt, noise - x0, what="velocity target")
+
+
+@pytest.mark.parametrize("attn", ["sla", "full"])
+def test_train_step_decreases_loss(attn):
+    cfg = dataclasses.replace(CFG, attn=attn)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    state = T.adam_init(params)
+    step = jax.jit(T.make_train_step(cfg, lr=2e-3))
+    b = 2
+    x0 = rand(10, b, cfg.seq_len, cfg.channels)
+    cond = rand(11, b, cfg.cond_dim)
+    t = jnp.array([0.3, 0.7], jnp.float32)
+    noise = rand(12, b, cfg.seq_len, cfg.channels)
+    losses = []
+    for _ in range(8):
+        params, state, loss = step(params, state, x0, cond, t, noise)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+
+
+def test_train_step_deterministic():
+    cfg = dataclasses.replace(CFG, attn="sla")
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    state = T.adam_init(params)
+    step = jax.jit(T.make_train_step(cfg))
+    args = (rand(20, 2, cfg.seq_len, cfg.channels), rand(21, 2, cfg.cond_dim),
+            jnp.array([0.2, 0.8]), rand(22, 2, cfg.seq_len, cfg.channels))
+    _, _, l1 = step(params, state, *args)
+    _, _, l2 = step(params, state, *args)
+    assert float(l1) == float(l2)
+
+
+def test_adam_bias_correction_first_step():
+    """After one step with constant grad g, update == lr * g / (|g| + eps)."""
+    params = {"w": jnp.array([1.0, -2.0])}
+    grads = {"w": jnp.array([0.5, -0.5])}
+    state = T.adam_init(params)
+    new_params, new_state = T.adam_update(params, grads, state, lr=0.1)
+    expect = params["w"] - 0.1 * grads["w"] / (jnp.abs(grads["w"]) + 1e-8)
+    assert_close(new_params["w"], expect, what="adam step1")
+    assert float(new_state.step) == 1.0

@@ -1,0 +1,60 @@
+//! Bench harness (criterion substitute): regenerates every table and figure
+//! of the paper's evaluation section on this testbed.
+//!
+//!   cargo bench                  # run everything
+//!   cargo bench -- fig1          # one experiment
+//!   cargo bench -- table1 fig6a  # a subset
+//!
+//! Experiments: fig1, fig3, fig6a, fig6b, table1, table2, table3, perf.
+//! Knobs (env): SLA_BENCH_PRETRAIN, SLA_BENCH_FINETUNE, SLA_BENCH_PROMPTS,
+//! SLA_BENCH_GEN_STEPS, SLA_DIT_ARTIFACTS.
+//!
+//! Results are printed as paper-style tables and appended as JSON lines to
+//! bench_results/results.jsonl.
+
+#[path = "harness/common.rs"]
+mod common;
+#[path = "harness/figs.rs"]
+mod figs;
+#[path = "harness/kernels.rs"]
+mod kernels;
+#[path = "harness/perf.rs"]
+mod perf;
+#[path = "harness/tables.rs"]
+mod tables;
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--")) // ignore cargo-bench flags like --bench
+        .collect();
+    let all = ["fig1", "fig3", "fig6a", "fig6b", "table1", "table2", "table3"];
+    let selected: Vec<&str> = if args.is_empty() {
+        all.to_vec()
+    } else {
+        args.iter().map(|s| s.as_str()).collect()
+    };
+    std::fs::create_dir_all("bench_results").ok();
+    for name in selected {
+        let t0 = std::time::Instant::now();
+        println!("\n================== {name} ==================");
+        let res = match name {
+            "fig1" => figs::fig1(),
+            "fig3" => figs::fig3(),
+            "fig6a" => kernels::fig6a(),
+            "fig6b" => kernels::fig6b(),
+            "table1" => tables::table1(),
+            "table2" => tables::table2(),
+            "table3" => tables::table3(),
+            "perf" => perf::perf(),
+            other => {
+                eprintln!("unknown experiment {other:?}; known: {all:?} + perf");
+                continue;
+            }
+        };
+        match res {
+            Ok(()) => println!("[{name}] done in {:.1}s", t0.elapsed().as_secs_f64()),
+            Err(e) => println!("[{name}] SKIPPED/FAILED: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Shared helpers for the bench harness: workload generation, timing, and
+//! JSON result logging.
+
+use sla_dit::tensor::Mat;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+/// Env knob with default.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Structured (Q, K, V) reproducing the attention statistics the paper
+/// samples from Wan2.1 (Fig. 1/3): a *cluster* component (tokens attend
+/// sharply to same-cluster tokens — the sparse, high-rank few) plus a
+/// *popularity/sink* component (every query couples to a shared direction
+/// whose key-side coefficient varies per token — a smooth, near-rank-1
+/// background, the low-rank many), plus noise.
+///
+/// `sharp` scales the cluster coupling (≈ how much mass the critical blocks
+/// hold); popularity spread is fixed to put a large fraction of weights
+/// below 1/(100N), matching Fig. 1's left panel.
+pub fn clustered_qkv(n: usize, d: usize, clusters: usize, sharp: f32, seed: u64)
+    -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| {
+            let mut c = rng.normal_vec(d);
+            let norm = c.iter().map(|x| x * x).sum::<f32>().sqrt();
+            for x in &mut c {
+                *x /= norm; // unit centers: cluster score = sharp^2
+            }
+            c
+        })
+        .collect();
+    // shared "popularity" direction (unit)
+    let mut u = rng.normal_vec(d);
+    let un = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+    for x in &mut u {
+        *x /= un;
+    }
+    let a_q = 2.5 * (d as f32).sqrt(); // query-side coupling (score spread ~2.5*pop)
+    let mut q = Mat::zeros(n, d);
+    let mut k = Mat::zeros(n, d);
+    let mut v = Mat::zeros(n, d);
+    for r in 0..n {
+        let c = &centers[(r * clusters) / n]; // contiguous runs: cluster structure is block-aligned
+        let pop = rng.normal_f32(); // per-key popularity coefficient
+        for t in 0..d {
+            *q.at_mut(r, t) =
+                sharp * c[t] * (d as f32).sqrt() + a_q * u[t] + 0.3 * rng.normal_f32();
+            *k.at_mut(r, t) =
+                sharp * c[t] * (d as f32).sqrt() + pop * u[t] + 0.3 * rng.normal_f32();
+            *v.at_mut(r, t) = rng.normal_f32();
+        }
+    }
+    (q, k, v)
+}
+
+/// Median-of-`reps` wall time of `f`, in seconds.
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Append a result record to bench_results/results.jsonl.
+pub fn log_result(experiment: &str, payload: Json) {
+    let rec = Json::obj(vec![
+        ("experiment", Json::str(experiment)),
+        ("payload", payload),
+    ]);
+    let line = rec.to_string();
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_results/results.jsonl")
+    {
+        let _ = writeln!(f, "{line}");
+    }
+}

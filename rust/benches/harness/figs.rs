@@ -1,0 +1,112 @@
+//! Fig. 1 (attention-weight distribution + sparse accuracy vs sparsity) and
+//! Fig. 3 (stable-rank decomposition) on the native substrate.
+
+use anyhow::Result;
+
+use sla_dit::attention::{full, mask, MaskPolicy};
+use sla_dit::tensor::{stable_rank, Mat};
+use sla_dit::util::json::Json;
+
+use crate::common::{clustered_qkv, log_result};
+
+/// Paper Fig. 1: (left) weight-distribution buckets; (right) rel-L1 error of
+/// magnitude-ranked sparse attention as sparsity grows. Expected shape: the
+/// error stays small while dropping the small-weight mass, then explodes as
+/// sparsity approaches keeping only the top few percent.
+pub fn fig1() -> Result<()> {
+    let (n, d) = (1024, 64);
+    let (q, k, v) = clustered_qkv(n, d, 16, 0.8, 7);
+    let (o_full, p) = full::naive_attention(&q, &k, &v, true);
+    let p = p.unwrap();
+
+    // left panel: distribution buckets
+    let total = (n * n) as f64;
+    let above_1n = p.data.iter().filter(|&&x| x > 1.0 / n as f32).count() as f64 / total;
+    let below_100n =
+        p.data.iter().filter(|&&x| x < 1.0 / (100.0 * n as f32)).count() as f64 / total;
+    let mid = 1.0 - above_1n - below_100n;
+    println!("weight distribution (paper: ~8.1% > 1/N, ~45% < 1/(100N)):");
+    println!("  > 1/N        : {:>5.1}%   (critical candidates)", 100.0 * above_1n);
+    println!("  middle band  : {:>5.1}%   (marginal)", 100.0 * mid);
+    println!("  < 1/(100N)   : {:>5.1}%   (negligible)", 100.0 * below_100n);
+
+    // right panel: keep the largest (1-s) fraction of weights per row,
+    // renormalize, compare outputs
+    println!("\nsparse-attention accuracy vs sparsity (element-granular oracle):");
+    println!("  {:>9} {:>10}", "sparsity", "rel-L1");
+    let mut series = Vec::new();
+    for s_pct in [45.0f64, 60.0, 70.0, 80.0, 85.0, 90.0, 92.0, 95.0, 98.0] {
+        let keep = ((1.0 - s_pct / 100.0) * n as f64).ceil() as usize;
+        let mut o_sparse = Mat::zeros(n, d);
+        for r in 0..n {
+            let row = p.row(r);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            let kept = &idx[..keep.max(1)];
+            let norm: f32 = kept.iter().map(|&c| row[c]).sum();
+            let orow = o_sparse.row_mut(r);
+            for &c in kept {
+                let w = row[c] / norm;
+                for (ov, &vv) in orow.iter_mut().zip(v.row(c)) {
+                    *ov += w * vv;
+                }
+            }
+        }
+        let err = sla_dit::metrics::rel_l1(&o_sparse.data, &o_full.data);
+        println!("  {:>8.0}% {:>10.4}", s_pct, err);
+        series.push(Json::obj(vec![
+            ("sparsity_pct", Json::num(s_pct)),
+            ("rel_l1", Json::num(err)),
+        ]));
+    }
+    log_result("fig1", Json::obj(vec![
+        ("above_1n", Json::num(above_1n)),
+        ("below_100n", Json::num(below_100n)),
+        ("series", Json::Arr(series)),
+    ]));
+    println!("\nexpected shape: small error through mid sparsity, sharp blow-up at the top end");
+    Ok(())
+}
+
+/// Paper Fig. 3: stable rank of P, its top-k% part, and the remainder.
+/// Expected: remainder is drastically lower-rank than the full weights.
+pub fn fig3() -> Result<()> {
+    println!("stable rank ||A||_F^2/sigma1^2 of attention weights (paper Fig. 3):");
+    println!("  {:>5} {:>6} | {:>8} {:>9} {:>11}", "seed", "kh%", "full", "top-k%",
+             "bottom-rest");
+    let (n, d, b) = (1024, 64, 64);
+    let mut rows = Vec::new();
+    for seed in [7u64, 8, 9] {
+        let (q, k, v) = clustered_qkv(n, d, 16, 1.3, seed);
+        let (_, p) = full::naive_attention(&q, &k, &v, true);
+        let p = p.unwrap();
+        let kh = 8.0;
+        let mc = mask::predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: kh, kl_pct: 0.0 });
+        let mut p_top = p.clone();
+        let mut p_rest = p.clone();
+        for r in 0..n {
+            for c in 0..n {
+                if mc.label(r / b, c / b) == 1 {
+                    *p_rest.at_mut(r, c) = 0.0;
+                } else {
+                    *p_top.at_mut(r, c) = 0.0;
+                }
+            }
+        }
+        let sr_full = stable_rank(&p, 60, 1);
+        let sr_top = stable_rank(&p_top, 60, 2);
+        let sr_rest = stable_rank(&p_rest, 60, 3);
+        println!("  {:>5} {:>6.1} | {:>8.2} {:>9.2} {:>11.2}", seed, kh, sr_full, sr_top,
+                 sr_rest);
+        rows.push(Json::obj(vec![
+            ("seed", Json::num(seed as f64)),
+            ("full", Json::num(sr_full)),
+            ("top", Json::num(sr_top)),
+            ("rest", Json::num(sr_rest)),
+        ]));
+    }
+    log_result("fig3", Json::Arr(rows));
+    println!("\nexpected shape: bottom-rest stable rank << full (the low-rank many),");
+    println!("top-k% carries the high-rank structure (the sparse few)");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! `cargo bench -- perf`: the L3 optimization experiments behind
+//! EXPERIMENTS.md §Perf — aggregation-strategy sweep (A.3), thread scaling,
+//! and block-shape sweep on the native SLA kernel.
+
+use anyhow::Result;
+
+use sla_dit::attention::linear::{precompute_state, Phi};
+use sla_dit::attention::opt::{aggregate_marginal, AggStrategy};
+use sla_dit::attention::{mask, MaskPolicy, SlaConfig, SlaKernel};
+
+use sla_dit::util::json::Json;
+
+use crate::common::{clustered_qkv, log_result, time_median};
+
+pub fn perf() -> Result<()> {
+    let (n, d, b) = (4096usize, 64usize, 64usize);
+    let (q, k, v) = clustered_qkv(n, d, 16, 1.6, 21);
+
+    // ---- A.3 aggregation strategies at the paper's 85%-marginal regime ----
+    println!("-- marginal aggregation strategies (N={n}, 85% marginal) --");
+    let m = mask::predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: 5.0, kl_pct: 10.0 });
+    let kphi = Phi::Softmax.apply(&k);
+    let state = precompute_state(&kphi, &v, b);
+    println!("{:<12} {:>10}", "strategy", "time(ms)");
+    let mut jrows = Vec::new();
+    for (name, strat) in [
+        ("naive", AggStrategy::Naive),
+        ("preagg", AggStrategy::PreAggregate),
+        ("fr2", AggStrategy::FourRussians { g: 2 }),
+        ("fr4", AggStrategy::FourRussians { g: 4 }),
+        ("fr8", AggStrategy::FourRussians { g: 8 }),
+    ] {
+        let t = time_median(5, || {
+            let _ = aggregate_marginal(&state, &m, strat);
+        });
+        println!("{:<12} {:>10.2}", name, t * 1e3);
+        jrows.push(Json::obj(vec![
+            ("strategy", Json::str(name)),
+            ("ms", Json::num(t * 1e3)),
+        ]));
+    }
+    log_result("perf_agg", Json::Arr(jrows));
+
+    // ---- mid-density regime where Four Russians should shine ----
+    println!("\n-- aggregation at ~50% marginal (Four-Russians regime) --");
+    let m50 = mask::predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+    println!("{:<12} {:>10}", "strategy", "time(ms)");
+    for (name, strat) in [
+        ("naive", AggStrategy::Naive),
+        ("preagg", AggStrategy::PreAggregate),
+        ("fr4", AggStrategy::FourRussians { g: 4 }),
+        ("fr8", AggStrategy::FourRussians { g: 8 }),
+    ] {
+        let t = time_median(5, || {
+            let _ = aggregate_marginal(&state, &m50, strat);
+        });
+        println!("{:<12} {:>10.2}", name, t * 1e3);
+    }
+
+    // ---- thread scaling on the fused forward ----
+    println!("\n-- SLA forward thread scaling (N={n}) --");
+    println!("{:<10} {:>10} {:>8}", "threads", "time(ms)", "scale");
+    let mut t1 = 0.0;
+    for threads in [1usize, 2, 4, 8] {
+        let cfg = SlaConfig { bq: b, bkv: b, kh_pct: 5.0, kl_pct: 10.0, threads,
+                              ..Default::default() };
+        let kern = SlaKernel::new(cfg, d);
+        let t = time_median(3, || {
+            let _ = kern.forward(&q, &k, &v, None);
+        });
+        if threads == 1 {
+            t1 = t;
+        }
+        println!("{:<10} {:>10.2} {:>8.2}", threads, t * 1e3, t1 / t);
+    }
+
+    // ---- block-shape sweep (the L1 structural analogue) ----
+    println!("\n-- block-shape sweep, SLA forward (N={n}) --");
+    println!("{:<14} {:>10} {:>14}", "bq x bkv", "time(ms)", "VMEM est (KiB)");
+    for (bq, bkv) in [(32, 32), (32, 64), (64, 64), (64, 128), (128, 128)] {
+        if n % bq != 0 || n % bkv != 0 {
+            continue;
+        }
+        let cfg = SlaConfig { bq, bkv, kh_pct: 5.0, kl_pct: 10.0, ..Default::default() };
+        let kern = SlaKernel::new(cfg, d);
+        let t = time_median(3, || {
+            let _ = kern.forward(&q, &k, &v, None);
+        });
+        // per-program VMEM estimate: Q tile + K/V tile + S tile + H + Z + acc
+        let floats = bq * d + 2 * bkv * d + bq * bkv + d * d + d + bq * d;
+        println!("{:<14} {:>10.2} {:>14.1}", format!("{bq}x{bkv}"), t * 1e3,
+                 floats as f64 * 4.0 / 1024.0);
+    }
+    Ok(())
+}

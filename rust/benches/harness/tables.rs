@@ -1,0 +1,280 @@
+//! Tables 1-3: fine-tune each attention variant from a shared pretrained
+//! checkpoint (the paper's protocol) and compare quality proxies + FLOPs +
+//! sparsity. Runs entirely through the PJRT train-step / denoise artifacts.
+//!
+//! Baseline mapping (DESIGN.md §3): the trainable block-sparse baselines
+//! (Sparge-T / VSA / VMoBA) are represented by the block-sparse top-k model
+//! at their sparsity operating points; Sparge-F is the same model evaluated
+//! WITHOUT fine-tuning (training-free). relu substitutes hedgehog in the
+//! phi ablation (same-dimension feature maps only in the fused kernel).
+
+use anyhow::Result;
+
+use sla_dit::attention::flops::{self, FlopsReport};
+use sla_dit::attention::mask::{counts_for, CompressedMask};
+use sla_dit::coordinator::{ArtifactBackend, Coordinator, CoordinatorConfig};
+use sla_dit::metrics;
+use sla_dit::runtime::{HostTensor, Runtime};
+use sla_dit::train::Trainer;
+use sla_dit::util::json::Json;
+use sla_dit::workload::{Corpus, CorpusConfig};
+
+use crate::common::{env_usize, log_result};
+
+struct RowSpec {
+    label: &'static str,
+    cfg: &'static str,
+    finetune: bool,
+}
+
+struct RowResult {
+    label: String,
+    val_loss: f64,
+    rel_l1: f64,
+    psnr: f64,
+    pfid: f64,
+    tcons: f64,
+    tflops: f64, // attention FLOPs per denoise fwd, in GF
+    sparsity: f64,
+}
+
+/// Attention FLOPs per model forward (all layers+heads) + sparsity for a
+/// manifest config, from the analytic model.
+fn model_flops(rt: &Runtime, cfg_name: &str) -> (f64, f64) {
+    let c = &rt.manifest.configs[cfg_name];
+    let n = c.seq_len;
+    let d = c.head_dim;
+    let tm = n / c.bq;
+    let tn = n / c.bkv;
+    let (ch, cl) = counts_for(tn, c.kh_pct, c.kl_pct);
+    // synthetic mask with the exact per-row counts the predictor enforces
+    let mut labels = vec![0i8; tm * tn];
+    for i in 0..tm {
+        for j in 0..ch {
+            labels[i * tn + j] = 1;
+        }
+        for j in 0..cl {
+            labels[i * tn + tn - 1 - j] = -1;
+        }
+    }
+    let mask = CompressedMask::from_labels(tm, tn, labels);
+    let rep = match c.attn.as_str() {
+        "full" => FlopsReport::full_only(n, d),
+        "sparse" => FlopsReport::sparse_only(&mask, n, c.bq, c.bkv, d),
+        "linear" => FlopsReport::linear_only(n, d),
+        "sla" => FlopsReport::sla(&mask, n, c.bq, c.bkv, d),
+        "ls" => {
+            // sparse part + GLOBAL linear part + proj
+            let mut rep = FlopsReport::sparse_only(&mask, n, c.bq, c.bkv, d);
+            rep.linear = FlopsReport::linear_only(n, d).linear
+                + 2 * (n as u64) * (d as u64) * (d as u64);
+            rep
+        }
+        other => panic!("unknown attn {other}"),
+    };
+    let per_model = rep.total() as f64 * (c.heads * c.depth) as f64;
+    let sparsity = match c.attn.as_str() {
+        "full" => 0.0,
+        "linear" => 1.0,
+        _ => mask.sparsity(),
+    };
+    (per_model / 1e9, sparsity)
+}
+
+fn pretrain(rt: &Runtime, cfg: &str, steps: usize, ckpt: &std::path::Path) -> Result<()> {
+    if ckpt.exists() && std::env::var("SLA_BENCH_REPRETRAIN").is_err() {
+        println!("reusing pretrained checkpoint {ckpt:?}");
+        return Ok(());
+    }
+    println!("pretraining {cfg} for {steps} steps...");
+    let mut tr = Trainer::new(rt, cfg, 0)?;
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let loss = tr.train_step((s * tr.batch) as u64)?;
+        if s % 20 == 0 {
+            println!("  pretrain step {s:>4} loss {loss:.5}");
+        }
+    }
+    println!("  pretrain done in {:.0}s (final loss {:.5})",
+             t0.elapsed().as_secs_f64(), tr.recent_loss(5));
+    tr.save_checkpoint(ckpt)?;
+    Ok(())
+}
+
+fn run_rows(
+    experiment: &str,
+    rt: &Runtime,
+    rows: &[RowSpec],
+    pretrain_cfg: &str,
+    image_mode: bool,
+) -> Result<()> {
+    let pre_steps = env_usize("SLA_BENCH_PRETRAIN", 60);
+    let ft_steps = env_usize("SLA_BENCH_FINETUNE", 40);
+    let n_prompts = env_usize("SLA_BENCH_PROMPTS", 3);
+    let gen_steps = env_usize("SLA_BENCH_GEN_STEPS", 6);
+    std::fs::create_dir_all("bench_results").ok();
+    let ckpt = std::path::PathBuf::from(format!("bench_results/pre_{pretrain_cfg}.ckpt"));
+    pretrain(rt, pretrain_cfg, pre_steps, &ckpt)?;
+
+    let mcfg = rt.manifest.configs[pretrain_cfg].clone();
+    let corpus = Corpus::new(CorpusConfig::from_video(
+        mcfg.video, mcfg.channels, mcfg.cond_dim, 0 ^ 0xC0FFEE,
+    ));
+
+    let mut teacher_samples: Vec<HostTensor> = Vec::new();
+    let mut results: Vec<RowResult> = Vec::new();
+
+    for row in rows {
+        println!("\n[{experiment}] row {:?} (cfg={}, finetune={})", row.label, row.cfg,
+                 row.finetune);
+        let mut tr = Trainer::new(rt, row.cfg, 0)?;
+        let loaded = tr.load_checkpoint(&ckpt)?;
+        println!("  transferred {loaded}/{} tensors", tr.params.len());
+        if row.finetune {
+            let t0 = std::time::Instant::now();
+            for s in 0..ft_steps {
+                let loss = tr.train_step(((pre_steps + s) * tr.batch) as u64)?;
+                if s % 20 == 0 {
+                    println!("  ft step {s:>4} loss {loss:.5}");
+                }
+            }
+            println!("  fine-tune done in {:.0}s", t0.elapsed().as_secs_f64());
+        }
+        let val_loss = tr.eval_loss(0)? as f64;
+
+        // generation comparison against the first (teacher) row
+        let mut backend = ArtifactBackend::new(rt, row.cfg, 0)?;
+        backend.set_params(tr.params.clone());
+        let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+        let mut rel_l1 = 0.0;
+        let mut psnr = 0.0;
+        let mut tcons = 0.0;
+        let mut gen_all: Vec<f32> = Vec::new();
+        for p in 0..n_prompts {
+            let x = coord.generate_one(100 + p as u64, gen_steps, 1.0)?;
+            tcons += metrics::temporal_consistency(&x, mcfg.video.0);
+            if teacher_samples.len() > p {
+                rel_l1 += metrics::rel_l1(&x.data, &teacher_samples[p].data);
+                psnr += metrics::psnr(&x.data, &teacher_samples[p].data);
+            }
+            gen_all.extend_from_slice(&x.data);
+            if results.is_empty() {
+                teacher_samples.push(x);
+            }
+        }
+        let np = n_prompts as f64;
+        // proxy-FID vs the real corpus distribution (image mode) — stats of
+        // generated samples against stats of corpus x0 samples
+        let pfid = if image_mode {
+            let mut real_all: Vec<f32> = Vec::new();
+            for p in 0..n_prompts {
+                let (x0, _) = corpus.sample(100 + p as u64);
+                real_all.extend_from_slice(&x0.data);
+            }
+            metrics::proxy_fid(&gen_all, &real_all, mcfg.channels)
+        } else {
+            let mut teach_all: Vec<f32> = Vec::new();
+            for t in &teacher_samples {
+                teach_all.extend_from_slice(&t.data);
+            }
+            metrics::proxy_fid(&gen_all, &teach_all, mcfg.channels)
+        };
+
+        let (gf, sparsity) = model_flops(rt, row.cfg);
+        results.push(RowResult {
+            label: row.label.to_string(),
+            val_loss,
+            rel_l1: if results.is_empty() { 0.0 } else { rel_l1 / np },
+            psnr: if results.is_empty() { f64::INFINITY } else { psnr / np },
+            pfid,
+            tcons: tcons / np,
+            tflops: gf,
+            sparsity,
+        });
+    }
+
+    // ---- print the table ----
+    println!("\n{:-<100}", "");
+    println!("{:<22} {:>9} {:>8} {:>9} {:>8} {:>9} {:>10} {:>9}", "method", "val_loss",
+             "relL1", "PSNR(dB)", "pFID", "TempCons", "FLOPs(GF)", "sparsity");
+    let mut jrows = Vec::new();
+    for r in &results {
+        println!(
+            "{:<22} {:>9.4} {:>8.4} {:>9.1} {:>8.4} {:>9.4} {:>10.2} {:>8.1}%",
+            r.label, r.val_loss, r.rel_l1, r.psnr, r.pfid, r.tcons, r.tflops,
+            100.0 * r.sparsity
+        );
+        jrows.push(Json::obj(vec![
+            ("label", Json::str(r.label.clone())),
+            ("val_loss", Json::num(r.val_loss)),
+            ("rel_l1", Json::num(r.rel_l1)),
+            ("pfid", Json::num(r.pfid)),
+            ("tcons", Json::num(r.tcons)),
+            ("gflops", Json::num(r.tflops)),
+            ("sparsity", Json::num(r.sparsity)),
+        ]));
+    }
+    log_result(experiment, Json::Arr(jrows));
+    Ok(())
+}
+
+/// Table 1: SLA vs full + block-sparse baselines on video generation.
+pub fn table1() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let rows = [
+        RowSpec { label: "Full Attention", cfg: "full", finetune: true },
+        RowSpec { label: "Sparge-F-like (noFT)", cfg: "sparse_k15", finetune: false },
+        RowSpec { label: "Sparge-T/VMoBA-like", cfg: "sparse_k15", finetune: true },
+        RowSpec { label: "VSA-like (94%)", cfg: "sparse", finetune: true },
+        RowSpec { label: "SLA (94%)", cfg: "sla", finetune: true },
+    ];
+    run_rows("table1", &rt, &rows, "full", false)?;
+    println!("\nexpected shape (paper Table 1): SLA ~= Full on quality at ~19-20x");
+    println!("FLOPs reduction; training-free sparse collapses; trainable sparse");
+    println!("baselines sit between, at lower sparsity.");
+    Ok(())
+}
+
+/// Table 2: ablations — fusion strategy, phi, k_h.
+pub fn table2() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let rows = [
+        RowSpec { label: "Full Attention", cfg: "full", finetune: true },
+        RowSpec { label: "Linear Only", cfg: "linear", finetune: true },
+        RowSpec { label: "Sparse Only", cfg: "sparse", finetune: true },
+        RowSpec { label: "L+S", cfg: "ls", finetune: true },
+        RowSpec { label: "SLA (softmax)", cfg: "sla", finetune: true },
+        RowSpec { label: "SLA (elu+1)", cfg: "sla_elu1", finetune: true },
+        RowSpec { label: "SLA (relu~hedgehog)", cfg: "sla_relu", finetune: true },
+        RowSpec { label: "SLA (kh=10%)", cfg: "sla_kh10", finetune: true },
+        RowSpec { label: "SLA (kh=20%)", cfg: "sla_kh20", finetune: true },
+    ];
+    run_rows("table2", &rt, &rows, "full", false)?;
+    println!("\nexpected shape (paper Table 2): Linear-Only collapses; L+S worse than");
+    println!("SLA; softmax phi best; kh=5% already matches full-attention quality.");
+    Ok(())
+}
+
+/// Table 3: image generation (2-D variants, proxy-FID vs real distribution).
+pub fn table3() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    if !rt.manifest.configs.contains_key("img_full") {
+        anyhow::bail!("image configs missing — re-run `make artifacts`");
+    }
+    let rows = [
+        RowSpec { label: "Full Attention", cfg: "img_full", finetune: true },
+        RowSpec { label: "SpargeAttn-F-like", cfg: "img_sparse", finetune: false },
+        RowSpec { label: "SpargeAttn-T/VSA2D", cfg: "img_sparse", finetune: true },
+        RowSpec { label: "SLA (2D)", cfg: "img_sla", finetune: true },
+    ];
+    run_rows("table3", &rt, &rows, "img_full", true)?;
+    println!("\nexpected shape (paper Table 3): SLA matches/beats full attention's");
+    println!("proxy-FID at the highest sparsity; training-free sparse collapses.");
+    Ok(())
+}
+
+// keep the flops module import used even if rows change
+#[allow(dead_code)]
+fn _unused(rep: &FlopsReport) -> u64 {
+    flops::full_attention_flops(1, 1) + rep.total()
+}

@@ -1,0 +1,175 @@
+//! Dense attention: naive O(N^2) reference and the blocked FlashAttention-
+//! style forward (the baseline Fig. 6 normalizes against).
+
+use crate::tensor::Mat;
+
+pub const NEG_INF: f32 = -1e30;
+pub const EPS: f32 = 1e-6;
+
+/// Naive softmax attention O = softmax(QK^T / sqrt(d)) V. Also returns P
+/// when `want_p` (for the Fig. 1 / Fig. 3 analyses).
+pub fn naive_attention(q: &Mat, k: &Mat, v: &Mat, want_p: bool) -> (Mat, Option<Mat>) {
+    let mut s = q.matmul_nt(k);
+    s.scale(1.0 / (q.cols as f32).sqrt());
+    s.softmax_rows();
+    let o = s.matmul(v);
+    (o, if want_p { Some(s) } else { None })
+}
+
+/// Blocked online-softmax forward (FlashAttention). Returns (O, lse).
+pub fn flash_forward(q: &Mat, k: &Mat, v: &Mat, bq: usize, bkv: usize) -> (Mat, Vec<f32>) {
+    let (n, d) = (q.rows, q.cols);
+    let dv = v.cols;
+    assert_eq!(k.rows, n);
+    assert!(n % bq == 0 && n % bkv == 0);
+    let tm = n / bq;
+    let tn = n / bkv;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut o = Mat::zeros(n, dv);
+    let mut lse = vec![0.0f32; n];
+    // scratch reused across blocks (no allocation in the j loop)
+    let mut s = vec![0.0f32; bq * bkv];
+
+    for bi in 0..tm {
+        let r0 = bi * bq;
+        let mut m = vec![NEG_INF; bq];
+        let mut l = vec![0.0f32; bq];
+        let mut acc = vec![0.0f32; bq * dv];
+        for bj in 0..tn {
+            let c0 = bj * bkv;
+            online_softmax_step(
+                q, k, v, r0, c0, bq, bkv, dv, scale, &mut s, &mut m, &mut l, &mut acc,
+            );
+        }
+        for r in 0..bq {
+            let inv = 1.0 / l[r];
+            let orow = o.row_mut(r0 + r);
+            for (ov, &a) in orow.iter_mut().zip(&acc[r * dv..(r + 1) * dv]) {
+                *ov = a * inv;
+            }
+            lse[r0 + r] = m[r] + l[r].ln();
+        }
+    }
+    (o, lse)
+}
+
+/// One (Qi, Kj/Vj) online-softmax update — shared by full, sparse, and SLA
+/// kernels. Updates (m, l, acc) in place; `s` is a bq x bkv scratch.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn online_softmax_step(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    r0: usize,
+    c0: usize,
+    bq: usize,
+    bkv: usize,
+    dv: usize,
+    scale: f32,
+    s: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    acc: &mut [f32],
+) {
+    let d = q.cols;
+    // S = Qi Kj^T * scale
+    for r in 0..bq {
+        let qrow = q.row(r0 + r);
+        let srow = &mut s[r * bkv..(r + 1) * bkv];
+        for (c, sv) in srow.iter_mut().enumerate() {
+            let krow = k.row(c0 + c);
+            let mut accum = 0.0f32;
+            for t in 0..d {
+                accum += qrow[t] * krow[t];
+            }
+            *sv = accum * scale;
+        }
+    }
+    for r in 0..bq {
+        let srow = &mut s[r * bkv..(r + 1) * bkv];
+        let rowmax = srow.iter().cloned().fold(NEG_INF, f32::max);
+        let m_new = m[r].max(rowmax);
+        let alpha = (m[r] - m_new).exp();
+        let mut psum = 0.0f32;
+        for sv in srow.iter_mut() {
+            *sv = (*sv - m_new).exp();
+            psum += *sv;
+        }
+        l[r] = l[r] * alpha + psum;
+        let arow = &mut acc[r * dv..(r + 1) * dv];
+        if alpha != 1.0 {
+            for a in arow.iter_mut() {
+                *a *= alpha;
+            }
+        }
+        for (c, &p) in srow.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = v.row(c0 + c);
+            for (a, &vv) in arow.iter_mut().zip(vrow) {
+                *a += p * vv;
+            }
+        }
+        m[r] = m_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+        )
+    }
+
+    #[test]
+    fn flash_matches_naive() {
+        let (q, k, v) = qkv(64, 16, 0);
+        let (o_naive, _) = naive_attention(&q, &k, &v, false);
+        let (o_flash, _) = flash_forward(&q, &k, &v, 8, 8);
+        assert!(o_flash.max_abs_diff(&o_naive) < 1e-5);
+    }
+
+    #[test]
+    fn flash_nonsquare_blocks() {
+        let (q, k, v) = qkv(96, 8, 1);
+        let (o_naive, _) = naive_attention(&q, &k, &v, false);
+        let (o_flash, _) = flash_forward(&q, &k, &v, 12, 24);
+        assert!(o_flash.max_abs_diff(&o_naive) < 1e-5);
+    }
+
+    #[test]
+    fn lse_matches_dense() {
+        let (q, k, _) = qkv(32, 8, 2);
+        let v = Mat::zeros(32, 8);
+        let (_, lse) = flash_forward(&q, &k, &v, 8, 8);
+        let mut s = q.matmul_nt(&k);
+        s.scale(1.0 / (8.0f32).sqrt());
+        for r in 0..32 {
+            let row = s.row(r);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let expect = mx + row.iter().map(|x| (x - mx).exp()).sum::<f32>().ln();
+            assert!((lse[r] - expect).abs() < 1e-4, "row {r}");
+        }
+    }
+
+    #[test]
+    fn attention_weights_rows_sum_to_one() {
+        let (q, k, v) = qkv(32, 8, 3);
+        let (_, p) = naive_attention(&q, &k, &v, true);
+        let p = p.unwrap();
+        for r in 0..p.rows {
+            let s: f32 = p.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+}

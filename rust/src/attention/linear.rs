@@ -1,0 +1,314 @@
+//! Linear attention (Sec. 2.2) with the paper's feature maps, both the
+//! global (Linear-Only baseline) form and the block-masked form used as
+//! SLA's marginal path.
+
+use super::full::EPS;
+use super::mask::CompressedMask;
+use crate::tensor::Mat;
+
+/// Feature map phi applied along the feature dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phi {
+    Softmax,
+    Elu1,
+    Relu,
+}
+
+impl Phi {
+    pub fn parse(s: &str) -> anyhow::Result<Phi> {
+        Ok(match s {
+            "softmax" => Phi::Softmax,
+            "elu1" => Phi::Elu1,
+            "relu" => Phi::Relu,
+            _ => anyhow::bail!("unknown phi {s:?} (softmax|elu1|relu)"),
+        })
+    }
+
+    /// phi(x) row-wise.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        match self {
+            Phi::Softmax => out.softmax_rows(),
+            Phi::Elu1 => {
+                for v in &mut out.data {
+                    *v = if *v > 0.0 { *v + 1.0 } else { v.exp() };
+                }
+            }
+            Phi::Relu => {
+                for v in &mut out.data {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        out
+    }
+
+    /// VJP: given x and upstream grad g (w.r.t. phi(x)), return grad w.r.t. x.
+    pub fn vjp(&self, x: &Mat, g: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, x.cols);
+        match self {
+            Phi::Softmax => {
+                let p = self.apply(x);
+                for r in 0..x.rows {
+                    let prow = p.row(r);
+                    let grow = g.row(r);
+                    let dot: f32 = prow.iter().zip(grow).map(|(a, b)| a * b).sum();
+                    let orow = out.row_mut(r);
+                    for c in 0..x.cols {
+                        orow[c] = prow[c] * (grow[c] - dot);
+                    }
+                }
+            }
+            Phi::Elu1 => {
+                for i in 0..x.data.len() {
+                    let d = if x.data[i] > 0.0 { 1.0 } else { x.data[i].exp() };
+                    out.data[i] = g.data[i] * d;
+                }
+            }
+            Phi::Relu => {
+                for i in 0..x.data.len() {
+                    out.data[i] = if x.data[i] > 0.0 { g.data[i] } else { 0.0 };
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-KV-block linear state: h_j = phi(K_j)^T V_j (d x dv), z_j (d).
+pub struct LinearState {
+    pub h: Vec<Mat>,
+    pub z: Mat, // (Tn, d)
+}
+
+/// Precompute h_j, z_j for every KV block (Alg. 1 line 4).
+pub fn precompute_state(kphi: &Mat, v: &Mat, bkv: usize) -> LinearState {
+    precompute_state_threads(kphi, v, bkv, 1)
+}
+
+/// Threaded variant: KV blocks are independent (used on the N>=2048 path;
+/// see EXPERIMENTS.md §Perf).
+pub fn precompute_state_threads(kphi: &Mat, v: &Mat, bkv: usize, threads: usize)
+    -> LinearState {
+    let n = kphi.rows;
+    let d = kphi.cols;
+    let dv = v.cols;
+    let tn = n / bkv;
+    let h: Vec<Mat> = crate::util::threadpool::parallel_map(tn, threads, |bj| {
+        let kb = kphi.rows_slice(bj * bkv, (bj + 1) * bkv);
+        let vb = v.rows_slice(bj * bkv, (bj + 1) * bkv);
+        kb.matmul_tn(&vb)
+    });
+    let _ = dv;
+    let mut z = Mat::zeros(tn, d);
+    for bj in 0..tn {
+        let zrow = z.row_mut(bj);
+        for r in bj * bkv..(bj + 1) * bkv {
+            for (zc, &kv) in zrow.iter_mut().zip(kphi.row(r)) {
+                *zc += kv;
+            }
+        }
+    }
+    LinearState { h, z }
+}
+
+/// Global (unmasked) linear attention — the Linear-Only baseline.
+/// Inputs are already feature-mapped.
+pub fn linear_forward_global(qphi: &Mat, kphi: &Mat, v: &Mat) -> Mat {
+    let h = kphi.matmul_tn(v); // (d, dv)
+    let mut z = vec![0.0f32; kphi.cols];
+    for r in 0..kphi.rows {
+        for (zc, &kv) in z.iter_mut().zip(kphi.row(r)) {
+            *zc += kv;
+        }
+    }
+    apply_linear(qphi, &h, &z)
+}
+
+/// O_i = phi(Q_i) H / (phi(Q_i) Z + eps) for a single shared (H, Z).
+/// Perf: expressed as one blocked matmul + a row scaling (the i-k-j matmul
+/// streams H rows and auto-vectorizes) — ~2x over the scalar row loop, see
+/// EXPERIMENTS.md §Perf.
+pub fn apply_linear(qphi: &Mat, h: &Mat, z: &[f32]) -> Mat {
+    let mut o = qphi.matmul(h);
+    for r in 0..qphi.rows {
+        let qrow = qphi.row(r);
+        let den: f32 = qrow.iter().zip(z).map(|(a, b)| a * b).sum::<f32>() + EPS;
+        let inv = 1.0 / den;
+        for ov in o.row_mut(r) {
+            *ov *= inv;
+        }
+    }
+    o
+}
+
+/// Block-masked linear attention over marginal blocks (Eq. 5) — the naive
+/// (per-row re-aggregation) strategy; opt.rs provides the faster ones.
+/// Returns (O^l, H_i per row block, Z_i per row block).
+pub fn linear_forward_masked(
+    qphi: &Mat,
+    state: &LinearState,
+    mask: &CompressedMask,
+    bq: usize,
+) -> (Mat, Vec<Mat>, Mat) {
+    let d = qphi.cols;
+    let dv = state.h.first().map(|h| h.cols).unwrap_or(d);
+    let tm = mask.tm;
+    let mut o = Mat::zeros(qphi.rows, dv);
+    let mut hi_all = Vec::with_capacity(tm);
+    let mut zi_all = Mat::zeros(tm, d);
+    for bi in 0..tm {
+        let mut hi = Mat::zeros(d, dv);
+        let zi = zi_all.row_mut(bi);
+        for &bj in &mask.marg_rows[bi] {
+            hi.add_assign(&state.h[bj as usize]);
+            for (zc, &zv) in zi.iter_mut().zip(state.z.row(bj as usize)) {
+                *zc += zv;
+            }
+        }
+        let qb = qphi.rows_slice(bi * bq, (bi + 1) * bq);
+        let ob = apply_linear(&qb, &hi, zi_all.row(bi));
+        for r in 0..bq {
+            o.row_mut(bi * bq + r).copy_from_slice(ob.row(r));
+        }
+        hi_all.push(hi);
+    }
+    (o, hi_all, zi_all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::mask::{predict_mask, MaskPolicy};
+    use crate::util::rng::Rng;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+        )
+    }
+
+    #[test]
+    fn phi_outputs_nonnegative() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(16, 8, &mut rng);
+        for phi in [Phi::Softmax, Phi::Elu1, Phi::Relu] {
+            let y = phi.apply(&x);
+            assert!(y.data.iter().all(|&v| v >= 0.0), "{phi:?}");
+        }
+    }
+
+    #[test]
+    fn phi_softmax_rows_sum_one() {
+        let mut rng = Rng::new(1);
+        let x = Mat::randn(8, 16, &mut rng);
+        let y = Phi::Softmax.apply(&x);
+        for r in 0..8 {
+            let s: f32 = y.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn phi_vjp_finite_differences() {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(4, 6, &mut rng);
+        let g = Mat::randn(4, 6, &mut rng);
+        for phi in [Phi::Softmax, Phi::Elu1, Phi::Relu] {
+            let vj = phi.vjp(&x, &g);
+            let eps = 1e-3f32;
+            for idx in [0usize, 7, 23] {
+                let mut xp = x.clone();
+                xp.data[idx] += eps;
+                let mut xm = x.clone();
+                xm.data[idx] -= eps;
+                let f = |m: &Mat| -> f32 {
+                    phi.apply(m).data.iter().zip(&g.data).map(|(a, b)| a * b).sum()
+                };
+                let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+                assert!(
+                    (num - vj.data[idx]).abs() < 5e-3,
+                    "{phi:?} idx {idx}: {num} vs {}",
+                    vj.data[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn global_linear_matches_direct_formula() {
+        let (q, k, v) = qkv(32, 8, 3);
+        let qphi = Phi::Softmax.apply(&q);
+        let kphi = Phi::Softmax.apply(&k);
+        let o = linear_forward_global(&qphi, &kphi, &v);
+        // direct: per-row sum over all tokens
+        for r in [0usize, 13, 31] {
+            let qrow = qphi.row(r);
+            let mut num = vec![0.0f32; 8];
+            let mut den = EPS;
+            for c in 0..32 {
+                let w: f32 = qrow.iter().zip(kphi.row(c)).map(|(a, b)| a * b).sum();
+                den += w;
+                for (nv, &vv) in num.iter_mut().zip(v.row(c)) {
+                    *nv += w * vv;
+                }
+            }
+            for t in 0..8 {
+                assert!((o.at(r, t) - num[t] / den).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_all_marginal_equals_global() {
+        let (q, k, v) = qkv(64, 8, 4);
+        let qphi = Phi::Elu1.apply(&q);
+        let kphi = Phi::Elu1.apply(&k);
+        let state = precompute_state(&kphi, &v, 8);
+        let mask = crate::attention::mask::CompressedMask::all(
+            8,
+            8,
+            crate::attention::mask::Label::Marginal,
+        );
+        let (o, _, _) = linear_forward_masked(&qphi, &state, &mask, 8);
+        let og = linear_forward_global(&qphi, &kphi, &v);
+        assert!(o.max_abs_diff(&og) < 1e-4);
+    }
+
+    #[test]
+    fn masked_respects_mask() {
+        let (q, k, v) = qkv(64, 8, 5);
+        let qphi = Phi::Softmax.apply(&q);
+        let kphi = Phi::Softmax.apply(&k);
+        let state = precompute_state(&kphi, &v, 8);
+        let mask = predict_mask(&q, &k, 8, 8, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        let (o, hi, zi) = linear_forward_masked(&qphi, &state, &mask, 8);
+        // check H_i against definition for row block 0
+        let mut expect = Mat::zeros(8, 8);
+        for &bj in &mask.marg_rows[0] {
+            expect.add_assign(&state.h[bj as usize]);
+        }
+        assert!(hi[0].max_abs_diff(&expect) < 1e-5);
+        assert_eq!(o.rows, 64);
+        assert_eq!(zi.rows, 8);
+    }
+
+    #[test]
+    fn precompute_state_definitions() {
+        let (_, k, v) = qkv(16, 4, 6);
+        let kphi = Phi::Relu.apply(&k);
+        let st = precompute_state(&kphi, &v, 8);
+        // h_0 = K_0^T V_0
+        let kb = kphi.rows_slice(0, 8);
+        let vb = v.rows_slice(0, 8);
+        assert!(st.h[0].max_abs_diff(&kb.transpose().matmul(&vb)) < 1e-5);
+        // z_0 = column sums of K_0
+        for t in 0..4 {
+            let expect: f32 = (0..8).map(|r| kb.at(r, t)).sum();
+            assert!((st.z.at(0, t) - expect).abs() < 1e-5);
+        }
+    }
+}

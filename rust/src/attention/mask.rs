@@ -1,0 +1,353 @@
+//! Compressed attention-weight prediction (Eq. 2) and 3-way block
+//! classification (Eq. 3), plus the baseline mask policies (VSA-like,
+//! VMoBA-like, Sparge-like threshold) and the A.3 lookup tables.
+
+use crate::tensor::Mat;
+
+/// Block label: the paper's {1, 0, -1}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Label {
+    Critical,   //  1: exact block FlashAttention
+    Marginal,   //  0: linear attention
+    Negligible, // -1: skipped
+}
+
+impl Label {
+    pub fn to_i8(self) -> i8 {
+        match self {
+            Label::Critical => 1,
+            Label::Marginal => 0,
+            Label::Negligible => -1,
+        }
+    }
+}
+
+/// (Tm x Tn) compressed mask with per-row lookup tables (Appendix A.3:
+/// "lookup table" optimization — the hot loops touch only the index lists,
+/// never scan full rows).
+#[derive(Clone, Debug)]
+pub struct CompressedMask {
+    pub tm: usize,
+    pub tn: usize,
+    labels: Vec<i8>,
+    /// per-row indices of critical blocks
+    pub crit_rows: Vec<Vec<u32>>,
+    /// per-row indices of marginal blocks
+    pub marg_rows: Vec<Vec<u32>>,
+    /// per-column indices of critical / marginal rows (backward pass order)
+    pub crit_cols: Vec<Vec<u32>>,
+    pub marg_cols: Vec<Vec<u32>>,
+}
+
+impl CompressedMask {
+    pub fn from_labels(tm: usize, tn: usize, labels: Vec<i8>) -> Self {
+        assert_eq!(labels.len(), tm * tn);
+        let mut m = CompressedMask {
+            tm,
+            tn,
+            labels,
+            crit_rows: vec![Vec::new(); tm],
+            marg_rows: vec![Vec::new(); tm],
+            crit_cols: vec![Vec::new(); tn],
+            marg_cols: vec![Vec::new(); tn],
+        };
+        for i in 0..tm {
+            for j in 0..tn {
+                match m.labels[i * tn + j] {
+                    1 => {
+                        m.crit_rows[i].push(j as u32);
+                        m.crit_cols[j].push(i as u32);
+                    }
+                    0 => {
+                        m.marg_rows[i].push(j as u32);
+                        m.marg_cols[j].push(i as u32);
+                    }
+                    -1 => {}
+                    l => panic!("bad label {l}"),
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize, j: usize) -> i8 {
+        self.labels[i * self.tn + j]
+    }
+
+    pub fn count(&self, l: Label) -> usize {
+        let v = l.to_i8();
+        self.labels.iter().filter(|&&x| x == v).count()
+    }
+
+    /// Fraction of blocks NOT computed exactly (the paper's "sparsity").
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.count(Label::Critical) as f64 / (self.tm * self.tn) as f64
+    }
+
+    pub fn all(tm: usize, tn: usize, l: Label) -> Self {
+        Self::from_labels(tm, tn, vec![l.to_i8(); tm * tn])
+    }
+}
+
+/// Mean-pool (N, d) along tokens into (N/block, d).
+pub fn pool_tokens(x: &Mat, block: usize) -> Mat {
+    assert_eq!(x.rows % block, 0, "N={} % block={} != 0", x.rows, block);
+    let t = x.rows / block;
+    let mut out = Mat::zeros(t, x.cols);
+    let inv = 1.0 / block as f32;
+    for bi in 0..t {
+        let orow = out.row_mut(bi);
+        for r in bi * block..(bi + 1) * block {
+            let row = x.row(r);
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Compressed attention weights P_c = softmax(pool(Q) pool(K)^T / sqrt(d)).
+pub fn predict_pc(q: &Mat, k: &Mat, bq: usize, bkv: usize) -> Mat {
+    let qc = pool_tokens(q, bq);
+    let kc = pool_tokens(k, bkv);
+    let mut s = qc.matmul_nt(&kc);
+    s.scale(1.0 / (q.cols as f32).sqrt());
+    s.softmax_rows();
+    s
+}
+
+/// Per-row critical/negligible counts for percentages (mirrors the Python
+/// `mask.counts_for`: critical is at least 1 when kh > 0; sets never overlap).
+pub fn counts_for(tn: usize, kh_pct: f64, kl_pct: f64) -> (usize, usize) {
+    let mut ch = (tn as f64 * kh_pct / 100.0).round() as usize;
+    if kh_pct > 0.0 {
+        ch = ch.max(1);
+    }
+    ch = ch.min(tn);
+    let cl = ((tn as f64 * kl_pct / 100.0).round() as usize).min(tn - ch);
+    (ch, cl)
+}
+
+/// Mask production policy — SLA's 3-way split plus the baseline families.
+#[derive(Clone, Copy, Debug)]
+pub enum MaskPolicy {
+    /// SLA (Eq. 3): per-row top kh% critical, bottom kl% negligible, rest
+    /// marginal.
+    Sla { kh_pct: f64, kl_pct: f64 },
+    /// VSA-like trainable block-sparse: per-row top kh% critical, everything
+    /// else skipped (no linear path).
+    VsaTopK { kh_pct: f64 },
+    /// VMoBA-like mixture-of-block: per-row top-k by *max*-pooled scores
+    /// (finer selector), everything else skipped.
+    VmobaTopK { kh_pct: f64 },
+    /// Sparge-like training-free threshold on P_c: critical if
+    /// P_c[i,j] > tau / Tn, everything else skipped.
+    SpargeThreshold { tau: f64 },
+}
+
+/// Rank order of a row, descending by value (stable: ties by index).
+fn ranks_desc(row: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+    let mut rank = vec![0usize; row.len()];
+    for (r, &i) in idx.iter().enumerate() {
+        rank[i] = r;
+    }
+    rank
+}
+
+/// Classify P_c into a CompressedMask under the given policy.
+pub fn classify(pc: &Mat, policy: MaskPolicy) -> CompressedMask {
+    let (tm, tn) = (pc.rows, pc.cols);
+    let mut labels = vec![0i8; tm * tn];
+    match policy {
+        MaskPolicy::Sla { kh_pct, kl_pct } => {
+            let (ch, cl) = counts_for(tn, kh_pct, kl_pct);
+            for i in 0..tm {
+                let rank = ranks_desc(pc.row(i));
+                for j in 0..tn {
+                    labels[i * tn + j] = if rank[j] < ch {
+                        1
+                    } else if rank[j] >= tn - cl {
+                        -1
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+        MaskPolicy::VsaTopK { kh_pct } | MaskPolicy::VmobaTopK { kh_pct } => {
+            let (ch, _) = counts_for(tn, kh_pct, 0.0);
+            for i in 0..tm {
+                let rank = ranks_desc(pc.row(i));
+                for j in 0..tn {
+                    labels[i * tn + j] = if rank[j] < ch { 1 } else { -1 };
+                }
+            }
+        }
+        MaskPolicy::SpargeThreshold { tau } => {
+            let thresh = (tau / tn as f64) as f32;
+            for i in 0..tm {
+                let row = pc.row(i);
+                // always keep the row max (otherwise rows can go fully dark)
+                let jmax = (0..tn)
+                    .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                    .unwrap();
+                for j in 0..tn {
+                    labels[i * tn + j] = if row[j] > thresh || j == jmax { 1 } else { -1 };
+                }
+            }
+        }
+    }
+    CompressedMask::from_labels(tm, tn, labels)
+}
+
+/// Max-pool variant of P_c used by the VMoBA-like policy.
+pub fn predict_pc_maxpool(q: &Mat, k: &Mat, bq: usize, bkv: usize) -> Mat {
+    let tm = q.rows / bq;
+    let tn = k.rows / bkv;
+    // scores on pooled-by-max |q| and |k| representatives: cheap stand-in
+    // for VMoBA's per-block selector while remaining O(Tm*Tn*d).
+    let mut qc = Mat::zeros(tm, q.cols);
+    for bi in 0..tm {
+        for r in bi * bq..(bi + 1) * bq {
+            let row = q.row(r);
+            let orow = qc.row_mut(bi);
+            for (o, &v) in orow.iter_mut().zip(row) {
+                if v.abs() > o.abs() {
+                    *o = v;
+                }
+            }
+        }
+    }
+    let mut kc = Mat::zeros(tn, k.cols);
+    for bj in 0..tn {
+        for r in bj * bkv..(bj + 1) * bkv {
+            let row = k.row(r);
+            let orow = kc.row_mut(bj);
+            for (o, &v) in orow.iter_mut().zip(row) {
+                if v.abs() > o.abs() {
+                    *o = v;
+                }
+            }
+        }
+    }
+    let mut s = qc.matmul_nt(&kc);
+    s.scale(1.0 / (q.cols as f32).sqrt());
+    s.softmax_rows();
+    s
+}
+
+/// Predict + classify in one call (the serving-path entry point).
+pub fn predict_mask(q: &Mat, k: &Mat, bq: usize, bkv: usize, policy: MaskPolicy)
+    -> CompressedMask {
+    let pc = match policy {
+        MaskPolicy::VmobaTopK { .. } => predict_pc_maxpool(q, k, bq, bkv),
+        _ => predict_pc(q, k, bq, bkv),
+    };
+    classify(&pc, policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn qk(n: usize, d: usize) -> (Mat, Mat) {
+        let mut rng = Rng::new(7);
+        (Mat::randn(n, d, &mut rng), Mat::randn(n, d, &mut rng))
+    }
+
+    #[test]
+    fn pc_rows_sum_to_one() {
+        let (q, k) = qk(64, 16);
+        let pc = predict_pc(&q, &k, 8, 8);
+        for i in 0..pc.rows {
+            let s: f32 = pc.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn counts_match_python_semantics() {
+        assert_eq!(counts_for(16, 5.0, 10.0), (1, 2));
+        assert_eq!(counts_for(16, 10.0, 10.0), (2, 2));
+        assert_eq!(counts_for(16, 20.0, 10.0), (3, 2));
+        assert_eq!(counts_for(8, 100.0, 50.0), (8, 0));
+        assert_eq!(counts_for(8, 0.0, 0.0), (0, 0));
+    }
+
+    #[test]
+    fn sla_mask_row_counts() {
+        let (q, k) = qk(128, 8);
+        let m = predict_mask(&q, &k, 16, 16, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        for i in 0..m.tm {
+            assert_eq!(m.crit_rows[i].len(), 2);
+            assert_eq!(m.marg_rows[i].len(), 4);
+        }
+        assert!((m.sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn critical_blocks_are_row_maxima() {
+        let (q, k) = qk(64, 8);
+        let pc = predict_pc(&q, &k, 8, 8);
+        let m = classify(&pc, MaskPolicy::Sla { kh_pct: 12.5, kl_pct: 25.0 });
+        for i in 0..m.tm {
+            let row = pc.row(i);
+            let crit = m.crit_rows[i][0] as usize;
+            for j in 0..m.tn {
+                assert!(row[crit] >= row[j] - 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_tables_consistent_with_labels() {
+        let (q, k) = qk(64, 8);
+        let m = predict_mask(&q, &k, 8, 8, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        for i in 0..m.tm {
+            for &j in &m.crit_rows[i] {
+                assert_eq!(m.label(i, j as usize), 1);
+            }
+            for &j in &m.marg_rows[i] {
+                assert_eq!(m.label(i, j as usize), 0);
+            }
+        }
+        for j in 0..m.tn {
+            for &i in &m.crit_cols[j] {
+                assert_eq!(m.label(i as usize, j), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn vsa_mask_has_no_marginal() {
+        let (q, k) = qk(64, 8);
+        let m = predict_mask(&q, &k, 8, 8, MaskPolicy::VsaTopK { kh_pct: 25.0 });
+        assert_eq!(m.count(Label::Marginal), 0);
+        assert_eq!(m.count(Label::Critical), 8 * 2);
+    }
+
+    #[test]
+    fn sparge_threshold_keeps_row_max() {
+        let (q, k) = qk(64, 8);
+        let m = predict_mask(&q, &k, 8, 8, MaskPolicy::SpargeThreshold { tau: 1e9 });
+        // absurd threshold: only the forced row-max survives
+        for i in 0..m.tm {
+            assert_eq!(m.crit_rows[i].len(), 1);
+        }
+    }
+
+    #[test]
+    fn all_mask_constructor() {
+        let m = CompressedMask::all(4, 4, Label::Critical);
+        assert_eq!(m.count(Label::Critical), 16);
+        assert_eq!(m.sparsity(), 0.0);
+    }
+}

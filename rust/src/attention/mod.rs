@@ -1,0 +1,24 @@
+//! Native (pure-Rust) implementation of the paper's kernel domain.
+//!
+//! This is the *measured* substrate: unlike the Pallas interpret-mode
+//! kernels (which `where`-mask but cannot skip), these blocked kernels
+//! really skip negligible blocks, really use the A.3 lookup tables /
+//! pre-aggregation / Four-Russians optimizations, and therefore produce the
+//! wall-clock numbers behind Fig. 6. Numerics are cross-checked against the
+//! Pallas kernels through the PJRT runtime (see rust/tests).
+//!
+//! Layout: all kernels operate on row-major `Mat` q/k/v of shape (N, d)
+//! with block sizes (bq, bkv); masks are compressed (Tm x Tn) label grids.
+
+pub mod flops;
+pub mod full;
+pub mod linear;
+pub mod mask;
+pub mod opt;
+pub mod sla;
+pub mod sparse;
+
+pub use flops::FlopsReport;
+pub use linear::Phi;
+pub use mask::{CompressedMask, Label, MaskPolicy};
+pub use sla::{SlaConfig, SlaKernel, SlaOutput};

@@ -1,0 +1,274 @@
+//! Appendix A.3 efficiency optimizations for the marginal-path aggregation
+//! (H_i = sum of h_j over marginal blocks, likewise Z_i):
+//!
+//!  * `Naive`        — sum the marginal h_j per row (baseline).
+//!  * `PreAggregate` — total = sum of all h_j computed once; per row,
+//!                     subtract the few non-marginal blocks. Wins when
+//!                     marginal fraction is high (the 85% regime).
+//!  * `FourRussians` — group blocks into segments of g; precompute all 2^g
+//!                     subset sums per segment; per row, one lookup per
+//!                     segment. Wins in the mid-density regime.
+//!
+//! All three are exact (up to f32 reassociation) and equivalence-tested.
+
+use super::linear::LinearState;
+use super::mask::CompressedMask;
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggStrategy {
+    Naive,
+    PreAggregate,
+    FourRussians { g: usize },
+}
+
+impl AggStrategy {
+    pub fn parse(s: &str) -> anyhow::Result<AggStrategy> {
+        Ok(match s {
+            "naive" => AggStrategy::Naive,
+            "preagg" => AggStrategy::PreAggregate,
+            s if s.starts_with("fr") => {
+                let g: usize = s[2..].parse().map_err(|_| {
+                    anyhow::anyhow!("four-russians strategy is fr<g>, e.g. fr4")
+                })?;
+                anyhow::ensure!((1..=16).contains(&g), "fr g must be in 1..=16");
+                AggStrategy::FourRussians { g }
+            }
+            _ => anyhow::bail!("unknown aggregation strategy {s:?} (naive|preagg|fr<g>)"),
+        })
+    }
+
+    /// Pick automatically from the marginal fraction (the A.3 guidance:
+    /// pre-aggregation when marginal > ~70%, Four Russians mid-range).
+    pub fn auto(marginal_fraction: f64) -> AggStrategy {
+        if marginal_fraction > 0.7 {
+            AggStrategy::PreAggregate
+        } else if marginal_fraction > 0.25 {
+            AggStrategy::FourRussians { g: 4 }
+        } else {
+            AggStrategy::Naive
+        }
+    }
+}
+
+/// Aggregate (H_i, Z_i) for every query row block under `strategy`.
+/// h_j: (d x dv) per KV block; z: (Tn x d). Output: per-row-block H (Vec of
+/// d x dv) and Z (Tm x d).
+pub fn aggregate_marginal(
+    state: &LinearState,
+    mask: &CompressedMask,
+    strategy: AggStrategy,
+) -> (Vec<Mat>, Mat) {
+    let tn = mask.tn;
+    let tm = mask.tm;
+    let d = state.z.cols;
+    let dv = state.h.first().map(|h| h.cols).unwrap_or(d);
+
+    match strategy {
+        AggStrategy::Naive => {
+            let mut hs = Vec::with_capacity(tm);
+            let mut zs = Mat::zeros(tm, d);
+            for bi in 0..tm {
+                let mut hi = Mat::zeros(d, dv);
+                let zrow = zs.row_mut(bi);
+                for &bj in &mask.marg_rows[bi] {
+                    hi.add_assign(&state.h[bj as usize]);
+                    for (zc, &zv) in zrow.iter_mut().zip(state.z.row(bj as usize)) {
+                        *zc += zv;
+                    }
+                }
+                hs.push(hi);
+            }
+            (hs, zs)
+        }
+        AggStrategy::PreAggregate => {
+            // total over ALL blocks, once
+            let mut h_total = Mat::zeros(d, dv);
+            for h in &state.h {
+                h_total.add_assign(h);
+            }
+            let mut z_total = vec![0.0f32; d];
+            for bj in 0..tn {
+                for (zt, &zv) in z_total.iter_mut().zip(state.z.row(bj)) {
+                    *zt += zv;
+                }
+            }
+            let mut hs = Vec::with_capacity(tm);
+            let mut zs = Mat::zeros(tm, d);
+            for bi in 0..tm {
+                // Rows with no marginal blocks must be EXACT zeros: the
+                // subtract-everything path leaves f32 cancellation residue
+                // that the eps-guarded division would amplify.
+                if mask.marg_rows[bi].is_empty() {
+                    hs.push(Mat::zeros(d, dv));
+                    continue;
+                }
+                let mut hi = h_total.clone();
+                let zrow = zs.row_mut(bi);
+                zrow.copy_from_slice(&z_total);
+                // subtract the non-marginal few: critical + negligible
+                for bj in 0..tn {
+                    if mask.label(bi, bj) != 0 {
+                        hi.sub_assign(&state.h[bj]);
+                        for (zc, &zv) in zrow.iter_mut().zip(state.z.row(bj)) {
+                            *zc -= zv;
+                        }
+                    }
+                }
+                hs.push(hi);
+            }
+            (hs, zs)
+        }
+        AggStrategy::FourRussians { g } => {
+            let g = g.min(tn).max(1);
+            let nseg = tn.div_ceil(g);
+            // subset-sum tables: per segment, 2^g entries of (d x dv) + (d)
+            // (Arlazarov et al. 1970). Built once, shared across all rows.
+            let mut h_tables: Vec<Vec<Mat>> = Vec::with_capacity(nseg);
+            let mut z_tables: Vec<Vec<Vec<f32>>> = Vec::with_capacity(nseg);
+            for seg in 0..nseg {
+                let base = seg * g;
+                let width = g.min(tn - base);
+                let entries = 1usize << width;
+                let mut ht = Vec::with_capacity(entries);
+                let mut zt = Vec::with_capacity(entries);
+                ht.push(Mat::zeros(d, dv));
+                zt.push(vec![0.0f32; d]);
+                for m in 1..entries {
+                    // m = prev | lowest_set_bit: one addition per entry
+                    let low = m & m.wrapping_neg();
+                    let prev = m ^ low;
+                    let bit = low.trailing_zeros() as usize;
+                    let mut h = ht[prev].clone();
+                    h.add_assign(&state.h[base + bit]);
+                    let mut z = zt[prev].clone();
+                    for (zc, &zv) in z.iter_mut().zip(state.z.row(base + bit)) {
+                        *zc += zv;
+                    }
+                    ht.push(h);
+                    zt.push(z);
+                }
+                h_tables.push(ht);
+                z_tables.push(zt);
+            }
+            let mut hs = Vec::with_capacity(tm);
+            let mut zs = Mat::zeros(tm, d);
+            for bi in 0..tm {
+                let mut hi = Mat::zeros(d, dv);
+                let zrow = zs.row_mut(bi);
+                for seg in 0..nseg {
+                    let base = seg * g;
+                    let width = g.min(tn - base);
+                    let mut idx = 0usize;
+                    for b in 0..width {
+                        if mask.label(bi, base + b) == 0 {
+                            idx |= 1 << b;
+                        }
+                    }
+                    if idx == 0 {
+                        continue;
+                    }
+                    hi.add_assign(&h_tables[seg][idx]);
+                    for (zc, &zv) in zrow.iter_mut().zip(&z_tables[seg][idx]) {
+                        *zc += zv;
+                    }
+                }
+                hs.push(hi);
+            }
+            (hs, zs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::linear::{precompute_state, Phi};
+    use crate::attention::mask::{predict_mask, MaskPolicy};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize, b: usize, seed: u64) -> (LinearState, CompressedMask) {
+        let mut rng = Rng::new(seed);
+        let q = Mat::randn(n, d, &mut rng);
+        let k = Mat::randn(n, d, &mut rng);
+        let v = Mat::randn(n, d, &mut rng);
+        let kphi = Phi::Softmax.apply(&k);
+        let state = precompute_state(&kphi, &v, b);
+        let mask = predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: 12.5, kl_pct: 25.0 });
+        (state, mask)
+    }
+
+    #[test]
+    fn strategies_agree() {
+        let (state, mask) = setup(128, 16, 16, 0);
+        let (h0, z0) = aggregate_marginal(&state, &mask, AggStrategy::Naive);
+        for strat in [AggStrategy::PreAggregate, AggStrategy::FourRussians { g: 3 },
+                      AggStrategy::FourRussians { g: 8 }] {
+            let (h1, z1) = aggregate_marginal(&state, &mask, strat);
+            for (a, b) in h0.iter().zip(&h1) {
+                assert!(a.max_abs_diff(b) < 1e-4, "{strat:?}");
+            }
+            assert!(z0.max_abs_diff(&z1) < 1e-4, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn strategies_agree_prop() {
+        prop::check(
+            "agg-strategies-agree",
+            42,
+            8,
+            |rng| {
+                let b = [4usize, 8][rng.below(2)];
+                let tn = [4usize, 8, 12][rng.below(3)];
+                (b, tn, rng.next_u64())
+            },
+            |&(b, tn, seed)| {
+                let n = b * tn;
+                let (state, mask) = setup(n, 8, b, seed);
+                let (h0, z0) = aggregate_marginal(&state, &mask, AggStrategy::Naive);
+                for strat in [AggStrategy::PreAggregate,
+                              AggStrategy::FourRussians { g: 4 }] {
+                    let (h1, z1) = aggregate_marginal(&state, &mask, strat);
+                    for (a, c) in h0.iter().zip(&h1) {
+                        if a.max_abs_diff(c) > 1e-3 {
+                            return Err(format!("{strat:?} H mismatch"));
+                        }
+                    }
+                    if z0.max_abs_diff(&z1) > 1e-3 {
+                        return Err(format!("{strat:?} Z mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn four_russians_g_larger_than_tn() {
+        let (state, mask) = setup(32, 8, 8, 3); // tn = 4
+        let (h0, z0) = aggregate_marginal(&state, &mask, AggStrategy::Naive);
+        let (h1, z1) = aggregate_marginal(&state, &mask, AggStrategy::FourRussians { g: 16 });
+        for (a, b) in h0.iter().zip(&h1) {
+            assert!(a.max_abs_diff(b) < 1e-4);
+        }
+        assert!(z0.max_abs_diff(&z1) < 1e-4);
+    }
+
+    #[test]
+    fn auto_strategy_regimes() {
+        assert_eq!(AggStrategy::auto(0.9), AggStrategy::PreAggregate);
+        assert!(matches!(AggStrategy::auto(0.5), AggStrategy::FourRussians { .. }));
+        assert_eq!(AggStrategy::auto(0.1), AggStrategy::Naive);
+    }
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(AggStrategy::parse("naive").unwrap(), AggStrategy::Naive);
+        assert_eq!(AggStrategy::parse("preagg").unwrap(), AggStrategy::PreAggregate);
+        assert_eq!(AggStrategy::parse("fr4").unwrap(), AggStrategy::FourRussians { g: 4 });
+        assert!(AggStrategy::parse("fr99").is_err());
+        assert!(AggStrategy::parse("bogus").is_err());
+    }
+}

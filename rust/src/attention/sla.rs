@@ -1,0 +1,488 @@
+//! The fused SLA kernel (Algorithms 1 & 2) on the native substrate, with
+//! the learnable compensation projection (Eq. 6) and selectable marginal-
+//! aggregation strategy (Appendix A.3).
+
+use super::full::{online_softmax_step, EPS, NEG_INF};
+use super::linear::{apply_linear, precompute_state_threads, Phi};
+use super::mask::{predict_mask, CompressedMask, MaskPolicy};
+use super::opt::{aggregate_marginal, AggStrategy};
+use crate::tensor::Mat;
+use crate::util::threadpool;
+
+#[derive(Clone, Debug)]
+pub struct SlaConfig {
+    pub bq: usize,
+    pub bkv: usize,
+    pub kh_pct: f64,
+    pub kl_pct: f64,
+    pub phi: Phi,
+    pub agg: AggStrategy,
+    pub threads: usize,
+}
+
+impl Default for SlaConfig {
+    fn default() -> Self {
+        SlaConfig {
+            bq: 64,
+            bkv: 64,
+            kh_pct: 5.0,
+            kl_pct: 10.0,
+            phi: Phi::Softmax,
+            agg: AggStrategy::PreAggregate,
+            threads: 1,
+        }
+    }
+}
+
+/// Forward products saved for the backward pass (Alg. 2 inputs).
+pub struct SlaOutput {
+    pub o: Mat,       // O = O^s + O^l proj
+    pub os: Mat,      // sparse component
+    pub ol: Mat,      // linear component
+    pub lse: Vec<f32>,
+    pub hi: Vec<Mat>, // per-row-block H_i (d x dv)
+    pub zi: Mat,      // (Tm, d)
+    pub mask: CompressedMask,
+    pub qphi: Mat,
+    pub kphi: Mat,
+}
+
+pub struct SlaGrads {
+    pub dq: Mat,
+    pub dk: Mat,
+    pub dv: Mat,
+    pub dproj: Mat,
+}
+
+/// The fused kernel object: holds config + the learnable proj (d x d).
+pub struct SlaKernel {
+    pub cfg: SlaConfig,
+    pub proj: Mat,
+}
+
+impl SlaKernel {
+    pub fn new(cfg: SlaConfig, d: usize) -> Self {
+        // zero-init proj: SLA == sparse component at fine-tune start
+        SlaKernel { cfg, proj: Mat::zeros(d, d) }
+    }
+
+    pub fn with_proj(cfg: SlaConfig, proj: Mat) -> Self {
+        SlaKernel { cfg, proj }
+    }
+
+    /// Algorithm 1 + Eq. 6. If `mask` is None it is predicted (Eq. 2-3).
+    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, mask: Option<CompressedMask>)
+        -> SlaOutput {
+        let cfg = &self.cfg;
+        let (n, d) = (q.rows, q.cols);
+        let dv = v.cols;
+        let tm = n / cfg.bq;
+        let mask = mask.unwrap_or_else(|| {
+            predict_mask(q, k, cfg.bq, cfg.bkv,
+                         MaskPolicy::Sla { kh_pct: cfg.kh_pct, kl_pct: cfg.kl_pct })
+        });
+        let qphi = cfg.phi.apply(q);
+        let kphi = cfg.phi.apply(k);
+
+        // --- linear path: precompute h_j/z_j, aggregate per row block ---
+        let state = precompute_state_threads(&kphi, v, cfg.bkv, cfg.threads);
+        let (hi, zi) = aggregate_marginal(&state, &mask, cfg.agg);
+
+        // --- sparse path: mask-guided online softmax with true skipping ---
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut os = Mat::zeros(n, dv);
+        let mut ol = Mat::zeros(n, dv);
+        let mut lse = vec![NEG_INF; n];
+        {
+            let os_ptr = SendPtr(os.data.as_mut_ptr());
+            let ol_ptr = SendPtr(ol.data.as_mut_ptr());
+            let lse_ptr = SendPtr(lse.as_mut_ptr());
+            let hi_ref = &hi;
+            let zi_ref = &zi;
+            let mask_ref = &mask;
+            let qphi_ref = &qphi;
+            threadpool::parallel_for_chunks(tm, cfg.threads, |b0, b1| {
+                let mut s = vec![0.0f32; cfg.bq * cfg.bkv];
+                for bi in b0..b1 {
+                    let r0 = bi * cfg.bq;
+                    let mut m = vec![NEG_INF; cfg.bq];
+                    let mut l = vec![0.0f32; cfg.bq];
+                    let mut acc = vec![0.0f32; cfg.bq * dv];
+                    for &bj in &mask_ref.crit_rows[bi] {
+                        online_softmax_step(
+                            q, k, v, r0, bj as usize * cfg.bkv, cfg.bq, cfg.bkv, dv,
+                            scale, &mut s, &mut m, &mut l, &mut acc,
+                        );
+                    }
+                    // O^l_i = phi(Q_i) H_i / (phi(Q_i) Z_i + eps)
+                    let qb = qphi_ref.rows_slice(r0, r0 + cfg.bq);
+                    let ob = apply_linear(&qb, &hi_ref[bi], zi_ref.row(bi));
+                    for r in 0..cfg.bq {
+                        // SAFETY: disjoint per-chunk row ranges.
+                        let osrow = unsafe {
+                            std::slice::from_raw_parts_mut(os_ptr.get().add((r0 + r) * dv), dv)
+                        };
+                        if l[r] > 0.0 {
+                            let inv = 1.0 / l[r].max(EPS);
+                            for (ov, &a) in osrow.iter_mut().zip(&acc[r * dv..(r + 1) * dv]) {
+                                *ov = a * inv;
+                            }
+                            unsafe { *lse_ptr.get().add(r0 + r) = m[r] + l[r].max(EPS).ln() };
+                        }
+                        let olrow = unsafe {
+                            std::slice::from_raw_parts_mut(ol_ptr.get().add((r0 + r) * dv), dv)
+                        };
+                        olrow.copy_from_slice(ob.row(r));
+                    }
+                }
+            });
+        }
+
+        // O = O^s + O^l proj (Eq. 6)
+        let mut o = os.clone();
+        o.add_assign(&ol.matmul(&self.proj));
+        SlaOutput { o, os, ol, lse, hi, zi, mask, qphi, kphi }
+    }
+
+    /// Algorithm 2 + the Eq. 6 chain: given dO, produce dQ, dK, dV, dProj.
+    pub fn backward(&self, q: &Mat, k: &Mat, v: &Mat, fwd: &SlaOutput, dout: &Mat)
+        -> SlaGrads {
+        let cfg = &self.cfg;
+        let (n, d) = (q.rows, q.cols);
+        let dv_dim = v.cols;
+        let tm = n / cfg.bq;
+        let tn = n / cfg.bkv;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mask = &fwd.mask;
+
+        // chain through O = O^s + O^l proj
+        let dos = dout; // dO^s = dO
+        let dol = dout.matmul_nt(&self.proj); // dO^l = dO proj^T
+        let dproj = fwd.ol.matmul_tn(dout); // dProj = O^l^T dO
+
+        // D^s, D^l
+        let mut dssum = vec![0.0f32; n];
+        let mut dlsum = vec![0.0f32; n];
+        for r in 0..n {
+            dssum[r] = dos.row(r).iter().zip(fwd.os.row(r)).map(|(a, b)| a * b).sum();
+            dlsum[r] = dol.row(r).iter().zip(fwd.ol.row(r)).map(|(a, b)| a * b).sum();
+        }
+
+        // ---- pass 1 (per query block): dQ sparse, dQ^phi, dH_i, dZ_i ----
+        let mut dq = Mat::zeros(n, d);
+        let mut dqphi = Mat::zeros(n, d);
+        let mut dhi: Vec<Mat> = Vec::with_capacity(tm);
+        let mut dzi = Mat::zeros(tm, d);
+        for bi in 0..tm {
+            let r0 = bi * cfg.bq;
+            // linear-path per-row-block grads (Alg. 2 lines 4-5)
+            let hi = &fwd.hi[bi];
+            let zi = fwd.zi.row(bi);
+            let mut dh = Mat::zeros(d, dv_dim);
+            let dz = dzi.row_mut(bi);
+            for r in 0..cfg.bq {
+                let qrow = fwd.qphi.row(r0 + r);
+                let den: f32 = qrow.iter().zip(zi).map(|(a, b)| a * b).sum::<f32>() + EPS;
+                let inv = 1.0 / den;
+                let dolrow = dol.row(r0 + r);
+                let dl = dlsum[r0 + r];
+                // dH += (qphi/den)^T dol_row ; dZ += -(qphi/den)^T * D^l
+                for (t, &qv) in qrow.iter().enumerate() {
+                    let w = qv * inv;
+                    if w != 0.0 {
+                        let dhrow = dh.row_mut(t);
+                        for (dhv, &dov) in dhrow.iter_mut().zip(dolrow) {
+                            *dhv += w * dov;
+                        }
+                        dz[t] -= w * dl;
+                    }
+                }
+                // dQ^phi = (dol H^T - D^l Z^T) / den
+                let dqprow = dqphi.row_mut(r0 + r);
+                for t in 0..d {
+                    let hrow = hi.row(t);
+                    let mut acc = 0.0f32;
+                    for (a, b) in dolrow.iter().zip(hrow) {
+                        acc += a * b;
+                    }
+                    dqprow[t] = (acc - dl * zi[t]) * inv;
+                }
+            }
+            dhi.push(dh);
+            // sparse-path dQ (Alg. 2 lines 11-12), via row lookup table
+            let mut p = vec![0.0f32; cfg.bq * cfg.bkv];
+            for &bj in &mask.crit_rows[bi] {
+                let c0 = bj as usize * cfg.bkv;
+                for r in 0..cfg.bq {
+                    let qrow = q.row(r0 + r);
+                    let li = fwd.lse[r0 + r];
+                    let dorow = dos.row(r0 + r);
+                    let prow = &mut p[r * cfg.bkv..(r + 1) * cfg.bkv];
+                    for (c, pv) in prow.iter_mut().enumerate() {
+                        let krow = k.row(c0 + c);
+                        let mut s = 0.0f32;
+                        for t in 0..d {
+                            s += qrow[t] * krow[t];
+                        }
+                        *pv = (s * scale - li).exp();
+                    }
+                    let dqrow = dq.row_mut(r0 + r);
+                    for (c, &pv) in prow.iter().enumerate() {
+                        let vrow = v.row(c0 + c);
+                        let mut dpv = 0.0f32;
+                        for (a, b) in dorow.iter().zip(vrow) {
+                            dpv += a * b;
+                        }
+                        let ds = pv * (dpv - dssum[r0 + r]) * scale;
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let krow = k.row(c0 + c);
+                        for (dqv, &kv) in dqrow.iter_mut().zip(krow) {
+                            *dqv += ds * kv;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- pass 2 (per KV block): dK sparse, dV, dK^phi ----
+        let mut dk = Mat::zeros(n, d);
+        let mut dv = Mat::zeros(n, dv_dim);
+        let mut dkphi = Mat::zeros(n, d);
+        for bj in 0..tn {
+            let c0 = bj * cfg.bkv;
+            // sparse contributions from critical rows
+            for &bi in &mask.crit_cols[bj] {
+                let r0 = bi as usize * cfg.bq;
+                for r in 0..cfg.bq {
+                    let qrow = q.row(r0 + r);
+                    let li = fwd.lse[r0 + r];
+                    let dorow = dos.row(r0 + r);
+                    let dsr = dssum[r0 + r];
+                    for c in 0..cfg.bkv {
+                        let krow = k.row(c0 + c);
+                        let mut s = 0.0f32;
+                        for t in 0..d {
+                            s += qrow[t] * krow[t];
+                        }
+                        let pv = (s * scale - li).exp();
+                        if pv == 0.0 {
+                            continue;
+                        }
+                        // dV_j += P^T dO^s
+                        let dvrow = dv.row_mut(c0 + c);
+                        for (dvv, &dov) in dvrow.iter_mut().zip(dorow) {
+                            *dvv += pv * dov;
+                        }
+                        // dK_j += dS^T Q_i * scale
+                        let vrow = v.row(c0 + c);
+                        let mut dpv = 0.0f32;
+                        for (a, b) in dorow.iter().zip(vrow) {
+                            dpv += a * b;
+                        }
+                        let ds = pv * (dpv - dsr) * scale;
+                        let dkrow = dk.row_mut(c0 + c);
+                        for (dkv, &qv) in dkrow.iter_mut().zip(qrow) {
+                            *dkv += ds * qv;
+                        }
+                    }
+                }
+            }
+            // marginal aggregation: dH = sum_i dH_i, dZ = sum_i dZ_i over
+            // rows with mask[i,j] = 0 (Alg. 2 line 14)
+            let mut dh = Mat::zeros(d, dv_dim);
+            let mut dz = vec![0.0f32; d];
+            for &bi in &mask.marg_cols[bj] {
+                dh.add_assign(&dhi[bi as usize]);
+                for (a, &b) in dz.iter_mut().zip(dzi.row(bi as usize)) {
+                    *a += b;
+                }
+            }
+            // dK^phi_j = V_j dH^T + dZ^T (broadcast); dV_j += K^phi_j dH
+            for c in 0..cfg.bkv {
+                let vrow = v.row(c0 + c);
+                let dkprow = dkphi.row_mut(c0 + c);
+                for t in 0..d {
+                    let dhrow = dh.row(t);
+                    let mut acc = 0.0f32;
+                    for (a, b) in vrow.iter().zip(dhrow) {
+                        acc += a * b;
+                    }
+                    dkprow[t] = acc + dz[t];
+                }
+                let kprow = fwd.kphi.row(c0 + c);
+                let dvrow = dv.row_mut(c0 + c);
+                for (t, &kv) in kprow.iter().enumerate() {
+                    if kv == 0.0 {
+                        continue;
+                    }
+                    let dhrow = dh.row(t);
+                    for (dvv, &dhv) in dvrow.iter_mut().zip(dhrow) {
+                        *dvv += kv * dhv;
+                    }
+                }
+            }
+        }
+
+        // chain dQ^phi / dK^phi through phi
+        let dq_phi = cfg.phi.vjp(q, &dqphi);
+        let dk_phi = cfg.phi.vjp(k, &dkphi);
+        dq.add_assign(&dq_phi);
+        dk.add_assign(&dk_phi);
+
+        SlaGrads { dq, dk, dv, dproj }
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor so edition-2021 closures capture the Sync wrapper whole.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::attention::linear::linear_forward_global;
+    use crate::attention::mask::Label;
+    use crate::util::rng::Rng;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+        )
+    }
+
+    fn cfg(b: usize) -> SlaConfig {
+        SlaConfig { bq: b, bkv: b, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() }
+    }
+
+    #[test]
+    fn all_critical_equals_full_attention() {
+        let (q, k, v) = qkv(64, 16, 0);
+        let kern = SlaKernel::new(cfg(8), 16);
+        let mask = CompressedMask::all(8, 8, Label::Critical);
+        let out = kern.forward(&q, &k, &v, Some(mask));
+        let (full, _) = naive_attention(&q, &k, &v, false);
+        assert!(out.o.max_abs_diff(&full) < 1e-5);
+        assert_eq!(out.ol.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn all_marginal_equals_linear_attention() {
+        let (q, k, v) = qkv(64, 16, 1);
+        let kern = SlaKernel::new(cfg(8), 16);
+        let mask = CompressedMask::all(8, 8, Label::Marginal);
+        let out = kern.forward(&q, &k, &v, Some(mask));
+        assert_eq!(out.os.max_abs(), 0.0);
+        let og = linear_forward_global(&out.qphi, &out.kphi, &v);
+        assert!(out.ol.max_abs_diff(&og) < 1e-4);
+    }
+
+    #[test]
+    fn zero_proj_output_equals_sparse_component() {
+        let (q, k, v) = qkv(64, 16, 2);
+        let kern = SlaKernel::new(cfg(8), 16);
+        let out = kern.forward(&q, &k, &v, None);
+        assert!(out.o.max_abs_diff(&out.os) < 1e-7);
+    }
+
+    #[test]
+    fn agg_strategies_give_same_output() {
+        let (q, k, v) = qkv(128, 16, 3);
+        let mut c = cfg(16);
+        let mut outs = Vec::new();
+        for agg in [AggStrategy::Naive, AggStrategy::PreAggregate,
+                    AggStrategy::FourRussians { g: 4 }] {
+            c.agg = agg;
+            let mut kern = SlaKernel::new(c.clone(), 16);
+            let mut rng = Rng::new(50);
+            kern.proj = Mat::randn(16, 16, &mut rng).scaled(0.2);
+            outs.push(kern.forward(&q, &k, &v, None).o);
+        }
+        assert!(outs[0].max_abs_diff(&outs[1]) < 1e-4);
+        assert!(outs[0].max_abs_diff(&outs[2]) < 1e-4);
+    }
+
+    #[test]
+    fn threaded_forward_matches() {
+        let (q, k, v) = qkv(128, 16, 4);
+        let mut c = cfg(16);
+        let kern1 = SlaKernel::new(c.clone(), 16);
+        c.threads = 4;
+        let kern4 = SlaKernel::new(c, 16);
+        let o1 = kern1.forward(&q, &k, &v, None);
+        let o4 = kern4.forward(&q, &k, &v, None);
+        assert_eq!(o1.o.data, o4.o.data);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let n = 32;
+        let d = 8;
+        let (q, k, v) = qkv(n, d, 5);
+        let mut rng = Rng::new(60);
+        let mut kern = SlaKernel::new(cfg(8), d);
+        kern.proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+        let fwd = kern.forward(&q, &k, &v, None);
+        let mask = fwd.mask.clone();
+        // loss = sum(o^2) / 2 -> dout = o
+        let grads = kern.backward(&q, &k, &v, &fwd, &fwd.o);
+        let loss = |q: &Mat, k: &Mat, v: &Mat, proj: &Mat| -> f64 {
+            let kk = SlaKernel::with_proj(cfg(8), proj.clone());
+            let out = kk.forward(q, k, v, Some(mask.clone()));
+            out.o.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / 2.0
+        };
+        let eps = 3e-3f32;
+        let mut prng = Rng::new(70);
+        let checks: [(&Mat, &Mat, &str); 4] = [
+            (&q, &grads.dq, "dq"),
+            (&k, &grads.dk, "dk"),
+            (&v, &grads.dv, "dv"),
+            (&kern.proj, &grads.dproj, "dproj"),
+        ];
+        for (mat, grad, name) in checks {
+            for _ in 0..5 {
+                let idx = prng.below(mat.data.len());
+                let mut plus = mat.clone();
+                plus.data[idx] += eps;
+                let mut minus = mat.clone();
+                minus.data[idx] -= eps;
+                let (lp, lm) = match name {
+                    "dq" => (loss(&plus, &k, &v, &kern.proj), loss(&minus, &k, &v, &kern.proj)),
+                    "dk" => (loss(&q, &plus, &v, &kern.proj), loss(&q, &minus, &v, &kern.proj)),
+                    "dv" => (loss(&q, &k, &plus, &kern.proj), loss(&q, &k, &minus, &kern.proj)),
+                    _ => (loss(&q, &k, &v, &plus), loss(&q, &k, &v, &minus)),
+                };
+                let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let ana = grad.data[idx];
+                assert!(
+                    (num - ana).abs() < 3e-2 * num.abs().max(1.0),
+                    "{name}[{idx}]: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_reported_matches_config() {
+        let (q, k, v) = qkv(128, 8, 6);
+        let kern = SlaKernel::new(
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 12.5, kl_pct: 25.0, ..Default::default() },
+            8,
+        );
+        let out = kern.forward(&q, &k, &v, None);
+        // 2 of 16 blocks critical per row
+        assert!((out.mask.sparsity() - (1.0 - 2.0 / 16.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,333 @@
+//! Mask-guided block-sparse FlashAttention with *true* block skipping: the
+//! KV loop iterates only each row's critical-block lookup table (A.3), so
+//! wall-clock scales with (1 - sparsity) — this is what Fig. 6 measures.
+
+use super::full::{online_softmax_step, EPS, NEG_INF};
+use super::mask::CompressedMask;
+use crate::tensor::Mat;
+use crate::util::threadpool;
+
+/// Sparse forward: softmax restricted to critical blocks. Returns (O, lse).
+/// Rows with an empty critical set output zeros (lse = -inf-ish).
+pub fn sparse_forward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    mask: &CompressedMask,
+    bq: usize,
+    bkv: usize,
+) -> (Mat, Vec<f32>) {
+    sparse_forward_threads(q, k, v, mask, bq, bkv, 1)
+}
+
+/// Threaded variant (query blocks are independent).
+pub fn sparse_forward_threads(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    mask: &CompressedMask,
+    bq: usize,
+    bkv: usize,
+    threads: usize,
+) -> (Mat, Vec<f32>) {
+    let (n, d) = (q.rows, q.cols);
+    let dv = v.cols;
+    let tm = n / bq;
+    assert_eq!(mask.tm, tm);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let mut o = Mat::zeros(n, dv);
+    let mut lse = vec![NEG_INF; n];
+    {
+        let o_ptr = SendSlice(o.data.as_mut_ptr());
+        let lse_ptr = SendSlice(lse.as_mut_ptr());
+        threadpool::parallel_for_chunks(tm, threads, |b0, b1| {
+            let mut s = vec![0.0f32; bq * bkv];
+            for bi in b0..b1 {
+                let r0 = bi * bq;
+                let mut m = vec![NEG_INF; bq];
+                let mut l = vec![0.0f32; bq];
+                let mut acc = vec![0.0f32; bq * dv];
+                // lookup table: only critical blocks are touched
+                for &bj in &mask.crit_rows[bi] {
+                    let c0 = bj as usize * bkv;
+                    online_softmax_step(
+                        q, k, v, r0, c0, bq, bkv, dv, scale, &mut s, &mut m, &mut l,
+                        &mut acc,
+                    );
+                }
+                for r in 0..bq {
+                    // SAFETY: disjoint row ranges per chunk.
+                    let orow = unsafe {
+                        std::slice::from_raw_parts_mut(o_ptr.get().add((r0 + r) * dv), dv)
+                    };
+                    if l[r] > 0.0 {
+                        let inv = 1.0 / l[r].max(EPS);
+                        for (ov, &a) in orow.iter_mut().zip(&acc[r * dv..(r + 1) * dv]) {
+                            *ov = a * inv;
+                        }
+                        unsafe { *lse_ptr.get().add(r0 + r) = m[r] + l[r].max(EPS).ln() };
+                    } else {
+                        unsafe { *lse_ptr.get().add(r0 + r) = NEG_INF };
+                    }
+                }
+            }
+        });
+    }
+    (o, lse)
+}
+
+struct SendSlice<T>(*mut T);
+unsafe impl<T> Send for SendSlice<T> {}
+unsafe impl<T> Sync for SendSlice<T> {}
+
+impl<T> SendSlice<T> {
+    /// Accessor so edition-2021 closures capture the Sync wrapper whole.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Gradients of the sparse component (Eq. 7), skipping non-critical blocks.
+/// Inputs mirror FlashAttention-2's backward: saved O, lse, and dO.
+pub struct SparseGrads {
+    pub dq: Mat,
+    pub dk: Mat,
+    pub dv: Mat,
+}
+
+pub fn sparse_backward(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    o: &Mat,
+    lse: &[f32],
+    dout: &Mat,
+    mask: &CompressedMask,
+    bq: usize,
+    bkv: usize,
+) -> SparseGrads {
+    let (n, d) = (q.rows, q.cols);
+    let dv_dim = v.cols;
+    let tn = n / bkv;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // D^s = rowsum(dO ⊙ O)
+    let mut dsum = vec![0.0f32; n];
+    for r in 0..n {
+        dsum[r] = dout.row(r).iter().zip(o.row(r)).map(|(a, b)| a * b).sum();
+    }
+
+    let mut dq = Mat::zeros(n, d);
+    let mut dk = Mat::zeros(n, d);
+    let mut dv = Mat::zeros(n, dv_dim);
+
+    // Column-major pass (per KV block) using the column lookup tables.
+    let mut p = vec![0.0f32; bq * bkv];
+    let mut dp = vec![0.0f32; bq * bkv];
+    for bj in 0..tn {
+        let c0 = bj * bkv;
+        for &bi in &mask.crit_cols[bj] {
+            let r0 = bi as usize * bq;
+            // recompute P_ij = exp(S - lse)
+            for r in 0..bq {
+                let qrow = q.row(r0 + r);
+                let li = lse[r0 + r];
+                for c in 0..bkv {
+                    let krow = k.row(c0 + c);
+                    let mut s = 0.0f32;
+                    for t in 0..d {
+                        s += qrow[t] * krow[t];
+                    }
+                    // lse is finite here: this row-block has >= 1 critical block
+                    p[r * bkv + c] = (s * scale - li).exp();
+                }
+            }
+            // dV_j += P^T dO_i ; dP = dO_i V_j^T
+            for r in 0..bq {
+                let dorow = dout.row(r0 + r);
+                for c in 0..bkv {
+                    let pv = p[r * bkv + c];
+                    if pv != 0.0 {
+                        let dvrow = dv.row_mut(c0 + c);
+                        for (dvv, &dov) in dvrow.iter_mut().zip(dorow) {
+                            *dvv += pv * dov;
+                        }
+                    }
+                    let vrow = v.row(c0 + c);
+                    let mut acc = 0.0f32;
+                    for (a, b) in dorow.iter().zip(vrow) {
+                        acc += a * b;
+                    }
+                    dp[r * bkv + c] = acc;
+                }
+            }
+            // dS = P ⊙ (dP - D^s); dQ_i += dS K_j * scale; dK_j += dS^T Q_i * scale
+            for r in 0..bq {
+                let ds_row = dsum[r0 + r];
+                let dqrow = dq.row_mut(r0 + r);
+                for c in 0..bkv {
+                    let ds = p[r * bkv + c] * (dp[r * bkv + c] - ds_row) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let krow = k.row(c0 + c);
+                    for (dqv, &kv) in dqrow.iter_mut().zip(krow) {
+                        *dqv += ds * kv;
+                    }
+                }
+            }
+            for c in 0..bkv {
+                let dkrow = dk.row_mut(c0 + c);
+                for r in 0..bq {
+                    let ds = p[r * bkv + c] * (dp[r * bkv + c] - dsum[r0 + r]) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let qrow = q.row(r0 + r);
+                    for (dkv, &qv) in dkrow.iter_mut().zip(qrow) {
+                        *dkv += ds * qv;
+                    }
+                }
+            }
+        }
+    }
+    SparseGrads { dq, dk, dv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::naive_attention;
+    use crate::attention::mask::{predict_mask, CompressedMask, Label, MaskPolicy};
+    use crate::util::rng::Rng;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+            Mat::randn(n, d, &mut rng),
+        )
+    }
+
+    /// Dense oracle: masked softmax restricted to critical blocks.
+    fn dense_sparse_oracle(
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        mask: &CompressedMask,
+        bq: usize,
+        bkv: usize,
+    ) -> Mat {
+        let n = q.rows;
+        let mut s = q.matmul_nt(k);
+        s.scale(1.0 / (q.cols as f32).sqrt());
+        for r in 0..n {
+            for c in 0..n {
+                if mask.label(r / bq, c / bkv) != 1 {
+                    *s.at_mut(r, c) = NEG_INF;
+                }
+            }
+        }
+        let mut o = Mat::zeros(n, v.cols);
+        for r in 0..n {
+            let row = s.row(r);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if mx <= NEG_INF / 2.0 {
+                continue; // empty row -> zeros
+            }
+            let exps: Vec<f32> = row.iter().map(|x| (x - mx).exp()).collect();
+            let l: f32 = exps
+                .iter()
+                .zip(0..n)
+                .filter(|(_, c)| mask.label(r / bq, c / bkv) == 1)
+                .map(|(e, _)| e)
+                .sum();
+            let orow = o.row_mut(r);
+            for c in 0..n {
+                if mask.label(r / bq, c / bkv) != 1 {
+                    continue;
+                }
+                let w = exps[c] / l;
+                for (ov, &vv) in orow.iter_mut().zip(v.row(c)) {
+                    *ov += w * vv;
+                }
+            }
+        }
+        o
+    }
+
+    #[test]
+    fn sparse_matches_dense_oracle() {
+        let (q, k, v) = qkv(64, 16, 0);
+        let m = predict_mask(&q, &k, 8, 8, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        let (o, _) = sparse_forward(&q, &k, &v, &m, 8, 8);
+        let oracle = dense_sparse_oracle(&q, &k, &v, &m, 8, 8);
+        assert!(o.max_abs_diff(&oracle) < 1e-5);
+    }
+
+    #[test]
+    fn all_critical_equals_full() {
+        let (q, k, v) = qkv(64, 16, 1);
+        let m = CompressedMask::all(8, 8, Label::Critical);
+        let (o, _) = sparse_forward(&q, &k, &v, &m, 8, 8);
+        let (full, _) = naive_attention(&q, &k, &v, false);
+        assert!(o.max_abs_diff(&full) < 1e-5);
+    }
+
+    #[test]
+    fn no_critical_is_zero() {
+        let (q, k, v) = qkv(32, 8, 2);
+        let m = CompressedMask::all(4, 4, Label::Marginal);
+        let (o, _) = sparse_forward(&q, &k, &v, &m, 8, 8);
+        assert_eq!(o.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn threaded_matches_single_thread() {
+        let (q, k, v) = qkv(128, 16, 3);
+        let m = predict_mask(&q, &k, 16, 16, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        let (o1, l1) = sparse_forward(&q, &k, &v, &m, 16, 16);
+        let (o4, l4) = sparse_forward_threads(&q, &k, &v, &m, 16, 16, 4);
+        assert_eq!(o1.data, o4.data);
+        assert_eq!(l1, l4);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (q, k, v) = qkv(32, 8, 4);
+        let bq = 8;
+        let m = predict_mask(&q, &k, bq, bq, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        let (o, lse) = sparse_forward(&q, &k, &v, &m, bq, bq);
+        // loss = sum(o^2)/2 -> dout = o
+        let grads = sparse_backward(&q, &k, &v, &o, &lse, &o, &m, bq, bq);
+        let loss = |q: &Mat, k: &Mat, v: &Mat| -> f64 {
+            let (o, _) = sparse_forward(q, k, v, &m, bq, bq);
+            o.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / 2.0
+        };
+        let eps = 3e-3f32;
+        let mut rng = Rng::new(99);
+        for (mat, grad, name) in [(&q, &grads.dq, "dq"), (&k, &grads.dk, "dk"),
+                                  (&v, &grads.dv, "dv")] {
+            for _ in 0..6 {
+                let idx = rng.below(mat.data.len());
+                let mut plus = (*mat).clone();
+                plus.data[idx] += eps;
+                let mut minus = (*mat).clone();
+                minus.data[idx] -= eps;
+                let (lp, lm) = match name {
+                    "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let ana = grad.data[idx];
+                assert!(
+                    (num - ana).abs() < 2e-2 * num.abs().max(1.0),
+                    "{name}[{idx}]: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+}

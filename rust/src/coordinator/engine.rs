@@ -1,0 +1,93 @@
+//! Velocity-model backends for the coordinator.
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+use crate::runtime::{Artifact, HostTensor, Runtime};
+
+/// Abstract denoiser the scheduler drives. Not Send/Sync: the xla crate's
+/// PJRT handles are Rc-based, so serving is single-threaded; concurrency is
+/// modeled at the scheduler level (virtual clock) and measured natively.
+pub trait VelocityBackend {
+    fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor>;
+    /// (seq_len, channels, cond_dim) of the model this backend serves.
+    fn shape(&self) -> (usize, usize, usize);
+    fn variant(&self) -> &str;
+    /// (frames, h, w) patch grid (for quality metrics).
+    fn video(&self) -> (usize, usize, usize);
+}
+
+/// Real backend: the AOT'd `dit_denoise_<variant>` artifact + parameters.
+pub struct ArtifactBackend {
+    artifact: Artifact,
+    params: ParamStore,
+    variant: String,
+    seq_len: usize,
+    channels: usize,
+    cond_dim: usize,
+    video: (usize, usize, usize),
+}
+
+impl ArtifactBackend {
+    /// Load the denoise artifact for `cfg_name`, with fresh-initialized
+    /// parameters (seeded); weights can then be loaded from a checkpoint.
+    pub fn new(rt: &Runtime, cfg_name: &str, seed: u64) -> Result<Self> {
+        let artifact = rt.load(&format!("dit_denoise_{cfg_name}"))?;
+        let mcfg = rt
+            .manifest
+            .configs
+            .get(cfg_name)
+            .ok_or_else(|| anyhow::anyhow!("config {cfg_name:?} not in manifest"))?
+            .clone();
+        let pspecs: Vec<_> = artifact
+            .spec
+            .inputs_with_prefix("params.")
+            .into_iter()
+            .map(|(_, t)| t.clone())
+            .collect();
+        let refs: Vec<&_> = pspecs.iter().collect();
+        let params = ParamStore::init(&refs, seed);
+        Ok(ArtifactBackend {
+            artifact,
+            params,
+            variant: cfg_name.to_string(),
+            seq_len: mcfg.seq_len,
+            channels: mcfg.channels,
+            cond_dim: mcfg.cond_dim,
+            video: mcfg.video,
+        })
+    }
+
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<usize> {
+        let ckpt = ParamStore::read_checkpoint(path)?;
+        Ok(self.params.load_from(&ckpt))
+    }
+
+    pub fn set_params(&mut self, params: ParamStore) {
+        self.params = params;
+    }
+}
+
+impl VelocityBackend for ArtifactBackend {
+    fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor> {
+        let mut inputs = Vec::with_capacity(self.params.len() + 3);
+        inputs.extend(self.params.tensors.iter().cloned());
+        inputs.push(x.clone());
+        inputs.push(HostTensor::scalar(t));
+        inputs.push(cond.clone());
+        let mut outs = self.artifact.execute(&inputs)?;
+        Ok(outs.remove(0))
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.seq_len, self.channels, self.cond_dim)
+    }
+
+    fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    fn video(&self) -> (usize, usize, usize) {
+        self.video
+    }
+}

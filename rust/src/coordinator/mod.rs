@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving layer that turns the AOT'd denoise artifact
+//! into a video-generation service — request queueing, step-level
+//! round-robin scheduling (continuous batching at denoise-step granularity),
+//! backpressure, and latency metrics.
+//!
+//! The denoiser is abstracted (`VelocityBackend`) so the scheduler logic is
+//! testable without compiled artifacts; `ArtifactBackend` is the real PJRT
+//! implementation.
+
+mod engine;
+mod scheduler;
+mod server;
+
+pub use engine::{ArtifactBackend, VelocityBackend};
+pub use scheduler::{Coordinator, CoordinatorConfig, ServeReport};
+pub use server::Server;

@@ -1,0 +1,196 @@
+//! TCP front-end for the coordinator: JSON-lines protocol.
+//!
+//! Request (one per line):
+//!   {"id": 1, "prompt_seed": 5, "steps": 8, "cfg": 1.0}
+//! Response (one per line):
+//!   {"id": 1, "ok": true, "shape": [256, 8], "latency_s": 0.42,
+//!    "temporal_consistency": 0.93, "mean": ..., "std": ...}
+//!
+//! The PJRT backend is single-threaded (Rc-based handles), so the server is
+//! an accept-loop that drains each connection in turn; concurrency shaping
+//! (admission, fairness) happens in the scheduler, not in socket threads.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::Result;
+
+use super::engine::VelocityBackend;
+use super::scheduler::{Coordinator, CoordinatorConfig};
+use crate::metrics;
+use crate::util::json::Json;
+
+pub struct Server<'b> {
+    coord: Coordinator<'b>,
+    frames: usize,
+}
+
+impl<'b> Server<'b> {
+    pub fn new(backend: &'b dyn VelocityBackend, cfg: CoordinatorConfig) -> Self {
+        let frames = backend.video().0;
+        Server { coord: Coordinator::new(backend, cfg), frames }
+    }
+
+    /// Handle one already-parsed request line; returns the JSON response.
+    pub fn handle(&self, line: &str) -> Json {
+        let parsed = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                return Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(format!("bad json: {e}"))),
+                ])
+            }
+        };
+        let id = parsed.get("id").as_f64().unwrap_or(0.0);
+        let prompt_seed = parsed.get("prompt_seed").as_f64().unwrap_or(0.0) as u64;
+        let steps = parsed.get("steps").as_usize().unwrap_or(8).clamp(1, 1000);
+        let cfg_w = parsed.get("cfg").as_f64().unwrap_or(1.0) as f32;
+        let t0 = std::time::Instant::now();
+        match self.coord.generate_one(prompt_seed, steps, cfg_w) {
+            Ok(x) => {
+                let n = x.data.len() as f64;
+                let mean = x.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+                let var = x
+                    .data
+                    .iter()
+                    .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+                    .sum::<f64>()
+                    / n;
+                Json::obj(vec![
+                    ("id", Json::num(id)),
+                    ("ok", Json::Bool(true)),
+                    ("shape", Json::Arr(x.shape.iter().map(|&d| Json::num(d as f64)).collect())),
+                    ("latency_s", Json::num(t0.elapsed().as_secs_f64())),
+                    ("temporal_consistency",
+                     Json::num(metrics::temporal_consistency(&x, self.frames))),
+                    ("mean", Json::num(mean)),
+                    ("std", Json::num(var.sqrt())),
+                ])
+            }
+            Err(e) => Json::obj(vec![
+                ("id", Json::num(id)),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ]),
+        }
+    }
+
+    fn drain_connection(&self, stream: TcpStream) -> Result<usize> {
+        let peer = stream.peer_addr().ok();
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        let mut served = 0;
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            if line.trim() == "quit" {
+                break;
+            }
+            let resp = self.handle(&line);
+            writer.write_all(resp.to_string().as_bytes())?;
+            writer.write_all(b"\n")?;
+            served += 1;
+        }
+        eprintln!("[server] connection {peer:?}: served {served} requests");
+        Ok(served)
+    }
+
+    /// Accept-loop. Stops after `max_connections` connections (None = forever).
+    pub fn serve(&self, listener: TcpListener, max_connections: Option<usize>)
+        -> Result<usize> {
+        let mut total = 0;
+        let mut conns = 0;
+        for stream in listener.incoming() {
+            total += self.drain_connection(stream?)?;
+            conns += 1;
+            if let Some(max) = max_connections {
+                if conns >= max {
+                    break;
+                }
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    struct Mock;
+
+    impl VelocityBackend for Mock {
+        fn velocity(&self, x: &HostTensor, t: f32, _c: &HostTensor)
+            -> anyhow::Result<HostTensor> {
+            let mut v = x.clone();
+            for d in &mut v.data {
+                *d = *d * 0.1 + t;
+            }
+            Ok(v)
+        }
+        fn shape(&self) -> (usize, usize, usize) {
+            (16, 2, 4)
+        }
+        fn variant(&self) -> &str {
+            "mock"
+        }
+        fn video(&self) -> (usize, usize, usize) {
+            (2, 2, 4)
+        }
+    }
+
+    #[test]
+    fn handle_valid_request() {
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let resp = srv.handle(r#"{"id": 7, "prompt_seed": 3, "steps": 4, "cfg": 1.0}"#);
+        assert_eq!(resp.get("ok"), &Json::Bool(true));
+        assert_eq!(resp.get("id").as_f64(), Some(7.0));
+        assert_eq!(resp.get("shape").as_arr().unwrap().len(), 2);
+        assert!(resp.get("latency_s").as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn handle_bad_json() {
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let resp = srv.handle("not json at all");
+        assert_eq!(resp.get("ok"), &Json::Bool(false));
+        assert!(resp.get("error").as_str().unwrap().contains("bad json"));
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 1, \"prompt_seed\": 2, \"steps\": 3}\n").unwrap();
+            s.write_all(b"{\"id\": 2, \"prompt_seed\": 2, \"steps\": 3}\n").unwrap();
+            s.write_all(b"quit\n").unwrap();
+            let mut lines = Vec::new();
+            let reader = BufReader::new(s);
+            for line in reader.lines().take(2) {
+                lines.push(line.unwrap());
+            }
+            lines
+        });
+
+        let served = srv.serve(listener, Some(1)).unwrap();
+        let lines = client.join().unwrap();
+        assert_eq!(served, 2);
+        assert_eq!(lines.len(), 2);
+        let r1 = Json::parse(&lines[0]).unwrap();
+        let r2 = Json::parse(&lines[1]).unwrap();
+        assert_eq!(r1.get("ok"), &Json::Bool(true));
+        // same prompt seed + steps => identical deterministic sample stats
+        assert_eq!(r1.get("mean"), r2.get("mean"));
+    }
+}

@@ -1,0 +1,26 @@
+//! # sla-dit
+//!
+//! Production-shaped reproduction of **"SLA: Beyond Sparsity in Diffusion
+//! Transformers via Fine-Tunable Sparse-Linear Attention"** as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): fused SLA forward/backward Pallas
+//!   kernels (+ flash/sparse/linear baselines), AOT-lowered to HLO text.
+//! * **L2** (`python/compile/model.py`): Wan-style video DiT with SLA as a
+//!   plug-in attention variant; flow-matching train step.
+//! * **L3** (this crate): coordinator — artifact runtime (PJRT), serving
+//!   router/batcher, denoise scheduler, fine-tune driver — plus the native
+//!   attention simulator substrate that measures true block skipping.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod attention;
+pub mod coordinator;
+pub mod diffusion;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+pub mod workload;

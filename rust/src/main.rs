@@ -1,0 +1,336 @@
+//! sla-dit — leader binary for the SLA reproduction.
+//!
+//! Subcommands:
+//!   info       manifest + platform summary
+//!   train      pretrain/fine-tune a variant on the synthetic corpus
+//!   generate   sample one video with a fine-tuned (or fresh) model
+//!   serve      run the coordinator over a synthetic request trace
+//!   analyze    Fig. 1 / Fig. 3 attention-weight analyses (native kernels)
+
+use anyhow::Result;
+
+use sla_dit::attention::{full, mask, MaskPolicy};
+use sla_dit::coordinator::{ArtifactBackend, Coordinator, CoordinatorConfig};
+use sla_dit::metrics;
+use sla_dit::runtime::Runtime;
+use sla_dit::tensor::{stable_rank, Mat};
+use sla_dit::train::Trainer;
+use sla_dit::util::cli::{Cli, Command};
+use sla_dit::util::rng::Rng;
+use sla_dit::workload::{RequestGen, WorkloadConfig};
+
+fn cli() -> Cli {
+    Cli::new("sla-dit", "SLA: sparse-linear attention for DiTs (reproduction)")
+        .command(Command::new("info", "print manifest + PJRT platform summary")
+            .flag("artifacts", "artifacts", "artifacts directory"))
+        .command(
+            Command::new("train", "train a variant on the synthetic corpus")
+                .flag("artifacts", "artifacts", "artifacts directory")
+                .flag("variant", "sla", "model config name (full|sla|sparse|linear|ls|...)")
+                .flag("steps", "100", "optimizer steps")
+                .flag("seed", "0", "init/data seed")
+                .flag("init-from", "", "checkpoint to warm-start from (by name)")
+                .flag("save", "", "checkpoint path to write at the end")
+                .flag("log-every", "10", "loss print interval"),
+        )
+        .command(
+            Command::new("generate", "sample one video")
+                .flag("artifacts", "artifacts", "artifacts directory")
+                .flag("variant", "sla", "model config name")
+                .flag("ckpt", "", "checkpoint to load")
+                .flag("prompt-seed", "1", "prompt (corpus conditioning) seed")
+                .flag("steps", "16", "denoise steps")
+                .flag("cfg", "1.0", "classifier-free guidance weight")
+                .flag("out", "", "write the sample tensor (binary ckpt format)"),
+        )
+        .command(
+            Command::new("serve", "serve a synthetic request trace")
+                .flag("artifacts", "artifacts", "artifacts directory")
+                .flag("variant", "sla", "model config name")
+                .flag("ckpt", "", "checkpoint to load")
+                .flag("requests", "8", "number of requests")
+                .flag("rate", "2.0", "arrival rate (req/s)")
+                .flag("max-active", "8", "in-flight cap (backpressure)")
+                .flag("batch-per-tick", "4", "denoise steps per scheduler tick"),
+        )
+        .command(
+            Command::new("analyze", "attention-weight distribution / stable-rank analyses")
+                .flag("n", "1024", "sequence length")
+                .flag("d", "64", "head dim")
+                .flag("kh", "8.0", "top percent treated as sparse part"),
+        )
+        .command(
+            Command::new("serve-tcp", "JSON-lines TCP generation server")
+                .flag("artifacts", "artifacts", "artifacts directory")
+                .flag("variant", "sla", "model config name")
+                .flag("ckpt", "", "checkpoint to load")
+                .flag("addr", "127.0.0.1:7878", "listen address")
+                .flag("connections", "0", "stop after N connections (0 = forever)"),
+        )
+        .command(
+            Command::new("hlo", "analyze an HLO artifact: op counts, fusion, est FLOPs")
+                .flag("artifacts", "artifacts", "artifacts directory")
+                .flag("name", "", "artifact name (empty = all)"),
+        )
+        .command(
+            Command::new("export", "render a generated sample to PGM frames")
+                .flag("artifacts", "artifacts", "artifacts directory")
+                .flag("variant", "sla", "model config name")
+                .flag("ckpt", "", "checkpoint to load")
+                .flag("prompt-seed", "1", "prompt seed")
+                .flag("steps", "16", "denoise steps")
+                .flag("out", "sample", "output stem for PGM files")
+                .flag("upscale", "8", "pixel upscale factor"),
+        )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let c = cli();
+    let (cmd, args) = match c.parse(&argv) {
+        Ok(x) => x,
+        Err(help) => {
+            eprintln!("{help}");
+            std::process::exit(if argv.is_empty() { 0 } else { 2 });
+        }
+    };
+    let run = || -> Result<()> {
+        match cmd.name {
+            "info" => cmd_info(&args.get_str("artifacts")),
+            "train" => cmd_train(&args),
+            "generate" => cmd_generate(&args),
+            "serve" => cmd_serve(&args),
+            "analyze" => cmd_analyze(&args),
+            "serve-tcp" => cmd_serve_tcp(&args),
+            "hlo" => cmd_hlo(&args),
+            "export" => cmd_export(&args),
+            _ => unreachable!(),
+        }
+    };
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info(dir: &str) -> Result<()> {
+    let rt = Runtime::open(dir)?;
+    println!("platform: {}", rt.platform());
+    println!("configs:");
+    for (name, c) in &rt.manifest.configs {
+        println!(
+            "  {name:<12} attn={:<7} N={} dim={} depth={} heads={} bq={} kh={}% kl={}% phi={}",
+            c.attn, c.seq_len, c.dim, c.depth, c.heads, c.bq, c.kh_pct, c.kl_pct, c.phi
+        );
+    }
+    for kind in ["denoise", "train_step", "attn"] {
+        let names = rt.names_of_kind(kind);
+        println!("{kind} artifacts ({}): {}", names.len(), names.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &sla_dit::util::cli::Args) -> Result<()> {
+    let rt = Runtime::open(args.get_str("artifacts"))?;
+    let variant = args.get_str("variant");
+    let steps = args.get_usize("steps")?;
+    let seed = args.get_usize("seed")? as u64;
+    let log_every = args.get_usize("log-every")?.max(1);
+    let mut tr = Trainer::new(&rt, &variant, seed)?;
+    println!(
+        "training {variant}: {} params, batch {}, {} steps on {}",
+        tr.param_count(),
+        tr.batch,
+        steps,
+        rt.platform()
+    );
+    let init_from = args.get_str("init-from");
+    if !init_from.is_empty() {
+        let loaded = tr.load_checkpoint(&init_from)?;
+        println!("warm-start: loaded {loaded} tensors from {init_from}");
+    }
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let loss = tr.train_step((s * tr.batch) as u64)?;
+        if s % log_every == 0 || s + 1 == steps {
+            println!(
+                "step {s:>5}  loss {loss:.5}  ({:.2} s/step)",
+                t0.elapsed().as_secs_f64() / (s + 1) as f64
+            );
+        }
+    }
+    println!("final: train loss {:.5}, val loss {:.5}",
+             tr.recent_loss(10), tr.eval_loss(0)?);
+    let save = args.get_str("save");
+    if !save.is_empty() {
+        tr.save_checkpoint(&save)?;
+        println!("checkpoint written to {save}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &sla_dit::util::cli::Args) -> Result<()> {
+    let rt = Runtime::open(args.get_str("artifacts"))?;
+    let variant = args.get_str("variant");
+    let mut backend = ArtifactBackend::new(&rt, &variant, 0)?;
+    let ckpt = args.get_str("ckpt");
+    if !ckpt.is_empty() {
+        let loaded = backend.load_checkpoint(&ckpt)?;
+        println!("loaded {loaded} tensors from {ckpt}");
+    }
+    use sla_dit::coordinator::VelocityBackend as _;
+    let video = backend.video();
+    let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+    let t0 = std::time::Instant::now();
+    let x = coord.generate_one(
+        args.get_usize("prompt-seed")? as u64,
+        args.get_usize("steps")?,
+        args.get_f64("cfg")? as f32,
+    )?;
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "generated {:?} in {el:.2}s; temporal consistency {:.4}",
+        x.shape,
+        metrics::temporal_consistency(&x, video.0)
+    );
+    let out = args.get_str("out");
+    if !out.is_empty() {
+        use sla_dit::model::ParamStore;
+        let store = ParamStore { names: vec!["sample".into()], tensors: vec![x] };
+        store.save(&out)?;
+        println!("sample written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &sla_dit::util::cli::Args) -> Result<()> {
+    let rt = Runtime::open(args.get_str("artifacts"))?;
+    let variant = args.get_str("variant");
+    let mut backend = ArtifactBackend::new(&rt, &variant, 0)?;
+    let ckpt = args.get_str("ckpt");
+    if !ckpt.is_empty() {
+        backend.load_checkpoint(&ckpt)?;
+    }
+    let coord = Coordinator::new(
+        &backend,
+        CoordinatorConfig {
+            max_active: args.get_usize("max-active")?,
+            batch_per_tick: args.get_usize("batch-per-tick")?,
+            ..Default::default()
+        },
+    );
+    let trace = RequestGen::generate(&WorkloadConfig {
+        requests: args.get_usize("requests")?,
+        rate: args.get_f64("rate")?,
+        ..Default::default()
+    });
+    println!("serving {} requests (variant={variant}, nfe={})",
+             trace.len(), RequestGen::total_nfe(&trace));
+    let report = coord.run_trace(&trace, None)?;
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_analyze(args: &sla_dit::util::cli::Args) -> Result<()> {
+    let n = args.get_usize("n")?;
+    let d = args.get_usize("d")?;
+    let kh = args.get_f64("kh")?;
+    let mut rng = Rng::new(42);
+    let q = Mat::randn(n, d, &mut rng);
+    let k = Mat::randn(n, d, &mut rng);
+    let v = Mat::randn(n, d, &mut rng);
+    let (_, p) = full::naive_attention(&q, &k, &v, true);
+    let p = p.unwrap();
+
+    // Fig. 1-style distribution summary
+    let thresh_hi = 1.0 / n as f32;
+    let thresh_lo = 1.0 / (100.0 * n as f32);
+    let total = (n * n) as f64;
+    let above = p.data.iter().filter(|&&x| x > thresh_hi).count() as f64 / total;
+    let below = p.data.iter().filter(|&&x| x < thresh_lo).count() as f64 / total;
+    println!("attention weights: {:.1}% > 1/N, {:.1}% < 1/(100N)", 100.0 * above,
+             100.0 * below);
+
+    // Fig. 3-style stable-rank decomposition at kh%
+    let bq = 64.min(n);
+    let mc = mask::predict_mask(&q, &k, bq, bq, MaskPolicy::Sla { kh_pct: kh, kl_pct: 0.0 });
+    let mut p_top = p.clone();
+    let mut p_rest = p.clone();
+    for r in 0..n {
+        for c in 0..n {
+            if mc.label(r / bq, c / bq) == 1 {
+                *p_rest.at_mut(r, c) = 0.0;
+            } else {
+                *p_top.at_mut(r, c) = 0.0;
+            }
+        }
+    }
+    println!(
+        "stable rank: full={:.1} top{:.0}%={:.1} rest={:.1}",
+        stable_rank(&p, 50, 1),
+        kh,
+        stable_rank(&p_top, 50, 2),
+        stable_rank(&p_rest, 50, 3)
+    );
+    Ok(())
+}
+
+fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
+    use sla_dit::coordinator::Server;
+    let rt = Runtime::open(args.get_str("artifacts"))?;
+    let mut backend = ArtifactBackend::new(&rt, &args.get_str("variant"), 0)?;
+    let ckpt = args.get_str("ckpt");
+    if !ckpt.is_empty() {
+        backend.load_checkpoint(&ckpt)?;
+    }
+    let addr = args.get_str("addr");
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("listening on {addr} (protocol: one JSON request per line; `quit` ends a connection)");
+    let srv = Server::new(&backend, CoordinatorConfig::default());
+    let conns = args.get_usize("connections")?;
+    let max = if conns == 0 { None } else { Some(conns) };
+    let served = srv.serve(listener, max)?;
+    println!("served {served} requests");
+    Ok(())
+}
+
+fn cmd_hlo(args: &sla_dit::util::cli::Args) -> Result<()> {
+    use sla_dit::runtime::hlo;
+    let dir = args.get_str("artifacts");
+    let rt = Runtime::open(&dir)?;
+    let only = args.get_str("name");
+    let mut names: Vec<String> = rt.manifest.artifacts.keys().cloned().collect();
+    if !only.is_empty() {
+        names.retain(|n| n == &only);
+        anyhow::ensure!(!names.is_empty(), "artifact {only:?} not in manifest");
+    }
+    for name in names {
+        let file = &rt.manifest.artifacts[&name].file;
+        let stats = hlo::analyze_file(std::path::Path::new(&dir).join(file))?;
+        println!("{name:<28} {}", stats.summary());
+    }
+    Ok(())
+}
+
+fn cmd_export(args: &sla_dit::util::cli::Args) -> Result<()> {
+    use sla_dit::coordinator::VelocityBackend as _;
+    use sla_dit::model::export::export_video;
+    let rt = Runtime::open(args.get_str("artifacts"))?;
+    let mut backend = ArtifactBackend::new(&rt, &args.get_str("variant"), 0)?;
+    let ckpt = args.get_str("ckpt");
+    if !ckpt.is_empty() {
+        backend.load_checkpoint(&ckpt)?;
+    }
+    let video = backend.video();
+    let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+    let x = coord.generate_one(
+        args.get_usize("prompt-seed")? as u64,
+        args.get_usize("steps")?,
+        1.0,
+    )?;
+    let files = export_video(&x, video, args.get_str("out"),
+                             args.get_usize("upscale")?)?;
+    println!("wrote {} PGM files (last = film strip): {:?}", files.len(),
+             files.last().unwrap());
+    Ok(())
+}

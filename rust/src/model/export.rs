@@ -1,0 +1,122 @@
+//! Latent-video export: render a generated (N, C) token tensor back onto
+//! its (frames, h, w) patch grid and write one PGM image per frame (plus a
+//! horizontal film-strip montage) — enough to eyeball Fig. 2/5-style
+//! comparisons without an image stack.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::HostTensor;
+
+/// Map channel-0 (or the channel mean) of each token to a grayscale pixel.
+fn frame_pixels(x: &HostTensor, video: (usize, usize, usize), frame: usize,
+                upscale: usize) -> (usize, usize, Vec<u8>) {
+    let (_, h, w) = video;
+    let c = x.shape[1];
+    // normalize over the whole video for consistent brightness
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let vals: Vec<f32> = (0..x.shape[0])
+        .map(|tok| {
+            let row = &x.data[tok * c..(tok + 1) * c];
+            row.iter().sum::<f32>() / c as f32
+        })
+        .collect();
+    for &v in &vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let span = (hi - lo).max(1e-6);
+    let up = upscale.max(1);
+    let mut pix = vec![0u8; h * w * up * up];
+    for y in 0..h {
+        for xx in 0..w {
+            let tok = (frame * h + y) * w + xx;
+            let g = (255.0 * (vals[tok] - lo) / span) as u8;
+            for dy in 0..up {
+                for dx in 0..up {
+                    pix[(y * up + dy) * (w * up) + xx * up + dx] = g;
+                }
+            }
+        }
+    }
+    (h * up, w * up, pix)
+}
+
+fn write_pgm(path: &Path, h: usize, w: usize, pix: &[u8]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    f.write_all(pix)?;
+    Ok(())
+}
+
+/// Write per-frame PGMs `<stem>_f<k>.pgm` and a film-strip `<stem>_strip.pgm`.
+pub fn export_video(
+    x: &HostTensor,
+    video: (usize, usize, usize),
+    stem: impl AsRef<Path>,
+    upscale: usize,
+) -> Result<Vec<std::path::PathBuf>> {
+    let (frames, h, w) = video;
+    anyhow::ensure!(x.shape.len() == 2, "expected (N, C) tokens");
+    anyhow::ensure!(x.shape[0] == frames * h * w, "token count != f*h*w");
+    let stem = stem.as_ref();
+    let mut written = Vec::new();
+    let up = upscale.max(1);
+    let mut strip = vec![0u8; (h * up) * (w * up) * frames];
+    for f in 0..frames {
+        let (fh, fw, pix) = frame_pixels(x, video, f, up);
+        let path = stem.with_file_name(format!(
+            "{}_f{f}.pgm",
+            stem.file_name().unwrap_or_default().to_string_lossy()
+        ));
+        write_pgm(&path, fh, fw, &pix)?;
+        written.push(path);
+        // copy into the strip at column offset f*fw
+        for y in 0..fh {
+            let dst = y * (fw * frames) + f * fw;
+            strip[dst..dst + fw].copy_from_slice(&pix[y * fw..(y + 1) * fw]);
+        }
+    }
+    let strip_path = stem.with_file_name(format!(
+        "{}_strip.pgm",
+        stem.file_name().unwrap_or_default().to_string_lossy()
+    ));
+    write_pgm(&strip_path, h * up, w * up * frames, &strip)?;
+    written.push(strip_path);
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exports_frames_and_strip() {
+        let video = (3usize, 4usize, 5usize);
+        let c = 2;
+        let n = video.0 * video.1 * video.2;
+        let mut rng = Rng::new(1);
+        let x = HostTensor::new(vec![n, c], rng.normal_vec(n * c));
+        let dir = std::env::temp_dir().join(format!("sla_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let files = export_video(&x, video, dir.join("demo"), 2).unwrap();
+        assert_eq!(files.len(), 4); // 3 frames + strip
+        // parse a PGM header back
+        let bytes = std::fs::read(&files[0]).unwrap();
+        let text = String::from_utf8_lossy(&bytes[..20]);
+        assert!(text.starts_with("P5\n10 8\n255"), "{text}"); // w=5*2, h=4*2
+        let strip = std::fs::read(files.last().unwrap()).unwrap();
+        assert!(strip.len() > 8 * 10 * 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let x = HostTensor::zeros(vec![10, 2]);
+        assert!(export_video(&x, (2, 2, 2), "/tmp/nope", 1).is_err());
+    }
+}

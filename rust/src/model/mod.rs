@@ -1,0 +1,7 @@
+//! Rust-side model handling: named parameter stores (init / checkpoint /
+//! cross-variant transfer) for the AOT'd DiT artifacts.
+
+pub mod export;
+mod params;
+
+pub use params::{init_param, ParamStore};

@@ -1,0 +1,244 @@
+//! Named parameter store + checkpoints.
+//!
+//! Parameters are addressed by the manifest's stable leaf names (e.g.
+//! `params.blocks.0.qkv.w`). Initialization mirrors the L2 `init_params`
+//! scheme by name: weight matrices get fan-in-scaled normals; biases, adaLN
+//! modulation, the output head, and the SLA compensation projection start
+//! at zero (so SLA == sparse component at fine-tune start).
+//!
+//! Checkpoints are a simple length-prefixed binary format; loading is
+//! name-based, so a full-attention checkpoint transfers into an SLA model
+//! (the extra `sla_proj` leaves keep their zero init) — exactly the paper's
+//! fine-tune hand-off.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{HostTensor, TensorSpec};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"SLADIT01";
+
+/// Initialize one parameter tensor from its manifest name + shape.
+pub fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> HostTensor {
+    let zero_init = name.ends_with(".b")
+        || name.contains(".mod.")
+        || name.contains("head.out")
+        || name.contains("sla_proj");
+    if zero_init {
+        return HostTensor::zeros(shape.to_vec());
+    }
+    // fan-in scaled normal for weight matrices; plain normal otherwise
+    let fan_in = if shape.len() >= 2 { shape[shape.len() - 2] } else { shape[0].max(1) };
+    let scale = 1.0 / (fan_in as f32).sqrt();
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let data = (0..n).map(|_| rng.normal_f32() * scale).collect();
+    HostTensor::new(shape.to_vec(), data)
+}
+
+/// Ordered, named parameter collection matching a manifest prefix slice.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl ParamStore {
+    /// Initialize from manifest tensor specs (in manifest order).
+    pub fn init(specs: &[&TensorSpec], seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::with_capacity(specs.len());
+        let mut tensors = Vec::with_capacity(specs.len());
+        for s in specs {
+            names.push(s.name.clone());
+            tensors.push(init_param(&s.name, &s.shape, &mut rng));
+        }
+        ParamStore { names, tensors }
+    }
+
+    /// All-zeros store with the same shapes (Adam moment buffers).
+    pub fn zeros_like(&self) -> Self {
+        ParamStore {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| HostTensor::zeros(t.shape.clone())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    /// Save to the binary checkpoint format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {:?}", path.as_ref()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a checkpoint as a name -> tensor map.
+    pub fn read_checkpoint(path: impl AsRef<Path>) -> Result<BTreeMap<String, HostTensor>> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+        let mut buf8 = [0u8; 8];
+        f.read_exact(&mut buf8)?;
+        let count = u64::from_le_bytes(buf8) as usize;
+        let mut out = BTreeMap::new();
+        for _ in 0..count {
+            let mut buf4 = [0u8; 4];
+            f.read_exact(&mut buf4)?;
+            let name_len = u32::from_le_bytes(buf4) as usize;
+            anyhow::ensure!(name_len < 4096, "unreasonable name length");
+            let mut nb = vec![0u8; name_len];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb).map_err(|_| anyhow!("bad name utf8"))?;
+            f.read_exact(&mut buf4)?;
+            let rank = u32::from_le_bytes(buf4) as usize;
+            anyhow::ensure!(rank <= 8, "unreasonable rank {rank}");
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut buf8)?;
+                shape.push(u64::from_le_bytes(buf8) as usize);
+            }
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let mut data = vec![0.0f32; n];
+            let mut b4 = [0u8; 4];
+            for x in &mut data {
+                f.read_exact(&mut b4)?;
+                *x = f32::from_le_bytes(b4);
+            }
+            out.insert(name, HostTensor::new(shape, data));
+        }
+        Ok(out)
+    }
+
+    /// Load by name from a checkpoint map: matching names (and shapes) are
+    /// copied; missing names keep their current (init) values. Returns the
+    /// number of tensors loaded.
+    pub fn load_from(&mut self, ckpt: &BTreeMap<String, HostTensor>) -> usize {
+        let mut loaded = 0;
+        for (name, t) in self.names.iter().zip(self.tensors.iter_mut()) {
+            if let Some(src) = ckpt.get(name) {
+                if src.shape == t.shape {
+                    *t = src.clone();
+                    loaded += 1;
+                }
+            }
+        }
+        loaded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: "float32".into() }
+    }
+
+    #[test]
+    fn init_scheme_by_name() {
+        let mut rng = Rng::new(0);
+        let w = init_param("params.blocks.0.qkv.w", &[64, 192], &mut rng);
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        // fan-in scaling keeps values modest
+        assert!(w.data.iter().all(|&x| x.abs() < 1.5));
+        for zero_name in ["params.blocks.0.qkv.b", "params.blocks.0.mod.w",
+                          "params.head.out.w", "params.blocks.1.sla_proj"] {
+            let t = init_param(zero_name, &[8, 8], &mut rng);
+            assert!(t.data.iter().all(|&x| x == 0.0), "{zero_name}");
+        }
+    }
+
+    #[test]
+    fn store_init_deterministic() {
+        let specs = [spec("params.a.w", &[4, 4]), spec("params.a.b", &[4])];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let s1 = ParamStore::init(&refs, 7);
+        let s2 = ParamStore::init(&refs, 7);
+        assert_eq!(s1.tensors, s2.tensors);
+        let s3 = ParamStore::init(&refs, 8);
+        assert_ne!(s1.tensors[0], s3.tensors[0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_and_transfer() {
+        let dir = std::env::temp_dir().join(format!("sla_ckpt_{}", std::process::id()));
+        let specs_full = [spec("params.a.w", &[4, 4]), spec("params.a.b", &[4])];
+        let refs: Vec<&TensorSpec> = specs_full.iter().collect();
+        let store = ParamStore::init(&refs, 1);
+        store.save(&dir).unwrap();
+        let ckpt = ParamStore::read_checkpoint(&dir).unwrap();
+        assert_eq!(ckpt.len(), 2);
+        assert_eq!(ckpt["params.a.w"], store.tensors[0]);
+
+        // transfer into a store with an extra (SLA) leaf
+        let specs_sla = [spec("params.a.w", &[4, 4]), spec("params.a.b", &[4]),
+                         spec("params.blocks.0.sla_proj", &[2, 2])];
+        let refs: Vec<&TensorSpec> = specs_sla.iter().collect();
+        let mut sla_store = ParamStore::init(&refs, 2);
+        let loaded = sla_store.load_from(&ckpt);
+        assert_eq!(loaded, 2);
+        assert_eq!(sla_store.tensors[0], store.tensors[0]);
+        // extra leaf keeps zero init
+        assert!(sla_store.tensors[2].data.iter().all(|&x| x == 0.0));
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_not_loaded() {
+        let specs = [spec("params.a.w", &[4, 4])];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::init(&refs, 3);
+        let mut ckpt = BTreeMap::new();
+        ckpt.insert("params.a.w".to_string(), HostTensor::zeros(vec![2, 2]));
+        assert_eq!(store.load_from(&ckpt), 0);
+    }
+
+    #[test]
+    fn numel_counts() {
+        let specs = [spec("params.a.w", &[4, 4]), spec("params.a.b", &[4])];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let store = ParamStore::init(&refs, 4);
+        assert_eq!(store.numel(), 20);
+        assert_eq!(store.len(), 2);
+        assert!(store.get("params.a.b").is_some());
+        assert!(store.get("nope").is_none());
+    }
+}

@@ -1,0 +1,225 @@
+//! HLO-text analyzer: parses the AOT artifacts' HLO text into per-opcode
+//! statistics and an analytic FLOPs estimate.
+//!
+//! This is the L2 profiling tool of the perf pass (EXPERIMENTS.md §Perf):
+//! it answers "did XLA fuse what we expect?" and "how many dot/exp/while
+//! ops does each artifact carry?" without running anything — the HLO text
+//! is the ground truth the runtime compiles.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+/// One parsed HLO instruction (the subset of fields we analyze).
+#[derive(Clone, Debug)]
+pub struct HloInstr {
+    pub opcode: String,
+    /// output shape text, e.g. "f32[256,128]"
+    pub shape: String,
+    /// number of elements in the output shape (product of dims; 1 = scalar)
+    pub numel: u64,
+    pub dtype: String,
+}
+
+/// Aggregate statistics for one HLO module.
+#[derive(Clone, Debug, Default)]
+pub struct HloStats {
+    pub computations: usize,
+    pub instructions: usize,
+    /// opcode -> (count, total output elements)
+    pub by_opcode: BTreeMap<String, (usize, u64)>,
+    /// estimated FLOPs: dot = 2*M*N*K (via operand shapes when parseable),
+    /// elementwise = numel
+    pub est_flops: u64,
+    pub fusions: usize,
+    pub while_loops: usize,
+    pub parameters: usize,
+}
+
+impl HloStats {
+    pub fn count(&self, opcode: &str) -> usize {
+        self.by_opcode.get(opcode).map(|(c, _)| *c).unwrap_or(0)
+    }
+
+    pub fn summary(&self) -> String {
+        let mut top: Vec<(&String, &(usize, u64))> = self.by_opcode.iter().collect();
+        top.sort_by_key(|(_, (c, _))| std::cmp::Reverse(*c));
+        let head: Vec<String> = top
+            .iter()
+            .take(8)
+            .map(|(op, (c, _))| format!("{op}:{c}"))
+            .collect();
+        format!(
+            "{} instrs, {} computations, {} fusions, {} whiles, est {:.1} MF [{}]",
+            self.instructions,
+            self.computations,
+            self.fusions,
+            self.while_loops,
+            self.est_flops as f64 / 1e6,
+            head.join(" ")
+        )
+    }
+}
+
+/// Parse a shape like "f32[4,256,8]" -> (dtype, numel, dims).
+fn parse_shape(text: &str) -> Option<(String, u64, Vec<u64>)> {
+    let open = text.find('[')?;
+    let close = text.find(']')?;
+    let dtype = text[..open].trim().to_string();
+    let dims_text = &text[open + 1..close];
+    if dims_text.trim().is_empty() {
+        return Some((dtype, 1, vec![]));
+    }
+    let mut dims = Vec::new();
+    let mut numel = 1u64;
+    for part in dims_text.split(',') {
+        let d: u64 = part.trim().parse().ok()?;
+        dims.push(d);
+        numel = numel.saturating_mul(d);
+    }
+    Some((dtype, numel, dims))
+}
+
+/// Parse HLO text into statistics. The grammar is line-oriented:
+///   `%name = f32[2,2]{1,0} opcode(...), meta...`
+/// with computation headers `ENTRY %main ... {` / `%fused_computation ... {`.
+pub fn analyze(text: &str) -> Result<HloStats> {
+    let mut stats = HloStats::default();
+    // operand shapes by instruction name, for dot FLOPs estimation
+    let mut shapes: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.starts_with("HloModule") {
+            continue;
+        }
+        if line.ends_with('{') && (line.contains("ENTRY") || line.starts_with('%')
+            || line.contains("(param") || line.contains("->")) {
+            stats.computations += 1;
+            continue;
+        }
+        // instruction lines: `[%]name = TYPE[dims]{layout} opcode(args)`
+        let Some(eq) = line.find(" = ") else { continue };
+        let name = line[..eq].trim().trim_start_matches('%').to_string();
+        let rest = &line[eq + 3..];
+        // shape = prefix up to the first space after the bracketed dims
+        let Some((dtype, numel, dims)) = parse_shape(rest) else { continue };
+        // opcode: token after the shape (skip layout annotation `{...}`)
+        let after_shape = match rest.find(']') {
+            Some(i) => &rest[i + 1..],
+            None => continue,
+        };
+        let after_layout = if let Some(s) = after_shape.strip_prefix('{') {
+            match s.find('}') {
+                Some(i) => &s[i + 1..],
+                None => after_shape,
+            }
+        } else {
+            after_shape
+        };
+        let opcode: String = after_layout
+            .trim()
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        stats.instructions += 1;
+        let e = stats.by_opcode.entry(opcode.clone()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += numel;
+        shapes.insert(name, dims.clone());
+
+        match opcode.as_str() {
+            "fusion" => stats.fusions += 1,
+            "while" => stats.while_loops += 1,
+            "parameter" => stats.parameters += 1,
+            "dot" => {
+                // FLOPs = 2 * output_numel * K; K from the first operand's
+                // contracted dim (approximate: last dim of operand 0)
+                let k = line
+                    .split("%")
+                    .nth(2)
+                    .and_then(|arg| {
+                        let arg_name: String = arg
+                            .chars()
+                            .take_while(|c| c.is_ascii_alphanumeric() || *c == '.'
+                                        || *c == '_' || *c == '-')
+                            .collect();
+                        shapes.get(&arg_name).and_then(|d| d.last().copied())
+                    })
+                    .unwrap_or(1);
+                stats.est_flops = stats.est_flops.saturating_add(2 * numel * k);
+            }
+            "add" | "subtract" | "multiply" | "divide" | "exponential" | "tanh"
+            | "maximum" | "minimum" | "rsqrt" | "power" | "negate" | "log" => {
+                stats.est_flops = stats.est_flops.saturating_add(numel);
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(stats.instructions > 0, "no HLO instructions found");
+    Ok(stats)
+}
+
+/// Analyze an artifact file on disk.
+pub fn analyze_file(path: impl AsRef<std::path::Path>) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path)?;
+    analyze(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,3]{1,0}, f32[3,4]{1,0})->(f32[2,4]{1,0})}
+
+ENTRY %main.5 (Arg_0.1: f32[2,3], Arg_1.2: f32[3,4]) -> (f32[2,4]) {
+  %Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  %Arg_1.2 = f32[3,4]{1,0} parameter(1)
+  %dot.3 = f32[2,4]{1,0} dot(%Arg_0.1, %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %add.4 = f32[2,4]{1,0} add(%dot.3, %dot.3)
+  ROOT %tuple.5 = (f32[2,4]{1,0}) tuple(%add.4)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let s = analyze(SAMPLE).unwrap();
+        assert_eq!(s.count("parameter"), 2);
+        assert_eq!(s.count("dot"), 1);
+        assert_eq!(s.count("add"), 1);
+        assert!(s.instructions >= 4);
+        assert_eq!(s.computations, 1);
+    }
+
+    #[test]
+    fn dot_flops_estimate() {
+        let s = analyze(SAMPLE).unwrap();
+        // dot: 2 * (2*4) * 3 = 48; add: 8
+        assert_eq!(s.est_flops, 48 + 8);
+    }
+
+    #[test]
+    fn parse_shape_variants() {
+        assert_eq!(parse_shape("f32[2,3]{1,0}").unwrap().1, 6);
+        assert_eq!(parse_shape("f32[]").unwrap().1, 1);
+        assert_eq!(parse_shape("pred[7]").unwrap().0, "pred");
+        assert!(parse_shape("notashape").is_none());
+    }
+
+    #[test]
+    fn summary_mentions_counts() {
+        let s = analyze(SAMPLE).unwrap();
+        let sum = s.summary();
+        assert!(sum.contains("instrs"));
+        assert!(sum.contains("dot:1"));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(analyze("").is_err());
+        assert!(analyze("HloModule nothing\n").is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Typed view over `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").as_str().ok_or_else(|| anyhow!("spec missing name"))?.into(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                .collect::<Result<_>>()?,
+            dtype: j.get("dtype").as_str().unwrap_or("float32").into(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kind: String,   // denoise | train_step | attn
+    pub config: String, // model config name ("" for attn kernels)
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// kernel-artifact extras (n, d, bq, bkv, kh_pct, kl_pct) where present
+    pub extras: BTreeMap<String, f64>,
+}
+
+impl ArtifactSpec {
+    /// Index of the input with this name.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("{}: no input named {name:?}", self.file))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("{}: no output named {name:?}", self.file))
+    }
+
+    /// Input specs whose name starts with `prefix` (e.g. "params.").
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<(usize, &TensorSpec)> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.name.starts_with(prefix))
+            .collect()
+    }
+}
+
+/// Model config as recorded by aot.py (subset the Rust side needs).
+#[derive(Clone, Debug)]
+pub struct ModelCfgSpec {
+    pub attn: String,
+    pub seq_len: usize,
+    pub channels: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub cond_dim: usize,
+    pub bq: usize,
+    pub bkv: usize,
+    pub kh_pct: f64,
+    pub kl_pct: f64,
+    pub phi: String,
+    pub video: (usize, usize, usize),
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub train_batch: usize,
+    pub configs: BTreeMap<String, ModelCfgSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let version = j.get("version").as_usize().unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let train_batch = j.get("train_batch").as_usize().unwrap_or(1);
+
+        let mut configs = BTreeMap::new();
+        if let Some(obj) = j.get("configs").as_obj() {
+            for (name, c) in obj {
+                let video = c
+                    .get("video")
+                    .as_arr()
+                    .map(|a| {
+                        (
+                            a.first().and_then(|x| x.as_usize()).unwrap_or(1),
+                            a.get(1).and_then(|x| x.as_usize()).unwrap_or(1),
+                            a.get(2).and_then(|x| x.as_usize()).unwrap_or(1),
+                        )
+                    })
+                    .unwrap_or((1, 1, 1));
+                configs.insert(
+                    name.clone(),
+                    ModelCfgSpec {
+                        attn: c.get("attn").as_str().unwrap_or("full").into(),
+                        seq_len: c.get("seq_len").as_usize().unwrap_or(0),
+                        channels: c.get("channels").as_usize().unwrap_or(0),
+                        dim: c.get("dim").as_usize().unwrap_or(0),
+                        depth: c.get("depth").as_usize().unwrap_or(0),
+                        heads: c.get("heads").as_usize().unwrap_or(0),
+                        head_dim: c.get("head_dim").as_usize().unwrap_or(0),
+                        cond_dim: c.get("cond_dim").as_usize().unwrap_or(0),
+                        bq: c.get("bq").as_usize().unwrap_or(64),
+                        bkv: c.get("bkv").as_usize().unwrap_or(64),
+                        kh_pct: c.get("kh_pct").as_f64().unwrap_or(5.0),
+                        kl_pct: c.get("kl_pct").as_f64().unwrap_or(10.0),
+                        phi: c.get("phi").as_str().unwrap_or("softmax").into(),
+                        video,
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, a) in arts {
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let mut extras = BTreeMap::new();
+            for key in ["n", "d", "bq", "bkv", "kh_pct", "kl_pct", "batch", "lr"] {
+                if let Some(x) = a.get(key).as_f64() {
+                    extras.insert(key.to_string(), x);
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .into(),
+                    kind: a.get("kind").as_str().unwrap_or("").into(),
+                    config: a.get("config").as_str().unwrap_or("").into(),
+                    inputs,
+                    outputs,
+                    extras,
+                },
+            );
+        }
+        Ok(Manifest { version, train_batch, configs, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "train_batch": 4,
+      "configs": {
+        "sla": {"attn": "sla", "seq_len": 256, "channels": 8, "dim": 128,
+                 "depth": 4, "heads": 4, "head_dim": 32, "cond_dim": 16,
+                 "bq": 16, "bkv": 16, "kh_pct": 5, "kl_pct": 10,
+                 "phi": "softmax", "video": [4, 8, 8]}
+      },
+      "artifacts": {
+        "dit_denoise_sla": {
+          "file": "dit_denoise_sla.hlo.txt", "kind": "denoise", "config": "sla",
+          "inputs": [
+            {"name": "params.patch.w", "shape": [8, 128], "dtype": "float32"},
+            {"name": "x", "shape": [256, 8], "dtype": "float32"},
+            {"name": "t", "shape": [], "dtype": "float32"},
+            {"name": "cond", "shape": [16], "dtype": "float32"}
+          ],
+          "outputs": [{"name": "velocity", "shape": [256, 8], "dtype": "float32"}]
+        },
+        "attn_sla_n1024_d64": {
+          "file": "attn.hlo.txt", "kind": "attn", "n": 1024, "d": 64,
+          "bq": 64, "bkv": 64, "kh_pct": 5, "kl_pct": 10,
+          "inputs": [{"name": "q", "shape": [1024, 64], "dtype": "float32"}],
+          "outputs": [{"name": "o", "shape": [1024, 64], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.train_batch, 4);
+        let cfg = &m.configs["sla"];
+        assert_eq!(cfg.seq_len, 256);
+        assert_eq!(cfg.video, (4, 8, 8));
+        assert_eq!(cfg.phi, "softmax");
+        let a = &m.artifacts["dit_denoise_sla"];
+        assert_eq!(a.kind, "denoise");
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[2].shape, Vec::<usize>::new()); // scalar t
+        assert_eq!(a.outputs[0].name, "velocity");
+    }
+
+    #[test]
+    fn input_lookup_helpers() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["dit_denoise_sla"];
+        assert_eq!(a.input_index("x").unwrap(), 1);
+        assert!(a.input_index("nope").is_err());
+        assert_eq!(a.inputs_with_prefix("params.").len(), 1);
+        assert_eq!(a.output_index("velocity").unwrap(), 0);
+    }
+
+    #[test]
+    fn extras_for_kernel_artifacts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["attn_sla_n1024_d64"];
+        assert_eq!(a.extras["n"], 1024.0);
+        assert_eq!(a.extras["kh_pct"], 5.0);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": {}}"#).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec { name: "x".into(), shape: vec![4, 8], dtype: "float32".into() };
+        assert_eq!(t.numel(), 32);
+        let s = TensorSpec { name: "t".into(), shape: vec![], dtype: "float32".into() };
+        assert_eq!(s.numel(), 1);
+    }
+}

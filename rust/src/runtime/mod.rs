@@ -1,0 +1,150 @@
+//! PJRT artifact runtime: load `artifacts/*.hlo.txt` through the manifest
+//! and execute them on the CPU PJRT client from the L3 hot path.
+//!
+//! Python is build-time only — after `make artifacts`, everything here is
+//! self-contained: the manifest describes each executable's ordered
+//! input/output tensors by name/shape/dtype, and `Artifact::execute` feeds
+//! host tensors and unpacks the result tuple.
+
+pub mod hlo;
+mod manifest;
+mod tensors;
+
+pub use manifest::{ArtifactSpec, Manifest, ModelCfgSpec, TensorSpec};
+pub use tensors::HostTensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Lazy-compiling executable registry over one PJRT CPU client.
+///
+/// NOTE: the `xla` crate's PJRT handles are Rc-based (!Send), so the runtime
+/// and everything holding an `Artifact` is single-threaded by construction;
+/// the coordinator's scheduling is virtual-clock based and doesn't need
+/// threads on the PJRT path (native-kernel benches use the threadpool).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// A compiled executable + its manifest signature (cheap to clone via Arc).
+#[derive(Clone)]
+pub struct Artifact {
+    exec: Rc<xla::PjRtLoadedExecutable>,
+    pub spec: ArtifactSpec,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts dir: $SLA_DIT_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("SLA_DIT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once, cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        if let Some(exec) = self.cache.borrow().get(name) {
+            return Ok(Artifact { exec: exec.clone(), spec });
+        }
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exec = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let exec = Rc::new(exec);
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(Artifact { exec, spec })
+    }
+
+    /// Names of all artifacts of a given kind (sorted).
+    pub fn names_of_kind(&self, kind: &str) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|(_, a)| a.kind == kind)
+            .map(|(n, _)| n.clone())
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+impl Artifact {
+    /// Execute with host tensors in manifest input order; returns outputs in
+    /// manifest output order. Shapes are validated against the manifest.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, manifest wants {}",
+            self.spec.file,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{}: input {:?} shape {:?} != manifest {:?}",
+                self.spec.file,
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            literals.push(t.to_literal()?);
+        }
+        let result = self
+            .exec
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e}", self.spec.file))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        // jax lowering used return_tuple=True: unpack the tuple
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untupling result: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: got {} outputs, manifest wants {}",
+            self.spec.file,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(&l, &spec.shape))
+            .collect()
+    }
+}

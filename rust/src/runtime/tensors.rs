@@ -1,0 +1,102 @@
+//! Host-side tensors and Literal conversion for the PJRT boundary.
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Mat;
+
+/// A host f32 tensor of arbitrary rank (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+        HostTensor { shape, data }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        HostTensor { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn to_mat(&self) -> Result<Mat> {
+        anyhow::ensure!(self.shape.len() == 2, "expected rank-2, got {:?}", self.shape);
+        Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data.clone()))
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn as_scalar(&self) -> Result<f32> {
+        anyhow::ensure!(self.data.len() == 1, "not a scalar: {:?}", self.shape);
+        Ok(self.data[0])
+    }
+
+    /// Convert to an xla Literal of matching shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: reshape to rank 0
+            lit.reshape(&[]).map_err(|e| anyhow!("scalar reshape: {e}"))
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&x| x as i64).collect();
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape {:?}: {e}", self.shape))
+        }
+    }
+
+    /// Read back from a Literal, validating element count against `shape`.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<HostTensor> {
+        let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+        let expect: usize = shape.iter().product::<usize>().max(1);
+        anyhow::ensure!(
+            data.len() == expect,
+            "literal has {} elements, expected {} for {:?}",
+            data.len(),
+            expect,
+            shape
+        );
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = HostTensor::from_mat(&m);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.to_mat().unwrap(), m);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = HostTensor::scalar(2.5);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.as_scalar().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(vec![3, 4, 5]);
+        assert_eq!(t.data.len(), 60);
+        assert!(t.as_scalar().is_err());
+    }
+
+    // Literal round-trips need the PJRT library loaded; covered by the
+    // integration tests in rust/tests/runtime_roundtrip.rs.
+}

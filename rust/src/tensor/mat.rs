@@ -1,0 +1,269 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Copy of rows [r0, r1) as a new matrix.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, b.cols);
+        // i-k-j loop order: streams B rows, vectorizes the inner j loop.
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T (B given untransposed) — the QK^T shape.
+    pub fn matmul_nt(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
+        let mut out = Mat::zeros(self.rows, b.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..b.rows {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                out.data[i * b.rows + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// C = A^T @ B (A given untransposed) — the K^T V shape.
+    pub fn matmul_tn(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
+        let mut out = Mat::zeros(self.cols, b.cols);
+        for r in 0..self.rows {
+            let arow = self.row(r);
+            let brow = b.row(r);
+            for (ka, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[ka * b.cols..(ka + 1) * b.cols];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn scaled(&self, s: f32) -> Mat {
+        let mut m = self.clone();
+        m.scale(s);
+        m
+    }
+
+    /// Row-wise softmax in place.
+    pub fn softmax_rows(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - mx).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (x, y)| a.max((x - y).abs()))
+    }
+
+    /// Mean |a-b| / mean |b| — the relative L1 metric of Fig. 1.
+    pub fn rel_l1(&self, other: &Mat) -> f32 {
+        let num: f32 = self.data.iter().zip(&other.data).map(|(x, y)| (x - y).abs()).sum();
+        let den: f32 = other.data.iter().map(|y| y.abs()).sum();
+        num / den.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(5, 7, &mut rng);
+        let b = Mat::randn(9, 7, &mut rng);
+        let c1 = a.matmul_nt(&b);
+        let c2 = a.matmul(&b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(6, 4, &mut rng);
+        let b = Mat::randn(6, 5, &mut rng);
+        let c1 = a.matmul_tn(&b);
+        let c2 = a.transpose().matmul(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(2);
+        let mut m = Mat::randn(4, 10, &mut rng);
+        m.softmax_rows();
+        for r in 0..4 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let m = Mat::randn(3, 8, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_is_matmul_identity() {
+        let mut rng = Rng::new(4);
+        let m = Mat::randn(6, 6, &mut rng);
+        assert!(m.matmul(&Mat::eye(6)).max_abs_diff(&m) < 1e-6);
+    }
+
+    #[test]
+    fn rel_l1_zero_for_identical() {
+        let mut rng = Rng::new(5);
+        let m = Mat::randn(4, 4, &mut rng);
+        assert_eq!(m.rel_l1(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

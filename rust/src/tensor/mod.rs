@@ -1,0 +1,9 @@
+//! Minimal dense f32 tensor substrate for the native attention simulator,
+//! metrics, and diffusion sampling. Row-major matrices with the handful of
+//! BLAS-like ops the kernels need; no external dependencies.
+
+mod mat;
+mod ops;
+
+pub use mat::Mat;
+pub use ops::{spectral_norm, stable_rank};

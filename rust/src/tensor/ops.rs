@@ -1,0 +1,108 @@
+//! Spectral helpers: power iteration for the largest singular value and the
+//! stable rank ||A||_F^2 / ||A||_2^2 used by the Fig. 3 analysis.
+
+use super::Mat;
+use crate::util::rng::Rng;
+
+/// Largest singular value via power iteration on A^T A.
+pub fn spectral_norm(a: &Mat, iters: usize, seed: u64) -> f32 {
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<f32> = rng.normal_vec(a.cols);
+    normalize(&mut v);
+    let mut sigma = 0.0f32;
+    for _ in 0..iters {
+        // u = A v
+        let mut u = vec![0.0f32; a.rows];
+        for r in 0..a.rows {
+            let row = a.row(r);
+            u[r] = row.iter().zip(&v).map(|(x, y)| x * y).sum();
+        }
+        // w = A^T u
+        let mut w = vec![0.0f32; a.cols];
+        for r in 0..a.rows {
+            let row = a.row(r);
+            let ur = u[r];
+            if ur == 0.0 {
+                continue;
+            }
+            for (wc, &x) in w.iter_mut().zip(row) {
+                *wc += ur * x;
+            }
+        }
+        let nw = norm(&w);
+        if nw < 1e-20 {
+            return 0.0;
+        }
+        sigma = nw.sqrt();
+        v = w;
+        normalize(&mut v);
+    }
+    sigma
+}
+
+/// Stable rank: ||A||_F^2 / sigma_1^2 (Rudelson & Vershynin) — the rank
+/// notion Fig. 3 uses to show the bottom-92% of attention weights are
+/// extremely low-rank.
+pub fn stable_rank(a: &Mat, iters: usize, seed: u64) -> f32 {
+    let f2 = a.frob_norm().powi(2);
+    let s = spectral_norm(a, iters, seed);
+    if s < 1e-20 {
+        return 0.0;
+    }
+    f2 / (s * s)
+}
+
+fn norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = norm(v).max(1e-20);
+    for x in v {
+        *x /= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut a = Mat::zeros(3, 3);
+        a.data[0] = 3.0;
+        a.data[4] = -5.0;
+        a.data[8] = 1.0;
+        let s = spectral_norm(&a, 100, 0);
+        assert!((s - 5.0).abs() < 1e-3, "sigma {s}");
+    }
+
+    #[test]
+    fn stable_rank_identity_is_n() {
+        let a = Mat::eye(8);
+        let r = stable_rank(&a, 100, 1);
+        assert!((r - 8.0).abs() < 0.05, "stable rank {r}");
+    }
+
+    #[test]
+    fn stable_rank_rank_one_is_one() {
+        // outer product -> rank 1 -> stable rank 1
+        let u = [1.0f32, 2.0, 3.0];
+        let v = [4.0f32, 5.0, 6.0, 7.0];
+        let mut a = Mat::zeros(3, 4);
+        for i in 0..3 {
+            for j in 0..4 {
+                *a.at_mut(i, j) = u[i] * v[j];
+            }
+        }
+        let r = stable_rank(&a, 100, 2);
+        assert!((r - 1.0).abs() < 1e-3, "stable rank {r}");
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Mat::zeros(4, 4);
+        assert_eq!(spectral_norm(&a, 10, 3), 0.0);
+        assert_eq!(stable_rank(&a, 10, 3), 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Fine-tune driver: runs the AOT'd `dit_train_step_<variant>` artifact in a
+//! loop over the synthetic corpus — the Rust-side half of the paper's
+//! "replace attention with SLA and fine-tune briefly" recipe. The artifact
+//! carries model fwd+bwd+Adam; this driver owns data, RNG, checkpoints, and
+//! the loss log. Python is never on this path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::ParamStore;
+use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::workload::{Corpus, CorpusConfig};
+use crate::util::rng::Rng;
+
+pub struct Trainer {
+    artifact: Artifact,
+    pub cfg_name: String,
+    pub params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    step: f32,
+    pub batch: usize,
+    np: usize,
+    seq_len: usize,
+    channels: usize,
+    cond_dim: usize,
+    corpus: Corpus,
+    rng: Rng,
+    pub losses: Vec<f32>,
+}
+
+impl Trainer {
+    /// Build a trainer for the named model config (e.g. "sla", "full").
+    pub fn new(rt: &Runtime, cfg_name: &str, seed: u64) -> Result<Self> {
+        let artifact = rt.load(&format!("dit_train_step_{cfg_name}"))?;
+        let mcfg = rt
+            .manifest
+            .configs
+            .get(cfg_name)
+            .ok_or_else(|| anyhow!("config {cfg_name:?} not in manifest"))?
+            .clone();
+        let pspecs: Vec<_> = artifact
+            .spec
+            .inputs_with_prefix("params.")
+            .into_iter()
+            .map(|(_, t)| t.clone())
+            .collect();
+        let refs: Vec<&_> = pspecs.iter().collect();
+        let params = ParamStore::init(&refs, seed);
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        let np = params.len();
+        let batch = artifact.spec.extras.get("batch").copied().unwrap_or(4.0) as usize;
+        let corpus = Corpus::new(CorpusConfig::from_video(
+            mcfg.video,
+            mcfg.channels,
+            mcfg.cond_dim,
+            seed ^ 0xC0FFEE,
+        ));
+        Ok(Trainer {
+            artifact,
+            cfg_name: cfg_name.to_string(),
+            params,
+            m,
+            v,
+            step: 0.0,
+            batch,
+            np,
+            seq_len: mcfg.seq_len,
+            channels: mcfg.channels,
+            cond_dim: mcfg.cond_dim,
+            corpus,
+            rng: Rng::new(seed ^ 0xBEEF),
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.numel()
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step as usize
+    }
+
+    /// Transfer weights by name from a checkpoint (e.g. the full-attention
+    /// pretrain) — extra SLA leaves keep their zero init.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<usize> {
+        let ckpt = ParamStore::read_checkpoint(path)?;
+        Ok(self.params.load_from(&ckpt))
+    }
+
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.params.save(path)
+    }
+
+    fn batch_randomness(&mut self) -> (HostTensor, HostTensor) {
+        let b = self.batch;
+        // stratified t in (0,1): one sample per stratum, avoids clumping
+        let mut t = Vec::with_capacity(b);
+        for i in 0..b {
+            t.push(((i as f32) + 0.1 + 0.8 * self.rng.uniform_f32()) / b as f32);
+        }
+        let noise =
+            self.rng.normal_vec(b * self.seq_len * self.channels);
+        (
+            HostTensor::new(vec![b], t),
+            HostTensor::new(vec![b, self.seq_len, self.channels], noise),
+        )
+    }
+
+    fn run_artifact(&self, x0: HostTensor, cond: HostTensor, t: HostTensor,
+                    noise: HostTensor) -> Result<Vec<HostTensor>> {
+        let mut inputs = Vec::with_capacity(3 * self.np + 5);
+        inputs.extend(self.params.tensors.iter().cloned());
+        inputs.extend(self.m.tensors.iter().cloned());
+        inputs.extend(self.v.tensors.iter().cloned());
+        inputs.push(HostTensor::scalar(self.step));
+        inputs.push(x0);
+        inputs.push(cond);
+        inputs.push(t);
+        inputs.push(noise);
+        self.artifact.execute(&inputs)
+    }
+
+    /// One optimizer step on corpus slice starting at `data_index`.
+    /// Returns the (pre-update) loss.
+    pub fn train_step(&mut self, data_index: u64) -> Result<f32> {
+        let (x0, cond) = self.corpus.batch(data_index, self.batch);
+        let (t, noise) = self.batch_randomness();
+        let outs = self.run_artifact(x0, cond, t, noise)?;
+        // outputs: params' (np), m' (np), v' (np), step', loss
+        let np = self.np;
+        anyhow::ensure!(outs.len() == 3 * np + 2, "unexpected output arity");
+        for (dst, src) in self.params.tensors.iter_mut().zip(&outs[0..np]) {
+            *dst = src.clone();
+        }
+        for (dst, src) in self.m.tensors.iter_mut().zip(&outs[np..2 * np]) {
+            *dst = src.clone();
+        }
+        for (dst, src) in self.v.tensors.iter_mut().zip(&outs[2 * np..3 * np]) {
+            *dst = src.clone();
+        }
+        self.step = outs[3 * np].as_scalar()?;
+        let loss = outs[3 * np + 1].as_scalar()?;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Validation loss on a fixed held-out batch (fixed t grid + noise seed);
+    /// parameters and optimizer state are NOT updated.
+    pub fn eval_loss(&self, holdout_index: u64) -> Result<f32> {
+        let (x0, cond) = self.corpus.batch(1_000_000 + holdout_index, self.batch);
+        let b = self.batch;
+        let t: Vec<f32> = (0..b).map(|i| (i as f32 + 0.5) / b as f32).collect();
+        let mut nrng = Rng::new(0xEA71_0000 ^ holdout_index);
+        let noise = nrng.normal_vec(b * self.seq_len * self.channels);
+        let outs = self.run_artifact(
+            x0,
+            cond,
+            HostTensor::new(vec![b], t),
+            HostTensor::new(vec![b, self.seq_len, self.channels], noise),
+        )?;
+        outs[3 * self.np + 1].as_scalar()
+    }
+
+    /// Mean of the last `k` recorded training losses.
+    pub fn recent_loss(&self, k: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = k.min(self.losses.len());
+        self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32
+    }
+}

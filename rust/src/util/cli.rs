@@ -1,0 +1,270 @@
+//! Declarative CLI argument parser (clap substitute).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required flags, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub required: bool,
+    pub is_switch: bool,
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+            is_switch: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: true, is_switch: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: false, is_switch: true });
+        self
+    }
+}
+
+/// Parsed argument values for one command invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        s.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got {s:?}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        s.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected number, got {s:?}"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\nUSAGE: {} <command> [flags]\n\nCOMMANDS:",
+                         self.bin, self.about, self.bin);
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<14} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nRun `{} <command> --help` for per-command flags.", self.bin);
+        s
+    }
+
+    pub fn command_help(&self, c: &Command) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} {} — {}\n\nFLAGS:", self.bin, c.name, c.about);
+        for f in &c.flags {
+            let kind = if f.is_switch {
+                "".to_string()
+            } else if let Some(d) = &f.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            let _ = writeln!(s, "  --{:<18} {}{}", f.name, f.help, kind);
+        }
+        s
+    }
+
+    /// Parse argv (excluding argv[0]). Returns (command name, args) or a
+    /// printable help/error string.
+    pub fn parse(&self, argv: &[String]) -> Result<(&Command, Args), String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == argv[0])
+            .ok_or_else(|| format!("unknown command {:?}\n\n{}", argv[0], self.help()))?;
+
+        let mut args = Args::default();
+        // fill defaults
+        for f in &cmd.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_help(cmd));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let flag = cmd
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        format!("unknown flag --{name}\n\n{}", self.command_help(cmd))
+                    })?;
+                if flag.is_switch {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a switch and takes no value"));
+                    }
+                    args.switches.push(name.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} expects a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &cmd.flags {
+            if f.required && !args.values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}\n\n{}", f.name,
+                                   self.command_help(cmd)));
+            }
+        }
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("sla-dit", "test")
+            .command(
+                Command::new("serve", "serve requests")
+                    .flag("port", "8080", "port to listen on")
+                    .flag("variant", "sla", "attention variant")
+                    .switch("verbose", "log more"),
+            )
+            .command(Command::new("train", "fine-tune").required("steps", "train steps"))
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let c = cli();
+        let (cmd, args) = c.parse(&sv(&["serve", "--port", "9"])).unwrap();
+        assert_eq!(cmd.name, "serve");
+        assert_eq!(args.get_usize("port").unwrap(), 9);
+        assert_eq!(args.get("variant"), Some("sla"));
+    }
+
+    #[test]
+    fn equals_syntax_and_switch() {
+        let c = cli();
+        let (_, args) = c.parse(&sv(&["serve", "--port=7", "--verbose"])).unwrap();
+        assert_eq!(args.get_usize("port").unwrap(), 7);
+        assert!(args.has("verbose"));
+        assert!(!args.has("quiet"));
+    }
+
+    #[test]
+    fn required_flag_enforced() {
+        let c = cli();
+        assert!(c.parse(&sv(&["train"])).is_err());
+        let (_, args) = c.parse(&sv(&["train", "--steps", "100"])).unwrap();
+        assert_eq!(args.get_usize("steps").unwrap(), 100);
+    }
+
+    #[test]
+    fn unknown_command_and_flag() {
+        let c = cli();
+        assert!(c.parse(&sv(&["nope"])).is_err());
+        assert!(c.parse(&sv(&["serve", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_text_lists_commands() {
+        let c = cli();
+        let err = match c.parse(&sv(&["--help"])) {
+            Err(e) => e,
+            Ok(_) => panic!("expected help text"),
+        };
+        assert!(err.contains("serve"));
+        assert!(err.contains("train"));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let c = cli();
+        let (_, args) = c.parse(&sv(&["serve", "prompt-a", "prompt-b"])).unwrap();
+        assert_eq!(args.positional, vec!["prompt-a", "prompt-b"]);
+    }
+}

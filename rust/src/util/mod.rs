@@ -1,0 +1,10 @@
+//! In-repo substrates replacing crates that are unavailable in the offline
+//! mirror (see Cargo.toml): JSON, CLI parsing, PRNG, thread pool, property
+//! testing, and misc small helpers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,52 @@
+//! Lightweight property-testing harness (proptest substitute).
+//!
+//! `check` runs a predicate over `cases` randomly generated inputs drawn
+//! from a user generator; on failure it reports the seed and a debug dump of
+//! the failing case so the run can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop(gen(rng))` for `cases` seeds derived from `base_seed`.
+/// Panics (test-failure style) with the offending seed + case on the first
+/// violation.
+pub fn check<T, G, P>(name: &str, base_seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 1, 50, |r| (r.below(100), r.below(100)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 2, 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,152 @@
+//! Small statistics helpers: streaming mean/std, percentiles, latency
+//! histograms — used by metrics, the bench harness, and the coordinator.
+
+/// Online mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Percentile of a sample (linear interpolation); `p` in [0, 100].
+pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (xs.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        xs[lo]
+    } else {
+        let w = rank - lo as f64;
+        xs[lo] * (1.0 - w) + xs[hi] * w
+    }
+}
+
+/// Fixed-boundary latency histogram (exponential buckets, microseconds).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    /// bucket upper bounds in us
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub total: u64,
+    pub sum_us: f64,
+    pub max_us: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        // 1us .. ~10^7us (10s), 4 buckets per decade
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 1e7 {
+            for m in [1.0, 1.78, 3.16, 5.62] {
+                bounds.push(b * m);
+            }
+            b *= 10.0;
+        }
+        let n = bounds.len();
+        LatencyHist { bounds, counts: vec![0; n + 1], total: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, us: f64) {
+        let idx = self.bounds.partition_point(|b| *b < us);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Approximate percentile from bucket boundaries.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max_us };
+            }
+        }
+        self.max_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.std() - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 100.0), 4.0);
+        assert!((percentile(&mut xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_percentiles_monotone() {
+        let mut h = LatencyHist::default();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p99);
+        assert!(h.mean_us() > 400.0 && h.mean_us() < 600.0);
+        assert_eq!(h.total, 1000);
+    }
+}

@@ -1,0 +1,107 @@
+//! Scoped-thread data parallelism (rayon substitute).
+//!
+//! `parallel_for_chunks` splits an index range across worker threads using
+//! `std::thread::scope`; work is balanced by contiguous chunking. Used by
+//! the attention simulator's hot loops and the bench harness.
+
+/// Number of workers: respects SLA_DIT_THREADS, defaults to available
+/// parallelism capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SLA_DIT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(16))
+        .unwrap_or(4)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on `threads` workers.
+/// `f` must be Sync; chunks are contiguous so writers can slice disjoint
+/// output regions safely via interior mutability or raw splitting.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 || n <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Map `0..n` through `f` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(n, threads, |start, end| {
+        for i in start..end {
+            // SAFETY: each index i is written by exactly one worker (chunks
+            // are disjoint), and `out` outlives the scope.
+            unsafe { *out_ptr.get().add(i) = f(i) };
+        }
+    });
+    out
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor (rather than field access) so edition-2021 closures capture
+    /// the Sync wrapper, not the raw pointer field.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(1000, 8, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(100, 7, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        parallel_for_chunks(0, 4, |_, _| panic!("should not run"));
+        let v = parallel_map(1, 4, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic workloads (DESIGN.md substitutions):
+//!
+//! * `corpus` — the "Pexels/CommonCrawl 480p clips" stand-in: procedurally
+//!   generated latent videos with real spatio-temporal structure (moving
+//!   blobs with per-channel phase patterns), deterministic by (seed, index).
+//! * `requests` — the serving workload: Poisson arrivals of generation
+//!   requests with mixed step counts / guidance, for Fig. 6b and the
+//!   coordinator benches.
+
+pub mod corpus;
+pub mod requests;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use requests::{RequestGen, VideoRequest, WorkloadConfig};

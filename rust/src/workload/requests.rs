@@ -1,0 +1,117 @@
+//! Serving workload: video-generation requests with Poisson arrivals and a
+//! mix of step counts / guidance weights, mirroring how a video-gen service
+//! is exercised in the paper's end-to-end comparison (Fig. 6b).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct VideoRequest {
+    pub id: u64,
+    /// corpus index used to derive the conditioning vector ("the prompt")
+    pub prompt_seed: u64,
+    /// denoising steps requested
+    pub steps: usize,
+    pub cfg_weight: f32,
+    /// arrival time offset from workload start, seconds
+    pub arrival_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub requests: usize,
+    /// mean arrival rate, requests/sec (Poisson)
+    pub rate: f64,
+    /// step-count choices, sampled uniformly
+    pub steps_choices: Vec<usize>,
+    /// fraction of requests using CFG (two model calls per step)
+    pub cfg_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            requests: 16,
+            rate: 2.0,
+            steps_choices: vec![8, 12, 16],
+            cfg_fraction: 0.5,
+            seed: 1234,
+        }
+    }
+}
+
+pub struct RequestGen;
+
+impl RequestGen {
+    /// Generate the full arrival trace (sorted by arrival time).
+    pub fn generate(cfg: &WorkloadConfig) -> Vec<VideoRequest> {
+        let mut rng = Rng::new(cfg.seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(cfg.requests);
+        for id in 0..cfg.requests as u64 {
+            t += rng.exponential(cfg.rate);
+            let steps = cfg.steps_choices[rng.below(cfg.steps_choices.len())];
+            let cfg_weight = if rng.uniform() < cfg.cfg_fraction { 3.0 } else { 1.0 };
+            out.push(VideoRequest {
+                id,
+                prompt_seed: rng.next_u64() % 100_000,
+                steps,
+                cfg_weight,
+                arrival_s: t,
+            });
+        }
+        out
+    }
+
+    /// Total denoiser evaluations the trace demands (for capacity planning
+    /// and bench normalization).
+    pub fn total_nfe(reqs: &[VideoRequest]) -> usize {
+        reqs.iter()
+            .map(|r| r.steps * if r.cfg_weight != 1.0 { 2 } else { 1 })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = WorkloadConfig::default();
+        let a = RequestGen::generate(&cfg);
+        let b = RequestGen::generate(&cfg);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.prompt_seed, y.prompt_seed);
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn steps_from_choices() {
+        let cfg = WorkloadConfig { requests: 100, ..Default::default() };
+        let reqs = RequestGen::generate(&cfg);
+        assert!(reqs.iter().all(|r| [8, 12, 16].contains(&r.steps)));
+    }
+
+    #[test]
+    fn nfe_accounts_for_cfg() {
+        let reqs = vec![
+            VideoRequest { id: 0, prompt_seed: 0, steps: 10, cfg_weight: 1.0, arrival_s: 0.0 },
+            VideoRequest { id: 1, prompt_seed: 0, steps: 10, cfg_weight: 3.0, arrival_s: 0.0 },
+        ];
+        assert_eq!(RequestGen::total_nfe(&reqs), 30);
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let cfg = WorkloadConfig { requests: 500, rate: 5.0, ..Default::default() };
+        let reqs = RequestGen::generate(&cfg);
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = 500.0 / span;
+        assert!((rate - 5.0).abs() < 1.0, "empirical rate {rate}");
+    }
+}
