@@ -5,7 +5,9 @@
 //!   cargo bench -- fig1          # one experiment
 //!   cargo bench -- table1 fig6a  # a subset
 //!
-//! Experiments: fig1, fig3, fig6a, fig6b, table1, table2, table3, perf.
+//! Experiments: fig1, fig3, fig6a, fig6b, batch, table1, table2, table3,
+//! perf. `batch` compares the batched multi-head SLA engine against a
+//! serial per-head kernel loop on a [B=4, H=8, N=1024, d=64] workload.
 //! Knobs (env): SLA_BENCH_PRETRAIN, SLA_BENCH_FINETUNE, SLA_BENCH_PROMPTS,
 //! SLA_BENCH_GEN_STEPS, SLA_DIT_ARTIFACTS.
 //!
@@ -28,7 +30,7 @@ fn main() {
         .skip(1)
         .filter(|a| !a.starts_with("--")) // ignore cargo-bench flags like --bench
         .collect();
-    let all = ["fig1", "fig3", "fig6a", "fig6b", "table1", "table2", "table3"];
+    let all = ["fig1", "fig3", "fig6a", "fig6b", "batch", "table1", "table2", "table3"];
     let selected: Vec<&str> = if args.is_empty() {
         all.to_vec()
     } else {
@@ -43,6 +45,7 @@ fn main() {
             "fig3" => figs::fig3(),
             "fig6a" => kernels::fig6a(),
             "fig6b" => kernels::fig6b(),
+            "batch" => kernels::batch(),
             "table1" => tables::table1(),
             "table2" => tables::table2(),
             "table3" => tables::table3(),

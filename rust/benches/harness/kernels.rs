@@ -6,10 +6,11 @@ use anyhow::Result;
 
 use sla_dit::attention::mask::CompressedMask;
 use sla_dit::attention::{
-    flops, full, mask, sparse, MaskPolicy, SlaConfig, SlaKernel,
+    flops, full, mask, sparse, BatchSlaEngine, MaskPolicy, SlaConfig, SlaKernel,
 };
 use sla_dit::coordinator::{ArtifactBackend, Coordinator, CoordinatorConfig};
 use sla_dit::runtime::{HostTensor, Runtime};
+use sla_dit::tensor::{Mat, Tens4};
 use sla_dit::util::json::Json;
 use sla_dit::workload::{RequestGen, WorkloadConfig};
 
@@ -162,6 +163,82 @@ pub fn fig6a() -> Result<()> {
     log_result("fig6a", Json::Arr(json_panels));
     println!("\nexpected shape: SLA fwd ~10x+ over full at 95% sparsity and faster");
     println!("than the sparse baselines at their (quality-matched) sparsity points");
+    Ok(())
+}
+
+/// Batched multi-head engine vs a serial per-head `SlaKernel` loop on the
+/// acceptance workload [B=4, H=8, N=1024, d=64]: same per-head problems,
+/// same masks (predicted per head either way), fwd and bwd. The batched
+/// path fans (batch x head) tasks across the threadpool; at threads=1 it
+/// should match the loop (same work), and beat it at threads > 1.
+pub fn batch() -> Result<()> {
+    let (bsz, heads, n, d, blk) = (4usize, 8usize, 1024usize, 64usize, 64usize);
+    let mut qs: Vec<Mat> = Vec::new();
+    let mut ks: Vec<Mat> = Vec::new();
+    let mut vs: Vec<Mat> = Vec::new();
+    for i in 0..bsz * heads {
+        let (q, k, v) = clustered_qkv(n, d, 16, 1.6, 100 + i as u64);
+        qs.push(q);
+        ks.push(k);
+        vs.push(v);
+    }
+    let q4 = Tens4::from_heads(bsz, heads, &qs);
+    let k4 = Tens4::from_heads(bsz, heads, &ks);
+    let v4 = Tens4::from_heads(bsz, heads, &vs);
+    let base = SlaConfig { bq: blk, bkv: blk, kh_pct: 5.0, kl_pct: 10.0, ..Default::default() };
+
+    println!("workload: B={bsz} H={heads} N={n} d={d} block={blk} (kh=5%, kl=10%)");
+
+    // serial per-head loop (the pre-batching consumer pattern)
+    let kern = SlaKernel::new(base.clone(), d);
+    let t_loop_fwd = time_median(3, || {
+        for i in 0..bsz * heads {
+            let _ = kern.forward(&qs[i], &ks[i], &vs[i], None);
+        }
+    });
+    let loop_fwd: Vec<_> =
+        (0..bsz * heads).map(|i| kern.forward(&qs[i], &ks[i], &vs[i], None)).collect();
+    let t_loop_bwd = time_median(3, || {
+        for i in 0..bsz * heads {
+            let _ = kern.backward(&qs[i], &ks[i], &vs[i], &loop_fwd[i], &loop_fwd[i].o);
+        }
+    });
+    println!("\n{:<22} {:>10} {:>10} {:>8} {:>8}", "path", "fwd(ms)", "bwd(ms)", "fwd x",
+             "bwd x");
+    println!("{:<22} {:>10.1} {:>10.1} {:>8.2} {:>8.2}", "per-head loop",
+             t_loop_fwd * 1e3, t_loop_bwd * 1e3, 1.0, 1.0);
+
+    let mut jrows = vec![Json::obj(vec![
+        ("path", Json::str("loop")),
+        ("threads", Json::num(1.0)),
+        ("fwd_ms", Json::num(t_loop_fwd * 1e3)),
+        ("bwd_ms", Json::num(t_loop_bwd * 1e3)),
+    ])];
+    for threads in [1usize, 2, 4, 8] {
+        let engine =
+            BatchSlaEngine::new(SlaConfig { threads, ..base.clone() }, heads, d);
+        let t_fwd = time_median(3, || {
+            let _ = engine.forward(&q4, &k4, &v4);
+        });
+        let fwd = engine.forward(&q4, &k4, &v4);
+        let t_bwd = time_median(3, || {
+            let _ = engine.backward(&q4, &k4, &v4, &fwd, &fwd.o);
+        });
+        println!("{:<22} {:>10.1} {:>10.1} {:>8.2} {:>8.2}",
+                 format!("batched (threads={threads})"), t_fwd * 1e3, t_bwd * 1e3,
+                 t_loop_fwd / t_fwd, t_loop_bwd / t_bwd);
+        jrows.push(Json::obj(vec![
+            ("path", Json::str("batched")),
+            ("threads", Json::num(threads as f64)),
+            ("fwd_ms", Json::num(t_fwd * 1e3)),
+            ("bwd_ms", Json::num(t_bwd * 1e3)),
+            ("fwd_speedup", Json::num(t_loop_fwd / t_fwd)),
+            ("bwd_speedup", Json::num(t_loop_bwd / t_bwd)),
+        ]));
+    }
+    log_result("batch", Json::Arr(jrows));
+    println!("\nexpected shape: ~parity at threads=1 (same work, coarser tasks),");
+    println!("near-linear scaling while threads <= B*H and cores allow");
     Ok(())
 }
 

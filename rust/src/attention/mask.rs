@@ -350,4 +350,119 @@ mod tests {
         assert_eq!(m.count(Label::Critical), 16);
         assert_eq!(m.sparsity(), 0.0);
     }
+
+    // ---- property tests (util::prop): mask invariants under random ----
+    // ---- Q/K and random kh/kl percentages                          ----
+
+    /// Random mask-test case: (n, d, block, kh%, kl%, data seed).
+    fn gen_case(rng: &mut crate::util::rng::Rng) -> (usize, usize, usize, f64, f64, u64) {
+        let block = [4usize, 8, 16][rng.below(3)];
+        let tn = 2 + rng.below(7); // 2..=8 blocks per side
+        let n = block * tn;
+        let d = [4usize, 8][rng.below(2)];
+        let kh = [0.0f64, 5.0, 12.5, 25.0, 50.0, 100.0][rng.below(6)];
+        let kl = [0.0f64, 10.0, 25.0, 50.0, 100.0][rng.below(5)];
+        (n, d, block, kh, kl, rng.next_u64())
+    }
+
+    #[test]
+    fn prop_three_way_split_is_a_disjoint_cover() {
+        use crate::util::prop;
+        prop::check("mask-disjoint-cover", 7, 24, gen_case, |&(n, d, b, kh, kl, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Mat::randn(n, d, &mut rng);
+            let k = Mat::randn(n, d, &mut rng);
+            let m = predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: kh, kl_pct: kl });
+            // every block carries exactly one valid label...
+            for i in 0..m.tm {
+                for j in 0..m.tn {
+                    let l = m.label(i, j);
+                    if !(l == 1 || l == 0 || l == -1) {
+                        return Err(format!("bad label {l} at ({i},{j})"));
+                    }
+                }
+            }
+            // ...and the three classes partition the grid
+            let total = m.count(Label::Critical) + m.count(Label::Marginal)
+                + m.count(Label::Negligible);
+            if total != m.tm * m.tn {
+                return Err(format!("labels cover {total} of {} blocks", m.tm * m.tn));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_per_row_critical_counts_honor_kh_pct() {
+        use crate::util::prop;
+        prop::check("mask-row-counts", 8, 24, gen_case, |&(n, d, b, kh, kl, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Mat::randn(n, d, &mut rng);
+            let k = Mat::randn(n, d, &mut rng);
+            let m = predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: kh, kl_pct: kl });
+            let (ch, cl) = counts_for(m.tn, kh, kl);
+            for i in 0..m.tm {
+                if m.crit_rows[i].len() != ch {
+                    return Err(format!(
+                        "row {i}: {} critical blocks, expected {ch}",
+                        m.crit_rows[i].len()
+                    ));
+                }
+                let neg = (0..m.tn).filter(|&j| m.label(i, j) == -1).count();
+                if neg != cl {
+                    return Err(format!("row {i}: {neg} negligible, expected {cl}"));
+                }
+                if m.marg_rows[i].len() != m.tn - ch - cl {
+                    return Err(format!("row {i}: marginal count off"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_compressed_mask_roundtrips_losslessly() {
+        use crate::util::prop;
+        prop::check("mask-roundtrip", 9, 24, gen_case, |&(n, d, b, kh, kl, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Mat::randn(n, d, &mut rng);
+            let k = Mat::randn(n, d, &mut rng);
+            let m = predict_mask(&q, &k, b, b, MaskPolicy::Sla { kh_pct: kh, kl_pct: kl });
+            // rebuild the label grid from the accessor and round-trip it
+            let labels: Vec<i8> =
+                (0..m.tm * m.tn).map(|idx| m.label(idx / m.tn, idx % m.tn)).collect();
+            let m2 = CompressedMask::from_labels(m.tm, m.tn, labels);
+            // identical labels and identical lookup tables (incl. ordering)
+            for i in 0..m.tm {
+                for j in 0..m.tn {
+                    if m.label(i, j) != m2.label(i, j) {
+                        return Err(format!("label mismatch at ({i},{j})"));
+                    }
+                }
+                if m.crit_rows[i] != m2.crit_rows[i] || m.marg_rows[i] != m2.marg_rows[i] {
+                    return Err(format!("row table mismatch at {i}"));
+                }
+            }
+            for j in 0..m.tn {
+                if m.crit_cols[j] != m2.crit_cols[j] || m.marg_cols[j] != m2.marg_cols[j] {
+                    return Err(format!("col table mismatch at {j}"));
+                }
+            }
+            // lookup tables must be consistent with the labels themselves:
+            // row i lists j <=> label(i, j) says so, and tables are sorted
+            for i in 0..m.tm {
+                let crit: Vec<u32> =
+                    (0..m.tn as u32).filter(|&j| m.label(i, j as usize) == 1).collect();
+                if m.crit_rows[i] != crit {
+                    return Err(format!("crit_rows[{i}] inconsistent with labels"));
+                }
+                let marg: Vec<u32> =
+                    (0..m.tn as u32).filter(|&j| m.label(i, j as usize) == 0).collect();
+                if m.marg_rows[i] != marg {
+                    return Err(format!("marg_rows[{i}] inconsistent with labels"));
+                }
+            }
+            Ok(())
+        });
+    }
 }

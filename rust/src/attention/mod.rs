@@ -9,7 +9,12 @@
 //!
 //! Layout: all kernels operate on row-major `Mat` q/k/v of shape (N, d)
 //! with block sizes (bq, bkv); masks are compressed (Tm x Tn) label grids.
+//! The `batch` module lifts the single-head kernel to `[B, H, N, d]`
+//! `Tens4` inputs with per-(batch, head) masks, per-head Eq. 6 projections,
+//! optional GQA K/V sharing, and (batch x head)-granular threading — the
+//! entry point the model/serving/training layers call.
 
+pub mod batch;
 pub mod flops;
 pub mod full;
 pub mod linear;
@@ -18,6 +23,7 @@ pub mod opt;
 pub mod sla;
 pub mod sparse;
 
+pub use batch::{BatchSlaEngine, BatchSlaGrads, BatchSlaOutput};
 pub use flops::FlopsReport;
 pub use linear::Phi;
 pub use mask::{CompressedMask, Label, MaskPolicy};

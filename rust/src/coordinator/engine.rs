@@ -2,14 +2,29 @@
 
 use anyhow::Result;
 
+use crate::attention::{BatchSlaEngine, SlaConfig};
 use crate::model::ParamStore;
-use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::runtime::{Artifact, HostTensor, Runtime, TensorSpec};
+use crate::tensor::{Mat, Tens4};
+use crate::util::threadpool;
 
 /// Abstract denoiser the scheduler drives. Not Send/Sync: the xla crate's
 /// PJRT handles are Rc-based, so serving is single-threaded; concurrency is
 /// modeled at the scheduler level (virtual clock) and measured natively.
 pub trait VelocityBackend {
     fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor>;
+
+    /// Batched hook: many (x, t, cond) triples in one call — the scheduler
+    /// hands every request advanced in a tick to this method. The default
+    /// loops over `velocity`; `NativeSlaBackend` overrides it to fan all
+    /// requests through one batched multi-head engine invocation.
+    fn velocity_batch(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+    ) -> Result<Vec<HostTensor>> {
+        calls.iter().map(|(x, t, c)| self.velocity(x, *t, c)).collect()
+    }
+
     /// (seq_len, channels, cond_dim) of the model this backend serves.
     fn shape(&self) -> (usize, usize, usize);
     fn variant(&self) -> &str;
@@ -89,5 +104,366 @@ impl VelocityBackend for ArtifactBackend {
 
     fn video(&self) -> (usize, usize, usize) {
         self.video
+    }
+}
+
+/// Pure-Rust serving backend: a single-attention-layer velocity model whose
+/// attention runs through the batched multi-head SLA engine. No PJRT
+/// artifacts needed — this is the natively *measured* serving path, and the
+/// one that actually exploits tick-level request batching: every request in
+/// a scheduler tick becomes one batch item of a single `[B, H, N, d]`
+/// engine invocation.
+///
+/// Parameters live in a `ParamStore` under `params.native.*` (the same
+/// naming scheme the AOT manifests use), so checkpoint save/load and the
+/// zero-init `sla_proj` fine-tune handoff behave identically to the
+/// artifact path.
+pub struct NativeSlaBackend {
+    engine: BatchSlaEngine,
+    params: ParamStore,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    wc: Mat,
+    heads: usize,
+    head_dim: usize,
+    seq_len: usize,
+    channels: usize,
+    cond_dim: usize,
+    video: (usize, usize, usize),
+}
+
+const NATIVE_ATTN_PREFIX: &str = "params.native.attn";
+
+impl NativeSlaBackend {
+    pub fn new(
+        video: (usize, usize, usize),
+        channels: usize,
+        cond_dim: usize,
+        heads: usize,
+        head_dim: usize,
+        cfg: SlaConfig,
+        seed: u64,
+    ) -> Self {
+        let seq_len = video.0 * video.1 * video.2;
+        assert!(
+            seq_len % cfg.bq == 0 && seq_len % cfg.bkv == 0,
+            "seq_len {seq_len} must be divisible by block sizes ({}, {})",
+            cfg.bq,
+            cfg.bkv
+        );
+        let hd = heads * head_dim;
+        let spec = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "float32".to_string(),
+        };
+        let mut specs = vec![
+            spec("params.native.attn.wq.w", &[channels, hd]),
+            spec("params.native.attn.wk.w", &[channels, hd]),
+            spec("params.native.attn.wv.w", &[channels, hd]),
+            spec("params.native.attn.wo.w", &[hd, channels]),
+            spec("params.native.cond.w", &[cond_dim, channels]),
+        ];
+        for h in 0..heads {
+            specs.push(spec(
+                &format!("{NATIVE_ATTN_PREFIX}.sla_proj.{h}"),
+                &[head_dim, head_dim],
+            ));
+        }
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let params = ParamStore::init(&refs, seed);
+        Self::from_params(video, channels, cond_dim, heads, head_dim, cfg, params)
+    }
+
+    /// Rebuild the projection matrices + engine from a parameter store
+    /// (after init or checkpoint load).
+    fn from_params(
+        video: (usize, usize, usize),
+        channels: usize,
+        cond_dim: usize,
+        heads: usize,
+        head_dim: usize,
+        cfg: SlaConfig,
+        params: ParamStore,
+    ) -> Self {
+        let seq_len = video.0 * video.1 * video.2;
+        let wq = params.get_mat("params.native.attn.wq.w").expect("wq");
+        let wk = params.get_mat("params.native.attn.wk.w").expect("wk");
+        let wv = params.get_mat("params.native.attn.wv.w").expect("wv");
+        let wo = params.get_mat("params.native.attn.wo.w").expect("wo");
+        let wc = params.get_mat("params.native.cond.w").expect("wc");
+        let engine = params.batch_engine(NATIVE_ATTN_PREFIX, cfg, heads, heads, head_dim);
+        NativeSlaBackend {
+            engine,
+            params,
+            wq,
+            wk,
+            wv,
+            wo,
+            wc,
+            heads,
+            head_dim,
+            seq_len,
+            channels,
+            cond_dim,
+            video,
+        }
+    }
+
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    pub fn engine(&self) -> &BatchSlaEngine {
+        &self.engine
+    }
+
+    /// Adopt fine-tuned per-head projections (e.g. from `NativeFineTuner`).
+    pub fn set_projs(&mut self, projs: Vec<Mat>) {
+        assert_eq!(projs.len(), self.heads);
+        self.params.store_sla_head_projs(NATIVE_ATTN_PREFIX, &projs);
+        self.engine.projs = projs;
+    }
+
+    /// Save/load the parameter store in the shared checkpoint format.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.params.save(path)
+    }
+
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<usize> {
+        let ckpt = ParamStore::read_checkpoint(path)?;
+        let loaded = self.params.load_from(&ckpt);
+        let refreshed = Self::from_params(
+            self.video,
+            self.channels,
+            self.cond_dim,
+            self.heads,
+            self.head_dim,
+            self.engine.cfg.clone(),
+            self.params.clone(),
+        );
+        *self = refreshed;
+        Ok(loaded)
+    }
+}
+
+impl VelocityBackend for NativeSlaBackend {
+    fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor> {
+        let mut out = self.velocity_batch(&[(x, t, cond)])?;
+        Ok(out.remove(0))
+    }
+
+    /// All requests of a tick through ONE batched engine invocation.
+    ///
+    /// NOTE: `engine.forward` retains per-head backward state (qphi/kphi/
+    /// os/ol/lse/H_i/Z_i) that serving drops unused; a forward-only engine
+    /// mode would cut the transient memory several-fold (future work).
+    fn velocity_batch(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+    ) -> Result<Vec<HostTensor>> {
+        if calls.is_empty() {
+            return Ok(Vec::new());
+        }
+        let bsz = calls.len();
+        let (n, c) = (self.seq_len, self.channels);
+        for (x, _, cond) in calls.iter() {
+            anyhow::ensure!(
+                x.shape == vec![n, c],
+                "x shape {:?} != [{n}, {c}]",
+                x.shape
+            );
+            anyhow::ensure!(
+                cond.shape == vec![self.cond_dim],
+                "cond shape {:?} != [{}]",
+                cond.shape,
+                self.cond_dim
+            );
+        }
+        let threads = self.engine.cfg.threads.max(1);
+        // per-request qkv projections in parallel (the attention engine
+        // parallelizes over (batch, head) itself; without this the serial
+        // matmuls would cap the tick speedup)
+        let packed: Vec<(Mat, Mat, Mat)> =
+            threadpool::parallel_map_send(bsz, threads, |bi| {
+                let (x, t, cond) = calls[bi];
+                let xm = x.to_mat().expect("shape validated above");
+                // u = x + cond embedding (broadcast over tokens), then a
+                // time modulation so t stays observable through attention
+                let ce =
+                    Mat::from_vec(1, self.cond_dim, cond.data.clone()).matmul(&self.wc);
+                let mut u = xm;
+                for r in 0..n {
+                    for (uv, &cv) in u.row_mut(r).iter_mut().zip(ce.row(0)) {
+                        *uv += cv;
+                    }
+                }
+                u.scale(0.5 + 0.5 * t);
+                (u.matmul(&self.wq), u.matmul(&self.wk), u.matmul(&self.wv))
+            });
+        let mut q4 = Tens4::zeros(bsz, self.heads, n, self.head_dim);
+        let mut k4 = Tens4::zeros(bsz, self.heads, n, self.head_dim);
+        let mut v4 = Tens4::zeros(bsz, self.heads, n, self.head_dim);
+        for (bi, (qp, kp, vp)) in packed.iter().enumerate() {
+            q4.set_item_packed(bi, qp);
+            k4.set_item_packed(bi, kp);
+            v4.set_item_packed(bi, vp);
+        }
+        let out = self.engine.forward(&q4, &k4, &v4);
+        // per-request output projection, same fan-out
+        let res: Vec<HostTensor> = threadpool::parallel_map_send(bsz, threads, |bi| {
+            let y = out.o.item_packed(bi).matmul(&self.wo);
+            let x = calls[bi].0;
+            let vdat: Vec<f32> = y
+                .data
+                .iter()
+                .zip(&x.data)
+                .map(|(&yv, &xv)| 0.5 * yv - 0.2 * xv)
+                .collect();
+            HostTensor::new(vec![n, c], vdat)
+        });
+        Ok(res)
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.seq_len, self.channels, self.cond_dim)
+    }
+
+    fn variant(&self) -> &str {
+        "native_sla"
+    }
+
+    fn video(&self) -> (usize, usize, usize) {
+        self.video
+    }
+}
+
+/// The native backend is also a diffusion `Denoiser`, with the batched hook
+/// forwarding to `velocity_batch` — so `diffusion::sample_batch` advances
+/// every sequence through one engine invocation per integrator stage.
+impl crate::diffusion::Denoiser for NativeSlaBackend {
+    fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor> {
+        VelocityBackend::velocity(self, x, t, cond)
+    }
+
+    fn velocity_many(
+        &self,
+        xs: &[&HostTensor],
+        t: f32,
+        conds: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        assert_eq!(xs.len(), conds.len(), "velocity_many: xs/conds length mismatch");
+        let calls: Vec<(&HostTensor, f32, &HostTensor)> =
+            xs.iter().zip(conds).map(|(x, c)| (*x, t, *c)).collect();
+        self.velocity_batch(&calls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeSlaBackend {
+        // N = 2*4*4 = 32 tokens, 4 channels, 2 heads of dim 4
+        NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+    }
+
+    fn xc(seed: u64, n: usize, c: usize, cd: usize) -> (HostTensor, HostTensor) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (
+            HostTensor::new(vec![n, c], rng.normal_vec(n * c)),
+            HostTensor::new(vec![cd], rng.normal_vec(cd)),
+        )
+    }
+
+    #[test]
+    fn batched_call_matches_singleton_calls() {
+        let b = backend();
+        let (x1, c1) = xc(1, 32, 4, 6);
+        let (x2, c2) = xc(2, 32, 4, 6);
+        let batched = b.velocity_batch(&[(&x1, 0.7, &c1), (&x2, 0.3, &c2)]).unwrap();
+        let s1 = b.velocity(&x1, 0.7, &c1).unwrap();
+        let s2 = b.velocity(&x2, 0.3, &c2).unwrap();
+        assert_eq!(batched[0].data, s1.data);
+        assert_eq!(batched[1].data, s2.data);
+    }
+
+    #[test]
+    fn velocity_is_deterministic_and_t_sensitive() {
+        let b = backend();
+        let (x, c) = xc(3, 32, 4, 6);
+        let v1 = b.velocity(&x, 0.5, &c).unwrap();
+        let v2 = b.velocity(&x, 0.5, &c).unwrap();
+        let v3 = b.velocity(&x, 0.9, &c).unwrap();
+        assert_eq!(v1.data, v2.data);
+        assert_ne!(v1.data, v3.data);
+        assert!(v1.data.iter().all(|x| x.is_finite()));
+        assert_eq!(v1.shape, vec![32, 4]);
+    }
+
+    #[test]
+    fn fresh_backend_sla_projs_are_zero_init() {
+        let b = backend();
+        for p in &b.engine().projs {
+            assert!(p.data.iter().all(|&x| x == 0.0));
+        }
+        // weight matrices are not zero
+        assert!(b.params().get_mat("params.native.attn.wq.w").unwrap().max_abs() > 0.0);
+    }
+
+    #[test]
+    fn diffusion_sample_batch_drives_the_engine() {
+        use crate::diffusion::{sample, sample_batch, SamplerConfig};
+        let b = backend();
+        let (x1, c1) = xc(10, 32, 4, 6);
+        let (x2, c2) = xc(11, 32, 4, 6);
+        let noises = vec![x1, x2];
+        let conds = vec![c1, c2];
+        let uncond = HostTensor::zeros(vec![6]);
+        let cfg = SamplerConfig { steps: 3, ..Default::default() };
+        let batched = sample_batch(&b, &noises, &conds, &uncond, &cfg).unwrap();
+        assert_eq!(batched.len(), 2);
+        for (i, r) in batched.iter().enumerate() {
+            assert_eq!(r.sample.shape, vec![32, 4]);
+            assert!(r.sample.data.iter().all(|v| v.is_finite()));
+            let single = sample(&b, &noises[i], &conds[i], &uncond, &cfg).unwrap();
+            assert_eq!(r.sample.data, single.sample.data, "item {i}");
+            assert_eq!(r.nfe, single.nfe);
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_projs() {
+        let mut b = backend();
+        let d = 4;
+        let projs: Vec<Mat> = (0..2)
+            .map(|h| Mat::from_vec(d, d, vec![0.1 * (h + 1) as f32; d * d]))
+            .collect();
+        b.set_projs(projs.clone());
+        let path = std::env::temp_dir()
+            .join(format!("sla_native_ckpt_{}", std::process::id()));
+        b.save_checkpoint(&path).unwrap();
+        let mut b2 = backend();
+        let loaded = b2.load_checkpoint(&path).unwrap();
+        assert!(loaded >= 7); // 5 weights + 2 proj leaves
+        assert_eq!(b2.engine().projs[0].data, projs[0].data);
+        assert_eq!(b2.engine().projs[1].data, projs[1].data);
+        // loaded backend produces identical velocities
+        let (x, c) = xc(4, 32, 4, 6);
+        assert_eq!(
+            b.velocity(&x, 0.4, &c).unwrap().data,
+            b2.velocity(&x, 0.4, &c).unwrap().data
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -5,12 +5,13 @@
 //!
 //! The denoiser is abstracted (`VelocityBackend`) so the scheduler logic is
 //! testable without compiled artifacts; `ArtifactBackend` is the real PJRT
-//! implementation.
+//! implementation and `NativeSlaBackend` is the pure-Rust path that runs a
+//! whole scheduler tick through one batched multi-head SLA engine call.
 
 mod engine;
 mod scheduler;
 mod server;
 
-pub use engine::{ArtifactBackend, VelocityBackend};
+pub use engine::{ArtifactBackend, NativeSlaBackend, VelocityBackend};
 pub use scheduler::{Coordinator, CoordinatorConfig, ServeReport};
 pub use server::Server;

@@ -5,6 +5,11 @@
 //!  * at most `max_active` requests are in flight (backpressure);
 //!  * each tick advances up to `batch_per_tick` in-flight requests by ONE
 //!    denoise step, round-robin, so short jobs aren't starved by long ones;
+//!  * all requests advanced in a tick go through ONE
+//!    `VelocityBackend::velocity_batch` call (CFG requests contribute their
+//!    uncond evaluation to the same batch), so a batched backend — the
+//!    native multi-head SLA engine — serves the whole tick in a single
+//!    `[B, H, N, d]` invocation;
 //!  * the virtual clock advances by the *measured* wall time of every model
 //!    call, making latency numbers faithful single-worker serving numbers.
 
@@ -147,31 +152,48 @@ impl<'b> Coordinator<'b> {
         }
     }
 
-    /// Advance one denoise step (Euler, with CFG when requested). Returns
+    /// Advance every request in `batch` by one denoise step (Euler, CFG
+    /// when requested) through a SINGLE `velocity_batch` call. Returns
     /// measured model-call seconds.
-    fn advance(&self, a: &mut ActiveReq, nfe: &mut usize) -> Result<f64> {
-        let t0 = a.ts[a.step_idx];
-        let t1 = a.ts[a.step_idx + 1];
-        let dt = t0 - t1;
+    fn advance_batch(&self, batch: &mut [ActiveReq], nfe: &mut usize) -> Result<f64> {
+        if batch.is_empty() {
+            return Ok(0.0);
+        }
         let start = Instant::now();
-        let vc = self.backend.velocity(&a.x, t0, &a.cond)?;
-        *nfe += 1;
-        let v = if (a.req.cfg_weight - 1.0).abs() < 1e-6 {
-            vc
-        } else {
-            let vu = self.backend.velocity(&a.x, t0, &a.uncond)?;
-            *nfe += 1;
-            let mut v = vu.clone();
-            for ((o, &c), &u) in v.data.iter_mut().zip(&vc.data).zip(&vu.data) {
-                *o = u + a.req.cfg_weight * (c - u);
+        let vs = {
+            let mut calls: Vec<(&HostTensor, f32, &HostTensor)> =
+                Vec::with_capacity(batch.len());
+            for a in batch.iter() {
+                let t0 = a.ts[a.step_idx];
+                calls.push((&a.x, t0, &a.cond));
+                if a.req.uses_cfg() {
+                    calls.push((&a.x, t0, &a.uncond));
+                }
             }
-            v
+            *nfe += calls.len();
+            self.backend.velocity_batch(&calls)?
         };
         let dur = start.elapsed().as_secs_f64();
-        for (xv, &vv) in a.x.data.iter_mut().zip(&v.data) {
-            *xv -= dt * vv;
+        let mut vi = 0usize;
+        for a in batch.iter_mut() {
+            let t0 = a.ts[a.step_idx];
+            let t1 = a.ts[a.step_idx + 1];
+            let dt = t0 - t1; // positive
+            if !a.req.uses_cfg() {
+                for (xv, &vv) in a.x.data.iter_mut().zip(&vs[vi].data) {
+                    *xv -= dt * vv;
+                }
+                vi += 1;
+            } else {
+                let (vc, vu) = (&vs[vi], &vs[vi + 1]);
+                let w = a.req.cfg_weight;
+                for ((xv, &c), &u) in a.x.data.iter_mut().zip(&vc.data).zip(&vu.data) {
+                    *xv -= dt * (u + w * (c - u));
+                }
+                vi += 2;
+            }
+            a.step_idx += 1;
         }
-        a.step_idx += 1;
         Ok(dur)
     }
 
@@ -206,17 +228,19 @@ impl<'b> Coordinator<'b> {
                 }
                 continue;
             }
-            // one tick: advance up to batch_per_tick requests by one step
+            // one tick: advance up to batch_per_tick requests by one step,
+            // all through a single batched backend call
             report.ticks += 1;
             let tick_start = Instant::now();
             let todo = active.len().min(self.cfg.batch_per_tick);
-            let mut finished = Vec::new();
-            let mut model_time = 0.0f64;
+            let mut batch: Vec<ActiveReq> = Vec::with_capacity(todo);
             for _ in 0..todo {
-                let mut a = active.pop_front().unwrap();
-                let dur = self.advance(&mut a, &mut report.nfe)?;
-                report.denoise_s += dur;
-                model_time += dur;
+                batch.push(active.pop_front().unwrap());
+            }
+            let model_time = self.advance_batch(&mut batch, &mut report.nfe)?;
+            report.denoise_s += model_time;
+            let mut finished = Vec::new();
+            for a in batch {
                 if a.step_idx + 1 >= a.ts.len() {
                     finished.push(a);
                 } else {
@@ -233,7 +257,7 @@ impl<'b> Coordinator<'b> {
                     wait_s: a.admitted_clock - a.req.arrival_s,
                     latency_s: clock - a.req.arrival_s,
                     steps: a.req.steps,
-                    nfe: a.req.steps * if a.req.cfg_weight != 1.0 { 2 } else { 1 },
+                    nfe: a.req.nfe(),
                 });
                 if let Some(cb) = on_finish.as_deref_mut() {
                     cb(&a.req, a.x);
@@ -253,9 +277,10 @@ impl<'b> Coordinator<'b> {
         let mut a = self.fresh_request_state(&req, 0.0);
         let mut nfe = 0;
         // ts has steps+1 entries: the loop runs exactly `steps` advances,
-        // the last of which lands on t=0.
+        // the last of which lands on t=0. Batch of one keeps a single copy
+        // of the step/CFG logic.
         while a.step_idx + 1 < a.ts.len() {
-            self.advance(&mut a, &mut nfe)?;
+            self.advance_batch(std::slice::from_mut(&mut a), &mut nfe)?;
         }
         Ok(a.x)
     }
@@ -443,6 +468,93 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn tick_advances_all_requests_through_one_batched_call() {
+        // backend that records every velocity_batch invocation's size
+        struct BatchMock {
+            batch_sizes: std::sync::Mutex<Vec<usize>>,
+        }
+        impl VelocityBackend for BatchMock {
+            fn velocity(&self, x: &HostTensor, _t: f32, _c: &HostTensor)
+                -> Result<HostTensor> {
+                let mut v = x.clone();
+                for d in &mut v.data {
+                    *d = -*d * 0.1;
+                }
+                Ok(v)
+            }
+            fn velocity_batch(
+                &self,
+                calls: &[(&HostTensor, f32, &HostTensor)],
+            ) -> Result<Vec<HostTensor>> {
+                self.batch_sizes.lock().unwrap().push(calls.len());
+                calls.iter().map(|(x, t, c)| self.velocity(x, *t, c)).collect()
+            }
+            fn shape(&self) -> (usize, usize, usize) {
+                (16, 2, 4)
+            }
+            fn variant(&self) -> &str {
+                "batch-mock"
+            }
+            fn video(&self) -> (usize, usize, usize) {
+                (2, 2, 4)
+            }
+        }
+        let mock = BatchMock { batch_sizes: std::sync::Mutex::new(Vec::new()) };
+        let coord = Coordinator::new(
+            &mock,
+            CoordinatorConfig { max_active: 4, batch_per_tick: 4, ..Default::default() },
+        );
+        // 4 concurrent requests x 3 steps, one with CFG (adds an uncond
+        // entry to the same batch, not a separate call)
+        let mut trace = reqs(4, 3);
+        trace[0].cfg_weight = 3.0;
+        let rep = coord.run_trace(&trace, None).unwrap();
+        assert_eq!(rep.stats.len(), 4);
+        let sizes = mock.batch_sizes.lock().unwrap().clone();
+        // 3 ticks, each advancing all 4 requests: 5 entries each (4 + 1 CFG)
+        assert_eq!(sizes, vec![5, 5, 5]);
+        assert_eq!(rep.ticks, 3);
+        assert_eq!(rep.nfe, 15);
+    }
+
+    #[test]
+    fn batched_trace_matches_unbatched_results() {
+        // the batched tick must produce the exact same samples as the
+        // pre-batching per-request loop (backend is deterministic)
+        let mock = Mock { calls: AtomicUsize::new(0) };
+        let coord = Coordinator::new(
+            &mock,
+            CoordinatorConfig { max_active: 8, batch_per_tick: 4, ..Default::default() },
+        );
+        let mut trace = reqs(3, 4);
+        trace[1].cfg_weight = 2.0;
+        let mut batched = Vec::new();
+        coord
+            .run_trace(&trace, Some(&mut |r: &VideoRequest, x: HostTensor| {
+                batched.push((r.id, x));
+            }))
+            .unwrap();
+        // serialized reference: one request at a time
+        let serial_coord = Coordinator::new(
+            &mock,
+            CoordinatorConfig { max_active: 1, batch_per_tick: 1, ..Default::default() },
+        );
+        let mut serial = Vec::new();
+        serial_coord
+            .run_trace(&trace, Some(&mut |r: &VideoRequest, x: HostTensor| {
+                serial.push((r.id, x));
+            }))
+            .unwrap();
+        batched.sort_by_key(|(id, _)| *id);
+        serial.sort_by_key(|(id, _)| *id);
+        assert_eq!(batched.len(), serial.len());
+        for ((id_a, xa), (id_b, xb)) in batched.iter().zip(&serial) {
+            assert_eq!(id_a, id_b);
+            assert_eq!(xa.data, xb.data);
+        }
     }
 
     #[test]

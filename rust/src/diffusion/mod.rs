@@ -1,7 +1,10 @@
 //! Flow-matching diffusion sampling: timestep schedules, Euler / Heun ODE
 //! integrators, and classifier-free guidance. The denoiser is abstract
-//! (`Denoiser` trait) so the sampler drives either the PJRT artifact or a
-//! mock in tests.
+//! (`Denoiser` trait) so the sampler drives either the PJRT artifact, the
+//! native batched-attention backend, or a mock in tests. `sample_batch`
+//! integrates many sequences in lockstep, issuing one `velocity_many` call
+//! per integrator stage so batched backends (the multi-head SLA engine) see
+//! the whole batch at once.
 
 use anyhow::Result;
 
@@ -11,6 +14,19 @@ use crate::runtime::HostTensor;
 /// x_t = (1-t) x0 + t eps, dx/dt = eps - x0, integrate t: 1 -> 0.
 pub trait Denoiser {
     fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor>;
+
+    /// Batched hook: velocities for many (x, cond) pairs at one shared t.
+    /// The default loops over `velocity`; batched backends override this to
+    /// run the whole batch through a single engine invocation.
+    fn velocity_many(
+        &self,
+        xs: &[&HostTensor],
+        t: f32,
+        conds: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        assert_eq!(xs.len(), conds.len(), "velocity_many: xs/conds length mismatch");
+        xs.iter().zip(conds).map(|(x, c)| self.velocity(x, t, c)).collect()
+    }
 }
 
 impl<F> Denoiser for F
@@ -61,7 +77,9 @@ pub fn timesteps(steps: usize, shift: f32) -> Vec<f32> {
 }
 
 /// Integrate the flow ODE from pure noise to a sample. `uncond` is the
-/// unconditional embedding used when cfg_weight != 1.
+/// unconditional embedding used when cfg_weight != 1. Thin wrapper over
+/// `sample_batch` with a batch of one, so there is exactly one copy of the
+/// integrator + guidance logic.
 pub fn sample(
     den: &dyn Denoiser,
     noise: &HostTensor,
@@ -69,60 +87,104 @@ pub fn sample(
     uncond: &HostTensor,
     cfg: &SamplerConfig,
 ) -> Result<SampleResult> {
-    let ts = timesteps(cfg.steps, cfg.shift);
-    let mut x = noise.clone();
-    let mut nfe = 0usize;
-
-    let guided = |x: &HostTensor, t: f32, nfe: &mut usize| -> Result<HostTensor> {
-        let vc = den.velocity(x, t, cond)?;
-        *nfe += 1;
-        if (cfg.cfg_weight - 1.0).abs() < 1e-6 {
-            return Ok(vc);
-        }
-        let vu = den.velocity(x, t, uncond)?;
-        *nfe += 1;
-        // v = vu + w (vc - vu)
-        let mut v = vu.clone();
-        for ((o, &c), &u) in v.data.iter_mut().zip(&vc.data).zip(&vu.data) {
-            *o = u + cfg.cfg_weight * (c - u);
-        }
-        Ok(v)
-    };
-
-    for w in ts.windows(2) {
-        let (t0, t1) = (w[0], w[1]);
-        let dt = t0 - t1; // positive
-        let v0 = guided(&x, t0, &mut nfe)?;
-        match cfg.integrator {
-            Integrator::Euler => {
-                for (xv, &vv) in x.data.iter_mut().zip(&v0.data) {
-                    *xv -= dt * vv;
-                }
-            }
-            Integrator::Heun => {
-                // predictor
-                let mut xp = x.clone();
-                for (xv, &vv) in xp.data.iter_mut().zip(&v0.data) {
-                    *xv -= dt * vv;
-                }
-                if t1 <= 0.0 {
-                    x = xp; // final step: Euler (no second eval at t=0 needed)
-                } else {
-                    let v1 = guided(&xp, t1, &mut nfe)?;
-                    for ((xv, &a), &b) in x.data.iter_mut().zip(&v0.data).zip(&v1.data) {
-                        *xv -= dt * 0.5 * (a + b);
-                    }
-                }
-            }
-        }
-    }
-    Ok(SampleResult { sample: x, nfe })
+    let mut out = sample_batch(
+        den,
+        std::slice::from_ref(noise),
+        std::slice::from_ref(cond),
+        uncond,
+        cfg,
+    )?;
+    Ok(out.remove(0))
 }
 
 pub struct SampleResult {
     pub sample: HostTensor,
     /// number of function (denoiser) evaluations
     pub nfe: usize,
+}
+
+/// Integrate many flow ODEs in lockstep (shared step grid, per-item cond):
+/// one `velocity_many` call per integrator stage, so a batched backend runs
+/// every sequence through a single engine invocation per step. Produces the
+/// same trajectories as calling `sample` per item; per-item `nfe` matches
+/// `sample`'s accounting.
+pub fn sample_batch(
+    den: &dyn Denoiser,
+    noises: &[HostTensor],
+    conds: &[HostTensor],
+    uncond: &HostTensor,
+    cfg: &SamplerConfig,
+) -> Result<Vec<SampleResult>> {
+    assert_eq!(noises.len(), conds.len(), "sample_batch: noises/conds length mismatch");
+    if noises.is_empty() {
+        return Ok(Vec::new());
+    }
+    let ts = timesteps(cfg.steps, cfg.shift);
+    let mut xs: Vec<HostTensor> = noises.to_vec();
+    let mut nfe_each = 0usize; // per-item evaluations (same for every item)
+
+    let guided = |xs: &[HostTensor], t: f32, nfe: &mut usize| -> Result<Vec<HostTensor>> {
+        let xr: Vec<&HostTensor> = xs.iter().collect();
+        let cr: Vec<&HostTensor> = conds.iter().collect();
+        let vc = den.velocity_many(&xr, t, &cr)?;
+        *nfe += 1;
+        if (cfg.cfg_weight - 1.0).abs() < 1e-6 {
+            return Ok(vc);
+        }
+        let ur: Vec<&HostTensor> = xs.iter().map(|_| uncond).collect();
+        let vu = den.velocity_many(&xr, t, &ur)?;
+        *nfe += 1;
+        Ok(vc
+            .iter()
+            .zip(&vu)
+            .map(|(c, u)| {
+                let mut v = u.clone();
+                for ((o, &cv), &uv) in v.data.iter_mut().zip(&c.data).zip(&u.data) {
+                    *o = uv + cfg.cfg_weight * (cv - uv);
+                }
+                v
+            })
+            .collect())
+    };
+
+    for w in ts.windows(2) {
+        let (t0, t1) = (w[0], w[1]);
+        let dt = t0 - t1; // positive
+        let v0 = guided(&xs, t0, &mut nfe_each)?;
+        match cfg.integrator {
+            Integrator::Euler => {
+                for (x, v) in xs.iter_mut().zip(&v0) {
+                    for (xv, &vv) in x.data.iter_mut().zip(&v.data) {
+                        *xv -= dt * vv;
+                    }
+                }
+            }
+            Integrator::Heun => {
+                let mut xp = xs.clone();
+                for (x, v) in xp.iter_mut().zip(&v0) {
+                    for (xv, &vv) in x.data.iter_mut().zip(&v.data) {
+                        *xv -= dt * vv;
+                    }
+                }
+                if t1 <= 0.0 {
+                    xs = xp; // final step: Euler (no second eval at t=0)
+                } else {
+                    let v1 = guided(&xp, t1, &mut nfe_each)?;
+                    for ((x, a), b) in xs.iter_mut().zip(&v0).zip(&v1) {
+                        for ((xv, &av), &bv) in
+                            x.data.iter_mut().zip(&a.data).zip(&b.data)
+                        {
+                            *xv -= dt * 0.5 * (av + bv);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(xs
+        .into_iter()
+        .map(|x| SampleResult { sample: x, nfe: nfe_each })
+        .collect())
 }
 
 #[cfg(test)]
@@ -185,6 +247,83 @@ mod tests {
             assert!((a - b).abs() < 1e-6);
         }
         assert!(h.nfe > e.nfe);
+    }
+
+    #[test]
+    fn sample_batch_matches_per_item_sample() {
+        // velocity depends on x, t, and cond so any batching slip shows up
+        let den = |x: &HostTensor, t: f32, c: &HostTensor| -> Result<HostTensor> {
+            let mut v = x.clone();
+            for (vv, &cv) in v.data.iter_mut().zip(c.data.iter().cycle()) {
+                *vv = 0.3 * *vv + 0.2 * cv - 0.1 * t;
+            }
+            Ok(v)
+        };
+        let noises = vec![
+            HostTensor::new(vec![4], vec![1.0, -1.0, 0.5, 2.0]),
+            HostTensor::new(vec![4], vec![0.2, 0.4, -0.6, 0.8]),
+        ];
+        let conds = vec![
+            HostTensor::new(vec![2], vec![1.0, -1.0]),
+            HostTensor::new(vec![2], vec![0.0, 2.0]),
+        ];
+        let uncond = HostTensor::zeros(vec![2]);
+        for integrator in [Integrator::Euler, Integrator::Heun] {
+            for cfg_w in [1.0f32, 2.5] {
+                let cfg = SamplerConfig {
+                    steps: 5,
+                    integrator,
+                    cfg_weight: cfg_w,
+                    shift: 1.0,
+                };
+                let batched = sample_batch(&den, &noises, &conds, &uncond, &cfg).unwrap();
+                assert_eq!(batched.len(), 2);
+                for (i, b) in batched.iter().enumerate() {
+                    let single =
+                        sample(&den, &noises[i], &conds[i], &uncond, &cfg).unwrap();
+                    assert_eq!(b.nfe, single.nfe, "{integrator:?} cfg={cfg_w}");
+                    for (x, y) in b.sample.data.iter().zip(&single.sample.data) {
+                        assert!(
+                            (x - y).abs() < 1e-6,
+                            "{integrator:?} cfg={cfg_w} item {i}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_batch_uses_the_batched_hook() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Counting {
+            many_calls: AtomicUsize,
+        }
+        impl Denoiser for Counting {
+            fn velocity(&self, x: &HostTensor, _t: f32, _c: &HostTensor)
+                -> Result<HostTensor> {
+                Ok(x.clone())
+            }
+            fn velocity_many(
+                &self,
+                xs: &[&HostTensor],
+                t: f32,
+                conds: &[&HostTensor],
+            ) -> Result<Vec<HostTensor>> {
+                self.many_calls.fetch_add(1, Ordering::Relaxed);
+                assert_eq!(xs.len(), 3);
+                xs.iter().zip(conds).map(|(x, c)| self.velocity(x, t, c)).collect()
+            }
+        }
+        let den = Counting { many_calls: AtomicUsize::new(0) };
+        let noises = vec![HostTensor::zeros(vec![2]); 3];
+        let conds = vec![HostTensor::zeros(vec![1]); 3];
+        let uncond = HostTensor::zeros(vec![1]);
+        let cfg = SamplerConfig { steps: 4, ..Default::default() };
+        let out = sample_batch(&den, &noises, &conds, &uncond, &cfg).unwrap();
+        assert_eq!(out.len(), 3);
+        // Euler, no CFG: exactly one batched call per step
+        assert_eq!(den.many_calls.load(Ordering::Relaxed), 4);
     }
 
     #[test]

@@ -9,10 +9,17 @@
 //! * **L2** (`python/compile/model.py`): Wan-style video DiT with SLA as a
 //!   plug-in attention variant; flow-matching train step.
 //! * **L3** (this crate): coordinator — artifact runtime (PJRT), serving
-//!   router/batcher, denoise scheduler, fine-tune driver — plus the native
+//!   router/batcher, denoise scheduler, fine-tune drivers — plus the native
 //!   attention simulator substrate that measures true block skipping.
 //!
-//! See DESIGN.md for the system inventory and experiment index.
+//! The native hot path is `attention::batch::BatchSlaEngine`: the fused
+//! single-head SLA kernel lifted to `[B, H, N, d]` with per-(batch, head)
+//! mask prediction, per-head Eq. 6 projections, optional GQA K/V sharing,
+//! and (batch x head)-granular threading. The serving scheduler batches
+//! every tick's requests into one engine invocation, and the native
+//! fine-tuner drives the batched backward.
+//!
+//! See DESIGN.md (repo root) for the system inventory and experiment index.
 
 pub mod attention;
 pub mod coordinator;

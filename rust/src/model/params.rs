@@ -17,7 +17,9 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::attention::{BatchSlaEngine, SlaConfig};
 use crate::runtime::{HostTensor, TensorSpec};
+use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 8] = b"SLADIT01";
@@ -81,6 +83,86 @@ impl ParamStore {
 
     pub fn get(&self, name: &str) -> Option<&HostTensor> {
         self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    /// Rank-2 parameter as a `Mat` (None if absent or not rank-2).
+    pub fn get_mat(&self, name: &str) -> Option<Mat> {
+        self.get(name).and_then(|t| t.to_mat().ok())
+    }
+
+    /// Per-head Eq. 6 compensation projections for one attention layer.
+    ///
+    /// Prefers per-head leaves `<prefix>.sla_proj.<h>`; falls back to a
+    /// single shared `<prefix>.sla_proj` replicated across heads; heads
+    /// without a leaf stay zero — exactly the fine-tune starting point
+    /// where SLA equals its sparse component. A leaf that EXISTS but whose
+    /// size disagrees with `d*d` is a config mismatch (e.g. a checkpoint
+    /// trained at a different head_dim) and panics rather than silently
+    /// serving zero projections.
+    pub fn sla_head_projs(&self, prefix: &str, heads: usize, d: usize) -> Vec<Mat> {
+        let as_proj = |name: &str, t: &HostTensor| -> Mat {
+            assert_eq!(
+                t.numel(),
+                d * d,
+                "{name}: sla_proj has {} elements, engine head_dim {d} needs {}",
+                t.numel(),
+                d * d
+            );
+            Mat::from_vec(d, d, t.data.clone())
+        };
+        (0..heads)
+            .map(|h| {
+                let per_head = format!("{prefix}.sla_proj.{h}");
+                let shared = format!("{prefix}.sla_proj");
+                if let Some(t) = self.get(&per_head) {
+                    as_proj(&per_head, t)
+                } else if let Some(t) = self.get(&shared) {
+                    as_proj(&shared, t)
+                } else {
+                    Mat::zeros(d, d)
+                }
+            })
+            .collect()
+    }
+
+    /// Write fine-tuned per-head projections back into the store's
+    /// `<prefix>.sla_proj.<h>` leaves. Returns the number of leaves
+    /// updated — heads without a leaf are skipped, so a full-attention
+    /// store is a no-op. A leaf that EXISTS with a different size is a
+    /// config mismatch and panics (mirroring `sla_head_projs`) rather than
+    /// silently persisting stale projections.
+    pub fn store_sla_head_projs(&mut self, prefix: &str, projs: &[Mat]) -> usize {
+        let mut wrote = 0;
+        for (h, p) in projs.iter().enumerate() {
+            let name = format!("{prefix}.sla_proj.{h}");
+            if let Some(i) = self.names.iter().position(|n| *n == name) {
+                assert_eq!(
+                    self.tensors[i].numel(),
+                    p.data.len(),
+                    "{name}: sla_proj leaf has {} elements, projection has {}",
+                    self.tensors[i].numel(),
+                    p.data.len()
+                );
+                let shape = self.tensors[i].shape.clone();
+                self.tensors[i] = HostTensor::new(shape, p.data.clone());
+                wrote += 1;
+            }
+        }
+        wrote
+    }
+
+    /// Build the batched multi-head SLA engine for one attention layer,
+    /// with this store's projections — the "all DiT heads through one
+    /// batched call" entry point the native backend and fine-tuner use.
+    pub fn batch_engine(
+        &self,
+        prefix: &str,
+        cfg: SlaConfig,
+        heads: usize,
+        kv_heads: usize,
+        d: usize,
+    ) -> BatchSlaEngine {
+        BatchSlaEngine::with_projs(cfg, kv_heads, self.sla_head_projs(prefix, heads, d))
     }
 
     /// Save to the binary checkpoint format.
@@ -229,6 +311,79 @@ mod tests {
         let mut ckpt = BTreeMap::new();
         ckpt.insert("params.a.w".to_string(), HostTensor::zeros(vec![2, 2]));
         assert_eq!(store.load_from(&ckpt), 0);
+    }
+
+    #[test]
+    fn sla_head_projs_prefers_per_head_then_shared_then_zero() {
+        let d = 4;
+        let specs = [
+            spec("params.blocks.0.attn.sla_proj.0", &[d, d]),
+            spec("params.blocks.0.attn.sla_proj.1", &[d, d]),
+            spec("params.blocks.1.attn.sla_proj", &[d, d]),
+        ];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::init(&refs, 0);
+        // sla_proj leaves zero-init; write distinct values to tell them apart
+        store.tensors[0] = HostTensor::new(vec![d, d], vec![1.0; d * d]);
+        store.tensors[1] = HostTensor::new(vec![d, d], vec![2.0; d * d]);
+        store.tensors[2] = HostTensor::new(vec![d, d], vec![3.0; d * d]);
+
+        let per_head = store.sla_head_projs("params.blocks.0.attn", 2, d);
+        assert_eq!(per_head[0].data, vec![1.0; d * d]);
+        assert_eq!(per_head[1].data, vec![2.0; d * d]);
+
+        let shared = store.sla_head_projs("params.blocks.1.attn", 2, d);
+        assert_eq!(shared[0].data, vec![3.0; d * d]);
+        assert_eq!(shared[1].data, vec![3.0; d * d]);
+
+        let absent = store.sla_head_projs("params.blocks.9.attn", 2, d);
+        assert!(absent.iter().all(|m| m.data.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "sla_proj has")]
+    fn sla_head_projs_rejects_mismatched_leaf_size() {
+        // a leaf trained at a different head_dim must fail loudly, not
+        // silently zero-fill
+        let specs = [spec("params.x.sla_proj.0", &[8, 8])];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let store = ParamStore::init(&refs, 0);
+        let _ = store.sla_head_projs("params.x", 1, 4);
+    }
+
+    #[test]
+    fn store_sla_head_projs_roundtrip() {
+        let d = 3;
+        let specs = [
+            spec("params.a.sla_proj.0", &[d, d]),
+            spec("params.a.sla_proj.1", &[d, d]),
+        ];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::init(&refs, 0);
+        let projs = vec![
+            Mat::from_vec(d, d, (0..9).map(|x| x as f32).collect()),
+            Mat::from_vec(d, d, (9..18).map(|x| x as f32).collect()),
+        ];
+        assert_eq!(store.store_sla_head_projs("params.a", &projs), 2);
+        let back = store.sla_head_projs("params.a", 2, d);
+        assert_eq!(back[0].data, projs[0].data);
+        assert_eq!(back[1].data, projs[1].data);
+        // absent prefix: nothing written
+        assert_eq!(store.store_sla_head_projs("params.b", &projs), 0);
+    }
+
+    #[test]
+    fn batch_engine_adopts_store_projections() {
+        let d = 4;
+        let specs = [spec("params.l.sla_proj.0", &[d, d]), spec("params.l.sla_proj.1", &[d, d])];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::init(&refs, 0);
+        store.tensors[1] = HostTensor::new(vec![d, d], vec![0.5; d * d]);
+        let engine =
+            store.batch_engine("params.l", crate::attention::SlaConfig::default(), 2, 2, d);
+        assert_eq!(engine.heads, 2);
+        assert_eq!(engine.projs[0].data, vec![0.0; d * d]);
+        assert_eq!(engine.projs[1].data, vec![0.5; d * d]);
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Minimal dense f32 tensor substrate for the native attention simulator,
 //! metrics, and diffusion sampling. Row-major matrices with the handful of
-//! BLAS-like ops the kernels need; no external dependencies.
+//! BLAS-like ops the kernels need, plus the batched multi-head `Tens4`
+//! (`[B, H, N, d]`, contiguous per-head slabs) the batched SLA engine
+//! fans out over. No external dependencies.
 
 mod mat;
 mod ops;
+mod tens4;
 
 pub use mat::Mat;
 pub use ops::{spectral_norm, stable_rank};
+pub use tens4::Tens4;

@@ -1,0 +1,260 @@
+//! Lightweight batched multi-head tensor: `[B, H, N, d]`, row-major with
+//! the head axis outermost after batch, so every `(b, h)` head is one
+//! contiguous `N x d` slab. That layout is what lets the batched SLA engine
+//! hand disjoint head slices to the threadpool without copies on the write
+//! side, and it matches how the packed token layout `[B, N, H*d]` used by
+//! the DiT qkv projections interleaves heads (see `from_packed`).
+
+use super::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tens4 {
+    pub b: usize,
+    pub h: usize,
+    pub n: usize,
+    pub d: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tens4 {
+    pub fn zeros(b: usize, h: usize, n: usize, d: usize) -> Self {
+        Tens4 { b, h, n, d, data: vec![0.0; b * h * n * d] }
+    }
+
+    pub fn from_vec(b: usize, h: usize, n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), b * h * n * d, "shape/data mismatch");
+        Tens4 { b, h, n, d, data }
+    }
+
+    pub fn randn(b: usize, h: usize, n: usize, d: usize, rng: &mut Rng) -> Self {
+        Tens4 { b, h, n, d, data: rng.normal_vec(b * h * n * d) }
+    }
+
+    /// Stack `b*h` per-head matrices (index order `bi*h + hi`), all `n x d`.
+    pub fn from_heads(b: usize, h: usize, mats: &[Mat]) -> Self {
+        assert_eq!(mats.len(), b * h, "expected b*h mats");
+        let n = mats[0].rows;
+        let d = mats[0].cols;
+        let mut out = Tens4::zeros(b, h, n, d);
+        for (i, m) in mats.iter().enumerate() {
+            assert_eq!((m.rows, m.cols), (n, d), "head {i} shape mismatch");
+            out.head_mut(i / h, i % h).copy_from_slice(&m.data);
+        }
+        out
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        (self.b, self.h, self.n, self.d)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    fn head_range(&self, bi: usize, hi: usize) -> std::ops::Range<usize> {
+        debug_assert!(bi < self.b && hi < self.h);
+        let slab = self.n * self.d;
+        let start = (bi * self.h + hi) * slab;
+        start..start + slab
+    }
+
+    /// Contiguous `(n*d)` slice of head `(bi, hi)`.
+    #[inline]
+    pub fn head(&self, bi: usize, hi: usize) -> &[f32] {
+        &self.data[self.head_range(bi, hi)]
+    }
+
+    #[inline]
+    pub fn head_mut(&mut self, bi: usize, hi: usize) -> &mut [f32] {
+        let r = self.head_range(bi, hi);
+        &mut self.data[r]
+    }
+
+    /// Head `(bi, hi)` as an owned `Mat` (the per-head kernels take `&Mat`).
+    pub fn head_mat(&self, bi: usize, hi: usize) -> Mat {
+        Mat::from_vec(self.n, self.d, self.head(bi, hi).to_vec())
+    }
+
+    pub fn set_head(&mut self, bi: usize, hi: usize, m: &Mat) {
+        assert_eq!((m.rows, m.cols), (self.n, self.d), "set_head shape mismatch");
+        self.head_mut(bi, hi).copy_from_slice(&m.data);
+    }
+
+    /// Build from the packed token layout `[B, N, H*d]` (the shape qkv
+    /// projections produce): `packed[b][t][h*d + j] -> self[b][h][t][j]`.
+    pub fn from_packed(b: usize, n: usize, h: usize, d: usize, packed: &[f32]) -> Self {
+        assert_eq!(packed.len(), b * n * h * d, "packed length mismatch");
+        let mut out = Tens4::zeros(b, h, n, d);
+        for bi in 0..b {
+            for t in 0..n {
+                let src = (bi * n + t) * h * d;
+                for hi in 0..h {
+                    let dst = ((bi * h + hi) * n + t) * d;
+                    out.data[dst..dst + d]
+                        .copy_from_slice(&packed[src + hi * d..src + (hi + 1) * d]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of `from_packed`: back to `[B, N, H*d]`.
+    pub fn to_packed(&self) -> Vec<f32> {
+        let (b, h, n, d) = self.dims();
+        let mut out = vec![0.0f32; b * n * h * d];
+        for bi in 0..b {
+            for hi in 0..h {
+                for t in 0..n {
+                    let src = ((bi * h + hi) * n + t) * d;
+                    let dst = (bi * n + t) * h * d + hi * d;
+                    out[dst..dst + d].copy_from_slice(&self.data[src..src + d]);
+                }
+            }
+        }
+        out
+    }
+
+    /// One batch item in packed layout as an `(N, H*d)` matrix.
+    pub fn item_packed(&self, bi: usize) -> Mat {
+        let (_, h, n, d) = self.dims();
+        let mut m = Mat::zeros(n, h * d);
+        for hi in 0..h {
+            for t in 0..n {
+                let src = ((bi * h + hi) * n + t) * d;
+                m.row_mut(t)[hi * d..(hi + 1) * d].copy_from_slice(&self.data[src..src + d]);
+            }
+        }
+        m
+    }
+
+    /// Write one batch item from packed `(N, H*d)` layout.
+    pub fn set_item_packed(&mut self, bi: usize, m: &Mat) {
+        let (_, h, n, d) = self.dims();
+        assert_eq!((m.rows, m.cols), (n, h * d), "set_item_packed shape mismatch");
+        for hi in 0..h {
+            for t in 0..n {
+                let dst = ((bi * h + hi) * n + t) * d;
+                self.data[dst..dst + d].copy_from_slice(&m.row(t)[hi * d..(hi + 1) * d]);
+            }
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tens4) {
+        assert_eq!(self.dims(), other.dims());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Tens4) {
+        assert_eq!(self.dims(), other.dims());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Tens4) -> f32 {
+        assert_eq!(self.dims(), other.dims());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (x, y)| a.max((x - y).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_slabs_are_contiguous_and_ordered() {
+        let mut t = Tens4::zeros(2, 3, 4, 5);
+        for bi in 0..2 {
+            for hi in 0..3 {
+                for x in t.head_mut(bi, hi) {
+                    *x = (bi * 3 + hi) as f32;
+                }
+            }
+        }
+        // layout check: data is [b0h0, b0h1, b0h2, b1h0, ...]
+        for (i, chunk) in t.data.chunks(4 * 5).enumerate() {
+            assert!(chunk.iter().all(|&x| x == i as f32));
+        }
+    }
+
+    #[test]
+    fn head_mat_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tens4::randn(2, 2, 8, 4, &mut rng);
+        let m = t.head_mat(1, 0);
+        let mut t2 = t.clone();
+        t2.set_head(1, 0, &m);
+        assert_eq!(t, t2);
+        assert_eq!(m.rows, 8);
+        assert_eq!(m.cols, 4);
+    }
+
+    #[test]
+    fn from_heads_matches_set_head() {
+        let mut rng = Rng::new(1);
+        let mats: Vec<Mat> = (0..6).map(|_| Mat::randn(4, 3, &mut rng)).collect();
+        let t = Tens4::from_heads(2, 3, &mats);
+        for bi in 0..2 {
+            for hi in 0..3 {
+                assert_eq!(t.head_mat(bi, hi), mats[bi * 3 + hi]);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip() {
+        let mut rng = Rng::new(2);
+        let (b, h, n, d) = (2, 4, 8, 3);
+        let packed: Vec<f32> = rng.normal_vec(b * n * h * d);
+        let t = Tens4::from_packed(b, n, h, d, &packed);
+        assert_eq!(t.to_packed(), packed);
+        // spot-check the transpose semantics
+        // packed[b=1][t=2][h=3, j=1] == t[1][3][2][1]
+        let src = (1 * n + 2) * h * d + 3 * d + 1;
+        assert_eq!(t.head_mat(1, 3).at(2, 1), packed[src]);
+    }
+
+    #[test]
+    fn item_packed_roundtrip() {
+        let mut rng = Rng::new(3);
+        let t = Tens4::randn(2, 3, 4, 5, &mut rng);
+        let m0 = t.item_packed(0);
+        let m1 = t.item_packed(1);
+        assert_eq!(m0.rows, 4);
+        assert_eq!(m0.cols, 15);
+        let mut t2 = Tens4::zeros(2, 3, 4, 5);
+        t2.set_item_packed(0, &m0);
+        t2.set_item_packed(1, &m1);
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let mut rng = Rng::new(4);
+        let a = Tens4::randn(1, 2, 4, 4, &mut rng);
+        let mut c = a.clone();
+        c.sub_assign(&a);
+        assert_eq!(c.max_abs(), 0.0);
+        c.add_assign(&a);
+        assert_eq!(c.max_abs_diff(&a), 0.0);
+        c.scale(2.0);
+        assert!((c.max_abs() - 2.0 * a.max_abs()).abs() < 1e-6);
+    }
+}

@@ -1,15 +1,25 @@
-//! Fine-tune driver: runs the AOT'd `dit_train_step_<variant>` artifact in a
-//! loop over the synthetic corpus — the Rust-side half of the paper's
-//! "replace attention with SLA and fine-tune briefly" recipe. The artifact
-//! carries model fwd+bwd+Adam; this driver owns data, RNG, checkpoints, and
-//! the loss log. Python is never on this path.
+//! Fine-tune drivers — the Rust-side half of the paper's "replace attention
+//! with SLA and fine-tune briefly" recipe:
+//!
+//! * `Trainer` runs the AOT'd `dit_train_step_<variant>` artifact in a loop
+//!   over the synthetic corpus (model fwd+bwd+Adam inside the artifact;
+//!   this driver owns data, RNG, checkpoints, and the loss log).
+//! * `NativeFineTuner` fine-tunes the batched multi-head SLA engine's
+//!   per-head Eq. 6 projections natively: it distills the fused output
+//!   toward per-head full attention using the engine's batched backward
+//!   pass — no artifacts required, and every step exercises the whole
+//!   `[B, H, N, d]` grad path (dq/dk/dv/dproj).
+//!
+//! Python is never on either path.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::attention::{full, BatchSlaEngine, SlaConfig};
 use crate::model::ParamStore;
 use crate::runtime::{Artifact, HostTensor, Runtime};
+use crate::tensor::Tens4;
 use crate::workload::{Corpus, CorpusConfig};
 use crate::util::rng::Rng;
 
@@ -172,5 +182,142 @@ impl Trainer {
         }
         let k = k.min(self.losses.len());
         self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+/// Native fine-tune driver for the batched SLA engine: gradient descent on
+/// the per-head compensation projections (Eq. 6) against a full-attention
+/// teacher, using the engine's batched backward at (batch x head)
+/// granularity. This is the paper's fine-tune recipe distilled to the part
+/// the projection can learn: the linear path compensating the marginal
+/// attention mass the sparse path dropped.
+pub struct NativeFineTuner {
+    pub engine: BatchSlaEngine,
+    pub lr: f32,
+    pub losses: Vec<f32>,
+}
+
+impl NativeFineTuner {
+    /// Zero-initialized projections: step 0's loss is exactly the
+    /// sparse-only gap to the teacher.
+    pub fn new(cfg: SlaConfig, heads: usize, kv_heads: usize, d: usize, lr: f32) -> Self {
+        NativeFineTuner {
+            engine: BatchSlaEngine::with_kv_heads(cfg, heads, kv_heads, d),
+            lr,
+            losses: Vec::new(),
+        }
+    }
+
+    /// Per-(batch, head) full-attention teacher outputs — the distillation
+    /// target (respects the engine's GQA K/V sharing).
+    pub fn targets(&self, q: &Tens4, k: &Tens4, v: &Tens4) -> Tens4 {
+        let (b, h, n, d) = q.dims();
+        let gsz = self.engine.group_size();
+        let mut t = Tens4::zeros(b, h, n, d);
+        for bi in 0..b {
+            for hi in 0..h {
+                let (o, _) = full::naive_attention(
+                    &q.head_mat(bi, hi),
+                    &k.head_mat(bi, hi / gsz),
+                    &v.head_mat(bi, hi / gsz),
+                    false,
+                );
+                t.head_mut(bi, hi).copy_from_slice(&o.data);
+            }
+        }
+        t
+    }
+
+    /// One distillation step: loss = 0.5 * mean((O - T)^2); updates every
+    /// per-head projection by SGD with the batched backward's `dproj`.
+    /// Returns the (pre-update) loss.
+    pub fn step(&mut self, q: &Tens4, k: &Tens4, v: &Tens4, target: &Tens4) -> f32 {
+        let fwd = self.engine.forward(q, k, v);
+        let mut dout = fwd.o.clone();
+        dout.sub_assign(target);
+        let numel = dout.numel() as f32;
+        let loss = 0.5 * dout.data.iter().map(|x| x * x).sum::<f32>() / numel;
+        dout.scale(1.0 / numel);
+        let grads = self.engine.backward(q, k, v, &fwd, &dout);
+        for (p, g) in self.engine.projs.iter_mut().zip(&grads.dproj) {
+            for (pv, &gv) in p.data.iter_mut().zip(&g.data) {
+                *pv -= self.lr * gv;
+            }
+        }
+        self.losses.push(loss);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(b: usize) -> SlaConfig {
+        SlaConfig { bq: b, bkv: b, kh_pct: 25.0, kl_pct: 25.0, threads: 2, ..Default::default() }
+    }
+
+    fn qkv4(b: usize, h: usize, n: usize, d: usize, seed: u64) -> (Tens4, Tens4, Tens4) {
+        let mut rng = Rng::new(seed);
+        (
+            Tens4::randn(b, h, n, d, &mut rng),
+            Tens4::randn(b, h, n, d, &mut rng),
+            Tens4::randn(b, h, n, d, &mut rng),
+        )
+    }
+
+    #[test]
+    fn finetune_reduces_distillation_gap() {
+        let (b, h, n, d) = (2, 2, 32, 8);
+        let (q, k, v) = qkv4(b, h, n, d, 11);
+        let mut ft = NativeFineTuner::new(cfg(8), h, h, d, 2.0);
+        let target = ft.targets(&q, &k, &v);
+        let first = ft.step(&q, &k, &v, &target);
+        assert!(first.is_finite() && first > 0.0);
+        let mut last = first;
+        for _ in 0..30 {
+            last = ft.step(&q, &k, &v, &target);
+        }
+        assert!(last.is_finite());
+        assert!(last < first, "distillation loss should descend: {first} -> {last}");
+        // projections moved off their zero init
+        assert!(ft.engine.projs.iter().any(|p| p.max_abs() > 0.0));
+        assert_eq!(ft.losses.len(), 31);
+    }
+
+    #[test]
+    fn first_step_loss_is_sparse_only_gap() {
+        // zero-init projections: the fused output equals the sparse
+        // component, so step 0's loss is exactly 0.5*mean((O^s - T)^2)
+        let (q, k, v) = qkv4(1, 2, 32, 8, 12);
+        let mut ft = NativeFineTuner::new(cfg(8), 2, 2, 8, 0.0);
+        let target = ft.targets(&q, &k, &v);
+        let fwd = ft.engine.forward(&q, &k, &v);
+        let mut expect = 0.0f64;
+        for (i, ph) in fwd.per_head.iter().enumerate() {
+            let t_head = target.head(i / 2, i % 2);
+            for (o, t) in ph.os.data.iter().zip(t_head) {
+                let dlt = (o - t) as f64;
+                expect += dlt * dlt;
+            }
+        }
+        let expect = 0.5 * expect / target.numel() as f64;
+        let got = ft.step(&q, &k, &v, &target);
+        assert!((got as f64 - expect).abs() < 1e-4 * expect.max(1.0), "{got} vs {expect}");
+    }
+
+    #[test]
+    fn gqa_finetuner_builds_targets_with_shared_kv() {
+        let (bsz, h, kvh, n, d) = (1, 4, 2, 32, 8);
+        let mut rng = Rng::new(13);
+        let q = Tens4::randn(bsz, h, n, d, &mut rng);
+        let k = Tens4::randn(bsz, kvh, n, d, &mut rng);
+        let v = Tens4::randn(bsz, kvh, n, d, &mut rng);
+        let mut ft = NativeFineTuner::new(cfg(8), h, kvh, d, 1.0);
+        let target = ft.targets(&q, &k, &v);
+        assert_eq!(target.dims(), (bsz, h, n, d));
+        let loss = ft.step(&q, &k, &v, &target);
+        assert!(loss.is_finite() && loss > 0.0);
     }
 }

@@ -47,21 +47,37 @@ where
 }
 
 /// Map `0..n` through `f` in parallel, collecting results in index order.
+/// (Historical bounds kept for callers; delegates to `parallel_map_send`,
+/// the single audited unsafe site.)
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send + Default + Clone,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    parallel_map_send(n, threads, f)
+}
+
+/// Like `parallel_map`, but only requires `T: Send` (no Default/Clone) —
+/// used by the batched attention engine whose per-(batch, head) results
+/// (`SlaOutput`, `SlaGrads`) are large and neither Default nor Clone.
+pub fn parallel_map_send<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = std::iter::repeat_with(|| None).take(n).collect();
     let out_ptr = SendPtr(out.as_mut_ptr());
     parallel_for_chunks(n, threads, |start, end| {
         for i in start..end {
-            // SAFETY: each index i is written by exactly one worker (chunks
-            // are disjoint), and `out` outlives the scope.
-            unsafe { *out_ptr.get().add(i) = f(i) };
+            // SAFETY: chunks are disjoint, so each slot is written by exactly
+            // one worker; the overwritten value is the initial None (its drop
+            // is a no-op) and `out` outlives the thread scope.
+            unsafe { *out_ptr.get().add(i) = Some(f(i)) };
         }
     });
-    out
+    out.into_iter()
+        .map(|x| x.expect("parallel_map_send: chunk coverage hole"))
+        .collect()
 }
 
 struct SendPtr<T>(*mut T);
@@ -96,6 +112,16 @@ mod tests {
     fn parallel_map_ordered() {
         let v = parallel_map(100, 7, |i| i * i);
         assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_send_ordered_without_clone() {
+        // a !Clone, !Default payload
+        struct Big(Vec<usize>);
+        let v = parallel_map_send(64, 5, |i| Big(vec![i; 3]));
+        for (i, b) in v.iter().enumerate() {
+            assert_eq!(b.0, vec![i; 3]);
+        }
     }
 
     #[test]

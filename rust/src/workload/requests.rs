@@ -16,6 +16,20 @@ pub struct VideoRequest {
     pub arrival_s: f64,
 }
 
+impl VideoRequest {
+    /// Whether this request runs classifier-free guidance (two model calls
+    /// per step). Single source of truth for the tolerance, so scheduler
+    /// execution and NFE accounting can never disagree.
+    pub fn uses_cfg(&self) -> bool {
+        (self.cfg_weight - 1.0).abs() >= 1e-6
+    }
+
+    /// Denoiser evaluations this request demands.
+    pub fn nfe(&self) -> usize {
+        self.steps * if self.uses_cfg() { 2 } else { 1 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
     pub requests: usize,
@@ -66,9 +80,7 @@ impl RequestGen {
     /// Total denoiser evaluations the trace demands (for capacity planning
     /// and bench normalization).
     pub fn total_nfe(reqs: &[VideoRequest]) -> usize {
-        reqs.iter()
-            .map(|r| r.steps * if r.cfg_weight != 1.0 { 2 } else { 1 })
-            .sum()
+        reqs.iter().map(|r| r.nfe()).sum()
     }
 }
 

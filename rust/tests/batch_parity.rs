@@ -1,0 +1,257 @@
+//! Differential parity tests for the batched multi-head SLA engine:
+//!
+//! * batched engine vs a per-head `SlaKernel` loop, swept over every `Phi`
+//!   feature map and `AggStrategy` (forward AND backward);
+//! * SLA at kh=100% (all-critical mask) vs `full::naive_attention`;
+//! * SLA at kh=0%, kl=0% (all-marginal mask) vs
+//!   `linear::linear_forward_global`;
+//! * finite-difference gradient checks of the batched backward (dq, dk,
+//!   dv, per-head dproj) at two head counts, including a GQA configuration
+//!   where dK/dV accumulate across the sharing group.
+//!
+//! No artifacts needed: everything runs on the native substrate.
+
+use sla_dit::attention::linear;
+use sla_dit::attention::opt::AggStrategy;
+use sla_dit::attention::{full, BatchSlaEngine, Phi, SlaConfig, SlaKernel};
+use sla_dit::tensor::{Mat, Tens4};
+use sla_dit::util::rng::Rng;
+
+fn cfg(block: usize) -> SlaConfig {
+    SlaConfig {
+        bq: block,
+        bkv: block,
+        kh_pct: 25.0,
+        kl_pct: 25.0,
+        threads: 3, // exercise the fan-out path; results must not depend on it
+        ..Default::default()
+    }
+}
+
+fn qkv4(b: usize, h: usize, n: usize, d: usize, seed: u64) -> (Tens4, Tens4, Tens4) {
+    let mut rng = Rng::new(seed);
+    (
+        Tens4::randn(b, h, n, d, &mut rng),
+        Tens4::randn(b, h, n, d, &mut rng),
+        Tens4::randn(b, h, n, d, &mut rng),
+    )
+}
+
+#[test]
+fn batched_matches_per_head_loop_across_phi_and_agg() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 8usize);
+    let tol = 1e-5f32;
+    for (pi, phi) in [Phi::Softmax, Phi::Elu1, Phi::Relu].into_iter().enumerate() {
+        for (ai, agg) in [
+            AggStrategy::Naive,
+            AggStrategy::PreAggregate,
+            AggStrategy::FourRussians { g: 4 },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let seed = 1000 + (pi * 10 + ai) as u64;
+            let (q, k, v) = qkv4(b, h, n, d, seed);
+            let c = SlaConfig { phi, agg, ..cfg(8) };
+            let mut engine = BatchSlaEngine::new(c.clone(), h, d);
+            let mut rng = Rng::new(seed ^ 0xABCD);
+            for p in engine.projs.iter_mut() {
+                *p = Mat::randn(d, d, &mut rng).scaled(0.25);
+            }
+            let out = engine.forward(&q, &k, &v);
+            let grads = engine.backward(&q, &k, &v, &out, &out.o);
+
+            // reference: serial per-head kernel loop over the same problems
+            let mut dproj_sum: Vec<Mat> = (0..h).map(|_| Mat::zeros(d, d)).collect();
+            for bi in 0..b {
+                for hi in 0..h {
+                    let kern = SlaKernel::with_proj(
+                        SlaConfig { threads: 1, ..c.clone() },
+                        engine.projs[hi].clone(),
+                    );
+                    let (qm, km, vm) =
+                        (q.head_mat(bi, hi), k.head_mat(bi, hi), v.head_mat(bi, hi));
+                    let single = kern.forward(&qm, &km, &vm, None);
+                    let o_b = Mat::from_vec(n, d, out.o.head(bi, hi).to_vec());
+                    assert!(
+                        o_b.max_abs_diff(&single.o) <= tol,
+                        "fwd {phi:?}/{agg:?} head ({bi},{hi}): {}",
+                        o_b.max_abs_diff(&single.o)
+                    );
+                    let g = kern.backward(&qm, &km, &vm, &single, &single.o);
+                    for (name, got, want) in [
+                        ("dq", grads.dq.head(bi, hi), &g.dq.data[..]),
+                        ("dk", grads.dk.head(bi, hi), &g.dk.data[..]),
+                        ("dv", grads.dv.head(bi, hi), &g.dv.data[..]),
+                    ] {
+                        let diff = got
+                            .iter()
+                            .zip(want)
+                            .fold(0.0f32, |a, (x, y)| a.max((x - y).abs()));
+                        assert!(diff <= tol, "{name} {phi:?}/{agg:?} ({bi},{hi}): {diff}");
+                    }
+                    dproj_sum[hi].add_assign(&g.dproj);
+                }
+            }
+            for hi in 0..h {
+                let diff = grads.dproj[hi].max_abs_diff(&dproj_sum[hi]);
+                assert!(diff <= tol, "dproj {phi:?}/{agg:?} head {hi}: {diff}");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_critical_batched_sla_matches_full_attention() {
+    // kh=100%: every block critical -> the fused kernel must reproduce
+    // exact softmax attention head by head (linear path is empty, so the
+    // random projections must not matter)
+    let (b, h, n, d) = (2usize, 3usize, 64usize, 8usize);
+    let (q, k, v) = qkv4(b, h, n, d, 7);
+    let c = SlaConfig { kh_pct: 100.0, kl_pct: 0.0, ..cfg(8) };
+    let mut engine = BatchSlaEngine::new(c, h, d);
+    let mut rng = Rng::new(70);
+    for p in engine.projs.iter_mut() {
+        *p = Mat::randn(d, d, &mut rng).scaled(0.5);
+    }
+    let out = engine.forward(&q, &k, &v);
+    for bi in 0..b {
+        for hi in 0..h {
+            let (o_ref, _) = full::naive_attention(
+                &q.head_mat(bi, hi),
+                &k.head_mat(bi, hi),
+                &v.head_mat(bi, hi),
+                false,
+            );
+            let o_b = Mat::from_vec(n, d, out.o.head(bi, hi).to_vec());
+            let diff = o_b.max_abs_diff(&o_ref);
+            assert!(diff < 1e-5, "head ({bi},{hi}) vs full attention: {diff}");
+            assert_eq!(out.per_head[bi * h + hi].ol.max_abs(), 0.0);
+        }
+    }
+    assert_eq!(out.mean_sparsity(), 0.0);
+}
+
+#[test]
+fn all_marginal_batched_sla_matches_global_linear() {
+    // kh=0%, kl=0%: every block marginal -> the linear component must equal
+    // unmasked (global) linear attention, for every feature map
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 8usize);
+    for phi in [Phi::Softmax, Phi::Elu1, Phi::Relu] {
+        let (q, k, v) = qkv4(b, h, n, d, 8 + phi as u64);
+        let c = SlaConfig { kh_pct: 0.0, kl_pct: 0.0, phi, ..cfg(8) };
+        let engine = BatchSlaEngine::new(c, h, d);
+        let out = engine.forward(&q, &k, &v);
+        for bi in 0..b {
+            for hi in 0..h {
+                let ph = &out.per_head[bi * h + hi];
+                assert_eq!(ph.os.max_abs(), 0.0, "{phi:?}: sparse part must be empty");
+                let o_ref = linear::linear_forward_global(
+                    &ph.qphi,
+                    &ph.kphi,
+                    &v.head_mat(bi, hi),
+                );
+                let diff = ph.ol.max_abs_diff(&o_ref);
+                assert!(diff < 1e-4, "{phi:?} head ({bi},{hi}) vs global linear: {diff}");
+            }
+        }
+        assert_eq!(out.mean_sparsity(), 1.0);
+    }
+}
+
+/// Finite-difference check of the batched backward at several head counts.
+/// Loss = 0.5 * sum(O^2) so dO = O; masks are frozen to the forward's
+/// predictions (FD must differentiate the kernel, not the mask policy).
+fn fd_check(heads: usize, kv_heads: usize, seed: u64) {
+    let (b, n, d) = (2usize, 32usize, 8usize);
+    let mut rng = Rng::new(seed);
+    let q = Tens4::randn(b, heads, n, d, &mut rng);
+    let k = Tens4::randn(b, kv_heads, n, d, &mut rng);
+    let v = Tens4::randn(b, kv_heads, n, d, &mut rng);
+    let c = cfg(8);
+    let mut engine = BatchSlaEngine::with_kv_heads(c.clone(), heads, kv_heads, d);
+    for p in engine.projs.iter_mut() {
+        *p = Mat::randn(d, d, &mut rng).scaled(0.3);
+    }
+    let fwd = engine.forward(&q, &k, &v);
+    let masks = fwd.masks();
+    let grads = engine.backward(&q, &k, &v, &fwd, &fwd.o);
+
+    let loss = |q4: &Tens4, k4: &Tens4, v4: &Tens4, projs: &[Mat]| -> f64 {
+        let e = BatchSlaEngine::with_projs(c.clone(), kv_heads, projs.to_vec());
+        let out = e.forward_with(q4, k4, v4, Some(&masks));
+        out.o.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / 2.0
+    };
+
+    let eps = 3e-3f32;
+    let mut prng = Rng::new(seed ^ 0x5EED);
+    // dq / dk / dv
+    for (name, mat, grad) in [
+        ("dq", &q, &grads.dq),
+        ("dk", &k, &grads.dk),
+        ("dv", &v, &grads.dv),
+    ] {
+        for _ in 0..5 {
+            let idx = prng.below(mat.data.len());
+            let mut plus = (*mat).clone();
+            plus.data[idx] += eps;
+            let mut minus = (*mat).clone();
+            minus.data[idx] -= eps;
+            let (lp, lm) = match name {
+                "dq" => (
+                    loss(&plus, &k, &v, &engine.projs),
+                    loss(&minus, &k, &v, &engine.projs),
+                ),
+                "dk" => (
+                    loss(&q, &plus, &v, &engine.projs),
+                    loss(&q, &minus, &v, &engine.projs),
+                ),
+                _ => (
+                    loss(&q, &k, &plus, &engine.projs),
+                    loss(&q, &k, &minus, &engine.projs),
+                ),
+            };
+            let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let ana = grad.data[idx];
+            assert!(
+                (num - ana).abs() < 3e-2 * num.abs().max(1.0),
+                "H={heads}/Hkv={kv_heads} {name}[{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+    // per-head dproj
+    for hi in 0..heads {
+        for _ in 0..3 {
+            let idx = prng.below(d * d);
+            let mut plus = engine.projs.clone();
+            plus[hi].data[idx] += eps;
+            let mut minus = engine.projs.clone();
+            minus[hi].data[idx] -= eps;
+            let lp = loss(&q, &k, &v, &plus);
+            let lm = loss(&q, &k, &v, &minus);
+            let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let ana = grads.dproj[hi].data[idx];
+            assert!(
+                (num - ana).abs() < 3e-2 * num.abs().max(1.0),
+                "H={heads} dproj[{hi}][{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_backward_matches_finite_differences_two_heads() {
+    fd_check(2, 2, 21);
+}
+
+#[test]
+fn batched_backward_matches_finite_differences_four_heads() {
+    fd_check(4, 4, 22);
+}
+
+#[test]
+fn batched_backward_matches_finite_differences_gqa() {
+    // 4 query heads sharing 2 K/V heads: FD validates the cross-group
+    // dK/dV accumulation
+    fd_check(4, 2, 23);
+}

@@ -1,0 +1,238 @@
+//! Minimal, API-compatible substitute for the `anyhow` crate.
+//!
+//! The offline mirror cannot reach crates.io, so this vendored crate
+//! provides the subset of anyhow the repo actually uses:
+//!
+//! * `Error` — string-message error with a context chain,
+//! * `Result<T>` — alias with `Error` as the default error type,
+//! * `anyhow!`, `bail!`, `ensure!` — constructor macros,
+//! * `Context` — `.context(..)` / `.with_context(..)` on `Result`.
+//!
+//! Matching real anyhow, `{e}` prints the outermost message and `{e:#}`
+//! prints the whole cause chain (`outer: inner: root`). `Error`
+//! deliberately does NOT implement `std::error::Error`, which is what makes
+//! the blanket `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// String-message error with an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` with `Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` as the cause of a new outer message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The root cause (innermost error in the chain).
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(src) = cur.source.as_deref() {
+            cur = src;
+        }
+        cur
+    }
+}
+
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost first
+            for (i, e) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&Error> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {}", c.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into `Error`, preserving its source chain as
+/// stringified causes. (Error itself does not implement std::error::Error,
+/// so this blanket impl does not overlap the reflexive `From<T> for T`.)
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut inner: Option<Box<Error>> = None;
+        for m in msgs.into_iter().rev() {
+            inner = Some(Box::new(Error { msg: m, source: inner }));
+        }
+        Error { msg: e.to_string(), source: inner }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on any `Result` whose error
+/// converts into `Error` (std errors and `Error` itself).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an `Error` from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($msg:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($msg, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an `Error`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert-or-`bail!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_std_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("opening {:?}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "opening \"x\"");
+        assert!(format!("{e:#}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        assert_eq!(e.root_cause().to_string(), "inner 7");
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(0).is_err());
+        assert!(format!("{}", f(12).unwrap_err()).contains("too big"));
+    }
+
+    #[test]
+    fn bare_ensure_reports_condition() {
+        fn f() -> Result<()> {
+            let v: Vec<usize> = vec![];
+            ensure!(!v.is_empty());
+            Ok(())
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("condition failed"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Offline stub of the `xla` crate's PJRT surface.
+//!
+//! The offline mirror has neither crates.io nor a PJRT shared library, so
+//! this crate keeps the runtime layer compiling with the exact call shapes
+//! the real crate exposes. `Literal` is fully functional in-memory (it is
+//! just a shaped f32 buffer); everything touching PJRT — client creation,
+//! HLO parsing, compilation, execution — returns
+//! `Error("PJRT unavailable ...")`, so `Runtime::open` fails cleanly and
+//! every artifact-dependent path (integration tests, fig6b/table benches,
+//! serve/train CLI paths) skips or reports the error instead of crashing.
+//!
+//! Swapping the real crate back in is a one-line change in rust/Cargo.toml.
+
+use std::fmt;
+
+/// Stub error: a message string.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "PJRT unavailable in this offline build ({what}); native kernels and \
+         the batched engine cover the measured paths — see DESIGN.md"
+    ))
+}
+
+/// Shaped host f32 buffer (rank-N, row-major). Fully functional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(xs: &[f32]) -> Literal {
+        Literal { data: xs.to_vec(), dims: vec![xs.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match; `&[]` means scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let want = if dims.is_empty() { 1 } else { want };
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the raw f32 data.
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.data.clone())
+    }
+
+    /// Unpack a tuple literal. The stub never produces tuples (execution is
+    /// unavailable), so this always errors.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto (stub: parsing unavailable).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (stub: cannot be constructed, so `execute`
+/// is unreachable; it still typechecks the caller).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[2.5]);
+        let s = l.reshape(&[]).unwrap();
+        assert_eq!(s.dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn pjrt_paths_report_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
