@@ -1,0 +1,145 @@
+//! `plan` experiment: amortizing mask prediction (Eq. 2–3) via the
+//! attention-plan subsystem.
+//!
+//! Measures, on a [B, H, N, d] clustered workload:
+//!  * `fresh`   — the pre-plan behavior: every step predicts per-(batch,
+//!    head) masks and executes (`engine.forward`);
+//!  * `cached`  — a plan predicted once, every step replays it by
+//!    reference (`engine.forward_plan`);
+//!  * `predict` — the prediction cost alone (`AttentionPlan::predict`);
+//!  * a refresh-interval sweep driven by `MaskPlanner`, reporting the
+//!    amortized per-step latency and hit rate at each `refresh_every`.
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes so the
+//! harness entry cannot bit-rot without burning CI minutes.
+
+use anyhow::Result;
+
+use sla_dit::attention::plan::{AttentionPlan, MaskPlanner};
+use sla_dit::attention::{BatchSlaEngine, SlaConfig};
+use sla_dit::tensor::Tens4;
+use sla_dit::util::json::Json;
+
+use crate::common::{clustered_qkv, env_usize, log_result, time_median};
+
+pub fn plan() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (bsz, heads, n, d, blk, steps, reps) = if smoke {
+        (1usize, 2usize, 128usize, 16usize, 16usize, 4usize, 2usize)
+    } else {
+        (
+            2,
+            8,
+            env_usize("SLA_BENCH_PLAN_N", 1024),
+            64,
+            64,
+            env_usize("SLA_BENCH_PLAN_STEPS", 8),
+            3,
+        )
+    };
+    let mut qs = Vec::new();
+    let mut ks = Vec::new();
+    let mut vs = Vec::new();
+    for i in 0..bsz * heads {
+        let (q, k, v) = clustered_qkv(n, d, 16, 1.6, 300 + i as u64);
+        qs.push(q);
+        ks.push(k);
+        vs.push(v);
+    }
+    let q4 = Tens4::from_heads(bsz, heads, &qs);
+    let k4 = Tens4::from_heads(bsz, heads, &ks);
+    let v4 = Tens4::from_heads(bsz, heads, &vs);
+    let cfg = SlaConfig {
+        bq: blk,
+        bkv: blk,
+        kh_pct: 5.0,
+        kl_pct: 10.0,
+        threads: sla_dit::util::threadpool::default_threads().min(8),
+        ..Default::default()
+    };
+    let engine = BatchSlaEngine::new(cfg.clone(), heads, d);
+    println!(
+        "workload: B={bsz} H={heads} N={n} d={d} block={blk} (kh=5%, kl=10%), \
+         {steps}-step trajectories{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    // fresh-predict every step (the pre-plan engine behavior)
+    let t_fresh = time_median(reps, || {
+        let _ = engine.forward(&q4, &k4, &v4);
+    });
+    // plan once (outside timing), replay by reference every step
+    let plan0 = AttentionPlan::predict(&cfg, &q4, &k4);
+    let t_cached = time_median(reps, || {
+        let _ = engine.forward_plan(&q4, &k4, &v4, &plan0);
+    });
+    // prediction alone
+    let t_predict = time_median(reps, || {
+        let _ = AttentionPlan::predict(&cfg, &q4, &k4);
+    });
+    println!(
+        "\nmask sparsity {:.1}%, marginal fraction {:.1}%, max crit/row {}",
+        100.0 * plan0.mean_sparsity,
+        100.0 * plan0.mean_marginal_fraction,
+        plan0.max_row_critical
+    );
+    println!("\n{:<26} {:>12} {:>10}", "path", "ms/step", "vs fresh");
+    println!("{:<26} {:>12.2} {:>9.2}x", "fresh predict + execute", t_fresh * 1e3, 1.0);
+    println!(
+        "{:<26} {:>12.2} {:>9.2}x",
+        "cached plan (replay)",
+        t_cached * 1e3,
+        t_fresh / t_cached
+    );
+    println!("{:<26} {:>12.2} {:>9}", "predict only", t_predict * 1e3, "-");
+
+    // refresh-interval sweep: amortized step latency through MaskPlanner
+    println!(
+        "\n{:<16} {:>12} {:>10} {:>10}",
+        "refresh_every", "ms/step", "hit rate", "vs fresh"
+    );
+    let mut jrows = vec![Json::obj(vec![
+        ("path", Json::str("paths")),
+        ("fresh_ms", Json::num(t_fresh * 1e3)),
+        ("cached_ms", Json::num(t_cached * 1e3)),
+        ("predict_ms", Json::num(t_predict * 1e3)),
+        ("mean_sparsity", Json::num(plan0.mean_sparsity)),
+    ])];
+    for refresh_every in [1usize, 2, 4, 8] {
+        let t_run = time_median(reps, || {
+            let mut planner = MaskPlanner::new(cfg.clone(), refresh_every);
+            for _ in 0..steps {
+                let plan = planner.plan_for(&q4, &k4);
+                let _ = engine.forward_plan(&q4, &k4, &v4, &plan);
+            }
+        });
+        let per_step = t_run / steps as f64;
+        // hit rate of one trajectory at this interval
+        let mut planner = MaskPlanner::new(cfg.clone(), refresh_every);
+        for _ in 0..steps {
+            let _ = planner.plan_for(&q4, &k4);
+        }
+        let hit_rate = {
+            let s = planner.stats();
+            s.hit_rate()
+        };
+        println!(
+            "{:<16} {:>12.2} {:>9.1}% {:>9.2}x",
+            refresh_every,
+            per_step * 1e3,
+            100.0 * hit_rate,
+            t_fresh / per_step
+        );
+        jrows.push(Json::obj(vec![
+            ("refresh_every", Json::num(refresh_every as f64)),
+            ("ms_per_step", Json::num(per_step * 1e3)),
+            ("hit_rate", Json::num(hit_rate)),
+            ("speedup_vs_fresh", Json::num(t_fresh / per_step)),
+        ]));
+    }
+    log_result("plan", Json::Arr(jrows));
+    println!("\nexpected shape: cached-plan steps strictly faster than fresh-predict");
+    println!("steps (prediction amortized away), converging to the cached-replay");
+    println!("latency as refresh_every grows");
+    Ok(())
+}

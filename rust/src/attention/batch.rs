@@ -15,12 +15,21 @@
 //! problem and no cross-thread reduction in the hot path. Per-head
 //! compensation projections are learnable (`projs[h]`, Eq. 6 per head).
 //!
+//! Execution consumes masks **by reference**: `forward_plan` replays a
+//! cached [`AttentionPlan`] and `forward_with` a borrowed mask slice, with
+//! only `Arc` refcount bumps per task (the pre-plan engine deep-copied the
+//! kernel config, the per-head projection, AND every mask per task). The
+//! per-task scratch lives in the per-thread `SlaWorkspace`.
+//!
 //! GQA-style K/V head sharing: with `kv_heads < heads`, query head `h`
 //! attends over K/V head `h / (heads / kv_heads)`, and the backward
 //! accumulates `dK`/`dV` across the query heads of each group.
 
+use std::sync::Arc;
+
 use super::mask::CompressedMask;
-use super::sla::{SlaConfig, SlaGrads, SlaKernel, SlaOutput};
+use super::plan::AttentionPlan;
+use super::sla::{sla_backward, sla_forward, SlaConfig, SlaGrads, SlaOutput};
 use crate::tensor::{Mat, Tens4};
 use crate::util::threadpool;
 
@@ -35,9 +44,10 @@ pub struct BatchSlaOutput {
 }
 
 impl BatchSlaOutput {
-    /// The per-(batch, head) predicted masks (for replay / analysis).
-    pub fn masks(&self) -> Vec<CompressedMask> {
-        self.per_head.iter().map(|o| o.mask.clone()).collect()
+    /// The per-(batch, head) executed masks, shared (for replay / plans /
+    /// analysis — an `Arc` bump per mask, no deep copies).
+    pub fn masks(&self) -> Vec<Arc<CompressedMask>> {
+        self.per_head.iter().map(|o| Arc::clone(&o.mask)).collect()
     }
 
     /// Mean mask sparsity across the batch x head grid.
@@ -113,6 +123,12 @@ impl BatchSlaEngine {
         hi / self.group_size()
     }
 
+    /// The single-threaded inner-kernel config the per-task kernels run
+    /// with (fan-out happens at (batch x head) granularity instead).
+    fn inner_cfg(&self) -> SlaConfig {
+        SlaConfig { threads: 1, ..self.cfg.clone() }
+    }
+
     fn check_shapes(&self, q: &Tens4, k: &Tens4, v: &Tens4) {
         let (b, h, n, d) = q.dims();
         assert_eq!(h, self.heads, "q has {h} heads, engine expects {}", self.heads);
@@ -138,20 +154,81 @@ impl BatchSlaEngine {
         self.forward_with(q, k, v, None)
     }
 
+    /// Replay a cached plan: every (batch, head) executes its planned mask
+    /// by reference — the amortized path for cross-step plan reuse.
+    pub fn forward_plan(
+        &self,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        plan: &AttentionPlan,
+    ) -> BatchSlaOutput {
+        let (b, h, n, _d) = q.dims();
+        assert_eq!(
+            (plan.batch, plan.heads),
+            (b, h),
+            "plan grid ({}, {}) != batch grid ({b}, {h})",
+            plan.batch,
+            plan.heads
+        );
+        assert_eq!(
+            (plan.bq, plan.bkv),
+            (self.cfg.bq, self.cfg.bkv),
+            "plan block sizes ({}, {}) != engine block sizes ({}, {})",
+            plan.bq,
+            plan.bkv,
+            self.cfg.bq,
+            self.cfg.bkv
+        );
+        assert_eq!(plan.tm, n / self.cfg.bq, "plan row-block grid mismatch");
+        assert_eq!(plan.tn, n / self.cfg.bkv, "plan KV-block grid mismatch");
+        self.forward_with(q, k, v, Some(&plan.masks))
+    }
+
     pub fn forward_with(
         &self,
         q: &Tens4,
         k: &Tens4,
         v: &Tens4,
-        masks: Option<&[CompressedMask]>,
+        masks: Option<&[Arc<CompressedMask>]>,
+    ) -> BatchSlaOutput {
+        if let Some(ms) = masks {
+            let (b, h, _, _) = q.dims();
+            assert_eq!(ms.len(), b * h, "need one mask per (batch, head)");
+        }
+        self.fan_forward(q, k, v, |i| masks.map(|ms| &ms[i]))
+    }
+
+    /// Per-task mask variant: slot `i` (`bi * heads + hi`) replays its mask
+    /// by reference when `Some`, and predicts in-task when `None`. Cache-
+    /// aware callers use this to resolve plan misses inside the execution
+    /// fan itself (one head copy and one thread fan per call, with the
+    /// predicted masks harvestable from `per_head[i].mask` afterwards).
+    pub fn forward_with_opt(
+        &self,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        masks: &[Option<Arc<CompressedMask>>],
+    ) -> BatchSlaOutput {
+        let (b, h, _, _) = q.dims();
+        assert_eq!(masks.len(), b * h, "need one mask slot per (batch, head)");
+        self.fan_forward(q, k, v, |i| masks[i].as_ref())
+    }
+
+    /// The shared (batch x head) forward fan; `mask_of(i)` supplies task
+    /// `i`'s mask (None = predict in-task).
+    fn fan_forward<'m>(
+        &self,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        mask_of: impl Fn(usize) -> Option<&'m Arc<CompressedMask>> + Sync,
     ) -> BatchSlaOutput {
         self.check_shapes(q, k, v);
         let (b, h, n, d) = q.dims();
-        if let Some(ms) = masks {
-            assert_eq!(ms.len(), b * h, "need one mask per (batch, head)");
-        }
         let gsz = self.group_size();
-        let inner = SlaConfig { threads: 1, ..self.cfg.clone() };
+        let inner = self.inner_cfg();
         let fan = self.cfg.threads.max(1);
         let per_head: Vec<SlaOutput> =
             threadpool::parallel_map_send(b * h, fan, |i| {
@@ -159,8 +236,7 @@ impl BatchSlaEngine {
                 let qm = q.head_mat(bi, hi);
                 let km = k.head_mat(bi, hi / gsz);
                 let vm = v.head_mat(bi, hi / gsz);
-                let kern = SlaKernel::with_proj(inner.clone(), self.projs[hi].clone());
-                kern.forward(&qm, &km, &vm, masks.map(|ms| ms[i].clone()))
+                sla_forward(&inner, &self.projs[hi], &qm, &km, &vm, mask_of(i))
             });
         let mut o = Tens4::zeros(b, h, n, d);
         for (i, r) in per_head.iter().enumerate() {
@@ -184,7 +260,7 @@ impl BatchSlaEngine {
         assert_eq!(dout.dims(), q.dims(), "dout shape mismatch");
         assert_eq!(fwd.per_head.len(), b * h, "forward state is for a different batch");
         let gsz = self.group_size();
-        let inner = SlaConfig { threads: 1, ..self.cfg.clone() };
+        let inner = self.inner_cfg();
         let fan = self.cfg.threads.max(1);
         let grads: Vec<SlaGrads> = threadpool::parallel_map_send(b * h, fan, |i| {
             let (bi, hi) = (i / h, i % h);
@@ -192,8 +268,7 @@ impl BatchSlaEngine {
             let km = k.head_mat(bi, hi / gsz);
             let vm = v.head_mat(bi, hi / gsz);
             let dm = dout.head_mat(bi, hi);
-            let kern = SlaKernel::with_proj(inner.clone(), self.projs[hi].clone());
-            kern.backward(&qm, &km, &vm, &fwd.per_head[i], &dm)
+            sla_backward(&inner, &self.projs[hi], &qm, &km, &vm, &fwd.per_head[i], &dm)
         });
         let mut dq = Tens4::zeros(b, h, n, d);
         let mut dk = Tens4::zeros(b, self.kv_heads, n, d);
@@ -217,6 +292,7 @@ impl BatchSlaEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::sla::SlaKernel;
     use crate::util::rng::Rng;
 
     fn cfg(b: usize, threads: usize) -> SlaConfig {
@@ -341,5 +417,48 @@ mod tests {
         let masks = out.masks();
         let replay = engine.forward_with(&q, &k, &v, Some(&masks));
         assert_eq!(out.o.data, replay.o.data);
+        // replayed masks are shared by reference, not copied
+        for (a, b) in masks.iter().zip(&replay.per_head) {
+            assert!(Arc::ptr_eq(a, &b.mask));
+        }
+    }
+
+    #[test]
+    fn forward_with_opt_mixes_cached_and_predicted() {
+        let (q, k, v) = qkv4(2, 2, 32, 8, 6);
+        let engine = BatchSlaEngine::new(cfg(8, 2), 2, 8);
+        let fresh = engine.forward(&q, &k, &v);
+        let masks = fresh.masks();
+        // half the slots replay cached masks, half predict in-task
+        let slots: Vec<Option<Arc<CompressedMask>>> = masks
+            .iter()
+            .enumerate()
+            .map(|(i, m)| if i % 2 == 0 { Some(Arc::clone(m)) } else { None })
+            .collect();
+        let mixed = engine.forward_with_opt(&q, &k, &v, &slots);
+        // prediction is deterministic, so mixed == all-fresh bitwise
+        assert_eq!(mixed.o.data, fresh.o.data);
+        for (i, ph) in mixed.per_head.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(Arc::ptr_eq(&ph.mask, &masks[i]), "slot {i} must replay");
+            } else {
+                assert!(!Arc::ptr_eq(&ph.mask, &masks[i]), "slot {i} must predict");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_plan_matches_forward_with() {
+        let (b, h, n, d) = (2, 2, 32, 8);
+        let (q, k, v) = qkv4(b, h, n, d, 5);
+        let engine = BatchSlaEngine::new(cfg(8, 2), h, d);
+        let plan = AttentionPlan::predict(&engine.cfg, &q, &k);
+        let via_plan = engine.forward_plan(&q, &k, &v, &plan);
+        let fresh = engine.forward(&q, &k, &v);
+        // the plan predicts with the same policy the kernel uses internally
+        assert_eq!(via_plan.o.data, fresh.o.data);
+        for (m, ph) in plan.masks.iter().zip(&via_plan.per_head) {
+            assert!(Arc::ptr_eq(m, &ph.mask));
+        }
     }
 }

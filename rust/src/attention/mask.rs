@@ -85,6 +85,18 @@ impl CompressedMask {
         1.0 - self.count(Label::Critical) as f64 / (self.tm * self.tn) as f64
     }
 
+    /// Fraction of marginal (linear-path) blocks — the density the A.3
+    /// aggregation-strategy auto-pick keys on.
+    pub fn marginal_fraction(&self) -> f64 {
+        self.count(Label::Marginal) as f64 / (self.tm * self.tn) as f64
+    }
+
+    /// Max critical blocks in any row: an upper bound on the sparse-path
+    /// work per query row block (plan / workspace sizing hint).
+    pub fn max_row_critical(&self) -> usize {
+        self.crit_rows.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
     pub fn all(tm: usize, tn: usize, l: Label) -> Self {
         Self::from_labels(tm, tn, vec![l.to_i8(); tm * tn])
     }
@@ -349,6 +361,17 @@ mod tests {
         let m = CompressedMask::all(4, 4, Label::Critical);
         assert_eq!(m.count(Label::Critical), 16);
         assert_eq!(m.sparsity(), 0.0);
+        assert_eq!(m.marginal_fraction(), 0.0);
+        assert_eq!(m.max_row_critical(), 4);
+    }
+
+    #[test]
+    fn plan_metadata_helpers_match_counts() {
+        let (q, k) = qk(128, 8);
+        let m = predict_mask(&q, &k, 16, 16, MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 });
+        // 8 blocks per row: 2 critical, 2 negligible, 4 marginal
+        assert!((m.marginal_fraction() - 0.5).abs() < 1e-9);
+        assert_eq!(m.max_row_critical(), 2);
     }
 
     // ---- property tests (util::prop): mask invariants under random ----

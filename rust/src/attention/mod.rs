@@ -13,6 +13,14 @@
 //! `Tens4` inputs with per-(batch, head) masks, per-head Eq. 6 projections,
 //! optional GQA K/V sharing, and (batch x head)-granular threading — the
 //! entry point the model/serving/training layers call.
+//!
+//! The `plan` module splits mask *prediction* from kernel *execution*:
+//! an `AttentionPlan` is a cacheable bundle of per-(batch, head) masks
+//! (`Arc`-shared, replayed by reference via `BatchSlaEngine::forward_plan`)
+//! plus derived metadata; `MaskPlanner` / `RequestPlanCache` own the
+//! refresh policy for training loops and serving respectively, and
+//! `SlaWorkspace` holds the per-thread kernel scratch so the steady-state
+//! hot path is allocation-free.
 
 pub mod batch;
 pub mod flops;
@@ -20,6 +28,7 @@ pub mod full;
 pub mod linear;
 pub mod mask;
 pub mod opt;
+pub mod plan;
 pub mod sla;
 pub mod sparse;
 
@@ -27,4 +36,7 @@ pub use batch::{BatchSlaEngine, BatchSlaGrads, BatchSlaOutput};
 pub use flops::FlopsReport;
 pub use linear::Phi;
 pub use mask::{CompressedMask, Label, MaskPolicy};
-pub use sla::{SlaConfig, SlaKernel, SlaOutput};
+pub use plan::{
+    AttentionPlan, MaskPlanner, PlanCacheStats, PlanStats, RequestPlanCache, SlaWorkspace,
+};
+pub use sla::{sla_backward, sla_forward, SlaConfig, SlaKernel, SlaOutput};

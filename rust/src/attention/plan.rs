@@ -1,0 +1,654 @@
+//! Attention-plan subsystem: mask *prediction* (Eq. 2–3) as a first-class,
+//! cacheable artifact distinct from kernel *execution* (Alg. 1/2).
+//!
+//! The motivating observation (shared by Sparse-vDiT and VSA): DiT attention
+//! patterns are stable across diffusion timesteps, so the compressed masks
+//! predicted at denoise step `s` remain good plans for steps `s+1 .. s+r`.
+//! Splitting planning from execution lets every layer above the kernels
+//! amortize prediction cost:
+//!
+//!  * [`AttentionPlan`] — per-(batch, head) `CompressedMask`s plus derived
+//!    execution metadata (mean sparsity / marginal fraction for the A.3
+//!    aggregation auto-pick, per-row critical-block counts for workspace
+//!    sizing). Masks are `Arc`-shared so replaying a plan never deep-copies
+//!    a mask (the pre-refactor engine cloned every mask per task).
+//!  * [`MaskPlanner`] — owns the prediction policy and staleness: a plan is
+//!    reused for `refresh_every` consecutive steps, then re-predicted; a
+//!    shape change or [`MaskPlanner::force_refresh`] re-predicts immediately.
+//!  * [`RequestPlanCache`] — the serving-side variant: plans keyed by
+//!    request id (one entry per request and CFG branch), with hit/miss/
+//!    refresh/eviction accounting surfaced through `ServeReport`.
+//!  * [`SlaWorkspace`] — the reusable per-thread scratch (`s`, `m`, `l`,
+//!    `acc`, `p`) the fused kernels borrow via [`with_workspace`]: no
+//!    per-block or per-row-block allocations, and calls executing on a
+//!    long-lived thread (single-threaded kernels, serving loops) reuse the
+//!    buffers across calls entirely. Scoped worker threads still recreate
+//!    their TLS per engine invocation — a persistent worker pool is the
+//!    recorded ROADMAP follow-up.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::full::NEG_INF;
+use super::mask::{predict_mask, CompressedMask, MaskPolicy};
+use super::opt::AggStrategy;
+use super::sla::SlaConfig;
+use crate::tensor::Tens4;
+use crate::util::threadpool;
+
+// ---------------------------------------------------------------------------
+// per-thread kernel workspace
+// ---------------------------------------------------------------------------
+
+/// Reusable scratch buffers for the fused SLA kernels: the online-softmax
+/// tile (`s`), running max / normalizer / accumulator (`m`, `l`, `acc`) and
+/// the backward's recomputed probability tile (`p`). One lives per OS
+/// thread (see [`with_workspace`]); `ensure` resizes only when the block
+/// geometry changes, so repeated forward/backward calls on one long-lived
+/// thread are allocation-free after the first (fresh scoped worker threads
+/// allocate once per engine invocation).
+#[derive(Debug, Default)]
+pub struct SlaWorkspace {
+    pub s: Vec<f32>,
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+    pub acc: Vec<f32>,
+    pub p: Vec<f32>,
+}
+
+impl SlaWorkspace {
+    pub fn new() -> Self {
+        SlaWorkspace::default()
+    }
+
+    /// Size every buffer for (bq, bkv, dv) blocks. No-op when already sized.
+    pub fn ensure(&mut self, bq: usize, bkv: usize, dv: usize) {
+        self.s.resize(bq * bkv, 0.0);
+        self.m.resize(bq, 0.0);
+        self.l.resize(bq, 0.0);
+        self.acc.resize(bq * dv, 0.0);
+        self.p.resize(bq * bkv, 0.0);
+    }
+
+    /// Reset the online-softmax state for a new query row block. (`s` and
+    /// `p` are fully overwritten before every read, so they need no reset.)
+    pub fn begin_row_block(&mut self) {
+        for x in &mut self.m {
+            *x = NEG_INF;
+        }
+        for x in &mut self.l {
+            *x = 0.0;
+        }
+        for x in &mut self.acc {
+            *x = 0.0;
+        }
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<SlaWorkspace> = RefCell::new(SlaWorkspace::new());
+}
+
+/// Borrow this thread's kernel workspace. The kernels call this once per
+/// contiguous work chunk; nesting is not supported (the closure must not
+/// re-enter `with_workspace`).
+pub fn with_workspace<R>(f: impl FnOnce(&mut SlaWorkspace) -> R) -> R {
+    WORKSPACE.with(|w| f(&mut w.borrow_mut()))
+}
+
+// ---------------------------------------------------------------------------
+// attention plans
+// ---------------------------------------------------------------------------
+
+/// A frozen execution plan for one `[B, H, N, d]` attention problem:
+/// per-(batch, head) compressed masks (index `bi * heads + hi`) plus the
+/// derived metadata the execution layers consult.
+#[derive(Clone, Debug)]
+pub struct AttentionPlan {
+    pub batch: usize,
+    pub heads: usize,
+    /// (Tm, Tn) block grid every mask uses.
+    pub tm: usize,
+    pub tn: usize,
+    /// Block sizes the plan was predicted at.
+    pub bq: usize,
+    pub bkv: usize,
+    /// One mask per (batch, head), `Arc`-shared so replay never deep-copies.
+    pub masks: Vec<Arc<CompressedMask>>,
+    /// Mean fraction of blocks NOT computed exactly (paper's "sparsity").
+    pub mean_sparsity: f64,
+    /// Mean fraction of marginal (linear-path) blocks — drives the A.3
+    /// aggregation-strategy auto-pick.
+    pub mean_marginal_fraction: f64,
+    /// Max critical blocks in any row of any mask — an upper bound on the
+    /// sparse-path work per row block (workspace / scheduling hint).
+    pub max_row_critical: usize,
+}
+
+impl AttentionPlan {
+    /// Bundle already-predicted masks into a plan, deriving the metadata.
+    pub fn from_masks(
+        batch: usize,
+        heads: usize,
+        bq: usize,
+        bkv: usize,
+        masks: Vec<Arc<CompressedMask>>,
+    ) -> Self {
+        assert_eq!(masks.len(), batch * heads, "need one mask per (batch, head)");
+        assert!(!masks.is_empty(), "empty plan");
+        let (tm, tn) = (masks[0].tm, masks[0].tn);
+        for m in &masks {
+            assert_eq!((m.tm, m.tn), (tm, tn), "masks disagree on the block grid");
+        }
+        let inv = 1.0 / masks.len() as f64;
+        let mean_sparsity = masks.iter().map(|m| m.sparsity()).sum::<f64>() * inv;
+        let mean_marginal_fraction =
+            masks.iter().map(|m| m.marginal_fraction()).sum::<f64>() * inv;
+        let max_row_critical =
+            masks.iter().map(|m| m.max_row_critical()).max().unwrap_or(0);
+        AttentionPlan {
+            batch,
+            heads,
+            tm,
+            tn,
+            bq,
+            bkv,
+            masks,
+            mean_sparsity,
+            mean_marginal_fraction,
+            max_row_critical,
+        }
+    }
+
+    /// Predict a fresh plan for `[B, H, N, d]` q against (possibly GQA-
+    /// shared) k, Eq. 2–3 per (batch, head), fanned across `cfg.threads`.
+    pub fn predict(cfg: &SlaConfig, q: &Tens4, k: &Tens4) -> Self {
+        let (b, h, n, _d) = q.dims();
+        let (kb, kvh, kn, _kd) = k.dims();
+        assert_eq!(kb, b, "q/k batch mismatch");
+        assert_eq!(kn, n, "q/k sequence-length mismatch");
+        assert!(kvh > 0 && h % kvh == 0, "heads {h} % kv_heads {kvh} != 0");
+        let gsz = h / kvh;
+        let policy = MaskPolicy::Sla { kh_pct: cfg.kh_pct, kl_pct: cfg.kl_pct };
+        let fan = cfg.threads.max(1);
+        let masks: Vec<Arc<CompressedMask>> =
+            threadpool::parallel_map_send(b * h, fan, |i| {
+                let (bi, hi) = (i / h, i % h);
+                let qm = q.head_mat(bi, hi);
+                let km = k.head_mat(bi, hi / gsz);
+                Arc::new(predict_mask(&qm, &km, cfg.bq, cfg.bkv, policy))
+            });
+        Self::from_masks(b, h, cfg.bq, cfg.bkv, masks)
+    }
+
+    /// The mask planned for (batch `bi`, head `hi`).
+    pub fn mask(&self, bi: usize, hi: usize) -> &Arc<CompressedMask> {
+        &self.masks[bi * self.heads + hi]
+    }
+
+    /// A.3 aggregation strategy suited to this plan's marginal density.
+    pub fn auto_agg(&self) -> AggStrategy {
+        AggStrategy::auto(self.mean_marginal_fraction)
+    }
+}
+
+/// Planner accounting: how often plans were reused vs re-predicted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Steps served by a cached plan.
+    pub hits: u64,
+    /// Steps that had to predict (first use, staleness, or shape change).
+    pub misses: u64,
+    /// Subset of misses that replaced an existing plan.
+    pub refreshes: u64,
+}
+
+impl PlanStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// Owns mask-prediction policy and staleness for one logical stream of
+/// attention problems (a fine-tune loop, a sampler batch): predicts on
+/// first use, then serves the cached plan for `refresh_every` consecutive
+/// steps before re-predicting. `refresh_every == 1` reproduces the
+/// pre-plan engine bitwise (a fresh prediction on every step).
+#[derive(Debug)]
+pub struct MaskPlanner {
+    pub cfg: SlaConfig,
+    pub refresh_every: usize,
+    plan: Option<Arc<AttentionPlan>>,
+    age: usize,
+    stats: PlanStats,
+}
+
+impl MaskPlanner {
+    pub fn new(cfg: SlaConfig, refresh_every: usize) -> Self {
+        assert!(refresh_every >= 1, "refresh_every must be >= 1");
+        MaskPlanner { cfg, refresh_every, plan: None, age: 0, stats: PlanStats::default() }
+    }
+
+    /// Planner that predicts once and then keeps the plan frozen — the
+    /// paper's mask-frozen fine-tune regime.
+    pub fn frozen(cfg: SlaConfig) -> Self {
+        Self::new(cfg, usize::MAX)
+    }
+
+    /// The plan to execute this step: the cached one while fresh, else a
+    /// new prediction. A shape change (batch, heads, or block grid) always
+    /// re-predicts.
+    pub fn plan_for(&mut self, q: &Tens4, k: &Tens4) -> Arc<AttentionPlan> {
+        let (b, h, n, _d) = q.dims();
+        let tm = n / self.cfg.bq;
+        let stale = match &self.plan {
+            None => true,
+            Some(p) => {
+                p.batch != b || p.heads != h || p.tm != tm || self.age >= self.refresh_every
+            }
+        };
+        if stale {
+            if self.plan.is_some() {
+                self.stats.refreshes += 1;
+            }
+            self.stats.misses += 1;
+            self.plan = Some(Arc::new(AttentionPlan::predict(&self.cfg, q, k)));
+            self.age = 1;
+        } else {
+            self.stats.hits += 1;
+            self.age = self.age.saturating_add(1);
+        }
+        Arc::clone(self.plan.as_ref().expect("plan set above"))
+    }
+
+    /// Drop the cached plan; the next `plan_for` predicts fresh.
+    pub fn force_refresh(&mut self) {
+        self.plan = None;
+        self.age = 0;
+    }
+
+    /// The current plan, if any (without advancing staleness accounting).
+    pub fn current(&self) -> Option<&Arc<AttentionPlan>> {
+        self.plan.as_ref()
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serving-side per-request cache
+// ---------------------------------------------------------------------------
+
+/// Cache counters plus mask-sparsity accounting for observability.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Misses that replaced a stale entry for the same key.
+    pub refreshes: u64,
+    /// Entries dropped by `end_request`.
+    pub evictions: u64,
+    /// (batch, head) mask predictions performed.
+    pub planned: u64,
+    /// Summed sparsity over those predictions (mean = sum / planned).
+    pub sparsity_sum: f64,
+}
+
+impl PlanCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn mean_sparsity(&self) -> f64 {
+        if self.planned == 0 {
+            return 0.0;
+        }
+        self.sparsity_sum / self.planned as f64
+    }
+}
+
+struct CacheEntry {
+    masks: Vec<Arc<CompressedMask>>,
+    /// Steps served by this entry since prediction (1 = just predicted).
+    age: usize,
+    heads: usize,
+    tm: usize,
+}
+
+/// Per-request plan cache for the serving path: each in-flight request (and
+/// each of its CFG branches) owns a keyed entry whose per-head masks are
+/// reused for `refresh_every` denoise steps. Entries are dropped when the
+/// scheduler reports the request finished.
+pub struct RequestPlanCache {
+    pub refresh_every: usize,
+    entries: HashMap<u64, CacheEntry>,
+    stats: PlanCacheStats,
+}
+
+impl RequestPlanCache {
+    pub fn new(refresh_every: usize) -> Self {
+        assert!(refresh_every >= 1, "refresh_every must be >= 1");
+        RequestPlanCache {
+            refresh_every,
+            entries: HashMap::new(),
+            stats: PlanCacheStats::default(),
+        }
+    }
+
+    /// The cached masks for `key`, if fresh and shape-compatible — counts a
+    /// hit and advances the entry's age. `None` means the caller must
+    /// predict and then [`RequestPlanCache::store`] the result (this split
+    /// lets batched callers collect every miss first and predict them in
+    /// one wide parallel fan instead of per request).
+    pub fn lookup(
+        &mut self,
+        key: Option<u64>,
+        heads: usize,
+        tm: usize,
+    ) -> Option<Vec<Arc<CompressedMask>>> {
+        let e = self.entries.get_mut(&key?)?;
+        if e.age < self.refresh_every && e.heads == heads && e.tm == tm {
+            e.age += 1;
+            self.stats.hits += 1;
+            Some(e.masks.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Record a fresh per-head prediction: counts the miss (and refresh if
+    /// it replaces an entry) and caches it under `key` (`None` keys are
+    /// never cached — the unkeyed legacy path).
+    pub fn store(&mut self, key: Option<u64>, masks: &[Arc<CompressedMask>], tm: usize) {
+        self.stats.misses += 1;
+        self.stats.planned += masks.len() as u64;
+        self.stats.sparsity_sum += masks.iter().map(|m| m.sparsity()).sum::<f64>();
+        if let Some(k) = key {
+            if self.entries.contains_key(&k) {
+                self.stats.refreshes += 1;
+            }
+            self.entries.insert(
+                k,
+                CacheEntry { masks: masks.to_vec(), age: 1, heads: masks.len(), tm },
+            );
+        }
+    }
+
+    /// The per-head masks to execute for one request item: cached when
+    /// fresh, otherwise `predict_all` produces the `heads` masks and the
+    /// result is stored. Convenience wrapper over `lookup` + `store`.
+    pub fn masks_for(
+        &mut self,
+        key: Option<u64>,
+        heads: usize,
+        tm: usize,
+        predict_all: impl FnOnce() -> Vec<CompressedMask>,
+    ) -> Vec<Arc<CompressedMask>> {
+        if let Some(masks) = self.lookup(key, heads, tm) {
+            return masks;
+        }
+        let masks: Vec<Arc<CompressedMask>> =
+            predict_all().into_iter().map(Arc::new).collect();
+        assert_eq!(masks.len(), heads, "predict_all returned wrong head count");
+        self.store(key, &masks, tm);
+        masks
+    }
+
+    /// Drop the entry for a finished request (no-op if absent).
+    pub fn end_request(&mut self, key: u64) {
+        if self.entries.remove(&key).is_some() {
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::mask::Label;
+    use crate::util::rng::Rng;
+
+    fn cfg(b: usize) -> SlaConfig {
+        SlaConfig { bq: b, bkv: b, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() }
+    }
+
+    fn qk4(b: usize, h: usize, n: usize, d: usize, seed: u64) -> (Tens4, Tens4) {
+        let mut rng = Rng::new(seed);
+        (Tens4::randn(b, h, n, d, &mut rng), Tens4::randn(b, h, n, d, &mut rng))
+    }
+
+    #[test]
+    fn workspace_ensure_and_reset() {
+        let mut ws = SlaWorkspace::new();
+        ws.ensure(4, 8, 6);
+        assert_eq!(ws.s.len(), 32);
+        assert_eq!(ws.m.len(), 4);
+        assert_eq!(ws.l.len(), 4);
+        assert_eq!(ws.acc.len(), 24);
+        assert_eq!(ws.p.len(), 32);
+        ws.l[0] = 3.0;
+        ws.acc[1] = 2.0;
+        ws.begin_row_block();
+        assert!(ws.m.iter().all(|&x| x == NEG_INF));
+        assert!(ws.l.iter().all(|&x| x == 0.0));
+        assert!(ws.acc.iter().all(|&x| x == 0.0));
+        // reshape shrinks/grows without losing validity
+        ws.ensure(2, 4, 3);
+        assert_eq!(ws.s.len(), 8);
+        assert_eq!(ws.acc.len(), 6);
+    }
+
+    #[test]
+    fn with_workspace_reuses_per_thread_buffers() {
+        let cap0 = with_workspace(|ws| {
+            ws.ensure(8, 8, 8);
+            ws.s.capacity()
+        });
+        let cap1 = with_workspace(|ws| {
+            ws.ensure(8, 8, 8);
+            ws.s.capacity()
+        });
+        assert_eq!(cap0, cap1);
+        assert!(cap1 >= 64);
+    }
+
+    #[test]
+    fn predicted_plan_matches_direct_prediction() {
+        let (b, h, n, d) = (2usize, 3usize, 64usize, 8usize);
+        let c = cfg(8);
+        let (q, k) = qk4(b, h, n, d, 3);
+        let plan = AttentionPlan::predict(&c, &q, &k);
+        assert_eq!((plan.batch, plan.heads, plan.tm, plan.tn), (b, h, 8, 8));
+        let policy = MaskPolicy::Sla { kh_pct: c.kh_pct, kl_pct: c.kl_pct };
+        for bi in 0..b {
+            for hi in 0..h {
+                let direct = predict_mask(
+                    &q.head_mat(bi, hi),
+                    &k.head_mat(bi, hi),
+                    c.bq,
+                    c.bkv,
+                    policy,
+                );
+                let planned = plan.mask(bi, hi);
+                for i in 0..direct.tm {
+                    for j in 0..direct.tn {
+                        assert_eq!(planned.label(i, j), direct.label(i, j));
+                    }
+                }
+            }
+        }
+        assert!(plan.mean_sparsity > 0.0 && plan.mean_sparsity < 1.0);
+        assert!(plan.mean_marginal_fraction > 0.0);
+        assert!(plan.max_row_critical >= 1);
+    }
+
+    #[test]
+    fn planner_staleness_accounting() {
+        let (q, k) = qk4(1, 2, 32, 8, 5);
+        let mut planner = MaskPlanner::new(cfg(8), 3);
+        for _ in 0..7 {
+            let _ = planner.plan_for(&q, &k);
+        }
+        // miss, hit, hit, miss(refresh), hit, hit, miss(refresh)
+        let s = planner.stats();
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.refreshes, 2);
+        assert!((s.hit_rate() - 4.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planner_reuses_then_force_refresh_repredicts() {
+        let (q, k) = qk4(1, 2, 32, 8, 6);
+        let mut planner = MaskPlanner::frozen(cfg(8));
+        let p0 = planner.plan_for(&q, &k);
+        let p1 = planner.plan_for(&q, &k);
+        assert!(Arc::ptr_eq(&p0, &p1), "frozen planner must reuse the same plan");
+        planner.force_refresh();
+        let p2 = planner.plan_for(&q, &k);
+        assert!(!Arc::ptr_eq(&p0, &p2));
+        assert_eq!(planner.stats().misses, 2);
+        assert_eq!(planner.stats().hits, 1);
+        // force_refresh drops the plan without predicting
+        planner.force_refresh();
+        assert!(planner.current().is_none());
+    }
+
+    #[test]
+    fn planner_shape_change_triggers_refresh() {
+        let mut planner = MaskPlanner::frozen(cfg(8));
+        let (q1, k1) = qk4(1, 2, 32, 8, 7);
+        let _ = planner.plan_for(&q1, &k1);
+        let (q2, k2) = qk4(1, 2, 64, 8, 8); // longer sequence -> new grid
+        let p2 = planner.plan_for(&q2, &k2);
+        assert_eq!(p2.tm, 8);
+        assert_eq!(planner.stats().misses, 2);
+        assert_eq!(planner.stats().refreshes, 1);
+    }
+
+    #[test]
+    fn plan_predict_respects_gqa_shared_kv() {
+        let mut rng = Rng::new(9);
+        let q = Tens4::randn(1, 4, 32, 8, &mut rng);
+        let k = Tens4::randn(1, 2, 32, 8, &mut rng);
+        let plan = AttentionPlan::predict(&cfg(8), &q, &k);
+        assert_eq!(plan.masks.len(), 4);
+        // heads 0,1 share kv head 0; heads 2,3 share kv head 1 — but their
+        // q differs, so only the k-side pooling is shared; just check the
+        // grid and that all masks are well-formed covers
+        for m in &plan.masks {
+            assert_eq!((m.tm, m.tn), (4, 4));
+            let total = m.count(Label::Critical)
+                + m.count(Label::Marginal)
+                + m.count(Label::Negligible);
+            assert_eq!(total, 16);
+        }
+    }
+
+    #[test]
+    fn request_cache_hit_miss_evict_accounting() {
+        let mut cache = RequestPlanCache::new(2);
+        let mk = || vec![CompressedMask::all(4, 4, Label::Critical); 2];
+        // unkeyed: always predicts
+        let _ = cache.masks_for(None, 2, 4, mk);
+        assert_eq!(cache.stats().misses, 1);
+        assert!(cache.is_empty());
+        // keyed: miss, hit, then stale -> refresh
+        let m0 = cache.masks_for(Some(7), 2, 4, mk);
+        let m1 = cache.masks_for(Some(7), 2, 4, mk);
+        assert!(Arc::ptr_eq(&m0[0], &m1[0]), "hit must reuse the same Arc");
+        let _ = cache.masks_for(Some(7), 2, 4, mk);
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.refreshes, 1);
+        assert_eq!(s.planned, 6);
+        assert_eq!(s.mean_sparsity(), 0.0); // all-critical masks
+        assert_eq!(cache.len(), 1);
+        cache.end_request(7);
+        cache.end_request(7); // double-end is a no-op
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn request_cache_lookup_store_split_matches_masks_for() {
+        // the two-phase API batched callers use: probe, bulk-predict, store
+        let mut cache = RequestPlanCache::new(3);
+        assert!(cache.lookup(Some(9), 2, 4).is_none(), "cold cache");
+        assert!(cache.lookup(None, 2, 4).is_none(), "unkeyed never cached");
+        let masks: Vec<Arc<CompressedMask>> =
+            (0..2).map(|_| Arc::new(CompressedMask::all(4, 4, Label::Marginal))).collect();
+        cache.store(Some(9), &masks, 4);
+        let hit = cache.lookup(Some(9), 2, 4).expect("stored entry is fresh");
+        assert!(Arc::ptr_eq(&hit[0], &masks[0]));
+        // stats: the cold probes count nothing; store counted the miss
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.planned), (1, 1, 2));
+        assert!((s.mean_sparsity() - 1.0).abs() < 1e-12);
+        // storing under None records stats but caches nothing
+        cache.store(None, &masks, 4);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn request_cache_shape_mismatch_repredicts() {
+        let mut cache = RequestPlanCache::new(100);
+        let mk4 = || vec![CompressedMask::all(4, 4, Label::Critical); 2];
+        let mk8 = || vec![CompressedMask::all(8, 8, Label::Marginal); 2];
+        let _ = cache.masks_for(Some(1), 2, 4, mk4);
+        let m = cache.masks_for(Some(1), 2, 8, mk8); // tm changed
+        assert_eq!(m[0].tm, 8);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.stats().refreshes, 1);
+        // sparsity accounting: 2 all-critical (0.0) + 2 all-marginal (1.0)
+        assert!((cache.stats().mean_sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_agg_follows_marginal_density() {
+        let dense_marginal = AttentionPlan::from_masks(
+            1,
+            1,
+            8,
+            8,
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal))],
+        );
+        assert_eq!(dense_marginal.auto_agg(), AggStrategy::PreAggregate);
+        assert_eq!(dense_marginal.mean_sparsity, 1.0);
+        let all_crit = AttentionPlan::from_masks(
+            1,
+            1,
+            8,
+            8,
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical))],
+        );
+        assert_eq!(all_crit.auto_agg(), AggStrategy::Naive);
+        assert_eq!(all_crit.max_row_critical, 4);
+    }
+}

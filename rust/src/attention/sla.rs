@@ -1,11 +1,29 @@
 //! The fused SLA kernel (Algorithms 1 & 2) on the native substrate, with
 //! the learnable compensation projection (Eq. 6) and selectable marginal-
 //! aggregation strategy (Appendix A.3).
+//!
+//! The kernel is exposed two ways:
+//!  * [`sla_forward`] / [`sla_backward`] — free functions taking the config
+//!    and projection **by reference**, the form the batched engine fans out
+//!    (no per-task config/projection clones);
+//!  * [`SlaKernel`] — the owning single-head object wrapping them.
+//!
+//! Masks travel as `Arc<CompressedMask>` (see `attention::plan`): a caller
+//! replaying a cached plan hands the kernel a borrowed Arc and nothing is
+//! deep-copied; when no mask is given the kernel predicts one (Eq. 2–3) and
+//! returns it in the output. Scratch buffers (`s`, `m`, `l`, `acc`, `p`)
+//! live in the per-thread `SlaWorkspace`, so no per-block allocations
+//! remain and repeated calls on a long-lived thread reuse their buffers
+//! outright (scoped workers re-create TLS per engine invocation; a
+//! persistent pool is a recorded follow-up).
+
+use std::sync::Arc;
 
 use super::full::{online_softmax_step, EPS, NEG_INF};
 use super::linear::{apply_linear, precompute_state_threads, Phi};
 use super::mask::{predict_mask, CompressedMask, MaskPolicy};
 use super::opt::{aggregate_marginal, AggStrategy};
+use super::plan::with_workspace;
 use crate::tensor::Mat;
 use crate::util::threadpool;
 
@@ -42,7 +60,9 @@ pub struct SlaOutput {
     pub lse: Vec<f32>,
     pub hi: Vec<Mat>, // per-row-block H_i (d x dv)
     pub zi: Mat,      // (Tm, d)
-    pub mask: CompressedMask,
+    /// The mask executed: the caller's (shared, not copied) or the one
+    /// predicted here.
+    pub mask: Arc<CompressedMask>,
     pub qphi: Mat,
     pub kphi: Mat,
 }
@@ -54,64 +74,71 @@ pub struct SlaGrads {
     pub dproj: Mat,
 }
 
-/// The fused kernel object: holds config + the learnable proj (d x d).
-pub struct SlaKernel {
-    pub cfg: SlaConfig,
-    pub proj: Mat,
-}
+/// Algorithm 1 + Eq. 6 with config and projection borrowed. If `mask` is
+/// None it is predicted (Eq. 2-3); otherwise the shared mask is executed
+/// as-is (plan replay) with only an `Arc` refcount bump.
+pub fn sla_forward(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    mask: Option<&Arc<CompressedMask>>,
+) -> SlaOutput {
+    let (n, d) = (q.rows, q.cols);
+    let dv = v.cols;
+    let tm = n / cfg.bq;
+    let mask: Arc<CompressedMask> = match mask {
+        Some(m) => Arc::clone(m),
+        None => Arc::new(predict_mask(
+            q,
+            k,
+            cfg.bq,
+            cfg.bkv,
+            MaskPolicy::Sla { kh_pct: cfg.kh_pct, kl_pct: cfg.kl_pct },
+        )),
+    };
+    let qphi = cfg.phi.apply(q);
+    let kphi = cfg.phi.apply(k);
 
-impl SlaKernel {
-    pub fn new(cfg: SlaConfig, d: usize) -> Self {
-        // zero-init proj: SLA == sparse component at fine-tune start
-        SlaKernel { cfg, proj: Mat::zeros(d, d) }
-    }
+    // --- linear path: precompute h_j/z_j, aggregate per row block ---
+    let state = precompute_state_threads(&kphi, v, cfg.bkv, cfg.threads);
+    let mask_ref: &CompressedMask = &mask;
+    let (hi, zi) = aggregate_marginal(&state, mask_ref, cfg.agg);
 
-    pub fn with_proj(cfg: SlaConfig, proj: Mat) -> Self {
-        SlaKernel { cfg, proj }
-    }
-
-    /// Algorithm 1 + Eq. 6. If `mask` is None it is predicted (Eq. 2-3).
-    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, mask: Option<CompressedMask>)
-        -> SlaOutput {
-        let cfg = &self.cfg;
-        let (n, d) = (q.rows, q.cols);
-        let dv = v.cols;
-        let tm = n / cfg.bq;
-        let mask = mask.unwrap_or_else(|| {
-            predict_mask(q, k, cfg.bq, cfg.bkv,
-                         MaskPolicy::Sla { kh_pct: cfg.kh_pct, kl_pct: cfg.kl_pct })
-        });
-        let qphi = cfg.phi.apply(q);
-        let kphi = cfg.phi.apply(k);
-
-        // --- linear path: precompute h_j/z_j, aggregate per row block ---
-        let state = precompute_state_threads(&kphi, v, cfg.bkv, cfg.threads);
-        let (hi, zi) = aggregate_marginal(&state, &mask, cfg.agg);
-
-        // --- sparse path: mask-guided online softmax with true skipping ---
-        let scale = 1.0 / (d as f32).sqrt();
-        let mut os = Mat::zeros(n, dv);
-        let mut ol = Mat::zeros(n, dv);
-        let mut lse = vec![NEG_INF; n];
-        {
-            let os_ptr = SendPtr(os.data.as_mut_ptr());
-            let ol_ptr = SendPtr(ol.data.as_mut_ptr());
-            let lse_ptr = SendPtr(lse.as_mut_ptr());
-            let hi_ref = &hi;
-            let zi_ref = &zi;
-            let mask_ref = &mask;
-            let qphi_ref = &qphi;
-            threadpool::parallel_for_chunks(tm, cfg.threads, |b0, b1| {
-                let mut s = vec![0.0f32; cfg.bq * cfg.bkv];
+    // --- sparse path: mask-guided online softmax with true skipping ---
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut os = Mat::zeros(n, dv);
+    let mut ol = Mat::zeros(n, dv);
+    let mut lse = vec![NEG_INF; n];
+    {
+        let os_ptr = SendPtr(os.data.as_mut_ptr());
+        let ol_ptr = SendPtr(ol.data.as_mut_ptr());
+        let lse_ptr = SendPtr(lse.as_mut_ptr());
+        let hi_ref = &hi;
+        let zi_ref = &zi;
+        let qphi_ref = &qphi;
+        threadpool::parallel_for_chunks(tm, cfg.threads, |b0, b1| {
+            with_workspace(|ws| {
+                ws.ensure(cfg.bq, cfg.bkv, dv);
                 for bi in b0..b1 {
                     let r0 = bi * cfg.bq;
-                    let mut m = vec![NEG_INF; cfg.bq];
-                    let mut l = vec![0.0f32; cfg.bq];
-                    let mut acc = vec![0.0f32; cfg.bq * dv];
+                    ws.begin_row_block();
                     for &bj in &mask_ref.crit_rows[bi] {
                         online_softmax_step(
-                            q, k, v, r0, bj as usize * cfg.bkv, cfg.bq, cfg.bkv, dv,
-                            scale, &mut s, &mut m, &mut l, &mut acc,
+                            q,
+                            k,
+                            v,
+                            r0,
+                            bj as usize * cfg.bkv,
+                            cfg.bq,
+                            cfg.bkv,
+                            dv,
+                            scale,
+                            &mut ws.s,
+                            &mut ws.m,
+                            &mut ws.l,
+                            &mut ws.acc,
                         );
                     }
                     // O^l_i = phi(Q_i) H_i / (phi(Q_i) Z_i + eps)
@@ -122,12 +149,15 @@ impl SlaKernel {
                         let osrow = unsafe {
                             std::slice::from_raw_parts_mut(os_ptr.get().add((r0 + r) * dv), dv)
                         };
-                        if l[r] > 0.0 {
-                            let inv = 1.0 / l[r].max(EPS);
-                            for (ov, &a) in osrow.iter_mut().zip(&acc[r * dv..(r + 1) * dv]) {
+                        if ws.l[r] > 0.0 {
+                            let inv = 1.0 / ws.l[r].max(EPS);
+                            for (ov, &a) in osrow.iter_mut().zip(&ws.acc[r * dv..(r + 1) * dv])
+                            {
                                 *ov = a * inv;
                             }
-                            unsafe { *lse_ptr.get().add(r0 + r) = m[r] + l[r].max(EPS).ln() };
+                            unsafe {
+                                *lse_ptr.get().add(r0 + r) = ws.m[r] + ws.l[r].max(EPS).ln()
+                            };
                         }
                         let olrow = unsafe {
                             std::slice::from_raw_parts_mut(ol_ptr.get().add((r0 + r) * dv), dv)
@@ -136,37 +166,49 @@ impl SlaKernel {
                     }
                 }
             });
-        }
-
-        // O = O^s + O^l proj (Eq. 6)
-        let mut o = os.clone();
-        o.add_assign(&ol.matmul(&self.proj));
-        SlaOutput { o, os, ol, lse, hi, zi, mask, qphi, kphi }
+        });
     }
 
-    /// Algorithm 2 + the Eq. 6 chain: given dO, produce dQ, dK, dV, dProj.
-    pub fn backward(&self, q: &Mat, k: &Mat, v: &Mat, fwd: &SlaOutput, dout: &Mat)
-        -> SlaGrads {
-        let cfg = &self.cfg;
-        let (n, d) = (q.rows, q.cols);
-        let dv_dim = v.cols;
-        let tm = n / cfg.bq;
-        let tn = n / cfg.bkv;
-        let scale = 1.0 / (d as f32).sqrt();
-        let mask = &fwd.mask;
+    // O = O^l proj + O^s (Eq. 6; reuses the matmul's output buffer instead
+    // of cloning O^s — f32 addition commutes, so bitwise unchanged)
+    let mut o = ol.matmul(proj);
+    o.add_assign(&os);
+    SlaOutput { o, os, ol, lse, hi, zi, mask, qphi, kphi }
+}
 
-        // chain through O = O^s + O^l proj
-        let dos = dout; // dO^s = dO
-        let dol = dout.matmul_nt(&self.proj); // dO^l = dO proj^T
-        let dproj = fwd.ol.matmul_tn(dout); // dProj = O^l^T dO
+/// Algorithm 2 + the Eq. 6 chain with config and projection borrowed:
+/// given dO, produce dQ, dK, dV, dProj. Replays the mask stored in `fwd`.
+pub fn sla_backward(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    fwd: &SlaOutput,
+    dout: &Mat,
+) -> SlaGrads {
+    let (n, d) = (q.rows, q.cols);
+    let dv_dim = v.cols;
+    let tm = n / cfg.bq;
+    let tn = n / cfg.bkv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mask: &CompressedMask = &fwd.mask;
 
-        // D^s, D^l
-        let mut dssum = vec![0.0f32; n];
-        let mut dlsum = vec![0.0f32; n];
-        for r in 0..n {
-            dssum[r] = dos.row(r).iter().zip(fwd.os.row(r)).map(|(a, b)| a * b).sum();
-            dlsum[r] = dol.row(r).iter().zip(fwd.ol.row(r)).map(|(a, b)| a * b).sum();
-        }
+    // chain through O = O^s + O^l proj
+    let dos = dout; // dO^s = dO
+    let dol = dout.matmul_nt(proj); // dO^l = dO proj^T
+    let dproj = fwd.ol.matmul_tn(dout); // dProj = O^l^T dO
+
+    // D^s, D^l
+    let mut dssum = vec![0.0f32; n];
+    let mut dlsum = vec![0.0f32; n];
+    for r in 0..n {
+        dssum[r] = dos.row(r).iter().zip(fwd.os.row(r)).map(|(a, b)| a * b).sum();
+        dlsum[r] = dol.row(r).iter().zip(fwd.ol.row(r)).map(|(a, b)| a * b).sum();
+    }
+
+    with_workspace(|ws| {
+        ws.ensure(cfg.bq, cfg.bkv, dv_dim);
 
         // ---- pass 1 (per query block): dQ sparse, dQ^phi, dH_i, dZ_i ----
         let mut dq = Mat::zeros(n, d);
@@ -209,15 +251,15 @@ impl SlaKernel {
                 }
             }
             dhi.push(dh);
-            // sparse-path dQ (Alg. 2 lines 11-12), via row lookup table
-            let mut p = vec![0.0f32; cfg.bq * cfg.bkv];
+            // sparse-path dQ (Alg. 2 lines 11-12), via row lookup table;
+            // the probability tile lives in the per-thread workspace
             for &bj in &mask.crit_rows[bi] {
                 let c0 = bj as usize * cfg.bkv;
                 for r in 0..cfg.bq {
                     let qrow = q.row(r0 + r);
                     let li = fwd.lse[r0 + r];
                     let dorow = dos.row(r0 + r);
-                    let prow = &mut p[r * cfg.bkv..(r + 1) * cfg.bkv];
+                    let prow = &mut ws.p[r * cfg.bkv..(r + 1) * cfg.bkv];
                     for (c, pv) in prow.iter_mut().enumerate() {
                         let krow = k.row(c0 + c);
                         let mut s = 0.0f32;
@@ -332,6 +374,35 @@ impl SlaKernel {
         dk.add_assign(&dk_phi);
 
         SlaGrads { dq, dk, dv, dproj }
+    })
+}
+
+/// The fused kernel object: holds config + the learnable proj (d x d).
+pub struct SlaKernel {
+    pub cfg: SlaConfig,
+    pub proj: Mat,
+}
+
+impl SlaKernel {
+    pub fn new(cfg: SlaConfig, d: usize) -> Self {
+        // zero-init proj: SLA == sparse component at fine-tune start
+        SlaKernel { cfg, proj: Mat::zeros(d, d) }
+    }
+
+    pub fn with_proj(cfg: SlaConfig, proj: Mat) -> Self {
+        SlaKernel { cfg, proj }
+    }
+
+    /// Algorithm 1 + Eq. 6. If `mask` is None it is predicted (Eq. 2-3).
+    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, mask: Option<&Arc<CompressedMask>>)
+        -> SlaOutput {
+        sla_forward(&self.cfg, &self.proj, q, k, v, mask)
+    }
+
+    /// Algorithm 2 + the Eq. 6 chain: given dO, produce dQ, dK, dV, dProj.
+    pub fn backward(&self, q: &Mat, k: &Mat, v: &Mat, fwd: &SlaOutput, dout: &Mat)
+        -> SlaGrads {
+        sla_backward(&self.cfg, &self.proj, q, k, v, fwd, dout)
     }
 }
 
@@ -371,19 +442,21 @@ mod tests {
     fn all_critical_equals_full_attention() {
         let (q, k, v) = qkv(64, 16, 0);
         let kern = SlaKernel::new(cfg(8), 16);
-        let mask = CompressedMask::all(8, 8, Label::Critical);
-        let out = kern.forward(&q, &k, &v, Some(mask));
+        let mask = Arc::new(CompressedMask::all(8, 8, Label::Critical));
+        let out = kern.forward(&q, &k, &v, Some(&mask));
         let (full, _) = naive_attention(&q, &k, &v, false);
         assert!(out.o.max_abs_diff(&full) < 1e-5);
         assert_eq!(out.ol.max_abs(), 0.0);
+        // the provided mask is shared, not copied
+        assert!(Arc::ptr_eq(&out.mask, &mask));
     }
 
     #[test]
     fn all_marginal_equals_linear_attention() {
         let (q, k, v) = qkv(64, 16, 1);
         let kern = SlaKernel::new(cfg(8), 16);
-        let mask = CompressedMask::all(8, 8, Label::Marginal);
-        let out = kern.forward(&q, &k, &v, Some(mask));
+        let mask = Arc::new(CompressedMask::all(8, 8, Label::Marginal));
+        let out = kern.forward(&q, &k, &v, Some(&mask));
         assert_eq!(out.os.max_abs(), 0.0);
         let og = linear_forward_global(&out.qphi, &out.kphi, &v);
         assert!(out.ol.max_abs_diff(&og) < 1e-4);
@@ -427,6 +500,42 @@ mod tests {
     }
 
     #[test]
+    fn free_function_form_matches_kernel_object() {
+        let (q, k, v) = qkv(64, 8, 9);
+        let mut rng = Rng::new(90);
+        let proj = Mat::randn(8, 8, &mut rng).scaled(0.3);
+        let c = cfg(8);
+        let kern = SlaKernel::with_proj(c.clone(), proj.clone());
+        let a = kern.forward(&q, &k, &v, None);
+        let b = sla_forward(&c, &proj, &q, &k, &v, None);
+        assert_eq!(a.o.data, b.o.data);
+        let ga = kern.backward(&q, &k, &v, &a, &a.o);
+        let gb = sla_backward(&c, &proj, &q, &k, &v, &b, &b.o);
+        assert_eq!(ga.dq.data, gb.dq.data);
+        assert_eq!(ga.dk.data, gb.dk.data);
+        assert_eq!(ga.dv.data, gb.dv.data);
+        assert_eq!(ga.dproj.data, gb.dproj.data);
+    }
+
+    #[test]
+    fn repeated_forward_reuses_workspace_bitwise() {
+        // same inputs, repeated calls: the workspace resets must make every
+        // call bitwise identical (no state leaks across calls)
+        let (q, k, v) = qkv(64, 8, 10);
+        let kern = SlaKernel::new(cfg(8), 8);
+        let o1 = kern.forward(&q, &k, &v, None);
+        let o2 = kern.forward(&q, &k, &v, None);
+        assert_eq!(o1.o.data, o2.o.data);
+        assert_eq!(o1.lse, o2.lse);
+        // and after a *different* shape in between
+        let (q2, k2, v2) = qkv(32, 8, 11);
+        let kern2 = SlaKernel::new(cfg(4), 8);
+        let _ = kern2.forward(&q2, &k2, &v2, None);
+        let o3 = kern.forward(&q, &k, &v, None);
+        assert_eq!(o1.o.data, o3.o.data);
+    }
+
+    #[test]
     fn backward_matches_finite_differences() {
         let n = 32;
         let d = 8;
@@ -435,12 +544,12 @@ mod tests {
         let mut kern = SlaKernel::new(cfg(8), d);
         kern.proj = Mat::randn(d, d, &mut rng).scaled(0.3);
         let fwd = kern.forward(&q, &k, &v, None);
-        let mask = fwd.mask.clone();
+        let mask = Arc::clone(&fwd.mask);
         // loss = sum(o^2) / 2 -> dout = o
         let grads = kern.backward(&q, &k, &v, &fwd, &fwd.o);
         let loss = |q: &Mat, k: &Mat, v: &Mat, proj: &Mat| -> f64 {
             let kk = SlaKernel::with_proj(cfg(8), proj.clone());
-            let out = kk.forward(q, k, v, Some(mask.clone()));
+            let out = kk.forward(q, k, v, Some(&mask));
             out.o.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / 2.0
         };
         let eps = 3e-3f32;

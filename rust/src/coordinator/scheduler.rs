@@ -72,6 +72,14 @@ pub struct ServeReport {
     pub idle_s: f64,
     pub nfe: usize,
     pub ticks: usize,
+    /// Plan-cache accounting over this trace (zero when the backend does
+    /// not cache attention plans): steps served by a cached plan / steps
+    /// that predicted / predictions that replaced a stale plan.
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_refreshes: u64,
+    /// Mean sparsity of the masks predicted by the backend's planner.
+    pub plan_mean_sparsity: f64,
 }
 
 impl ServeReport {
@@ -99,8 +107,17 @@ impl ServeReport {
         (self.total_s - self.denoise_s - self.idle_s).max(0.0)
     }
 
+    /// Fraction of plan lookups served from cache.
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.plan_hits as f64 / total as f64
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} makespan={:.2}s denoise={:.2}s idle={:.2}s overhead={:.3}s \
              nfe={} ticks={} mean_lat={:.2}s p50={:.2}s p95={:.2}s thpt={:.2} req/s",
             self.stats.len(),
@@ -114,7 +131,19 @@ impl ServeReport {
             self.latency_percentile(50.0),
             self.latency_percentile(95.0),
             self.throughput_rps(),
-        )
+        );
+        if self.plan_hits + self.plan_misses > 0 {
+            s.push_str(&format!(
+                " plan_hits={} plan_misses={} plan_refreshes={} plan_hit_rate={:.1}% \
+                 mask_sparsity={:.1}%",
+                self.plan_hits,
+                self.plan_misses,
+                self.plan_refreshes,
+                100.0 * self.plan_hit_rate(),
+                100.0 * self.plan_mean_sparsity,
+            ));
+        }
+        s
     }
 }
 
@@ -152,9 +181,23 @@ impl<'b> Coordinator<'b> {
         }
     }
 
+    /// The plan-cache stream key for one request's cond / uncond branch —
+    /// each CFG branch has its own attention geometry, so its own plan.
+    fn stream_key(req_id: u64, uncond: bool) -> u64 {
+        (req_id << 1) | uncond as u64
+    }
+
+    /// Evict both of a request's plan-cache streams (single source of truth
+    /// for the key layout across the finish / error / generate_one paths).
+    fn evict_request_streams(&self, req_id: u64) {
+        self.backend.end_request(Self::stream_key(req_id, false));
+        self.backend.end_request(Self::stream_key(req_id, true));
+    }
+
     /// Advance every request in `batch` by one denoise step (Euler, CFG
-    /// when requested) through a SINGLE `velocity_batch` call. Returns
-    /// measured model-call seconds.
+    /// when requested) through a SINGLE keyed `velocity_batch` call, so a
+    /// plan-caching backend reuses each request's attention plan across
+    /// denoise steps. Returns measured model-call seconds.
     fn advance_batch(&self, batch: &mut [ActiveReq], nfe: &mut usize) -> Result<f64> {
         if batch.is_empty() {
             return Ok(0.0);
@@ -163,15 +206,18 @@ impl<'b> Coordinator<'b> {
         let vs = {
             let mut calls: Vec<(&HostTensor, f32, &HostTensor)> =
                 Vec::with_capacity(batch.len());
+            let mut keys: Vec<Option<u64>> = Vec::with_capacity(batch.len());
             for a in batch.iter() {
                 let t0 = a.ts[a.step_idx];
                 calls.push((&a.x, t0, &a.cond));
+                keys.push(Some(Self::stream_key(a.req.id, false)));
                 if a.req.uses_cfg() {
                     calls.push((&a.x, t0, &a.uncond));
+                    keys.push(Some(Self::stream_key(a.req.id, true)));
                 }
             }
             *nfe += calls.len();
-            self.backend.velocity_batch(&calls)?
+            self.backend.velocity_batch_keyed(&calls, &keys)?
         };
         let dur = start.elapsed().as_secs_f64();
         let mut vi = 0usize;
@@ -208,6 +254,8 @@ impl<'b> Coordinator<'b> {
         let mut active: VecDeque<ActiveReq> = VecDeque::new();
         let mut report = ServeReport::default();
         let mut clock = 0.0f64;
+        // plan-cache counters are cumulative on the backend; report deltas
+        let plan0 = self.backend.plan_stats().unwrap_or_default();
 
         while !pending.is_empty() || !active.is_empty() {
             // admit arrivals under the backpressure cap
@@ -237,7 +285,17 @@ impl<'b> Coordinator<'b> {
             for _ in 0..todo {
                 batch.push(active.pop_front().unwrap());
             }
-            let model_time = self.advance_batch(&mut batch, &mut report.nfe)?;
+            let model_time = match self.advance_batch(&mut batch, &mut report.nfe) {
+                Ok(t) => t,
+                Err(e) => {
+                    // evict every in-flight stream so a later trace reusing
+                    // the same request ids cannot replay this trace's plans
+                    for a in batch.iter().chain(active.iter()) {
+                        self.evict_request_streams(a.req.id);
+                    }
+                    return Err(e);
+                }
+            };
             report.denoise_s += model_time;
             let mut finished = Vec::new();
             for a in batch {
@@ -252,6 +310,8 @@ impl<'b> Coordinator<'b> {
             let tick_wall = tick_start.elapsed().as_secs_f64();
             clock += tick_wall.max(model_time);
             for a in finished {
+                // the request's plan-cache streams are dead — evict them
+                self.evict_request_streams(a.req.id);
                 report.stats.push(ReqStat {
                     id: a.req.id,
                     wait_s: a.admitted_clock - a.req.arrival_s,
@@ -266,6 +326,18 @@ impl<'b> Coordinator<'b> {
         }
         report.total_s = clock;
         report.stats.sort_by_key(|s| s.id);
+        if let Some(p1) = self.backend.plan_stats() {
+            report.plan_hits = p1.hits - plan0.hits;
+            report.plan_misses = p1.misses - plan0.misses;
+            report.plan_refreshes = p1.refreshes - plan0.refreshes;
+            // delta, like the counters: only THIS trace's predictions
+            let planned = p1.planned - plan0.planned;
+            report.plan_mean_sparsity = if planned == 0 {
+                0.0
+            } else {
+                (p1.sparsity_sum - plan0.sparsity_sum) / planned as f64
+            };
+        }
         Ok(report)
     }
 
@@ -278,10 +350,17 @@ impl<'b> Coordinator<'b> {
         let mut nfe = 0;
         // ts has steps+1 entries: the loop runs exactly `steps` advances,
         // the last of which lands on t=0. Batch of one keeps a single copy
-        // of the step/CFG logic.
-        while a.step_idx + 1 < a.ts.len() {
-            self.advance_batch(std::slice::from_mut(&mut a), &mut nfe)?;
-        }
+        // of the step/CFG logic. Streams are evicted on the error path too:
+        // generate_one always keys as request 0, so a leaked entry would be
+        // replayed by the NEXT generation's different prompt.
+        let advanced = (|| -> Result<()> {
+            while a.step_idx + 1 < a.ts.len() {
+                self.advance_batch(std::slice::from_mut(&mut a), &mut nfe)?;
+            }
+            Ok(())
+        })();
+        self.evict_request_streams(req.id);
+        advanced?;
         Ok(a.x)
     }
 }
@@ -555,6 +634,45 @@ mod tests {
             assert_eq!(id_a, id_b);
             assert_eq!(xa.data, xb.data);
         }
+    }
+
+    #[test]
+    fn native_backend_plan_stats_flow_into_report() {
+        use super::engine::NativeSlaBackend;
+        use crate::attention::SlaConfig;
+        let backend = NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+        .with_plan_refresh(4);
+        let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+        let mut trace = reqs(3, 4);
+        trace[1].cfg_weight = 2.0;
+        let rep = coord.run_trace(&trace, None).unwrap();
+        assert_eq!(rep.stats.len(), 3);
+        // 4 streams (3 cond + 1 uncond) x 4 steps at refresh_every=4:
+        // each stream predicts once and replays the plan for 3 steps
+        assert_eq!(rep.plan_misses, 4);
+        assert_eq!(rep.plan_hits, 12);
+        assert!((rep.plan_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(rep.plan_mean_sparsity > 0.0 && rep.plan_mean_sparsity < 1.0);
+        assert!(rep.summary().contains("plan_hits=12"), "{}", rep.summary());
+        // finished requests evicted their cache entries
+        assert_eq!(backend.plan_cache_stats().evictions, 4);
+    }
+
+    #[test]
+    fn mock_backend_reports_zero_plan_stats() {
+        let mock = Mock { calls: AtomicUsize::new(0) };
+        let coord = Coordinator::new(&mock, CoordinatorConfig::default());
+        let rep = coord.run_trace(&reqs(2, 2), None).unwrap();
+        assert_eq!(rep.plan_hits + rep.plan_misses, 0);
+        assert!(!rep.summary().contains("plan_hits"));
     }
 
     #[test]

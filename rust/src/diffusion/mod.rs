@@ -27,6 +27,28 @@ pub trait Denoiser {
         assert_eq!(xs.len(), conds.len(), "velocity_many: xs/conds length mismatch");
         xs.iter().zip(conds).map(|(x, c)| self.velocity(x, t, c)).collect()
     }
+
+    /// Keyed batched hook: `keys[i]` names the logical stream entry `i`
+    /// belongs to (one stream per sampled item and CFG branch), stable
+    /// across denoise steps — plan-caching backends use it to reuse
+    /// attention plans between steps. The default ignores the keys.
+    fn velocity_many_keyed(
+        &self,
+        xs: &[&HostTensor],
+        t: f32,
+        conds: &[&HostTensor],
+        keys: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        debug_assert_eq!(xs.len(), keys.len(), "velocity_many_keyed: keys length mismatch");
+        let _ = keys;
+        self.velocity_many(xs, t, conds)
+    }
+
+    /// The streams are finished (sampling completed): plan-caching
+    /// backends drop whatever they cached for these keys. Default: no-op.
+    fn release_streams(&self, keys: &[u64]) {
+        let _ = keys;
+    }
 }
 
 impl<F> Denoiser for F
@@ -48,15 +70,29 @@ pub enum Integrator {
 pub struct SamplerConfig {
     pub steps: usize,
     pub integrator: Integrator,
-    /// classifier-free guidance weight; 1.0 disables the uncond call
+    /// classifier-free guidance weight; 1.0 disables the uncond branch
     pub cfg_weight: f32,
     /// timestep shift (Wan-style): s(t) = shift*t / (1 + (shift-1)*t)
     pub shift: f32,
+    /// When set, item `i` is keyed as stream `base + 2*i` (cond branch) and
+    /// `base + 2*i + 1` (uncond branch) through `velocity_many_keyed`, so a
+    /// plan-caching backend can reuse attention plans across denoise steps;
+    /// the streams are released when sampling finishes (also on error).
+    /// `None` (default) uses the unkeyed hook — no cross-step caching.
+    /// NOTE: a backend's plan age advances per keyed CALL, so Heun's
+    /// interior steps (two stages per step) consume two refresh units.
+    pub plan_stream_base: Option<u64>,
 }
 
 impl Default for SamplerConfig {
     fn default() -> Self {
-        SamplerConfig { steps: 16, integrator: Integrator::Euler, cfg_weight: 1.0, shift: 1.0 }
+        SamplerConfig {
+            steps: 16,
+            integrator: Integrator::Euler,
+            cfg_weight: 1.0,
+            shift: 1.0,
+            plan_stream_base: None,
+        }
     }
 }
 
@@ -104,10 +140,13 @@ pub struct SampleResult {
 }
 
 /// Integrate many flow ODEs in lockstep (shared step grid, per-item cond):
-/// one `velocity_many` call per integrator stage, so a batched backend runs
-/// every sequence through a single engine invocation per step. Produces the
-/// same trajectories as calling `sample` per item; per-item `nfe` matches
-/// `sample`'s accounting.
+/// ONE batched call per integrator stage — with CFG, the cond and uncond
+/// branches are fused into a single doubled-batch call, so a batched
+/// backend sees every evaluation of a stage in one engine invocation.
+/// Produces the same trajectories as calling `sample` per item; per-item
+/// `nfe` matches `sample`'s accounting (the fused call still counts as two
+/// evaluations per item). With `cfg.plan_stream_base` set, items are keyed
+/// so plan-caching backends reuse attention plans across denoise steps.
 pub fn sample_batch(
     den: &dyn Denoiser,
     noises: &[HostTensor],
@@ -122,21 +161,31 @@ pub fn sample_batch(
     let ts = timesteps(cfg.steps, cfg.shift);
     let mut xs: Vec<HostTensor> = noises.to_vec();
     let mut nfe_each = 0usize; // per-item evaluations (same for every item)
+    let use_cfg = (cfg.cfg_weight - 1.0).abs() >= 1e-6;
+    let stream_key = |item: usize, branch: u64| -> Option<u64> {
+        cfg.plan_stream_base.map(|base| base + 2 * item as u64 + branch)
+    };
 
     let guided = |xs: &[HostTensor], t: f32, nfe: &mut usize| -> Result<Vec<HostTensor>> {
-        let xr: Vec<&HostTensor> = xs.iter().collect();
-        let cr: Vec<&HostTensor> = conds.iter().collect();
-        let vc = den.velocity_many(&xr, t, &cr)?;
-        *nfe += 1;
-        if (cfg.cfg_weight - 1.0).abs() < 1e-6 {
-            return Ok(vc);
+        let nb = xs.len();
+        let mut xr: Vec<&HostTensor> = xs.iter().collect();
+        let mut cr: Vec<&HostTensor> = conds.iter().collect();
+        let mut keys: Vec<Option<u64>> = (0..nb).map(|i| stream_key(i, 0)).collect();
+        if use_cfg {
+            // fuse the cond + uncond CFG branches into ONE doubled batch
+            xr.extend(xs.iter());
+            cr.extend(std::iter::repeat(uncond).take(nb));
+            keys.extend((0..nb).map(|i| stream_key(i, 1)));
         }
-        let ur: Vec<&HostTensor> = xs.iter().map(|_| uncond).collect();
-        let vu = den.velocity_many(&xr, t, &ur)?;
-        *nfe += 1;
+        let vall = den.velocity_many_keyed(&xr, t, &cr, &keys)?;
+        *nfe += if use_cfg { 2 } else { 1 };
+        if !use_cfg {
+            return Ok(vall);
+        }
+        let (vc, vu) = vall.split_at(nb);
         Ok(vc
             .iter()
-            .zip(&vu)
+            .zip(vu)
             .map(|(c, u)| {
                 let mut v = u.clone();
                 for ((o, &cv), &uv) in v.data.iter_mut().zip(&c.data).zip(&u.data) {
@@ -147,40 +196,56 @@ pub fn sample_batch(
             .collect())
     };
 
-    for w in ts.windows(2) {
-        let (t0, t1) = (w[0], w[1]);
-        let dt = t0 - t1; // positive
-        let v0 = guided(&xs, t0, &mut nfe_each)?;
-        match cfg.integrator {
-            Integrator::Euler => {
-                for (x, v) in xs.iter_mut().zip(&v0) {
-                    for (xv, &vv) in x.data.iter_mut().zip(&v.data) {
-                        *xv -= dt * vv;
+    // run the integrator inside a closure so the stream release below also
+    // happens on the error path (a leaked stream would let a later run with
+    // the same keys replay this run's plans)
+    let integrated = (|| -> Result<()> {
+        for w in ts.windows(2) {
+            let (t0, t1) = (w[0], w[1]);
+            let dt = t0 - t1; // positive
+            let v0 = guided(&xs, t0, &mut nfe_each)?;
+            match cfg.integrator {
+                Integrator::Euler => {
+                    for (x, v) in xs.iter_mut().zip(&v0) {
+                        for (xv, &vv) in x.data.iter_mut().zip(&v.data) {
+                            *xv -= dt * vv;
+                        }
                     }
                 }
-            }
-            Integrator::Heun => {
-                let mut xp = xs.clone();
-                for (x, v) in xp.iter_mut().zip(&v0) {
-                    for (xv, &vv) in x.data.iter_mut().zip(&v.data) {
-                        *xv -= dt * vv;
+                Integrator::Heun => {
+                    let mut xp = xs.clone();
+                    for (x, v) in xp.iter_mut().zip(&v0) {
+                        for (xv, &vv) in x.data.iter_mut().zip(&v.data) {
+                            *xv -= dt * vv;
+                        }
                     }
-                }
-                if t1 <= 0.0 {
-                    xs = xp; // final step: Euler (no second eval at t=0)
-                } else {
-                    let v1 = guided(&xp, t1, &mut nfe_each)?;
-                    for ((x, a), b) in xs.iter_mut().zip(&v0).zip(&v1) {
-                        for ((xv, &av), &bv) in
-                            x.data.iter_mut().zip(&a.data).zip(&b.data)
-                        {
-                            *xv -= dt * 0.5 * (av + bv);
+                    if t1 <= 0.0 {
+                        xs = xp; // final step: Euler (no second eval at t=0)
+                    } else {
+                        let v1 = guided(&xp, t1, &mut nfe_each)?;
+                        for ((x, a), b) in xs.iter_mut().zip(&v0).zip(&v1) {
+                            for ((xv, &av), &bv) in
+                                x.data.iter_mut().zip(&a.data).zip(&b.data)
+                            {
+                                *xv -= dt * 0.5 * (av + bv);
+                            }
                         }
                     }
                 }
             }
         }
+        Ok(())
+    })();
+    // streams finished (or failed): plan-caching backends drop their plans
+    if cfg.plan_stream_base.is_some() {
+        let keys: Vec<u64> = (0..noises.len())
+            .flat_map(|i| {
+                [stream_key(i, 0), stream_key(i, 1)].map(|k| k.expect("base set above"))
+            })
+            .collect();
+        den.release_streams(&keys);
     }
+    integrated?;
     Ok(xs
         .into_iter()
         .map(|x| SampleResult { sample: x, nfe: nfe_each })
@@ -275,6 +340,7 @@ mod tests {
                     integrator,
                     cfg_weight: cfg_w,
                     shift: 1.0,
+                    ..Default::default()
                 };
                 let batched = sample_batch(&den, &noises, &conds, &uncond, &cfg).unwrap();
                 assert_eq!(batched.len(), 2);
@@ -324,6 +390,108 @@ mod tests {
         assert_eq!(out.len(), 3);
         // Euler, no CFG: exactly one batched call per step
         assert_eq!(den.many_calls.load(Ordering::Relaxed), 4);
+    }
+
+    /// The fused single-call CFG step must reproduce the pre-fusion
+    /// two-call path bitwise: integrate the same problem with an explicit
+    /// cond-call + uncond-call reference loop and compare.
+    #[test]
+    fn fused_cfg_call_matches_two_call_reference() {
+        let den = |x: &HostTensor, t: f32, c: &HostTensor| -> Result<HostTensor> {
+            let mut v = x.clone();
+            for (vv, &cv) in v.data.iter_mut().zip(c.data.iter().cycle()) {
+                *vv = 0.3 * *vv + 0.2 * cv - 0.1 * t;
+            }
+            Ok(v)
+        };
+        let noises = vec![
+            HostTensor::new(vec![4], vec![1.0, -1.0, 0.5, 2.0]),
+            HostTensor::new(vec![4], vec![0.2, 0.4, -0.6, 0.8]),
+        ];
+        let conds = vec![
+            HostTensor::new(vec![2], vec![1.0, -1.0]),
+            HostTensor::new(vec![2], vec![0.0, 2.0]),
+        ];
+        let uncond = HostTensor::zeros(vec![2]);
+        let w = 2.5f32;
+        let cfg = SamplerConfig { steps: 5, cfg_weight: w, ..Default::default() };
+        let fused = sample_batch(&den, &noises, &conds, &uncond, &cfg).unwrap();
+        // reference: the old per-stage two-call (cond, then uncond) Euler loop
+        for (i, out) in fused.iter().enumerate() {
+            let mut x = noises[i].clone();
+            for win in timesteps(cfg.steps, cfg.shift).windows(2) {
+                let (t0, t1) = (win[0], win[1]);
+                let dt = t0 - t1;
+                let vc = den(&x, t0, &conds[i]).unwrap();
+                let vu = den(&x, t0, &uncond).unwrap();
+                for ((xv, &cv), &uv) in x.data.iter_mut().zip(&vc.data).zip(&vu.data) {
+                    let v = uv + w * (cv - uv);
+                    *xv -= dt * v;
+                }
+            }
+            assert_eq!(out.sample.data, x.data, "item {i}");
+            assert_eq!(out.nfe, 10);
+        }
+    }
+
+    /// With `plan_stream_base` set, every stage call carries stable
+    /// per-item/per-branch stream keys, and the streams are released once
+    /// at the end of sampling.
+    #[test]
+    fn keyed_sampling_threads_stream_keys_and_releases() {
+        use std::sync::Mutex;
+        struct Recorder {
+            seen_keys: Mutex<Vec<Vec<Option<u64>>>>,
+            released: Mutex<Vec<u64>>,
+        }
+        impl Denoiser for Recorder {
+            fn velocity(&self, x: &HostTensor, _t: f32, _c: &HostTensor)
+                -> Result<HostTensor> {
+                let mut v = x.clone();
+                for d in &mut v.data {
+                    *d *= 0.5;
+                }
+                Ok(v)
+            }
+            fn velocity_many_keyed(
+                &self,
+                xs: &[&HostTensor],
+                t: f32,
+                conds: &[&HostTensor],
+                keys: &[Option<u64>],
+            ) -> Result<Vec<HostTensor>> {
+                assert_eq!(keys.len(), xs.len());
+                self.seen_keys.lock().unwrap().push(keys.to_vec());
+                xs.iter().zip(conds).map(|(x, c)| self.velocity(x, t, c)).collect()
+            }
+            fn release_streams(&self, keys: &[u64]) {
+                self.released.lock().unwrap().extend_from_slice(keys);
+            }
+        }
+        let den = Recorder {
+            seen_keys: Mutex::new(Vec::new()),
+            released: Mutex::new(Vec::new()),
+        };
+        let noises = vec![HostTensor::zeros(vec![2]); 2];
+        let conds = vec![HostTensor::zeros(vec![1]); 2];
+        let uncond = HostTensor::zeros(vec![1]);
+        let cfg = SamplerConfig {
+            steps: 3,
+            cfg_weight: 2.0,
+            plan_stream_base: Some(100),
+            ..Default::default()
+        };
+        let out = sample_batch(&den, &noises, &conds, &uncond, &cfg).unwrap();
+        assert_eq!(out.len(), 2);
+        let seen = den.seen_keys.lock().unwrap().clone();
+        assert_eq!(seen.len(), 3, "one fused call per Euler step");
+        for keys in &seen {
+            // cond streams for both items, then their uncond streams
+            assert_eq!(keys, &vec![Some(100), Some(102), Some(101), Some(103)]);
+        }
+        let mut released = den.released.lock().unwrap().clone();
+        released.sort_unstable();
+        assert_eq!(released, vec![100, 101, 102, 103]);
     }
 
     #[test]

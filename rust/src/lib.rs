@@ -15,9 +15,16 @@
 //! The native hot path is `attention::batch::BatchSlaEngine`: the fused
 //! single-head SLA kernel lifted to `[B, H, N, d]` with per-(batch, head)
 //! mask prediction, per-head Eq. 6 projections, optional GQA K/V sharing,
-//! and (batch x head)-granular threading. The serving scheduler batches
-//! every tick's requests into one engine invocation, and the native
-//! fine-tuner drives the batched backward.
+//! and (batch x head)-granular threading. Mask *prediction* is split from
+//! kernel *execution* by the plan subsystem (`attention::plan`): cacheable
+//! `AttentionPlan`s are replayed by reference across denoise steps
+//! (`MaskPlanner` for training loops, a per-request `RequestPlanCache` in
+//! the native serving backend), and per-thread `SlaWorkspace` scratch
+//! removes all per-block allocations from the kernel hot path. The
+//! serving scheduler
+//! batches every tick's requests — CFG branches fused — into one keyed
+//! engine invocation, and the native fine-tuner drives the batched
+//! backward under the paper's mask-frozen regime.
 //!
 //! See DESIGN.md (repo root) for the system inventory and experiment index.
 

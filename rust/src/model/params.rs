@@ -17,6 +17,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::attention::plan::MaskPlanner;
 use crate::attention::{BatchSlaEngine, SlaConfig};
 use crate::runtime::{HostTensor, TensorSpec};
 use crate::tensor::Mat;
@@ -163,6 +164,25 @@ impl ParamStore {
         d: usize,
     ) -> BatchSlaEngine {
         BatchSlaEngine::with_projs(cfg, kv_heads, self.sla_head_projs(prefix, heads, d))
+    }
+
+    /// `batch_engine` plus a `MaskPlanner` sharing the same kernel config —
+    /// the engine/planner pair the plan-aware layers (fine-tuning, custom
+    /// serving loops) consume together. `refresh_every` is the number of
+    /// steps a predicted plan serves before re-prediction (1 = always
+    /// fresh, `usize::MAX` ≈ frozen).
+    #[allow(clippy::too_many_arguments)]
+    pub fn batch_engine_with_planner(
+        &self,
+        prefix: &str,
+        cfg: SlaConfig,
+        heads: usize,
+        kv_heads: usize,
+        d: usize,
+        refresh_every: usize,
+    ) -> (BatchSlaEngine, MaskPlanner) {
+        let planner = MaskPlanner::new(cfg.clone(), refresh_every);
+        (self.batch_engine(prefix, cfg, heads, kv_heads, d), planner)
     }
 
     /// Save to the binary checkpoint format.
@@ -384,6 +404,21 @@ mod tests {
         assert_eq!(engine.heads, 2);
         assert_eq!(engine.projs[0].data, vec![0.0; d * d]);
         assert_eq!(engine.projs[1].data, vec![0.5; d * d]);
+    }
+
+    #[test]
+    fn batch_engine_with_planner_shares_the_kernel_config() {
+        let d = 4;
+        let specs = [spec("params.l.sla_proj.0", &[d, d])];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let store = ParamStore::init(&refs, 0);
+        let cfg = crate::attention::SlaConfig { bq: 8, bkv: 8, ..Default::default() };
+        let (engine, planner) =
+            store.batch_engine_with_planner("params.l", cfg, 1, 1, d, 3);
+        assert_eq!(engine.heads, 1);
+        assert_eq!(planner.refresh_every, 3);
+        assert_eq!(planner.cfg.bq, engine.cfg.bq);
+        assert!(planner.current().is_none());
     }
 
     #[test]

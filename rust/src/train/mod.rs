@@ -16,6 +16,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::attention::plan::MaskPlanner;
 use crate::attention::{full, BatchSlaEngine, SlaConfig};
 use crate::model::ParamStore;
 use crate::runtime::{Artifact, HostTensor, Runtime};
@@ -191,10 +192,26 @@ impl Trainer {
 /// granularity. This is the paper's fine-tune recipe distilled to the part
 /// the projection can learn: the linear path compensating the marginal
 /// attention mass the sparse path dropped.
+///
+/// Masks follow the paper's **mask-frozen gradient regime**: the planner
+/// predicts an `AttentionPlan` on the first step (or after a data-shape
+/// change / `planner.force_refresh()`) and every subsequent step replays it
+/// by reference — gradients flow through the kernel, never the mask policy,
+/// and per-step prediction cost is amortized away.
+///
+/// The frozen default assumes the distillation loop iterates a FIXED
+/// (q, k, v) batch (the in-repo usage: `targets` once, then repeated
+/// `step` calls on the same data). A loop that cycles different
+/// mini-batches of the same shape must either call
+/// `planner.force_refresh()` at each batch boundary or configure
+/// `with_plan_refresh(1)` — otherwise later batches would execute the
+/// first batch's masks.
 pub struct NativeFineTuner {
     pub engine: BatchSlaEngine,
     pub lr: f32,
     pub losses: Vec<f32>,
+    /// Owns the frozen distillation plan (refresh on demand only).
+    pub planner: MaskPlanner,
 }
 
 impl NativeFineTuner {
@@ -202,10 +219,18 @@ impl NativeFineTuner {
     /// sparse-only gap to the teacher.
     pub fn new(cfg: SlaConfig, heads: usize, kv_heads: usize, d: usize, lr: f32) -> Self {
         NativeFineTuner {
-            engine: BatchSlaEngine::with_kv_heads(cfg, heads, kv_heads, d),
+            engine: BatchSlaEngine::with_kv_heads(cfg.clone(), heads, kv_heads, d),
+            planner: MaskPlanner::frozen(cfg),
             lr,
             losses: Vec::new(),
         }
+    }
+
+    /// Re-predict the plan every `refresh_every` steps instead of freezing
+    /// it (1 = every step; use when the loop cycles fresh mini-batches).
+    pub fn with_plan_refresh(mut self, refresh_every: usize) -> Self {
+        self.planner = MaskPlanner::new(self.planner.cfg.clone(), refresh_every);
+        self
     }
 
     /// Per-(batch, head) full-attention teacher outputs — the distillation
@@ -230,9 +255,11 @@ impl NativeFineTuner {
 
     /// One distillation step: loss = 0.5 * mean((O - T)^2); updates every
     /// per-head projection by SGD with the batched backward's `dproj`.
+    /// The frozen plan is replayed by reference (predicted on first use).
     /// Returns the (pre-update) loss.
     pub fn step(&mut self, q: &Tens4, k: &Tens4, v: &Tens4, target: &Tens4) -> f32 {
-        let fwd = self.engine.forward(q, k, v);
+        let plan = self.planner.plan_for(q, k);
+        let fwd = self.engine.forward_plan(q, k, v, &plan);
         let mut dout = fwd.o.clone();
         dout.sub_assign(target);
         let numel = dout.numel() as f32;
@@ -305,6 +332,43 @@ mod tests {
         let expect = 0.5 * expect / target.numel() as f64;
         let got = ft.step(&q, &k, &v, &target);
         assert!((got as f64 - expect).abs() < 1e-4 * expect.max(1.0), "{got} vs {expect}");
+    }
+
+    #[test]
+    fn finetuner_freezes_plan_across_steps() {
+        let (q, k, v) = qkv4(1, 2, 32, 8, 14);
+        let mut ft = NativeFineTuner::new(cfg(8), 2, 2, 8, 0.5);
+        let target = ft.targets(&q, &k, &v);
+        for _ in 0..4 {
+            let _ = ft.step(&q, &k, &v, &target);
+        }
+        // one prediction, three frozen replays (paper's mask-frozen regime)
+        assert_eq!(ft.planner.stats().misses, 1);
+        assert_eq!(ft.planner.stats().hits, 3);
+        // an explicit refresh re-predicts on the next step
+        ft.planner.force_refresh();
+        let _ = ft.step(&q, &k, &v, &target);
+        assert_eq!(ft.planner.stats().misses, 2);
+        // frozen-mask steps must equal the always-fresh engine on static
+        // data: the masks are deterministic functions of (q, k)
+        let fresh = ft.engine.forward(&q, &k, &v);
+        let plan = ft.planner.plan_for(&q, &k);
+        let frozen = ft.engine.forward_plan(&q, &k, &v, &plan);
+        assert_eq!(fresh.o.data, frozen.o.data);
+    }
+
+    #[test]
+    fn finetuner_plan_refresh_one_repredicts_each_step() {
+        // the escape hatch for loops cycling fresh mini-batches: refresh=1
+        // predicts from the current batch on every step
+        let (q, k, v) = qkv4(1, 2, 32, 8, 15);
+        let mut ft = NativeFineTuner::new(cfg(8), 2, 2, 8, 0.5).with_plan_refresh(1);
+        let target = ft.targets(&q, &k, &v);
+        for _ in 0..3 {
+            let _ = ft.step(&q, &k, &v, &target);
+        }
+        assert_eq!(ft.planner.stats().misses, 3);
+        assert_eq!(ft.planner.stats().hits, 0);
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Plan-subsystem differential tests:
+//!
+//! * `refresh_every = 1` planning is **bitwise identical** to the
+//!   always-fresh engine (the pre-plan behavior) on evolving inputs;
+//! * a stale plan replayed through the batched engine equals the
+//!   single-head `SlaKernel::forward` given the same mask, head by head;
+//! * quality proxies (`rel_l2`, `psnr` vs fresh-mask execution) degrade
+//!   monotonically as `refresh_every` grows on a drifting-Q/K workload.
+
+use std::sync::Arc;
+
+use sla_dit::attention::plan::{AttentionPlan, MaskPlanner};
+use sla_dit::attention::{BatchSlaEngine, SlaConfig, SlaKernel};
+use sla_dit::metrics::{psnr, rel_l2};
+use sla_dit::tensor::{Mat, Tens4};
+use sla_dit::util::rng::Rng;
+
+fn cfg(block: usize) -> SlaConfig {
+    SlaConfig {
+        bq: block,
+        bkv: block,
+        kh_pct: 25.0,
+        kl_pct: 25.0,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+fn qkv4(b: usize, h: usize, n: usize, d: usize, rng: &mut Rng) -> (Tens4, Tens4, Tens4) {
+    (
+        Tens4::randn(b, h, n, d, rng),
+        Tens4::randn(b, h, n, d, rng),
+        Tens4::randn(b, h, n, d, rng),
+    )
+}
+
+#[test]
+fn refresh_every_one_is_bitwise_identical_to_fresh_prediction() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 8usize);
+    let c = cfg(8);
+    let mut engine = BatchSlaEngine::new(c.clone(), h, d);
+    let mut prng = Rng::new(41);
+    for p in engine.projs.iter_mut() {
+        *p = Mat::randn(d, d, &mut prng).scaled(0.2);
+    }
+    let mut planner = MaskPlanner::new(c, 1);
+    let mut rng = Rng::new(42);
+    for step in 0..4 {
+        // inputs drift every step: refresh_every=1 must re-predict and
+        // match the engine's own internal prediction exactly
+        let (q, k, v) = qkv4(b, h, n, d, &mut rng);
+        let plan = planner.plan_for(&q, &k);
+        let planned = engine.forward_plan(&q, &k, &v, &plan);
+        let fresh = engine.forward(&q, &k, &v);
+        assert_eq!(planned.o.data, fresh.o.data, "step {step} diverged");
+        // backward through the planned forward is bitwise identical too
+        let gp = engine.backward(&q, &k, &v, &planned, &planned.o);
+        let gf = engine.backward(&q, &k, &v, &fresh, &fresh.o);
+        assert_eq!(gp.dq.data, gf.dq.data, "step {step} dq");
+        assert_eq!(gp.dk.data, gf.dk.data, "step {step} dk");
+        assert_eq!(gp.dv.data, gf.dv.data, "step {step} dv");
+    }
+    assert_eq!(planner.stats().hits, 0);
+    assert_eq!(planner.stats().misses, 4);
+}
+
+/// Property: over random shapes, head counts, sparsity knobs, and data,
+/// `refresh_every = 1` planning is bitwise identical to the engine's own
+/// per-call prediction.
+#[test]
+fn prop_refresh_one_always_fresh_bitwise() {
+    use sla_dit::util::prop;
+    prop::check(
+        "plan-refresh-one-bitwise",
+        91,
+        10,
+        |rng| {
+            let block = [4usize, 8][rng.below(2)];
+            let tn = 2 + rng.below(5); // 2..=6 blocks per side
+            let n = block * tn;
+            let b = 1 + rng.below(2);
+            let h = 1 + rng.below(3);
+            let kh = [5.0f64, 25.0, 50.0][rng.below(3)];
+            let kl = [0.0f64, 25.0][rng.below(2)];
+            (b, h, n, 8usize, block, kh, kl, rng.next_u64())
+        },
+        |&(b, h, n, d, block, kh, kl, seed)| {
+            let c = SlaConfig {
+                bq: block,
+                bkv: block,
+                kh_pct: kh,
+                kl_pct: kl,
+                threads: 2,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(seed);
+            let (q, k, v) = qkv4(b, h, n, d, &mut rng);
+            let engine = BatchSlaEngine::new(c.clone(), h, d);
+            let mut planner = MaskPlanner::new(c, 1);
+            for step in 0..2 {
+                let plan = planner.plan_for(&q, &k);
+                let planned = engine.forward_plan(&q, &k, &v, &plan);
+                let fresh = engine.forward(&q, &k, &v);
+                if planned.o.data != fresh.o.data {
+                    return Err(format!("step {step}: planned != fresh"));
+                }
+            }
+            if planner.stats().hits != 0 {
+                return Err("refresh_every=1 must never serve a cached plan".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stale_plan_replay_equals_single_head_kernel_with_same_mask() {
+    let (b, h, n, d) = (2usize, 3usize, 64usize, 8usize);
+    let c = cfg(8);
+    let mut rng = Rng::new(50);
+    let mut engine = BatchSlaEngine::new(c.clone(), h, d);
+    for p in engine.projs.iter_mut() {
+        *p = Mat::randn(d, d, &mut rng).scaled(0.3);
+    }
+    // plan predicted on step-0 data...
+    let (q0, k0, _v0) = qkv4(b, h, n, d, &mut rng);
+    let plan = AttentionPlan::predict(&c, &q0, &k0);
+    // ...replayed on drifted step-1 data (stale by construction)
+    let (q1, k1, v1) = qkv4(b, h, n, d, &mut rng);
+    let out = engine.forward_plan(&q1, &k1, &v1, &plan);
+    for bi in 0..b {
+        for hi in 0..h {
+            let kern = SlaKernel::with_proj(
+                SlaConfig { threads: 1, ..c.clone() },
+                engine.projs[hi].clone(),
+            );
+            let single = kern.forward(
+                &q1.head_mat(bi, hi),
+                &k1.head_mat(bi, hi),
+                &v1.head_mat(bi, hi),
+                Some(plan.mask(bi, hi)),
+            );
+            assert_eq!(
+                out.o.head(bi, hi),
+                &single.o.data[..],
+                "stale replay head ({bi},{hi})"
+            );
+            // the replayed mask is the plan's mask, shared by reference
+            assert!(Arc::ptr_eq(&out.per_head[bi * h + hi].mask, plan.mask(bi, hi)));
+        }
+    }
+}
+
+#[test]
+fn staleness_sweep_degrades_quality_monotonically() {
+    // Drifting workload: every step draws completely fresh Q/K/V, so a
+    // plan of age >= 1 is maximally stale. Accumulated over a fixed
+    // 16-step trajectory, the fraction of stale steps grows strictly with
+    // refresh_every (0, 1/2, 3/4, 15/16), so the accumulated error must
+    // grow strictly and PSNR must fall.
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 8usize);
+    let c = SlaConfig { threads: 1, ..cfg(8) };
+    let steps = 16usize;
+    let mut rng = Rng::new(60);
+    let traj: Vec<(Tens4, Tens4, Tens4)> =
+        (0..steps).map(|_| qkv4(b, h, n, d, &mut rng)).collect();
+    let mut engine = BatchSlaEngine::new(c.clone(), h, d);
+    let mut prng = Rng::new(61);
+    for p in engine.projs.iter_mut() {
+        *p = Mat::randn(d, d, &mut prng).scaled(0.2);
+    }
+    let mut rels = Vec::new();
+    let mut psnrs = Vec::new();
+    for refresh_every in [1usize, 2, 4, 16] {
+        let mut planner = MaskPlanner::new(c.clone(), refresh_every);
+        let mut stale_all: Vec<f32> = Vec::new();
+        let mut fresh_all: Vec<f32> = Vec::new();
+        for (q, k, v) in &traj {
+            let plan = planner.plan_for(q, k);
+            let stale = engine.forward_plan(q, k, v, &plan);
+            let fresh = engine.forward(q, k, v);
+            stale_all.extend_from_slice(&stale.o.data);
+            fresh_all.extend_from_slice(&fresh.o.data);
+        }
+        rels.push(rel_l2(&stale_all, &fresh_all));
+        psnrs.push(psnr(&stale_all, &fresh_all));
+    }
+    assert_eq!(rels[0], 0.0, "refresh_every=1 must be exact");
+    assert!(psnrs[0].is_infinite());
+    for w in rels.windows(2) {
+        assert!(
+            w[0] < w[1],
+            "rel_l2 must degrade monotonically with staleness: {rels:?}"
+        );
+    }
+    for w in psnrs.windows(2) {
+        assert!(
+            w[0] > w[1],
+            "psnr must degrade monotonically with staleness: {psnrs:?}"
+        );
+    }
+    assert!(rels[3] > 0.0);
+}
+
+#[test]
+fn planner_driven_steps_match_manual_mask_replay() {
+    // a planner at refresh_every=3 must serve exactly the masks predicted
+    // at the refresh steps — differential check against manual bookkeeping
+    let (b, h, n, d) = (1usize, 2usize, 32usize, 8usize);
+    let c = SlaConfig { threads: 1, ..cfg(8) };
+    let steps = 7usize;
+    let mut rng = Rng::new(70);
+    let traj: Vec<(Tens4, Tens4, Tens4)> =
+        (0..steps).map(|_| qkv4(b, h, n, d, &mut rng)).collect();
+    let engine = BatchSlaEngine::new(c.clone(), h, d);
+    let mut planner = MaskPlanner::new(c.clone(), 3);
+    let mut manual_plan: Option<AttentionPlan> = None;
+    for (step, (q, k, v)) in traj.iter().enumerate() {
+        let plan = planner.plan_for(q, k);
+        let out = engine.forward_plan(q, k, v, &plan);
+        if step % 3 == 0 {
+            manual_plan = Some(AttentionPlan::predict(&c, q, k));
+        }
+        let manual = engine.forward_plan(q, k, v, manual_plan.as_ref().unwrap());
+        assert_eq!(out.o.data, manual.o.data, "step {step}");
+    }
+    assert_eq!(planner.stats().misses, 3); // steps 0, 3, 6
+    assert_eq!(planner.stats().hits, 4);
+}
