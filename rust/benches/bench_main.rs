@@ -5,17 +5,21 @@
 //!   cargo bench -- fig1          # one experiment
 //!   cargo bench -- table1 fig6a  # a subset
 //!
-//! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, table1, table2,
-//! table3, perf. `batch` compares the batched multi-head SLA engine against
-//! a serial per-head kernel loop on a [B=4, H=8, N=1024, d=64] workload;
-//! `plan` measures fresh-predict vs cached-plan step latency across plan
-//! refresh intervals (smoke shapes via SLA_BENCH_SMOKE=1).
+//! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack, table1,
+//! table2, table3, perf. `batch` compares the batched multi-head SLA engine
+//! against a serial per-head kernel loop on a [B=4, H=8, N=1024, d=64]
+//! workload; `plan` measures fresh-predict vs cached-plan step latency
+//! across plan refresh intervals; `stack` measures the L-layer DiT stack's
+//! full-state vs forward-only vs cached-plan serving paths (smoke shapes
+//! via SLA_BENCH_SMOKE=1).
 //! Knobs (env): SLA_BENCH_PRETRAIN, SLA_BENCH_FINETUNE, SLA_BENCH_PROMPTS,
 //! SLA_BENCH_GEN_STEPS, SLA_BENCH_SMOKE, SLA_BENCH_PLAN_N,
-//! SLA_BENCH_PLAN_STEPS, SLA_DIT_ARTIFACTS.
+//! SLA_BENCH_PLAN_STEPS, SLA_BENCH_STACK_N, SLA_BENCH_STACK_DEPTH,
+//! SLA_DIT_ARTIFACTS.
 //!
-//! Results are printed as paper-style tables and appended as JSON lines to
-//! bench_results/results.jsonl.
+//! Results are printed as paper-style tables, appended as JSON lines to
+//! bench_results/results.jsonl, and written per experiment to the
+//! machine-readable bench_results/BENCH_<name>.json artifacts CI uploads.
 
 #[path = "harness/common.rs"]
 mod common;
@@ -27,6 +31,8 @@ mod kernels;
 mod perf;
 #[path = "harness/plans.rs"]
 mod plans;
+#[path = "harness/stacks.rs"]
+mod stacks;
 #[path = "harness/tables.rs"]
 mod tables;
 
@@ -35,8 +41,10 @@ fn main() {
         .skip(1)
         .filter(|a| !a.starts_with("--")) // ignore cargo-bench flags like --bench
         .collect();
-    let all =
-        ["fig1", "fig3", "fig6a", "fig6b", "batch", "plan", "table1", "table2", "table3"];
+    let all = [
+        "fig1", "fig3", "fig6a", "fig6b", "batch", "plan", "stack", "table1", "table2",
+        "table3",
+    ];
     let selected: Vec<&str> = if args.is_empty() {
         all.to_vec()
     } else {
@@ -53,6 +61,7 @@ fn main() {
             "fig6b" => kernels::fig6b(),
             "batch" => kernels::batch(),
             "plan" => plans::plan(),
+            "stack" => stacks::stack(),
             "table1" => tables::table1(),
             "table2" => tables::table2(),
             "table3" => tables::table3(),

@@ -86,3 +86,29 @@ pub fn log_result(experiment: &str, payload: Json) {
         let _ = writeln!(f, "{line}");
     }
 }
+
+/// Write the machine-readable per-experiment artifact CI uploads:
+/// `bench_results/BENCH_<name>.json` — one self-contained JSON object per
+/// experiment (workload shape, timings in ns/step, mask sparsity), always
+/// overwritten so the artifact reflects the latest run.
+pub fn write_bench_json(name: &str, payload: Json) {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let rec = Json::obj(vec![
+        ("experiment", Json::str(name)),
+        ("smoke", Json::Bool(smoke)),
+        ("payload", payload),
+    ]);
+    let _ = std::fs::create_dir_all("bench_results");
+    let _ = std::fs::write(format!("bench_results/BENCH_{name}.json"), rec.to_string());
+}
+
+/// The `{b, h, n, d, block}` shape stanza every bench artifact embeds.
+pub fn shape_json(b: usize, h: usize, n: usize, d: usize, block: usize) -> Json {
+    Json::obj(vec![
+        ("b", Json::num(b as f64)),
+        ("h", Json::num(h as f64)),
+        ("n", Json::num(n as f64)),
+        ("d", Json::num(d as f64)),
+        ("block", Json::num(block as f64)),
+    ])
+}

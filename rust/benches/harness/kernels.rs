@@ -171,8 +171,14 @@ pub fn fig6a() -> Result<()> {
 /// same masks (predicted per head either way), fwd and bwd. The batched
 /// path fans (batch x head) tasks across the threadpool; at threads=1 it
 /// should match the loop (same work), and beat it at threads > 1.
+/// `SLA_BENCH_SMOKE=1` (CI) shrinks the shapes.
 pub fn batch() -> Result<()> {
-    let (bsz, heads, n, d, blk) = (4usize, 8usize, 1024usize, 64usize, 64usize);
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (bsz, heads, n, d, blk) = if smoke {
+        (2usize, 2usize, 128usize, 16usize, 16usize)
+    } else {
+        (4usize, 8usize, 1024usize, 64usize, 64usize)
+    };
     let mut qs: Vec<Mat> = Vec::new();
     let mut ks: Vec<Mat> = Vec::new();
     let mut vs: Vec<Mat> = Vec::new();
@@ -236,7 +242,19 @@ pub fn batch() -> Result<()> {
             ("bwd_speedup", Json::num(t_loop_bwd / t_bwd)),
         ]));
     }
-    log_result("batch", Json::Arr(jrows));
+    log_result("batch", Json::Arr(jrows.clone()));
+    // machine-readable artifact: shape + ns/step + executed mask sparsity
+    let probe = BatchSlaEngine::new(base.clone(), heads, d).forward(&q4, &k4, &v4);
+    crate::common::write_bench_json(
+        "batch",
+        Json::obj(vec![
+            ("shape", crate::common::shape_json(bsz, heads, n, d, blk)),
+            ("loop_fwd_ns_per_step", Json::num(t_loop_fwd * 1e9)),
+            ("loop_bwd_ns_per_step", Json::num(t_loop_bwd * 1e9)),
+            ("mask_sparsity", Json::num(probe.mean_sparsity())),
+            ("rows", Json::Arr(jrows)),
+        ]),
+    );
     println!("\nexpected shape: ~parity at threads=1 (same work, coarser tasks),");
     println!("near-linear scaling while threads <= B*H and cores allow");
     Ok(())

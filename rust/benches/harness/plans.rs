@@ -20,7 +20,9 @@ use sla_dit::attention::{BatchSlaEngine, SlaConfig};
 use sla_dit::tensor::Tens4;
 use sla_dit::util::json::Json;
 
-use crate::common::{clustered_qkv, env_usize, log_result, time_median};
+use crate::common::{
+    clustered_qkv, env_usize, log_result, shape_json, time_median, write_bench_json,
+};
 
 pub fn plan() -> Result<()> {
     let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
@@ -137,7 +139,20 @@ pub fn plan() -> Result<()> {
             ("speedup_vs_fresh", Json::num(t_fresh / per_step)),
         ]));
     }
-    log_result("plan", Json::Arr(jrows));
+    log_result("plan", Json::Arr(jrows.clone()));
+    // machine-readable artifact: shape + ns/step per path + mask sparsity
+    write_bench_json(
+        "plan",
+        Json::obj(vec![
+            ("shape", shape_json(bsz, heads, n, d, blk)),
+            ("fresh_ns_per_step", Json::num(t_fresh * 1e9)),
+            ("cached_ns_per_step", Json::num(t_cached * 1e9)),
+            ("predict_ns", Json::num(t_predict * 1e9)),
+            ("mask_sparsity", Json::num(plan0.mean_sparsity)),
+            ("marginal_fraction", Json::num(plan0.mean_marginal_fraction)),
+            ("rows", Json::Arr(jrows)),
+        ]),
+    );
     println!("\nexpected shape: cached-plan steps strictly faster than fresh-predict");
     println!("steps (prediction amortized away), converging to the cached-replay");
     println!("latency as refresh_every grows");

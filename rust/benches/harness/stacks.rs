@@ -1,0 +1,115 @@
+//! `stack` experiment: the L-layer DiT stack's serving paths.
+//!
+//! Measures, per denoise step on a clustered [B, N, C] workload through a
+//! depth-L `DitStack`:
+//!  * `full`         — full-state forward (per-layer backward state
+//!    retained, fresh per-layer mask prediction);
+//!  * `forward-only` — the serving mode: bitwise-identical outputs, no
+//!    backward state materialized (expected measurably faster — no per-
+//!    (batch, head) state retention across the whole call);
+//!  * `cached`       — forward-only serving with per-(request, layer) plan
+//!    cache hits (prediction amortized away across steps).
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes so this
+//! harness entry cannot bit-rot without burning CI minutes.
+
+use anyhow::Result;
+
+use sla_dit::attention::plan::RequestPlanCache;
+use sla_dit::attention::SlaConfig;
+use sla_dit::model::DitStack;
+use sla_dit::tensor::Mat;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+use crate::common::{env_usize, log_result, shape_json, time_median, write_bench_json};
+
+pub fn stack() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (bsz, heads, n, d, c, blk, depth, reps) = if smoke {
+        (2usize, 2usize, 128usize, 16usize, 32usize, 16usize, 2usize, 2usize)
+    } else {
+        (
+            2,
+            8,
+            env_usize("SLA_BENCH_STACK_N", 1024),
+            64,
+            512,
+            64,
+            env_usize("SLA_BENCH_STACK_DEPTH", 4),
+            3,
+        )
+    };
+    let cfg = SlaConfig {
+        bq: blk,
+        bkv: blk,
+        kh_pct: 5.0,
+        kl_pct: 10.0,
+        threads: sla_dit::util::threadpool::default_threads().min(8),
+        ..Default::default()
+    };
+    let stack = DitStack::random(cfg, depth, heads, d, c, 900);
+    let mut rng = Rng::new(901);
+    let hs: Vec<Mat> = (0..bsz).map(|_| Mat::randn(n, c, &mut rng)).collect();
+    let mods = vec![1.0f32; bsz];
+    println!(
+        "workload: B={bsz} L={depth} H={heads} N={n} d={d} C={c} block={blk} \
+         (kh=5%, kl=10%){}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    // full-state forward (fresh prediction, per-layer state retained)
+    let t_full = time_median(reps, || {
+        let _ = stack.forward_fresh(&hs, &mods);
+    });
+    // forward-only serving mode (fresh prediction, no backward state)
+    let t_light = time_median(reps, || {
+        let _ = stack.forward_only(&hs, &mods);
+    });
+    // keyed serving with a warm per-(request, layer) plan cache
+    let keys: Vec<Option<u64>> = (0..bsz as u64).map(Some).collect();
+    let mut cache = RequestPlanCache::new(usize::MAX);
+    let _ = stack.forward_serving(&hs, &mods, &keys, &mut cache, true); // warm the cache
+    let t_cached = time_median(reps, || {
+        let _ = stack.forward_serving(&hs, &mods, &keys, &mut cache, true);
+    });
+    let sparsity = cache.stats().mean_sparsity();
+
+    println!("\n{:<28} {:>12} {:>10}", "path", "ms/step", "vs full");
+    println!("{:<28} {:>12.2} {:>9.2}x", "full-state forward", t_full * 1e3, 1.0);
+    println!(
+        "{:<28} {:>12.2} {:>9.2}x",
+        "forward-only (serving)",
+        t_light * 1e3,
+        t_full / t_light
+    );
+    println!(
+        "{:<28} {:>12.2} {:>9.2}x",
+        "forward-only + cached plans",
+        t_cached * 1e3,
+        t_full / t_cached
+    );
+    println!(
+        "\nplan cache: hits={} misses={} mask sparsity {:.1}%",
+        cache.stats().hits,
+        cache.stats().misses,
+        100.0 * sparsity
+    );
+
+    let payload = Json::obj(vec![
+        ("shape", shape_json(bsz, heads, n, d, blk)),
+        ("depth", Json::num(depth as f64)),
+        ("channels", Json::num(c as f64)),
+        ("full_ns_per_step", Json::num(t_full * 1e9)),
+        ("forward_only_ns_per_step", Json::num(t_light * 1e9)),
+        ("cached_ns_per_step", Json::num(t_cached * 1e9)),
+        ("forward_only_speedup", Json::num(t_full / t_light)),
+        ("cached_speedup", Json::num(t_full / t_cached)),
+        ("mask_sparsity", Json::num(sparsity)),
+    ]);
+    log_result("stack", payload.clone());
+    write_bench_json("stack", payload);
+    println!("\nexpected shape: forward-only at or below full-state latency (no state");
+    println!("retention), cached-plan serving fastest (prediction amortized away)");
+    Ok(())
+}

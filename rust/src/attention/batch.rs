@@ -19,7 +19,15 @@
 //! cached [`AttentionPlan`] and `forward_with` a borrowed mask slice, with
 //! only `Arc` refcount bumps per task (the pre-plan engine deep-copied the
 //! kernel config, the per-head projection, AND every mask per task). The
-//! per-task scratch lives in the per-thread `SlaWorkspace`.
+//! per-task scratch lives in the per-thread `SlaWorkspace`, which survives
+//! across calls on the persistent `util::threadpool` workers.
+//!
+//! Serving uses the **forward-only** fan (`forward_only*` /
+//! `forward_plan_only`): bitwise-identical outputs with no per-head
+//! backward state retained, each task writing straight into the output
+//! tensor. With `cfg.agg == AggStrategy::Auto`, plan replay consumes
+//! [`AttentionPlan::auto_agg`] so the A.3 aggregation strategy follows the
+//! plan's own marginal density.
 //!
 //! GQA-style K/V head sharing: with `kv_heads < heads`, query head `h`
 //! attends over K/V head `h / (heads / kv_heads)`, and the backward
@@ -28,9 +36,11 @@
 use std::sync::Arc;
 
 use super::mask::CompressedMask;
+use super::opt::AggStrategy;
 use super::plan::AttentionPlan;
-use super::sla::{sla_backward, sla_forward, SlaConfig, SlaGrads, SlaOutput};
+use super::sla::{sla_backward, sla_forward, sla_forward_only, SlaConfig, SlaGrads, SlaOutput};
 use crate::tensor::{Mat, Tens4};
+use crate::util::sendptr::SendPtr;
 use crate::util::threadpool;
 
 /// Forward products of one batched call: assembled output plus the
@@ -57,6 +67,28 @@ impl BatchSlaOutput {
         }
         self.per_head.iter().map(|o| o.mask.sparsity()).sum::<f64>()
             / self.per_head.len() as f64
+    }
+}
+
+/// Forward-only products of one batched call: the assembled output and the
+/// executed masks — NO per-head backward state is retained, so the
+/// transient memory of a serving call is one `[B, H, N, d]` output instead
+/// of seven `(N, d)` buffers per (batch, head). Outputs are bitwise
+/// identical to [`BatchSlaOutput::o`].
+pub struct BatchSlaLight {
+    /// `[B, H, N, d]` fused output `O = O^s + O^l proj_h`.
+    pub o: Tens4,
+    /// Per-(batch, head) executed masks, index `bi * heads + hi`.
+    pub masks: Vec<Arc<CompressedMask>>,
+}
+
+impl BatchSlaLight {
+    /// Mean mask sparsity across the batch x head grid.
+    pub fn mean_sparsity(&self) -> f64 {
+        if self.masks.is_empty() {
+            return 0.0;
+        }
+        self.masks.iter().map(|m| m.sparsity()).sum::<f64>() / self.masks.len() as f64
     }
 }
 
@@ -154,15 +186,16 @@ impl BatchSlaEngine {
         self.forward_with(q, k, v, None)
     }
 
-    /// Replay a cached plan: every (batch, head) executes its planned mask
-    /// by reference — the amortized path for cross-step plan reuse.
-    pub fn forward_plan(
-        &self,
-        q: &Tens4,
-        k: &Tens4,
-        v: &Tens4,
-        plan: &AttentionPlan,
-    ) -> BatchSlaOutput {
+    /// Validate `plan` against this engine's grid, and resolve the inner
+    /// kernel config for its replay: with `cfg.agg == Auto`, the plan's
+    /// [`AttentionPlan::auto_agg`] picks the A.3 aggregation strategy for
+    /// the whole call — the layer-level "strategy follows the plan's
+    /// marginal density" consumption the stack uses. NOTE the scope
+    /// difference: non-plan paths resolve `Auto` PER MASK inside
+    /// `aggregate_marginal`, so with heterogeneous masks a plan replay can
+    /// differ from the fresh path in f32 summation order (both exact);
+    /// with any concrete strategy all paths are bitwise identical.
+    fn plan_cfg(&self, q: &Tens4, plan: &AttentionPlan) -> SlaConfig {
         let (b, h, n, _d) = q.dims();
         assert_eq!(
             (plan.batch, plan.heads),
@@ -182,7 +215,41 @@ impl BatchSlaEngine {
         );
         assert_eq!(plan.tm, n / self.cfg.bq, "plan row-block grid mismatch");
         assert_eq!(plan.tn, n / self.cfg.bkv, "plan KV-block grid mismatch");
-        self.forward_with(q, k, v, Some(&plan.masks))
+        let mut inner = self.inner_cfg();
+        if inner.agg == AggStrategy::Auto {
+            inner.agg = plan.auto_agg();
+        }
+        inner
+    }
+
+    /// Replay a cached plan: every (batch, head) executes its planned mask
+    /// by reference — the amortized path for cross-step plan reuse. With
+    /// `cfg.agg == Auto` the plan's `auto_agg()` picks the aggregation
+    /// strategy for the call.
+    pub fn forward_plan(
+        &self,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        plan: &AttentionPlan,
+    ) -> BatchSlaOutput {
+        let inner = self.plan_cfg(q, plan);
+        self.fan_forward(&inner, q, k, v, |i| Some(&plan.masks[i]))
+    }
+
+    /// Forward-only plan replay: [`BatchSlaEngine::forward_plan`] without
+    /// materializing any backward state (the serving path).
+    pub fn forward_plan_only(
+        &self,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        plan: &AttentionPlan,
+    ) -> BatchSlaLight {
+        let inner = self.plan_cfg(q, plan);
+        let slots: Vec<Option<Arc<CompressedMask>>> =
+            plan.masks.iter().map(|m| Some(Arc::clone(m))).collect();
+        self.fan_forward_only(&inner, q, k, v, &slots)
     }
 
     pub fn forward_with(
@@ -196,7 +263,7 @@ impl BatchSlaEngine {
             let (b, h, _, _) = q.dims();
             assert_eq!(ms.len(), b * h, "need one mask per (batch, head)");
         }
-        self.fan_forward(q, k, v, |i| masks.map(|ms| &ms[i]))
+        self.fan_forward(&self.inner_cfg(), q, k, v, |i| masks.map(|ms| &ms[i]))
     }
 
     /// Per-task mask variant: slot `i` (`bi * heads + hi`) replays its mask
@@ -213,13 +280,39 @@ impl BatchSlaEngine {
     ) -> BatchSlaOutput {
         let (b, h, _, _) = q.dims();
         assert_eq!(masks.len(), b * h, "need one mask slot per (batch, head)");
-        self.fan_forward(q, k, v, |i| masks[i].as_ref())
+        self.fan_forward(&self.inner_cfg(), q, k, v, |i| masks[i].as_ref())
+    }
+
+    /// Forward-only batched call with fresh per-(batch, head) predictions.
+    pub fn forward_only(&self, q: &Tens4, k: &Tens4, v: &Tens4) -> BatchSlaLight {
+        let (b, h, _, _) = q.dims();
+        let slots: Vec<Option<Arc<CompressedMask>>> = vec![None; b * h];
+        self.forward_only_with(q, k, v, &slots)
+    }
+
+    /// Forward-only batched call with per-task mask slots (the serving hot
+    /// path): slot `i` replays its mask by reference when `Some`, predicts
+    /// in-task when `None`. Outputs are bitwise identical to
+    /// [`BatchSlaEngine::forward_with_opt`], but no per-head backward state
+    /// is materialized and each task writes its output rows directly into
+    /// the `[B, H, N, d]` result.
+    pub fn forward_only_with(
+        &self,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        masks: &[Option<Arc<CompressedMask>>],
+    ) -> BatchSlaLight {
+        let (b, h, _, _) = q.dims();
+        assert_eq!(masks.len(), b * h, "need one mask slot per (batch, head)");
+        self.fan_forward_only(&self.inner_cfg(), q, k, v, masks)
     }
 
     /// The shared (batch x head) forward fan; `mask_of(i)` supplies task
     /// `i`'s mask (None = predict in-task).
     fn fan_forward<'m>(
         &self,
+        inner: &SlaConfig,
         q: &Tens4,
         k: &Tens4,
         v: &Tens4,
@@ -228,7 +321,6 @@ impl BatchSlaEngine {
         self.check_shapes(q, k, v);
         let (b, h, n, d) = q.dims();
         let gsz = self.group_size();
-        let inner = self.inner_cfg();
         let fan = self.cfg.threads.max(1);
         let per_head: Vec<SlaOutput> =
             threadpool::parallel_map_send(b * h, fan, |i| {
@@ -236,13 +328,51 @@ impl BatchSlaEngine {
                 let qm = q.head_mat(bi, hi);
                 let km = k.head_mat(bi, hi / gsz);
                 let vm = v.head_mat(bi, hi / gsz);
-                sla_forward(&inner, &self.projs[hi], &qm, &km, &vm, mask_of(i))
+                sla_forward(inner, &self.projs[hi], &qm, &km, &vm, mask_of(i))
             });
         let mut o = Tens4::zeros(b, h, n, d);
         for (i, r) in per_head.iter().enumerate() {
             o.head_mut(i / h, i % h).copy_from_slice(&r.o.data);
         }
         BatchSlaOutput { o, per_head }
+    }
+
+    /// The forward-only fan: each task runs the light kernel and copies its
+    /// rows straight into the output tensor (disjoint head slabs), returning
+    /// only the executed mask.
+    fn fan_forward_only(
+        &self,
+        inner: &SlaConfig,
+        q: &Tens4,
+        k: &Tens4,
+        v: &Tens4,
+        masks: &[Option<Arc<CompressedMask>>],
+    ) -> BatchSlaLight {
+        self.check_shapes(q, k, v);
+        let (b, h, n, d) = q.dims();
+        let gsz = self.group_size();
+        let fan = self.cfg.threads.max(1);
+        let mut o = Tens4::zeros(b, h, n, d);
+        let slab = n * d;
+        let o_ptr = SendPtr(o.data.as_mut_ptr());
+        let out_masks: Vec<Arc<CompressedMask>> =
+            threadpool::parallel_map_send(b * h, fan, |i| {
+                let (bi, hi) = (i / h, i % h);
+                let qm = q.head_mat(bi, hi);
+                let km = k.head_mat(bi, hi / gsz);
+                let vm = v.head_mat(bi, hi / gsz);
+                let lo =
+                    sla_forward_only(inner, &self.projs[hi], &qm, &km, &vm, masks[i].as_ref());
+                // SAFETY: task `i` writes exactly head slab `i` (rows
+                // `i*slab .. (i+1)*slab`) — disjoint per task, and `o`
+                // outlives the blocking fan.
+                unsafe {
+                    std::slice::from_raw_parts_mut(o_ptr.get().add(i * slab), slab)
+                        .copy_from_slice(&lo.o.data);
+                }
+                lo.mask
+            });
+        BatchSlaLight { o, masks: out_masks }
     }
 
     /// Batched Alg. 2 + the Eq. 6 chain. `dK`/`dV` are accumulated across
@@ -460,5 +590,68 @@ mod tests {
         for (m, ph) in plan.masks.iter().zip(&via_plan.per_head) {
             assert!(Arc::ptr_eq(m, &ph.mask));
         }
+    }
+
+    #[test]
+    fn forward_only_matches_full_forward_bitwise() {
+        let (b, h, n, d) = (2, 3, 32, 8);
+        let (q, k, v) = qkv4(b, h, n, d, 7);
+        let mut engine = BatchSlaEngine::new(cfg(8, 4), h, d);
+        let mut rng = Rng::new(70);
+        for p in engine.projs.iter_mut() {
+            *p = Mat::randn(d, d, &mut rng).scaled(0.2);
+        }
+        let full = engine.forward(&q, &k, &v);
+        let light = engine.forward_only(&q, &k, &v);
+        assert_eq!(light.o.data, full.o.data, "forward-only must match bitwise");
+        assert_eq!(light.masks.len(), b * h);
+        assert!((light.mean_sparsity() - full.mean_sparsity()).abs() < 1e-12);
+        // replaying cached slots through the light path shares the Arcs
+        let slots: Vec<Option<Arc<CompressedMask>>> =
+            full.masks().into_iter().map(Some).collect();
+        let replay = engine.forward_only_with(&q, &k, &v, &slots);
+        assert_eq!(replay.o.data, full.o.data);
+        for (a, b2) in replay.masks.iter().zip(&full.per_head) {
+            assert!(Arc::ptr_eq(a, &b2.mask));
+        }
+    }
+
+    #[test]
+    fn forward_plan_only_matches_forward_plan() {
+        let (b, h, n, d) = (2, 2, 32, 8);
+        let (q, k, v) = qkv4(b, h, n, d, 8);
+        let engine = BatchSlaEngine::new(cfg(8, 2), h, d);
+        let plan = AttentionPlan::predict(&engine.cfg, &q, &k);
+        let full = engine.forward_plan(&q, &k, &v, &plan);
+        let light = engine.forward_plan_only(&q, &k, &v, &plan);
+        assert_eq!(light.o.data, full.o.data);
+        for (m, pm) in light.masks.iter().zip(&plan.masks) {
+            assert!(Arc::ptr_eq(m, pm), "plan replay keeps mask sharing");
+        }
+    }
+
+    #[test]
+    fn auto_agg_plan_replay_is_exact_and_follows_the_plan() {
+        // cfg.agg = Auto: forward_plan resolves the strategy from the
+        // plan's marginal density (engine-consumed auto_agg); the result is
+        // numerically equal to executing the resolved strategy directly
+        let (b, h, n, d) = (1, 2, 64, 8);
+        let (q, k, v) = qkv4(b, h, n, d, 9);
+        let auto_engine = BatchSlaEngine::new(
+            SlaConfig { agg: AggStrategy::Auto, ..cfg(8, 2) },
+            h,
+            d,
+        );
+        let plan = AttentionPlan::predict(&auto_engine.cfg, &q, &k);
+        let resolved = plan.auto_agg();
+        assert_ne!(resolved, AggStrategy::Auto);
+        let via_auto = auto_engine.forward_plan(&q, &k, &v, &plan);
+        let concrete_engine =
+            BatchSlaEngine::new(SlaConfig { agg: resolved, ..cfg(8, 2) }, h, d);
+        let via_concrete = concrete_engine.forward_plan(&q, &k, &v, &plan);
+        assert_eq!(via_auto.o.data, via_concrete.o.data);
+        // the light path resolves identically
+        let light = auto_engine.forward_plan_only(&q, &k, &v, &plan);
+        assert_eq!(light.o.data, via_auto.o.data);
     }
 }

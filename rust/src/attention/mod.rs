@@ -32,11 +32,16 @@ pub mod plan;
 pub mod sla;
 pub mod sparse;
 
-pub use batch::{BatchSlaEngine, BatchSlaGrads, BatchSlaOutput};
+pub use batch::{BatchSlaEngine, BatchSlaGrads, BatchSlaLight, BatchSlaOutput};
 pub use flops::FlopsReport;
 pub use linear::Phi;
 pub use mask::{CompressedMask, Label, MaskPolicy};
+pub use opt::AggStrategy;
 pub use plan::{
     AttentionPlan, MaskPlanner, PlanCacheStats, PlanStats, RequestPlanCache, SlaWorkspace,
+    StackPlanner,
 };
-pub use sla::{sla_backward, sla_forward, SlaConfig, SlaKernel, SlaOutput};
+pub use sla::{
+    sla_backward, sla_forward, sla_forward_only, SlaConfig, SlaKernel, SlaLightOutput,
+    SlaOutput,
+};

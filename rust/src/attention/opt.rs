@@ -20,6 +20,14 @@ pub enum AggStrategy {
     Naive,
     PreAggregate,
     FourRussians { g: usize },
+    /// Defer the choice to the executed mask: resolved per mask from its
+    /// marginal fraction via [`AggStrategy::auto`] at aggregation time —
+    /// except on the plan-replay path, where the engine consumes the
+    /// plan's MEAN marginal fraction (`AttentionPlan::auto_agg`) for the
+    /// whole call. All strategies are exact, so the two resolution scopes
+    /// agree up to f32 summation order; bitwise reproducibility holds
+    /// within each path (and across ALL paths for concrete strategies).
+    Auto,
 }
 
 impl AggStrategy {
@@ -27,6 +35,7 @@ impl AggStrategy {
         Ok(match s {
             "naive" => AggStrategy::Naive,
             "preagg" => AggStrategy::PreAggregate,
+            "auto" => AggStrategy::Auto,
             s if s.starts_with("fr") => {
                 let g: usize = s[2..].parse().map_err(|_| {
                     anyhow::anyhow!("four-russians strategy is fr<g>, e.g. fr4")
@@ -34,12 +43,13 @@ impl AggStrategy {
                 anyhow::ensure!((1..=16).contains(&g), "fr g must be in 1..=16");
                 AggStrategy::FourRussians { g }
             }
-            _ => anyhow::bail!("unknown aggregation strategy {s:?} (naive|preagg|fr<g>)"),
+            _ => anyhow::bail!("unknown aggregation strategy {s:?} (naive|preagg|fr<g>|auto)"),
         })
     }
 
     /// Pick automatically from the marginal fraction (the A.3 guidance:
     /// pre-aggregation when marginal > ~70%, Four Russians mid-range).
+    /// Always returns a concrete (non-`Auto`) strategy.
     pub fn auto(marginal_fraction: f64) -> AggStrategy {
         if marginal_fraction > 0.7 {
             AggStrategy::PreAggregate
@@ -47,6 +57,15 @@ impl AggStrategy {
             AggStrategy::FourRussians { g: 4 }
         } else {
             AggStrategy::Naive
+        }
+    }
+
+    /// Concrete strategy for a mask with the given marginal fraction:
+    /// `Auto` resolves via [`AggStrategy::auto`], everything else is itself.
+    pub fn resolve(self, marginal_fraction: f64) -> AggStrategy {
+        match self {
+            AggStrategy::Auto => AggStrategy::auto(marginal_fraction),
+            s => s,
         }
     }
 }
@@ -59,6 +78,10 @@ pub fn aggregate_marginal(
     mask: &CompressedMask,
     strategy: AggStrategy,
 ) -> (Vec<Mat>, Mat) {
+    // `Auto` follows the executed mask's own marginal density — the same
+    // resolution on every path (fresh predict, cache hit, forward-only), so
+    // replaying a cached mask is bitwise identical to its first execution.
+    let strategy = strategy.resolve(mask.marginal_fraction());
     let tn = mask.tn;
     let tm = mask.tm;
     let d = state.z.cols;
@@ -177,6 +200,7 @@ pub fn aggregate_marginal(
             }
             (hs, zs)
         }
+        AggStrategy::Auto => unreachable!("Auto resolved to a concrete strategy above"),
     }
 }
 
@@ -268,7 +292,25 @@ mod tests {
         assert_eq!(AggStrategy::parse("naive").unwrap(), AggStrategy::Naive);
         assert_eq!(AggStrategy::parse("preagg").unwrap(), AggStrategy::PreAggregate);
         assert_eq!(AggStrategy::parse("fr4").unwrap(), AggStrategy::FourRussians { g: 4 });
+        assert_eq!(AggStrategy::parse("auto").unwrap(), AggStrategy::Auto);
         assert!(AggStrategy::parse("fr99").is_err());
         assert!(AggStrategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn auto_resolves_per_mask_bitwise() {
+        // Auto must execute exactly as the strategy auto() picks for the
+        // mask's own marginal fraction — per-mask resolution, bitwise
+        let (state, mask) = setup(64, 8, 8, 9);
+        let concrete = AggStrategy::auto(mask.marginal_fraction());
+        assert_ne!(concrete, AggStrategy::Auto);
+        assert_eq!(AggStrategy::Auto.resolve(mask.marginal_fraction()), concrete);
+        assert_eq!(AggStrategy::Naive.resolve(0.99), AggStrategy::Naive);
+        let (ha, za) = aggregate_marginal(&state, &mask, AggStrategy::Auto);
+        let (hc, zc) = aggregate_marginal(&state, &mask, concrete);
+        for (a, b) in ha.iter().zip(&hc) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(za.data, zc.data);
     }
 }

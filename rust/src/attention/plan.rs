@@ -15,16 +15,18 @@
 //!  * [`MaskPlanner`] — owns the prediction policy and staleness: a plan is
 //!    reused for `refresh_every` consecutive steps, then re-predicted; a
 //!    shape change or [`MaskPlanner::force_refresh`] re-predicts immediately.
+//!  * [`StackPlanner`] — per-layer `MaskPlanner`s for an L-layer DiT stack;
+//!    each layer's plan ages independently and stats are per layer.
 //!  * [`RequestPlanCache`] — the serving-side variant: plans keyed by
-//!    request id (one entry per request and CFG branch), with hit/miss/
-//!    refresh/eviction accounting surfaced through `ServeReport`.
+//!    **(request stream, stack layer)** (one stream per request and CFG
+//!    branch), with aggregate and per-layer hit/miss/refresh/eviction
+//!    accounting surfaced through `ServeReport`.
 //!  * [`SlaWorkspace`] — the reusable per-thread scratch (`s`, `m`, `l`,
 //!    `acc`, `p`) the fused kernels borrow via [`with_workspace`]: no
-//!    per-block or per-row-block allocations, and calls executing on a
-//!    long-lived thread (single-threaded kernels, serving loops) reuse the
-//!    buffers across calls entirely. Scoped worker threads still recreate
-//!    their TLS per engine invocation — a persistent worker pool is the
-//!    recorded ROADMAP follow-up.
+//!    per-block or per-row-block allocations. Workers are the persistent
+//!    pool threads of `util::threadpool`, so the scratch survives across
+//!    batched engine invocations and the steady-state hot path allocates
+//!    nothing.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -46,8 +48,9 @@ use crate::util::threadpool;
 /// the backward's recomputed probability tile (`p`). One lives per OS
 /// thread (see [`with_workspace`]); `ensure` resizes only when the block
 /// geometry changes, so repeated forward/backward calls on one long-lived
-/// thread are allocation-free after the first (fresh scoped worker threads
-/// allocate once per engine invocation).
+/// thread are allocation-free after the first — and since the threadpool
+/// workers are persistent, that includes every worker across engine
+/// invocations, not just the submitting thread.
 #[derive(Debug, Default)]
 pub struct SlaWorkspace {
     pub s: Vec<f32>,
@@ -326,14 +329,18 @@ struct CacheEntry {
     tm: usize,
 }
 
-/// Per-request plan cache for the serving path: each in-flight request (and
-/// each of its CFG branches) owns a keyed entry whose per-head masks are
-/// reused for `refresh_every` denoise steps. Entries are dropped when the
-/// scheduler reports the request finished.
+/// Per-request plan cache for the serving path, keyed by **(request
+/// stream, stack layer)**: each in-flight request (and each of its CFG
+/// branches) owns one entry per DiT layer — deeper layers see
+/// post-residual hidden states, so their masks are their own and two
+/// layers must never cross-hit. Per-head masks are reused for
+/// `refresh_every` denoise steps; `end_request` drops every layer of a
+/// finished stream. Counters are kept both in aggregate and per layer.
 pub struct RequestPlanCache {
     pub refresh_every: usize,
-    entries: HashMap<u64, CacheEntry>,
+    entries: HashMap<(u64, u32), CacheEntry>,
     stats: PlanCacheStats,
+    per_layer: Vec<PlanCacheStats>,
 }
 
 impl RequestPlanCache {
@@ -343,76 +350,114 @@ impl RequestPlanCache {
             refresh_every,
             entries: HashMap::new(),
             stats: PlanCacheStats::default(),
+            per_layer: Vec::new(),
         }
     }
 
-    /// The cached masks for `key`, if fresh and shape-compatible — counts a
-    /// hit and advances the entry's age. `None` means the caller must
-    /// predict and then [`RequestPlanCache::store`] the result (this split
-    /// lets batched callers collect every miss first and predict them in
-    /// one wide parallel fan instead of per request).
+    fn layer_slot(&mut self, layer: usize) -> &mut PlanCacheStats {
+        if self.per_layer.len() <= layer {
+            self.per_layer.resize(layer + 1, PlanCacheStats::default());
+        }
+        &mut self.per_layer[layer]
+    }
+
+    /// The cached masks for `(key, layer)`, if fresh and shape-compatible —
+    /// counts a hit and advances the entry's age. `None` means the caller
+    /// must predict and then [`RequestPlanCache::store`] the result (this
+    /// split lets batched callers collect every miss first and resolve them
+    /// inside one wide execution fan instead of per request).
     pub fn lookup(
         &mut self,
         key: Option<u64>,
+        layer: usize,
         heads: usize,
         tm: usize,
     ) -> Option<Vec<Arc<CompressedMask>>> {
-        let e = self.entries.get_mut(&key?)?;
-        if e.age < self.refresh_every && e.heads == heads && e.tm == tm {
-            e.age += 1;
+        let key = key?;
+        let hit = match self.entries.get_mut(&(key, layer as u32)) {
+            Some(e) if e.age < self.refresh_every && e.heads == heads && e.tm == tm => {
+                e.age += 1;
+                Some(e.masks.clone())
+            }
+            _ => None,
+        };
+        if hit.is_some() {
             self.stats.hits += 1;
-            Some(e.masks.clone())
-        } else {
-            None
+            self.layer_slot(layer).hits += 1;
         }
+        hit
     }
 
-    /// Record a fresh per-head prediction: counts the miss (and refresh if
-    /// it replaces an entry) and caches it under `key` (`None` keys are
-    /// never cached — the unkeyed legacy path).
-    pub fn store(&mut self, key: Option<u64>, masks: &[Arc<CompressedMask>], tm: usize) {
+    /// Record a fresh per-head prediction for `(key, layer)`: counts the
+    /// miss (and refresh if it replaces an entry) and caches it (`None`
+    /// keys are never cached — the unkeyed legacy path).
+    pub fn store(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+    ) {
+        let sparsity: f64 = masks.iter().map(|m| m.sparsity()).sum();
         self.stats.misses += 1;
         self.stats.planned += masks.len() as u64;
-        self.stats.sparsity_sum += masks.iter().map(|m| m.sparsity()).sum::<f64>();
+        self.stats.sparsity_sum += sparsity;
+        let ls = self.layer_slot(layer);
+        ls.misses += 1;
+        ls.planned += masks.len() as u64;
+        ls.sparsity_sum += sparsity;
         if let Some(k) = key {
-            if self.entries.contains_key(&k) {
+            let ck = (k, layer as u32);
+            if self.entries.contains_key(&ck) {
                 self.stats.refreshes += 1;
+                self.layer_slot(layer).refreshes += 1;
             }
             self.entries.insert(
-                k,
+                ck,
                 CacheEntry { masks: masks.to_vec(), age: 1, heads: masks.len(), tm },
             );
         }
     }
 
-    /// The per-head masks to execute for one request item: cached when
-    /// fresh, otherwise `predict_all` produces the `heads` masks and the
-    /// result is stored. Convenience wrapper over `lookup` + `store`.
+    /// The per-head masks to execute for one request item at one layer:
+    /// cached when fresh, otherwise `predict_all` produces the `heads`
+    /// masks and the result is stored. Convenience wrapper over `lookup` +
+    /// `store`.
     pub fn masks_for(
         &mut self,
         key: Option<u64>,
+        layer: usize,
         heads: usize,
         tm: usize,
         predict_all: impl FnOnce() -> Vec<CompressedMask>,
     ) -> Vec<Arc<CompressedMask>> {
-        if let Some(masks) = self.lookup(key, heads, tm) {
+        if let Some(masks) = self.lookup(key, layer, heads, tm) {
             return masks;
         }
         let masks: Vec<Arc<CompressedMask>> =
             predict_all().into_iter().map(Arc::new).collect();
         assert_eq!(masks.len(), heads, "predict_all returned wrong head count");
-        self.store(key, &masks, tm);
+        self.store(key, layer, &masks, tm);
         masks
     }
 
-    /// Drop the entry for a finished request (no-op if absent).
+    /// Drop every layer's entry for a finished request (no-op if absent);
+    /// each removed (key, layer) entry counts one eviction.
     pub fn end_request(&mut self, key: u64) {
-        if self.entries.remove(&key).is_some() {
+        let layers: Vec<u32> = self
+            .entries
+            .keys()
+            .filter(|(k, _)| *k == key)
+            .map(|(_, l)| *l)
+            .collect();
+        for l in layers {
+            self.entries.remove(&(key, l));
             self.stats.evictions += 1;
+            self.layer_slot(l as usize).evictions += 1;
         }
     }
 
-    /// Number of live entries.
+    /// Number of live (request, layer) entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -421,8 +466,88 @@ impl RequestPlanCache {
         self.entries.is_empty()
     }
 
+    /// Aggregate counters across all layers.
     pub fn stats(&self) -> PlanCacheStats {
         self.stats
+    }
+
+    /// Counters for one stack layer (zeros when the layer was never seen).
+    pub fn layer_stats(&self, layer: usize) -> PlanCacheStats {
+        self.per_layer.get(layer).copied().unwrap_or_default()
+    }
+
+    /// Number of distinct layers that have recorded any activity.
+    pub fn layers_tracked(&self) -> usize {
+        self.per_layer.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-layer planners for a DiT stack
+// ---------------------------------------------------------------------------
+
+/// Per-layer [`MaskPlanner`]s for an L-layer DiT stack sharing one kernel
+/// config: each layer's plan ages and refreshes independently, and hit/
+/// miss/refresh accounting is **per layer** (deeper layers attend over
+/// post-residual hidden states, so their attention geometry — and its
+/// drift — is their own).
+#[derive(Debug)]
+pub struct StackPlanner {
+    planners: Vec<MaskPlanner>,
+}
+
+impl StackPlanner {
+    pub fn new(cfg: SlaConfig, depth: usize, refresh_every: usize) -> Self {
+        assert!(depth >= 1, "stack needs at least one layer");
+        StackPlanner {
+            planners: (0..depth)
+                .map(|_| MaskPlanner::new(cfg.clone(), refresh_every))
+                .collect(),
+        }
+    }
+
+    /// Every layer predicts once and then stays frozen — the paper's
+    /// mask-frozen fine-tune regime, stack-wide.
+    pub fn frozen(cfg: SlaConfig, depth: usize) -> Self {
+        Self::new(cfg, depth, usize::MAX)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.planners.len()
+    }
+
+    /// The plan to execute for stack layer `layer` this step.
+    pub fn plan_for(&mut self, layer: usize, q: &Tens4, k: &Tens4) -> Arc<AttentionPlan> {
+        self.planners[layer].plan_for(q, k)
+    }
+
+    /// Drop every layer's cached plan; the next step predicts fresh.
+    pub fn force_refresh(&mut self) {
+        for p in &mut self.planners {
+            p.force_refresh();
+        }
+    }
+
+    /// Layer `layer`'s planner (read-only).
+    pub fn layer(&self, layer: usize) -> &MaskPlanner {
+        &self.planners[layer]
+    }
+
+    /// Layer `layer`'s accounting.
+    pub fn stats(&self, layer: usize) -> PlanStats {
+        self.planners[layer].stats()
+    }
+
+    /// Accounting summed across every layer.
+    pub fn total_stats(&self) -> PlanStats {
+        let mut t = PlanStats::default();
+        for p in &self.planners {
+            let s = p.stats();
+            t.hits += s.hits;
+            t.misses += s.misses;
+            t.refreshes += s.refreshes;
+        }
+        t
     }
 }
 
@@ -574,14 +699,14 @@ mod tests {
         let mut cache = RequestPlanCache::new(2);
         let mk = || vec![CompressedMask::all(4, 4, Label::Critical); 2];
         // unkeyed: always predicts
-        let _ = cache.masks_for(None, 2, 4, mk);
+        let _ = cache.masks_for(None, 0, 2, 4, mk);
         assert_eq!(cache.stats().misses, 1);
         assert!(cache.is_empty());
         // keyed: miss, hit, then stale -> refresh
-        let m0 = cache.masks_for(Some(7), 2, 4, mk);
-        let m1 = cache.masks_for(Some(7), 2, 4, mk);
+        let m0 = cache.masks_for(Some(7), 0, 2, 4, mk);
+        let m1 = cache.masks_for(Some(7), 0, 2, 4, mk);
         assert!(Arc::ptr_eq(&m0[0], &m1[0]), "hit must reuse the same Arc");
-        let _ = cache.masks_for(Some(7), 2, 4, mk);
+        let _ = cache.masks_for(Some(7), 0, 2, 4, mk);
         let s = cache.stats();
         assert_eq!(s.hits, 1);
         assert_eq!(s.misses, 3);
@@ -599,19 +724,19 @@ mod tests {
     fn request_cache_lookup_store_split_matches_masks_for() {
         // the two-phase API batched callers use: probe, bulk-predict, store
         let mut cache = RequestPlanCache::new(3);
-        assert!(cache.lookup(Some(9), 2, 4).is_none(), "cold cache");
-        assert!(cache.lookup(None, 2, 4).is_none(), "unkeyed never cached");
+        assert!(cache.lookup(Some(9), 0, 2, 4).is_none(), "cold cache");
+        assert!(cache.lookup(None, 0, 2, 4).is_none(), "unkeyed never cached");
         let masks: Vec<Arc<CompressedMask>> =
             (0..2).map(|_| Arc::new(CompressedMask::all(4, 4, Label::Marginal))).collect();
-        cache.store(Some(9), &masks, 4);
-        let hit = cache.lookup(Some(9), 2, 4).expect("stored entry is fresh");
+        cache.store(Some(9), 0, &masks, 4);
+        let hit = cache.lookup(Some(9), 0, 2, 4).expect("stored entry is fresh");
         assert!(Arc::ptr_eq(&hit[0], &masks[0]));
         // stats: the cold probes count nothing; store counted the miss
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.planned), (1, 1, 2));
         assert!((s.mean_sparsity() - 1.0).abs() < 1e-12);
         // storing under None records stats but caches nothing
-        cache.store(None, &masks, 4);
+        cache.store(None, 0, &masks, 4);
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.stats().misses, 2);
     }
@@ -621,13 +746,72 @@ mod tests {
         let mut cache = RequestPlanCache::new(100);
         let mk4 = || vec![CompressedMask::all(4, 4, Label::Critical); 2];
         let mk8 = || vec![CompressedMask::all(8, 8, Label::Marginal); 2];
-        let _ = cache.masks_for(Some(1), 2, 4, mk4);
-        let m = cache.masks_for(Some(1), 2, 8, mk8); // tm changed
+        let _ = cache.masks_for(Some(1), 0, 2, 4, mk4);
+        let m = cache.masks_for(Some(1), 0, 2, 8, mk8); // tm changed
         assert_eq!(m[0].tm, 8);
         assert_eq!(cache.stats().misses, 2);
         assert_eq!(cache.stats().refreshes, 1);
         // sparsity accounting: 2 all-critical (0.0) + 2 all-marginal (1.0)
         assert!((cache.stats().mean_sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_cache_layers_never_cross_hit() {
+        // the per-layer keying guarantee: two layers of the SAME request
+        // stream with different masks must each get their own entry back,
+        // and a layer never seen must miss
+        let mut cache = RequestPlanCache::new(100);
+        let l0: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2];
+        let l1: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal)); 2];
+        cache.store(Some(5), 0, &l0, 4);
+        cache.store(Some(5), 1, &l1, 4);
+        assert_eq!(cache.len(), 2, "one entry per (request, layer)");
+        let h0 = cache.lookup(Some(5), 0, 2, 4).expect("layer 0 entry");
+        let h1 = cache.lookup(Some(5), 1, 2, 4).expect("layer 1 entry");
+        assert!(Arc::ptr_eq(&h0[0], &l0[0]), "layer 0 must get layer 0's masks");
+        assert!(Arc::ptr_eq(&h1[0], &l1[0]), "layer 1 must get layer 1's masks");
+        assert_eq!(h0[0].count(Label::Critical), 16);
+        assert_eq!(h1[0].count(Label::Critical), 0);
+        assert!(cache.lookup(Some(5), 2, 2, 4).is_none(), "unseen layer misses");
+        // per-layer accounting is independent
+        assert_eq!(cache.layer_stats(0).hits, 1);
+        assert_eq!(cache.layer_stats(1).hits, 1);
+        assert_eq!(cache.layer_stats(0).misses, 1);
+        assert_eq!(cache.layers_tracked(), 2);
+        // end_request drops BOTH layers and counts each eviction
+        cache.end_request(5);
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.layer_stats(1).evictions, 1);
+    }
+
+    #[test]
+    fn stack_planner_layers_are_independent() {
+        let (q, k) = qk4(1, 2, 32, 8, 31);
+        let mut sp = StackPlanner::new(cfg(8), 3, 2);
+        assert_eq!(sp.depth(), 3);
+        // layer 0 steps 3x (miss, hit, refresh); layer 1 steps once; layer
+        // 2 never steps
+        for _ in 0..3 {
+            let _ = sp.plan_for(0, &q, &k);
+        }
+        let _ = sp.plan_for(1, &q, &k);
+        assert_eq!(sp.stats(0).misses, 2);
+        assert_eq!(sp.stats(0).hits, 1);
+        assert_eq!(sp.stats(1).misses, 1);
+        assert_eq!(sp.stats(2).misses, 0);
+        let t = sp.total_stats();
+        assert_eq!((t.misses, t.hits), (3, 1));
+        // frozen stack reuses per layer; force_refresh drops all layers
+        let mut fz = StackPlanner::frozen(cfg(8), 2);
+        let p0 = fz.plan_for(0, &q, &k);
+        let p0b = fz.plan_for(0, &q, &k);
+        assert!(Arc::ptr_eq(&p0, &p0b));
+        fz.force_refresh();
+        assert!(fz.layer(0).current().is_none());
+        assert!(fz.layer(1).current().is_none());
     }
 
     #[test]

@@ -2,20 +2,22 @@
 //! the learnable compensation projection (Eq. 6) and selectable marginal-
 //! aggregation strategy (Appendix A.3).
 //!
-//! The kernel is exposed two ways:
+//! The kernel is exposed three ways:
 //!  * [`sla_forward`] / [`sla_backward`] — free functions taking the config
 //!    and projection **by reference**, the form the batched engine fans out
 //!    (no per-task config/projection clones);
+//!  * [`sla_forward_only`] — the serving-path variant: same fused math,
+//!    bitwise-identical output, but no backward state (qphi/kphi/os/ol/
+//!    lse/H_i/Z_i) materialized in the result;
 //!  * [`SlaKernel`] — the owning single-head object wrapping them.
 //!
 //! Masks travel as `Arc<CompressedMask>` (see `attention::plan`): a caller
 //! replaying a cached plan hands the kernel a borrowed Arc and nothing is
 //! deep-copied; when no mask is given the kernel predicts one (Eq. 2–3) and
 //! returns it in the output. Scratch buffers (`s`, `m`, `l`, `acc`, `p`)
-//! live in the per-thread `SlaWorkspace`, so no per-block allocations
-//! remain and repeated calls on a long-lived thread reuse their buffers
-//! outright (scoped workers re-create TLS per engine invocation; a
-//! persistent pool is a recorded follow-up).
+//! live in the per-thread `SlaWorkspace`; workers are the persistent pool
+//! threads of `util::threadpool`, so the buffers survive across batched
+//! engine invocations and the steady-state hot path is allocation-free.
 
 use std::sync::Arc;
 
@@ -25,6 +27,7 @@ use super::mask::{predict_mask, CompressedMask, MaskPolicy};
 use super::opt::{aggregate_marginal, AggStrategy};
 use super::plan::with_workspace;
 use crate::tensor::Mat;
+use crate::util::sendptr::SendPtr;
 use crate::util::threadpool;
 
 #[derive(Clone, Debug)]
@@ -74,6 +77,16 @@ pub struct SlaGrads {
     pub dproj: Mat,
 }
 
+/// Forward-only products: the fused output and the executed mask, with NO
+/// backward state (qphi/kphi/os/ol/lse/H_i/Z_i) materialized — the serving
+/// path's output type. `o` is bitwise identical to [`sla_forward`]'s.
+pub struct SlaLightOutput {
+    pub o: Mat,
+    /// The mask executed: the caller's (shared, not copied) or the one
+    /// predicted here.
+    pub mask: Arc<CompressedMask>,
+}
+
 /// Algorithm 1 + Eq. 6 with config and projection borrowed. If `mask` is
 /// None it is predicted (Eq. 2-3); otherwise the shared mask is executed
 /// as-is (plan replay) with only an `Arc` refcount bump.
@@ -84,6 +97,36 @@ pub fn sla_forward(
     k: &Mat,
     v: &Mat,
     mask: Option<&Arc<CompressedMask>>,
+) -> SlaOutput {
+    forward_impl(cfg, proj, q, k, v, mask, true)
+}
+
+/// Forward-only variant of [`sla_forward`] for paths that never run a
+/// backward pass (serving): the same fused computation, but the backward
+/// state is dropped on the way out instead of being materialized in the
+/// output — `lse` is never even allocated or written — so per-call
+/// transient memory is one `(N, dv)` output instead of seven retained
+/// buffers. The output is bitwise identical to the full-state path.
+pub fn sla_forward_only(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    mask: Option<&Arc<CompressedMask>>,
+) -> SlaLightOutput {
+    let full = forward_impl(cfg, proj, q, k, v, mask, false);
+    SlaLightOutput { o: full.o, mask: full.mask }
+}
+
+fn forward_impl(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    mask: Option<&Arc<CompressedMask>>,
+    want_state: bool,
 ) -> SlaOutput {
     let (n, d) = (q.rows, q.cols);
     let dv = v.cols;
@@ -110,7 +153,8 @@ pub fn sla_forward(
     let scale = 1.0 / (d as f32).sqrt();
     let mut os = Mat::zeros(n, dv);
     let mut ol = Mat::zeros(n, dv);
-    let mut lse = vec![NEG_INF; n];
+    // lse exists only for the backward pass; forward-only never allocates it
+    let mut lse = if want_state { vec![NEG_INF; n] } else { Vec::new() };
     {
         let os_ptr = SendPtr(os.data.as_mut_ptr());
         let ol_ptr = SendPtr(ol.data.as_mut_ptr());
@@ -155,9 +199,12 @@ pub fn sla_forward(
                             {
                                 *ov = a * inv;
                             }
-                            unsafe {
-                                *lse_ptr.get().add(r0 + r) = ws.m[r] + ws.l[r].max(EPS).ln()
-                            };
+                            if want_state {
+                                unsafe {
+                                    *lse_ptr.get().add(r0 + r) =
+                                        ws.m[r] + ws.l[r].max(EPS).ln()
+                                };
+                            }
                         }
                         let olrow = unsafe {
                             std::slice::from_raw_parts_mut(ol_ptr.get().add((r0 + r) * dv), dv)
@@ -406,17 +453,6 @@ impl SlaKernel {
     }
 }
 
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-
-impl<T> SendPtr<T> {
-    /// Accessor so edition-2021 closures capture the Sync wrapper whole.
-    fn get(&self) -> *mut T {
-        self.0
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,6 +551,24 @@ mod tests {
         assert_eq!(ga.dk.data, gb.dk.data);
         assert_eq!(ga.dv.data, gb.dv.data);
         assert_eq!(ga.dproj.data, gb.dproj.data);
+    }
+
+    #[test]
+    fn forward_only_matches_full_forward_bitwise() {
+        let (q, k, v) = qkv(64, 8, 20);
+        let mut rng = Rng::new(21);
+        let proj = Mat::randn(8, 8, &mut rng).scaled(0.3);
+        let c = cfg(8);
+        let full = sla_forward(&c, &proj, &q, &k, &v, None);
+        let light = sla_forward_only(&c, &proj, &q, &k, &v, None);
+        assert_eq!(light.o.data, full.o.data, "forward-only must be bitwise identical");
+        // same mask policy, and replaying a shared mask keeps sharing it
+        let replay = sla_forward_only(&c, &proj, &q, &k, &v, Some(&full.mask));
+        assert!(Arc::ptr_eq(&replay.mask, &full.mask));
+        assert_eq!(replay.o.data, full.o.data);
+        // full state is populated on the full path (the light path never
+        // allocates lse at all — see forward_impl)
+        assert_eq!(full.lse.len(), 64);
     }
 
     #[test]

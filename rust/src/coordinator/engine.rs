@@ -1,15 +1,14 @@
 //! Velocity-model backends for the coordinator.
 
 use std::cell::RefCell;
-use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::attention::plan::{PlanCacheStats, RequestPlanCache};
-use crate::attention::{BatchSlaEngine, CompressedMask, SlaConfig};
-use crate::model::ParamStore;
+use crate::attention::{BatchSlaEngine, SlaConfig};
+use crate::model::{DitStack, ParamStore};
 use crate::runtime::{Artifact, HostTensor, Runtime, TensorSpec};
-use crate::tensor::{Mat, Tens4};
+use crate::tensor::Mat;
 use crate::util::threadpool;
 
 /// Abstract denoiser the scheduler drives. Not Send/Sync: the xla crate's
@@ -137,44 +136,56 @@ impl VelocityBackend for ArtifactBackend {
     }
 }
 
-/// Pure-Rust serving backend: a single-attention-layer velocity model whose
-/// attention runs through the batched multi-head SLA engine. No PJRT
-/// artifacts needed — this is the natively *measured* serving path, and the
-/// one that actually exploits tick-level request batching: every request in
-/// a scheduler tick becomes one batch item of a single `[B, H, N, d]`
-/// engine invocation.
+/// Pure-Rust serving backend: an L-layer DiT-stack velocity model whose
+/// attention runs through per-layer batched multi-head SLA engines
+/// (`model::stack::DitStack`). No PJRT artifacts needed — this is the
+/// natively *measured* serving path, and the one that actually exploits
+/// tick-level request batching: every request in a scheduler tick becomes
+/// one batch item of a single `[B, H, N, d]` engine invocation per layer.
+///
+/// Serving runs in **forward-only mode** by default: the light kernels
+/// produce bitwise-identical outputs with no backward state (qphi/kphi/os/
+/// ol/lse/H_i/Z_i) materialized at any layer — `with_forward_only(false)`
+/// restores the full-state path (used by parity tests). Attention plans are
+/// cached per **(request stream, layer)** and reused across denoise steps.
 ///
 /// Parameters live in a `ParamStore` under `params.native.*` (the same
-/// naming scheme the AOT manifests use), so checkpoint save/load and the
-/// zero-init `sla_proj` fine-tune handoff behave identically to the
-/// artifact path.
+/// naming scheme the AOT manifests use): stack-shared attention weights at
+/// `params.native.attn.*`, per-layer Eq. 6 projections at
+/// `params.native.layers.<i>.attn.sla_proj.<h>` — so checkpoint save/load
+/// and the zero-init `sla_proj` fine-tune handoff behave identically to
+/// the artifact path. Legacy flat `params.native.attn.sla_proj.*`
+/// checkpoints are migrated onto layer 0 by `load_checkpoint` (the flat
+/// leaves belonged to the then-single attention layer).
 pub struct NativeSlaBackend {
-    engine: BatchSlaEngine,
+    stack: DitStack,
     params: ParamStore,
-    wq: Mat,
-    wk: Mat,
-    wv: Mat,
-    wo: Mat,
     wc: Mat,
     heads: usize,
     head_dim: usize,
+    depth: usize,
     seq_len: usize,
     channels: usize,
     cond_dim: usize,
     video: (usize, usize, usize),
-    /// Keyed calls a cached per-request plan serves before re-prediction
-    /// (== denoise steps for the Euler scheduler path; Heun's interior
-    /// steps make two keyed calls each). 1 (default) predicts every call —
-    /// bitwise identical to the pre-plan-cache engine.
+    /// Keyed calls a cached per-(request, layer) plan serves before
+    /// re-prediction (== denoise steps for the Euler scheduler path; Heun's
+    /// interior steps make two keyed calls each). 1 (default) predicts
+    /// every call — bitwise identical to the pre-plan-cache engine.
     plan_refresh: usize,
-    /// Per-request plan cache keyed by (request id, CFG branch); serving is
-    /// single-threaded (see trait docs), so a RefCell suffices.
+    /// Serving mode: skip materializing backward state (default true;
+    /// bitwise-identical outputs either way).
+    forward_only: bool,
+    /// Per-request plan cache keyed by (request id, CFG branch, layer);
+    /// serving is single-threaded (see trait docs), so a RefCell suffices.
     plan_cache: RefCell<RequestPlanCache>,
 }
 
-const NATIVE_ATTN_PREFIX: &str = "params.native.attn";
+const NATIVE_BASE: &str = "params.native";
 
 impl NativeSlaBackend {
+    /// Single-layer stack (the historical shape); see
+    /// [`NativeSlaBackend::with_depth`] for deeper models.
     pub fn new(
         video: (usize, usize, usize),
         channels: usize,
@@ -184,7 +195,25 @@ impl NativeSlaBackend {
         cfg: SlaConfig,
         seed: u64,
     ) -> Self {
+        Self::with_depth(video, channels, cond_dim, heads, head_dim, 1, cfg, seed)
+    }
+
+    /// An L-layer DiT stack: stack-shared q/k/v/o weights, per-layer
+    /// `sla_proj` leaves (so each layer's fine-tuned projections persist
+    /// independently).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_depth(
+        video: (usize, usize, usize),
+        channels: usize,
+        cond_dim: usize,
+        heads: usize,
+        head_dim: usize,
+        depth: usize,
+        cfg: SlaConfig,
+        seed: u64,
+    ) -> Self {
         let seq_len = video.0 * video.1 * video.2;
+        assert!(depth >= 1, "stack needs at least one layer");
         assert!(
             seq_len % cfg.bq == 0 && seq_len % cfg.bkv == 0,
             "seq_len {seq_len} must be divisible by block sizes ({}, {})",
@@ -204,19 +233,23 @@ impl NativeSlaBackend {
             spec("params.native.attn.wo.w", &[hd, channels]),
             spec("params.native.cond.w", &[cond_dim, channels]),
         ];
-        for h in 0..heads {
-            specs.push(spec(
-                &format!("{NATIVE_ATTN_PREFIX}.sla_proj.{h}"),
-                &[head_dim, head_dim],
-            ));
+        for li in 0..depth {
+            for h in 0..heads {
+                specs.push(spec(
+                    &format!("{NATIVE_BASE}.layers.{li}.attn.sla_proj.{h}"),
+                    &[head_dim, head_dim],
+                ));
+            }
         }
         let refs: Vec<&TensorSpec> = specs.iter().collect();
         let params = ParamStore::init(&refs, seed);
-        Self::from_params(video, channels, cond_dim, heads, head_dim, cfg, params, 1)
+        Self::from_params(
+            video, channels, cond_dim, heads, head_dim, depth, cfg, params, 1, true,
+        )
     }
 
-    /// Rebuild the projection matrices + engine from a parameter store
-    /// (after init or checkpoint load).
+    /// Rebuild the stack from a parameter store (after init or checkpoint
+    /// load).
     #[allow(clippy::too_many_arguments)]
     fn from_params(
         video: (usize, usize, usize),
@@ -224,43 +257,49 @@ impl NativeSlaBackend {
         cond_dim: usize,
         heads: usize,
         head_dim: usize,
+        depth: usize,
         cfg: SlaConfig,
         params: ParamStore,
         plan_refresh: usize,
+        forward_only: bool,
     ) -> Self {
         let seq_len = video.0 * video.1 * video.2;
-        let wq = params.get_mat("params.native.attn.wq.w").expect("wq");
-        let wk = params.get_mat("params.native.attn.wk.w").expect("wk");
-        let wv = params.get_mat("params.native.attn.wv.w").expect("wv");
-        let wo = params.get_mat("params.native.attn.wo.w").expect("wo");
         let wc = params.get_mat("params.native.cond.w").expect("wc");
-        let engine = params.batch_engine(NATIVE_ATTN_PREFIX, cfg, heads, heads, head_dim);
+        let stack = DitStack::from_params(
+            &params, NATIVE_BASE, cfg, depth, heads, heads, head_dim, channels,
+        );
         NativeSlaBackend {
-            engine,
+            stack,
             params,
-            wq,
-            wk,
-            wv,
-            wo,
             wc,
             heads,
             head_dim,
+            depth,
             seq_len,
             channels,
             cond_dim,
             video,
             plan_refresh,
+            forward_only,
             plan_cache: RefCell::new(RequestPlanCache::new(plan_refresh)),
         }
     }
 
-    /// Serve each request's attention plan for `refresh_every` keyed calls
-    /// before re-predicting (1 = predict every call; one call per denoise
-    /// step under the Euler scheduler, two per interior Heun step). Resets
-    /// the cache.
+    /// Serve each (request, layer) attention plan for `refresh_every` keyed
+    /// calls before re-predicting (1 = predict every call; one call per
+    /// denoise step under the Euler scheduler, two per interior Heun step).
+    /// Resets the cache.
     pub fn with_plan_refresh(mut self, refresh_every: usize) -> Self {
         self.plan_refresh = refresh_every;
         self.plan_cache = RefCell::new(RequestPlanCache::new(refresh_every));
+        self
+    }
+
+    /// Toggle forward-only serving (default on). Outputs are bitwise
+    /// identical either way; full-state mode exists for parity testing and
+    /// as the fine-tune-adjacent path.
+    pub fn with_forward_only(mut self, forward_only: bool) -> Self {
+        self.forward_only = forward_only;
         self
     }
 
@@ -268,19 +307,42 @@ impl NativeSlaBackend {
         &self.params
     }
 
+    /// Layer 0's engine (single-layer compatibility accessor).
     pub fn engine(&self) -> &BatchSlaEngine {
-        &self.engine
+        &self.stack.layers[0].engine
+    }
+
+    pub fn stack(&self) -> &DitStack {
+        &self.stack
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
     }
 
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
         self.plan_cache.borrow().stats()
     }
 
-    /// Adopt fine-tuned per-head projections (e.g. from `NativeFineTuner`).
+    /// Per-layer plan-cache counters.
+    pub fn plan_layer_stats(&self, layer: usize) -> PlanCacheStats {
+        self.plan_cache.borrow().layer_stats(layer)
+    }
+
+    /// Adopt fine-tuned per-head projections for layer 0 (single-layer
+    /// compatibility; see [`NativeSlaBackend::set_layer_projs`]).
     pub fn set_projs(&mut self, projs: Vec<Mat>) {
+        self.set_layer_projs(0, projs);
+    }
+
+    /// Adopt fine-tuned per-head projections for one stack layer (e.g.
+    /// from `NativeFineTuner`), persisting them to the layer's leaves.
+    pub fn set_layer_projs(&mut self, layer: usize, projs: Vec<Mat>) {
         assert_eq!(projs.len(), self.heads);
-        self.params.store_sla_head_projs(NATIVE_ATTN_PREFIX, &projs);
-        self.engine.projs = projs;
+        assert!(layer < self.depth, "layer {layer} out of range");
+        self.params
+            .store_sla_head_projs(&format!("{NATIVE_BASE}.layers.{layer}.attn"), &projs);
+        self.stack.set_layer_projs(layer, projs);
     }
 
     /// Save/load the parameter store in the shared checkpoint format.
@@ -289,7 +351,21 @@ impl NativeSlaBackend {
     }
 
     pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<usize> {
-        let ckpt = ParamStore::read_checkpoint(path)?;
+        let mut ckpt = ParamStore::read_checkpoint(path)?;
+        // Legacy migration: pre-stack checkpoints stored the (then single)
+        // layer's projections under flat `params.native.attn.sla_proj.<h>`
+        // names; the store only registers per-layer leaves, so re-home them
+        // onto layer 0 (never overriding a layer-0 leaf the checkpoint
+        // already has).
+        for h in 0..self.heads {
+            let flat = format!("{NATIVE_BASE}.attn.sla_proj.{h}");
+            let layer0 = format!("{NATIVE_BASE}.layers.0.attn.sla_proj.{h}");
+            if !ckpt.contains_key(&layer0) {
+                if let Some(t) = ckpt.remove(&flat) {
+                    ckpt.insert(layer0, t);
+                }
+            }
+        }
         let loaded = self.params.load_from(&ckpt);
         let refreshed = Self::from_params(
             self.video,
@@ -297,9 +373,11 @@ impl NativeSlaBackend {
             self.cond_dim,
             self.heads,
             self.head_dim,
-            self.engine.cfg.clone(),
+            self.depth,
+            self.engine().cfg.clone(),
             self.params.clone(),
             self.plan_refresh,
+            self.forward_only,
         );
         *self = refreshed;
         Ok(loaded)
@@ -321,16 +399,13 @@ impl VelocityBackend for NativeSlaBackend {
         self.velocity_batch_keyed(calls, &keys)
     }
 
-    /// All requests of a tick through ONE batched engine invocation, with
-    /// per-request attention plans reused across denoise steps: call `i`'s
-    /// key looks up its cached per-head masks (fresh for `plan_refresh`
-    /// steps), and only cache misses run mask prediction (Eq. 2–3). The
-    /// masks are then replayed by reference through `forward_with`.
-    ///
-    /// NOTE: `engine.forward_with` retains per-head backward state (qphi/
-    /// kphi/os/ol/lse/H_i/Z_i) that serving drops unused; a forward-only
-    /// engine mode would cut the transient memory several-fold (future
-    /// work).
+    /// All requests of a tick through ONE batched engine invocation per
+    /// stack layer, with per-(request, layer) attention plans reused across
+    /// denoise steps: call `i`'s key looks up layer `l`'s cached per-head
+    /// masks (fresh for `plan_refresh` steps), and only cache misses run
+    /// mask prediction (Eq. 2–3) — in-task, inside the execution fan. In
+    /// forward-only mode (default) no backward state is materialized at any
+    /// layer; outputs are bitwise identical to the full-state path.
     fn velocity_batch_keyed(
         &self,
         calls: &[(&HostTensor, f32, &HostTensor)],
@@ -355,80 +430,46 @@ impl VelocityBackend for NativeSlaBackend {
                 self.cond_dim
             );
         }
-        let threads = self.engine.cfg.threads.max(1);
+        let threads = self.stack.threads();
         // hoist the fields the worker closures need: `self` holds a RefCell
         // (the plan cache) and is therefore !Sync, so the parallel closures
         // must capture plain Sync references instead of `&self`
-        let (wq, wk, wv, wo, wc) = (&self.wq, &self.wk, &self.wv, &self.wo, &self.wc);
+        let wc = &self.wc;
         let cond_dim = self.cond_dim;
-        // per-request qkv projections in parallel (the attention engine
-        // parallelizes over (batch, head) itself; without this the serial
-        // matmuls would cap the tick speedup)
-        let packed: Vec<(Mat, Mat, Mat)> =
-            threadpool::parallel_map_send(bsz, threads, |bi| {
-                let (x, t, cond) = calls[bi];
-                let xm = x.to_mat().expect("shape validated above");
-                // u = x + cond embedding (broadcast over tokens), then a
-                // time modulation so t stays observable through attention
-                let ce = Mat::from_vec(1, cond_dim, cond.data.clone()).matmul(wc);
-                let mut u = xm;
-                for r in 0..n {
-                    for (uv, &cv) in u.row_mut(r).iter_mut().zip(ce.row(0)) {
-                        *uv += cv;
-                    }
-                }
-                u.scale(0.5 + 0.5 * t);
-                (u.matmul(wq), u.matmul(wk), u.matmul(wv))
-            });
-        let mut q4 = Tens4::zeros(bsz, self.heads, n, self.head_dim);
-        let mut k4 = Tens4::zeros(bsz, self.heads, n, self.head_dim);
-        let mut v4 = Tens4::zeros(bsz, self.heads, n, self.head_dim);
-        for (bi, (qp, kp, vp)) in packed.iter().enumerate() {
-            q4.set_item_packed(bi, qp);
-            k4.set_item_packed(bi, kp);
-            v4.set_item_packed(bi, vp);
-        }
-        // probe the plan cache per request: hits replay their masks by
-        // reference, misses leave `None` slots that the execution fan
-        // resolves by predicting IN-TASK (same (batch x head) parallelism
-        // and single head copy as the pre-plan engine); fresh predictions
-        // are harvested from the outputs and stored under their keys
-        let heads = self.heads;
-        let tm = n / self.engine.cfg.bq;
-        let mut mask_slots: Vec<Option<Arc<CompressedMask>>> =
-            Vec::with_capacity(bsz * heads);
-        let mut missing: Vec<usize> = Vec::new();
-        {
-            let mut cache = self.plan_cache.borrow_mut();
-            for bi in 0..bsz {
-                match cache.lookup(keys[bi], heads, tm) {
-                    Some(ms) => mask_slots.extend(ms.into_iter().map(Some)),
-                    None => {
-                        missing.push(bi);
-                        mask_slots.extend((0..heads).map(|_| None));
-                    }
+        // per-request embedding in parallel: h_0 = x + cond embedding
+        // (broadcast over tokens). The timestep rides as the stack's
+        // per-item adaLN modulation scalar — the per-layer RMS norm is
+        // scale-invariant, so scaling h_0 itself would erase t.
+        let h0: Vec<Mat> = threadpool::parallel_map_send(bsz, threads, |bi| {
+            let (x, _t, cond) = calls[bi];
+            let xm = x.to_mat().expect("shape validated above");
+            let ce = Mat::from_vec(1, cond_dim, cond.data.clone()).matmul(wc);
+            let mut u = xm;
+            for r in 0..n {
+                for (uv, &cv) in u.row_mut(r).iter_mut().zip(ce.row(0)) {
+                    *uv += cv;
                 }
             }
-        }
-        let out = self.engine.forward_with_opt(&q4, &k4, &v4, &mask_slots);
-        if !missing.is_empty() {
+            u
+        });
+        let mods: Vec<f32> = calls.iter().map(|(_, t, _)| 0.5 + 0.5 * t).collect();
+        // the L-layer stack: per layer, one batched engine call over every
+        // request of the tick, masks via the (request, layer) plan cache
+        let hs = {
             let mut cache = self.plan_cache.borrow_mut();
-            for &bi in &missing {
-                let masks: Vec<Arc<CompressedMask>> = (0..heads)
-                    .map(|hi| Arc::clone(&out.per_head[bi * heads + hi].mask))
-                    .collect();
-                cache.store(keys[bi], &masks, tm);
-            }
-        }
-        // per-request output projection, same fan-out
+            self.stack
+                .forward_serving(&h0, &mods, keys, &mut cache, self.forward_only)
+        };
+        // velocity head: the stack's residual delta, leaked input term kept
+        // from the single-layer model (v = 0.5 * (h_L - h_0) - 0.2 * x)
         let res: Vec<HostTensor> = threadpool::parallel_map_send(bsz, threads, |bi| {
-            let y = out.o.item_packed(bi).matmul(wo);
             let x = calls[bi].0;
-            let vdat: Vec<f32> = y
+            let vdat: Vec<f32> = hs[bi]
                 .data
                 .iter()
+                .zip(&h0[bi].data)
                 .zip(&x.data)
-                .map(|(&yv, &xv)| 0.5 * yv - 0.2 * xv)
+                .map(|((&hv, &h0v), &xv)| 0.5 * (hv - h0v) - 0.2 * xv)
                 .collect();
             HostTensor::new(vec![n, c], vdat)
         });
@@ -638,6 +679,131 @@ mod tests {
         // the plan's prediction step matches bitwise
         let fresh = b.velocity_batch(&[(&x, 0.9, &c)]).unwrap();
         assert_eq!(fresh[0].data, o1[0].data);
+    }
+
+    fn backend_depth(depth: usize, seed: u64) -> NativeSlaBackend {
+        NativeSlaBackend::with_depth(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            depth,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            seed,
+        )
+    }
+
+    #[test]
+    fn deep_backend_serves_and_matches_singleton_calls() {
+        let b = backend_depth(3, 7);
+        assert_eq!(b.depth(), 3);
+        let (x1, c1) = xc(30, 32, 4, 6);
+        let (x2, c2) = xc(31, 32, 4, 6);
+        let batched = b.velocity_batch(&[(&x1, 0.7, &c1), (&x2, 0.3, &c2)]).unwrap();
+        let s1 = b.velocity(&x1, 0.7, &c1).unwrap();
+        let s2 = b.velocity(&x2, 0.3, &c2).unwrap();
+        assert_eq!(batched[0].data, s1.data);
+        assert_eq!(batched[1].data, s2.data);
+        assert!(batched[0].data.iter().all(|v| v.is_finite()));
+        // a single-layer backend with the same seed gives a DIFFERENT model
+        let shallow = backend_depth(1, 7);
+        let s1_shallow = shallow.velocity(&x1, 0.7, &c1).unwrap();
+        assert_ne!(s1.data, s1_shallow.data, "depth must change the function");
+    }
+
+    #[test]
+    fn forward_only_serving_matches_full_state_bitwise() {
+        // the acceptance bitwise check at the backend level: the default
+        // forward-only serving mode equals the full-state path exactly
+        let light = backend_depth(2, 8);
+        let full = backend_depth(2, 8).with_forward_only(false);
+        let (x, c) = xc(40, 32, 4, 6);
+        for t in [0.9f32, 0.5, 0.1] {
+            let lo = light
+                .velocity_batch_keyed(&[(&x, t, &c)], &[Some(3)])
+                .unwrap();
+            let fo = full
+                .velocity_batch_keyed(&[(&x, t, &c)], &[Some(3)])
+                .unwrap();
+            assert_eq!(lo[0].data, fo[0].data, "t={t}");
+        }
+    }
+
+    #[test]
+    fn plan_cache_keys_per_layer() {
+        // depth L: one miss per (stream, layer) on the first step, then
+        // hits per layer; eviction drops every layer of the stream
+        let b = backend_depth(2, 9).with_plan_refresh(8);
+        let (x, c) = xc(41, 32, 4, 6);
+        for step in 0..3 {
+            let t = 0.9 - 0.2 * step as f32;
+            let _ = b.velocity_batch_keyed(&[(&x, t, &c)], &[Some(5)]).unwrap();
+        }
+        let s = b.plan_cache_stats();
+        assert_eq!(s.misses, 2, "one prediction per layer");
+        assert_eq!(s.hits, 4, "two replays per layer");
+        for li in 0..2 {
+            let ls = b.plan_layer_stats(li);
+            assert_eq!(ls.misses, 1, "layer {li}");
+            assert_eq!(ls.hits, 2, "layer {li}");
+        }
+        VelocityBackend::end_request(&b, 5);
+        assert_eq!(b.plan_cache_stats().evictions, 2, "both layers evicted");
+    }
+
+    #[test]
+    fn per_layer_projs_persist_through_checkpoints() {
+        let mut b = backend_depth(2, 10);
+        let d = 4;
+        let projs: Vec<Mat> = (0..2)
+            .map(|h| Mat::from_vec(d, d, vec![0.3 * (h + 1) as f32; d * d]))
+            .collect();
+        b.set_layer_projs(1, projs.clone());
+        let path = std::env::temp_dir()
+            .join(format!("sla_native_stack_ckpt_{}", std::process::id()));
+        b.save_checkpoint(&path).unwrap();
+        let mut b2 = backend_depth(2, 11);
+        let loaded = b2.load_checkpoint(&path).unwrap();
+        assert!(loaded >= 9); // 5 weights + 2 layers x 2 proj leaves
+        assert_eq!(b2.stack().layers[1].engine.projs[0].data, projs[0].data);
+        assert!(b2.stack().layers[0].engine.projs[0].data.iter().all(|&v| v == 0.0));
+        let (x, cnd) = xc(42, 32, 4, 6);
+        assert_eq!(
+            b.velocity(&x, 0.4, &cnd).unwrap().data,
+            b2.velocity(&x, 0.4, &cnd).unwrap().data
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_flat_checkpoint_migrates_onto_layer_zero() {
+        use crate::runtime::TensorSpec;
+        // a pre-stack checkpoint: flat params.native.attn.sla_proj.<h>
+        // leaves holding fine-tuned (nonzero) projections
+        let d = 4;
+        let spec = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "float32".to_string(),
+        };
+        let specs = [
+            spec("params.native.attn.sla_proj.0", &[d, d]),
+            spec("params.native.attn.sla_proj.1", &[d, d]),
+        ];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut legacy = crate::model::ParamStore::init(&refs, 0);
+        legacy.tensors[0] = HostTensor::new(vec![d, d], vec![0.25; d * d]);
+        legacy.tensors[1] = HostTensor::new(vec![d, d], vec![0.75; d * d]);
+        let path = std::env::temp_dir()
+            .join(format!("sla_native_legacy_ckpt_{}", std::process::id()));
+        legacy.save(&path).unwrap();
+        let mut b = backend();
+        let loaded = b.load_checkpoint(&path).unwrap();
+        assert_eq!(loaded, 2, "both flat leaves must land on layer 0");
+        assert_eq!(b.engine().projs[0].data, vec![0.25; d * d]);
+        assert_eq!(b.engine().projs[1].data, vec![0.75; d * d]);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -73,8 +73,10 @@ pub struct ServeReport {
     pub nfe: usize,
     pub ticks: usize,
     /// Plan-cache accounting over this trace (zero when the backend does
-    /// not cache attention plans): steps served by a cached plan / steps
-    /// that predicted / predictions that replaced a stale plan.
+    /// not cache attention plans): (step, layer) lookups served by a cached
+    /// plan / lookups that predicted / predictions that replaced a stale
+    /// plan. A depth-L backend counts L lookups per request step — one per
+    /// stack layer.
     pub plan_hits: u64,
     pub plan_misses: u64,
     pub plan_refreshes: u64,
@@ -663,6 +665,35 @@ mod tests {
         assert!(rep.plan_mean_sparsity > 0.0 && rep.plan_mean_sparsity < 1.0);
         assert!(rep.summary().contains("plan_hits=12"), "{}", rep.summary());
         // finished requests evicted their cache entries
+        assert_eq!(backend.plan_cache_stats().evictions, 4);
+    }
+
+    #[test]
+    fn deep_native_backend_plan_stats_count_per_layer() {
+        use super::engine::NativeSlaBackend;
+        use crate::attention::SlaConfig;
+        // depth 2: every stream predicts once PER LAYER, then replays
+        let backend = NativeSlaBackend::with_depth(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            2,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+        .with_plan_refresh(4);
+        let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+        let rep = coord.run_trace(&reqs(2, 4), None).unwrap();
+        assert_eq!(rep.stats.len(), 2);
+        // 2 streams x 2 layers: 4 predictions; 3 replay steps each: 12 hits
+        assert_eq!(rep.plan_misses, 4);
+        assert_eq!(rep.plan_hits, 12);
+        // layer-resolved accounting survives on the backend
+        assert_eq!(backend.plan_layer_stats(0).misses, 2);
+        assert_eq!(backend.plan_layer_stats(1).misses, 2);
+        // finished requests evicted BOTH layers of both streams
         assert_eq!(backend.plan_cache_stats().evictions, 4);
     }
 

@@ -76,9 +76,11 @@ pub struct SamplerConfig {
     pub shift: f32,
     /// When set, item `i` is keyed as stream `base + 2*i` (cond branch) and
     /// `base + 2*i + 1` (uncond branch) through `velocity_many_keyed`, so a
-    /// plan-caching backend can reuse attention plans across denoise steps;
-    /// the streams are released when sampling finishes (also on error).
-    /// `None` (default) uses the unkeyed hook — no cross-step caching.
+    /// plan-caching backend can reuse attention plans across denoise steps
+    /// (a multi-layer backend fans each stream key into per-(stream, layer)
+    /// cache entries internally); the streams are released when sampling
+    /// finishes (also on error). `None` (default) uses the unkeyed hook —
+    /// no cross-step caching.
     /// NOTE: a backend's plan age advances per keyed CALL, so Heun's
     /// interior steps (two stages per step) consume two refresh units.
     pub plan_stream_base: Option<u64>,

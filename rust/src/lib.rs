@@ -15,16 +15,22 @@
 //! The native hot path is `attention::batch::BatchSlaEngine`: the fused
 //! single-head SLA kernel lifted to `[B, H, N, d]` with per-(batch, head)
 //! mask prediction, per-head Eq. 6 projections, optional GQA K/V sharing,
-//! and (batch x head)-granular threading. Mask *prediction* is split from
+//! and (batch x head)-granular threading over a **persistent worker pool**
+//! (`util::threadpool`) whose per-thread `SlaWorkspace` scratch survives
+//! across engine invocations. `model::stack::DitStack` stacks L pre-norm
+//! residual attention blocks — per-layer engines, per-layer Eq. 6
+//! projections from the `ParamStore` (`layers.{i}` leaves with shared
+//! fallback) — behind the serving backend. Mask *prediction* is split from
 //! kernel *execution* by the plan subsystem (`attention::plan`): cacheable
 //! `AttentionPlan`s are replayed by reference across denoise steps
-//! (`MaskPlanner` for training loops, a per-request `RequestPlanCache` in
-//! the native serving backend), and per-thread `SlaWorkspace` scratch
-//! removes all per-block allocations from the kernel hot path. The
-//! serving scheduler
-//! batches every tick's requests — CFG branches fused — into one keyed
-//! engine invocation, and the native fine-tuner drives the batched
-//! backward under the paper's mask-frozen regime.
+//! (`MaskPlanner`/`StackPlanner` for training loops, a per-(request,
+//! branch, layer) `RequestPlanCache` in the native serving backend), and
+//! serving runs **forward-only** kernels — bitwise-identical outputs with
+//! no backward state materialized. The serving scheduler batches every
+//! tick's requests — CFG branches fused — into one keyed engine invocation
+//! per layer, and the native fine-tuner drives the batched backward under
+//! the paper's mask-frozen regime (full-state path, per stack layer via
+//! `NativeFineTuner::for_stack_layer`).
 //!
 //! See DESIGN.md (repo root) for the system inventory and experiment index.
 

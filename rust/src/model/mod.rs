@@ -1,7 +1,10 @@
 //! Rust-side model handling: named parameter stores (init / checkpoint /
-//! cross-variant transfer) for the AOT'd DiT artifacts.
+//! cross-variant transfer) for the AOT'd DiT artifacts, plus the native
+//! multi-layer DiT block stack (`stack`) built from per-layer SLA engines.
 
 pub mod export;
 mod params;
+pub mod stack;
 
 pub use params::{init_param, ParamStore};
+pub use stack::{rms_norm_rows, DitLayer, DitStack, StackForward};

@@ -152,6 +152,34 @@ impl ParamStore {
         wrote
     }
 
+    /// Whether any leaf name starts with `prefix`.
+    pub fn has_prefix(&self, prefix: &str) -> bool {
+        self.names.iter().any(|n| n.starts_with(prefix))
+    }
+
+    /// Per-head Eq. 6 projections for DiT stack layer `li`: prefers the
+    /// layer's own `<base>.layers.<li>.attn.sla_proj*` leaves, falling back
+    /// to the stack-shared `<base>.attn.sla_proj*` set (and zeros when
+    /// neither exists — the fine-tune starting point). Within whichever
+    /// prefix wins, the per-head-then-shared resolution of
+    /// [`ParamStore::sla_head_projs`] applies.
+    pub fn sla_layer_projs(&self, base: &str, li: usize, heads: usize, d: usize) -> Vec<Mat> {
+        let layered = format!("{base}.layers.{li}.attn");
+        if self.has_prefix(&format!("{layered}.sla_proj")) {
+            self.sla_head_projs(&layered, heads, d)
+        } else {
+            self.sla_head_projs(&format!("{base}.attn"), heads, d)
+        }
+    }
+
+    /// Rank-2 weight for DiT stack layer `li` with shared fallback:
+    /// `<base>.layers.<li>.attn.<leaf>` first, then the stack-shared
+    /// `<base>.attn.<leaf>` (layers without their own leaf share weights).
+    pub fn layer_mat(&self, base: &str, li: usize, leaf: &str) -> Option<Mat> {
+        self.get_mat(&format!("{base}.layers.{li}.attn.{leaf}"))
+            .or_else(|| self.get_mat(&format!("{base}.attn.{leaf}")))
+    }
+
     /// Build the batched multi-head SLA engine for one attention layer,
     /// with this store's projections — the "all DiT heads through one
     /// batched call" entry point the native backend and fine-tuner use.
@@ -419,6 +447,34 @@ mod tests {
         assert_eq!(planner.refresh_every, 3);
         assert_eq!(planner.cfg.bq, engine.cfg.bq);
         assert!(planner.current().is_none());
+    }
+
+    #[test]
+    fn sla_layer_projs_prefers_layer_then_stack_shared() {
+        let d = 2;
+        let specs = [
+            spec("params.n.layers.0.attn.sla_proj.0", &[d, d]),
+            spec("params.n.attn.sla_proj.0", &[d, d]),
+            spec("params.n.attn.wq.w", &[4, 4]),
+            spec("params.n.layers.1.attn.wq.w", &[4, 4]),
+        ];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::init(&refs, 0);
+        store.tensors[0] = HostTensor::new(vec![d, d], vec![1.0; d * d]);
+        store.tensors[1] = HostTensor::new(vec![d, d], vec![2.0; d * d]);
+        // layer 0 has its own leaf; layer 1 falls back to the stack-shared
+        // one; layer 9 likewise (fallback is by prefix, not by index)
+        assert_eq!(store.sla_layer_projs("params.n", 0, 1, d)[0].data, vec![1.0; 4]);
+        assert_eq!(store.sla_layer_projs("params.n", 1, 1, d)[0].data, vec![2.0; 4]);
+        assert_eq!(store.sla_layer_projs("params.n", 9, 1, d)[0].data, vec![2.0; 4]);
+        // weight fallback: layer 1 owns wq, layer 0 shares the stack's
+        assert!(store.has_prefix("params.n.layers.1"));
+        let w0 = store.layer_mat("params.n", 0, "wq.w").unwrap();
+        let w1 = store.layer_mat("params.n", 1, "wq.w").unwrap();
+        let shared = store.get_mat("params.n.attn.wq.w").unwrap();
+        assert_eq!(w0.data, shared.data);
+        assert_ne!(w1.data, shared.data);
+        assert!(store.layer_mat("params.n", 0, "nope.w").is_none());
     }
 
     #[test]

@@ -1,0 +1,609 @@
+//! Multi-layer DiT block stack over the batched SLA engine.
+//!
+//! The paper's end-to-end numbers (2.2x on Wan2.1) come from a FULL
+//! transformer: every layer runs its own sparse-linear attention with its
+//! own mask geometry. [`DitStack`] is that structure on the native
+//! substrate: `L` pre-norm residual attention blocks, each owning a
+//! [`BatchSlaEngine`] with per-layer Eq. 6 head projections (extracted from
+//! a `ParamStore` via `<base>.layers.<i>.attn.*` leaves with stack-shared
+//! fallback) and per-layer channel-space q/k/v/o weights.
+//!
+//! One block (pre-norm DiT attention sublayer, adaLN-style timestep
+//! modulation — RMS norm is scale-invariant, so the per-item conditioning
+//! scalar `mod_i` must multiply AFTER the norm to stay observable):
+//!
+//! ```text
+//!   u   = rms_norm(h) * mod_i              (per-layer normalization + t-mod)
+//!   qkv = u Wq, u Wk, u Wv                 (channel space -> heads)
+//!   a   = SLA_l(q, k, v)                   (per-layer masks + projections)
+//!   h   = h + merge(a) Wo                  (residual)
+//! ```
+//!
+//! Execution paths, all bitwise-identical in output (for concrete
+//! aggregation strategies; `AggStrategy::Auto` resolves per plan on the
+//! planned path and per mask elsewhere — exact either way):
+//!  * [`DitStack::forward_fresh`] — fresh per-layer mask prediction, full
+//!    per-layer state retained (the training/reference-adjacent path);
+//!  * [`DitStack::forward`] — plans supplied by a [`StackPlanner`]
+//!    (per-layer staleness policy; frozen regime for fine-tuning);
+//!  * [`DitStack::forward_only`] — the serving mode: light kernels, no
+//!    backward state materialized anywhere in the stack;
+//!  * [`DitStack::forward_serving`] — the keyed serving hot path: per-
+//!    (request stream, layer) masks from a [`RequestPlanCache`], misses
+//!    resolved in-task inside the execution fan and harvested back;
+//!  * [`DitStack::reference_forward`] — the layer-looped single-engine
+//!    reference (serial loops, plain `engine.forward`) the parity tests
+//!    pin the integrated paths against.
+
+use std::sync::Arc;
+
+use crate::attention::mask::CompressedMask;
+use crate::attention::plan::{RequestPlanCache, StackPlanner};
+use crate::attention::{BatchSlaEngine, BatchSlaOutput, SlaConfig};
+use crate::model::ParamStore;
+use crate::tensor::{Mat, Tens4};
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// Default epsilon for the per-layer RMS normalization.
+pub const RMS_EPS: f32 = 1e-6;
+
+/// Row-wise RMS normalization over the channel axis:
+/// `y[r] = x[r] / sqrt(mean(x[r]^2) + eps)`.
+pub fn rms_norm_rows(x: &Mat, eps: f32) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let inv_c = 1.0 / x.cols as f32;
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() * inv_c;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (o, &v) in out.row_mut(r).iter_mut().zip(row) {
+            *o = v * inv;
+        }
+    }
+    out
+}
+
+/// One DiT attention block: the batched SLA engine (per-layer Eq. 6
+/// projections live in `engine.projs`) plus the layer's channel-space
+/// weights.
+pub struct DitLayer {
+    pub engine: BatchSlaEngine,
+    /// `(C, heads * d)` query projection.
+    pub wq: Mat,
+    /// `(C, kv_heads * d)` key projection.
+    pub wk: Mat,
+    /// `(C, kv_heads * d)` value projection.
+    pub wv: Mat,
+    /// `(heads * d, C)` output projection.
+    pub wo: Mat,
+}
+
+/// Full-state stack forward: final hidden states plus every layer's
+/// attention state (replayed by a stack backward / distillation driver).
+pub struct StackForward {
+    /// Final hidden state per batch item, `(N, C)` each.
+    pub hs: Vec<Mat>,
+    /// Per-layer engine output (index = layer), full backward state.
+    pub per_layer: Vec<BatchSlaOutput>,
+}
+
+/// `L` pre-norm residual SLA attention blocks (see module docs).
+pub struct DitStack {
+    pub layers: Vec<DitLayer>,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub channels: usize,
+    pub norm_eps: f32,
+}
+
+impl DitStack {
+    /// Extract an `L`-layer stack from a parameter store: layer `i` uses
+    /// `<base>.layers.<i>.attn.{wq,wk,wv,wo}.w` / `...sla_proj.<h>` leaves
+    /// when present, falling back to the stack-shared `<base>.attn.*` set
+    /// (shared weights, per-layer masks — the mask-frozen fine-tune
+    /// starting point needs nothing layer-specific).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_params(
+        store: &ParamStore,
+        base: &str,
+        cfg: SlaConfig,
+        depth: usize,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        channels: usize,
+    ) -> Self {
+        assert!(depth >= 1, "stack needs at least one layer");
+        assert!(heads > 0 && kv_heads > 0 && heads % kv_heads == 0, "bad head grouping");
+        let need = |li: usize, leaf: &str| -> Mat {
+            store
+                .layer_mat(base, li, leaf)
+                .unwrap_or_else(|| panic!("missing weight {base}.[layers.{li}.]attn.{leaf}"))
+        };
+        let layers = (0..depth)
+            .map(|li| {
+                let wq = need(li, "wq.w");
+                let wk = need(li, "wk.w");
+                let wv = need(li, "wv.w");
+                let wo = need(li, "wo.w");
+                assert_eq!((wq.rows, wq.cols), (channels, heads * head_dim), "wq shape");
+                assert_eq!((wk.rows, wk.cols), (channels, kv_heads * head_dim), "wk shape");
+                assert_eq!((wv.rows, wv.cols), (channels, kv_heads * head_dim), "wv shape");
+                assert_eq!((wo.rows, wo.cols), (heads * head_dim, channels), "wo shape");
+                let projs = store.sla_layer_projs(base, li, heads, head_dim);
+                DitLayer {
+                    engine: BatchSlaEngine::with_projs(cfg.clone(), kv_heads, projs),
+                    wq,
+                    wk,
+                    wv,
+                    wo,
+                }
+            })
+            .collect();
+        DitStack {
+            layers,
+            heads,
+            kv_heads,
+            head_dim,
+            channels,
+            norm_eps: RMS_EPS,
+        }
+    }
+
+    /// Randomly initialized stack (fan-in-scaled weights, zero projections)
+    /// — test and bench construction without a parameter store.
+    pub fn random(
+        cfg: SlaConfig,
+        depth: usize,
+        heads: usize,
+        head_dim: usize,
+        channels: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(depth >= 1, "stack needs at least one layer");
+        let mut rng = Rng::new(seed);
+        let hd = heads * head_dim;
+        let layers = (0..depth)
+            .map(|_| DitLayer {
+                engine: BatchSlaEngine::new(cfg.clone(), heads, head_dim),
+                wq: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
+                wk: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
+                wv: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
+                wo: Mat::randn(hd, channels, &mut rng).scaled(1.0 / (hd as f32).sqrt()),
+            })
+            .collect();
+        DitStack {
+            layers,
+            heads,
+            kv_heads: heads,
+            head_dim,
+            channels,
+            norm_eps: RMS_EPS,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// The (batch x head) fan width every stack path uses.
+    pub fn threads(&self) -> usize {
+        self.layers[0].engine.cfg.threads.max(1)
+    }
+
+    /// Adopt fine-tuned per-head projections for one layer.
+    pub fn set_layer_projs(&mut self, li: usize, projs: Vec<Mat>) {
+        assert_eq!(projs.len(), self.heads, "one projection per query head");
+        self.layers[li].engine.projs = projs;
+    }
+
+    /// Normalize + modulate + project one layer's inputs for every batch
+    /// item, packed into `[B, H, N, d]` / `[B, Hkv, N, d]` engine tensors.
+    fn project_layer(&self, li: usize, hs: &[Mat], mods: &[f32]) -> (Tens4, Tens4, Tens4) {
+        let threads = self.threads();
+        let lay = &self.layers[li];
+        let b = hs.len();
+        let n = hs[0].rows;
+        let packed: Vec<(Mat, Mat, Mat)> = threadpool::parallel_map_send(b, threads, |bi| {
+            let mut u = rms_norm_rows(&hs[bi], self.norm_eps);
+            u.scale(mods[bi]);
+            (u.matmul(&lay.wq), u.matmul(&lay.wk), u.matmul(&lay.wv))
+        });
+        let mut q4 = Tens4::zeros(b, self.heads, n, self.head_dim);
+        let mut k4 = Tens4::zeros(b, self.kv_heads, n, self.head_dim);
+        let mut v4 = Tens4::zeros(b, self.kv_heads, n, self.head_dim);
+        for (bi, (qp, kp, vp)) in packed.iter().enumerate() {
+            q4.set_item_packed(bi, qp);
+            k4.set_item_packed(bi, kp);
+            v4.set_item_packed(bi, vp);
+        }
+        (q4, k4, v4)
+    }
+
+    /// Merge heads, apply the output projection, add the residual.
+    fn apply_output(&self, li: usize, hs: &mut [Mat], o: &Tens4) {
+        let threads = self.threads();
+        let lay = &self.layers[li];
+        let b = hs.len();
+        let ys: Vec<Mat> =
+            threadpool::parallel_map_send(b, threads, |bi| o.item_packed(bi).matmul(&lay.wo));
+        for (h, y) in hs.iter_mut().zip(&ys) {
+            h.add_assign(y);
+        }
+    }
+
+    fn check_inputs(&self, hs: &[Mat], mods: &[f32]) {
+        assert!(!hs.is_empty(), "empty batch");
+        assert_eq!(mods.len(), hs.len(), "one modulation scalar per batch item");
+        let n = hs[0].rows;
+        for (bi, h) in hs.iter().enumerate() {
+            assert_eq!(
+                (h.rows, h.cols),
+                (n, self.channels),
+                "item {bi} shape ({}, {}) != (N={n}, C={})",
+                h.rows,
+                h.cols,
+                self.channels
+            );
+        }
+    }
+
+    /// Full-state forward with fresh per-layer mask prediction. `mods` is
+    /// the per-item conditioning scalar (timestep modulation; 1.0 = none).
+    pub fn forward_fresh(&self, hs: &[Mat], mods: &[f32]) -> StackForward {
+        self.check_inputs(hs, mods);
+        let mut hs = hs.to_vec();
+        let mut per_layer = Vec::with_capacity(self.depth());
+        for li in 0..self.depth() {
+            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
+            let out = self.layers[li].engine.forward(&q4, &k4, &v4);
+            self.apply_output(li, &mut hs, &out.o);
+            per_layer.push(out);
+        }
+        StackForward { hs, per_layer }
+    }
+
+    /// Full-state forward with per-layer plans from `planner` (predicted on
+    /// first use, replayed until stale — `refresh_every = 1` reproduces
+    /// [`DitStack::forward_fresh`] bitwise for concrete aggregation
+    /// strategies). With `cfg.agg == Auto`, each layer's plan picks its own
+    /// A.3 aggregation strategy via `AttentionPlan::auto_agg`
+    /// (engine-consumed, resolved per PLAN) while the fresh/serving paths
+    /// resolve per MASK — exact either way, equal up to f32 summation
+    /// order when a layer's masks are heterogeneous.
+    pub fn forward(&self, hs: &[Mat], mods: &[f32], planner: &mut StackPlanner) -> StackForward {
+        self.check_inputs(hs, mods);
+        assert_eq!(planner.depth(), self.depth(), "planner depth != stack depth");
+        let mut hs = hs.to_vec();
+        let mut per_layer = Vec::with_capacity(self.depth());
+        for li in 0..self.depth() {
+            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
+            let plan = planner.plan_for(li, &q4, &k4);
+            let out = self.layers[li].engine.forward_plan(&q4, &k4, &v4, &plan);
+            self.apply_output(li, &mut hs, &out.o);
+            per_layer.push(out);
+        }
+        StackForward { hs, per_layer }
+    }
+
+    /// Forward-only serving mode: fresh per-layer prediction through the
+    /// light kernels — bitwise identical to [`DitStack::forward_fresh`]'s
+    /// hidden states with no backward state materialized at any layer.
+    pub fn forward_only(&self, hs: &[Mat], mods: &[f32]) -> Vec<Mat> {
+        self.check_inputs(hs, mods);
+        let mut hs = hs.to_vec();
+        for li in 0..self.depth() {
+            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
+            let out = self.layers[li].engine.forward_only(&q4, &k4, &v4);
+            self.apply_output(li, &mut hs, &out.o);
+        }
+        hs
+    }
+
+    /// The keyed serving hot path: for every layer, item `i`'s masks come
+    /// from `cache` under `(keys[i], layer)` when fresh; misses leave
+    /// `None` slots resolved by in-task prediction inside the execution fan
+    /// and are harvested back into the cache. `forward_only` selects the
+    /// light kernels (no backward state; bitwise-identical outputs either
+    /// way). Returns the final hidden states and the mean predicted-mask
+    /// sparsity bookkeeping via the cache's own counters.
+    pub fn forward_serving(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        keys: &[Option<u64>],
+        cache: &mut RequestPlanCache,
+        forward_only: bool,
+    ) -> Vec<Mat> {
+        self.check_inputs(hs, mods);
+        let b = hs.len();
+        assert_eq!(keys.len(), b, "one stream key per batch item");
+        let heads = self.heads;
+        let mut hs = hs.to_vec();
+        for li in 0..self.depth() {
+            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
+            let n = q4.n;
+            let tm = n / self.layers[li].engine.cfg.bq;
+            let mut slots: Vec<Option<Arc<CompressedMask>>> = Vec::with_capacity(b * heads);
+            let mut missing: Vec<usize> = Vec::new();
+            for (bi, key) in keys.iter().enumerate() {
+                match cache.lookup(*key, li, heads, tm) {
+                    Some(ms) => slots.extend(ms.into_iter().map(Some)),
+                    None => {
+                        missing.push(bi);
+                        slots.extend((0..heads).map(|_| None));
+                    }
+                }
+            }
+            let engine = &self.layers[li].engine;
+            let (o4, masks) = if forward_only {
+                let lo = engine.forward_only_with(&q4, &k4, &v4, &slots);
+                (lo.o, lo.masks)
+            } else {
+                let out = engine.forward_with_opt(&q4, &k4, &v4, &slots);
+                let masks = out.masks();
+                (out.o, masks)
+            };
+            for &bi in &missing {
+                let ms: Vec<Arc<CompressedMask>> = (0..heads)
+                    .map(|hi| Arc::clone(&masks[bi * heads + hi]))
+                    .collect();
+                cache.store(keys[bi], li, &ms, tm);
+            }
+            self.apply_output(li, &mut hs, &o4);
+        }
+        hs
+    }
+
+    /// The layer-looped single-engine reference: serial per-item loops and
+    /// plain `engine.forward` calls, no plans, no batched packing fans —
+    /// the parity target the integrated paths must match bitwise.
+    pub fn reference_forward(&self, hs: &[Mat], mods: &[f32]) -> Vec<Mat> {
+        self.check_inputs(hs, mods);
+        let b = hs.len();
+        let n = hs[0].rows;
+        let mut hs = hs.to_vec();
+        for lay in &self.layers {
+            let mut q4 = Tens4::zeros(b, self.heads, n, self.head_dim);
+            let mut k4 = Tens4::zeros(b, self.kv_heads, n, self.head_dim);
+            let mut v4 = Tens4::zeros(b, self.kv_heads, n, self.head_dim);
+            for bi in 0..b {
+                let mut u = rms_norm_rows(&hs[bi], self.norm_eps);
+                u.scale(mods[bi]);
+                q4.set_item_packed(bi, &u.matmul(&lay.wq));
+                k4.set_item_packed(bi, &u.matmul(&lay.wk));
+                v4.set_item_packed(bi, &u.matmul(&lay.wv));
+            }
+            let out = lay.engine.forward(&q4, &k4, &v4);
+            for (bi, h) in hs.iter_mut().enumerate() {
+                h.add_assign(&out.o.item_packed(bi).matmul(&lay.wo));
+            }
+        }
+        hs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AggStrategy;
+    use crate::runtime::TensorSpec;
+
+    fn cfg(threads: usize) -> SlaConfig {
+        SlaConfig {
+            bq: 8,
+            bkv: 8,
+            kh_pct: 25.0,
+            kl_pct: 25.0,
+            threads,
+            ..Default::default()
+        }
+    }
+
+    fn items(b: usize, n: usize, c: usize, seed: u64) -> Vec<Mat> {
+        let mut rng = Rng::new(seed);
+        (0..b).map(|_| Mat::randn(n, c, &mut rng)).collect()
+    }
+
+    fn ones(b: usize) -> Vec<f32> {
+        vec![1.0; b]
+    }
+
+    #[test]
+    fn rms_norm_rows_unit_scale() {
+        let mut rng = Rng::new(0);
+        let x = Mat::randn(4, 16, &mut rng);
+        let y = rms_norm_rows(&x, 1e-6);
+        for r in 0..4 {
+            let ms: f32 = y.row(r).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {r} rms {ms}");
+        }
+    }
+
+    #[test]
+    fn stack_forward_matches_layer_looped_reference_bitwise() {
+        // the acceptance parity: L >= 2, batched/planned/forward-only paths
+        // all equal the serial layer-looped single-engine reference
+        let (b, n, c, heads, d, depth) = (2, 32, 12, 3, 4, 3);
+        let stack = DitStack::random(cfg(4), depth, heads, d, c, 5);
+        let hs = items(b, n, c, 6);
+        // non-trivial per-item modulation so the adaLN path is covered too
+        let mods = [0.8f32, 1.2];
+        let reference = stack.reference_forward(&hs, &mods);
+        let fresh = stack.forward_fresh(&hs, &mods);
+        let mut planner = StackPlanner::new(cfg(4), depth, 1);
+        let planned = stack.forward(&hs, &mods, &mut planner);
+        let light = stack.forward_only(&hs, &mods);
+        for bi in 0..b {
+            assert_eq!(fresh.hs[bi].data, reference[bi].data, "fresh item {bi}");
+            assert_eq!(planned.hs[bi].data, reference[bi].data, "planned item {bi}");
+            assert_eq!(light[bi].data, reference[bi].data, "forward-only item {bi}");
+        }
+        assert_eq!(fresh.per_layer.len(), depth);
+        assert_eq!(planner.total_stats().misses as usize, depth);
+    }
+
+    #[test]
+    fn planner_reuse_and_frozen_regime_across_layers() {
+        let (b, n, c, heads, d, depth) = (1, 32, 8, 2, 4, 2);
+        let stack = DitStack::random(cfg(2), depth, heads, d, c, 7);
+        let hs = items(b, n, c, 8);
+        let mut planner = StackPlanner::frozen(cfg(2), depth);
+        let o1 = stack.forward(&hs, &ones(b), &mut planner);
+        let o2 = stack.forward(&hs, &ones(b), &mut planner);
+        // static inputs: frozen replay is bitwise identical
+        for bi in 0..b {
+            assert_eq!(o1.hs[bi].data, o2.hs[bi].data);
+        }
+        for li in 0..depth {
+            assert_eq!(planner.stats(li).misses, 1, "layer {li} predicts once");
+            assert_eq!(planner.stats(li).hits, 1, "layer {li} replays once");
+        }
+    }
+
+    #[test]
+    fn serving_path_caches_per_layer_and_matches_forward_only() {
+        let (b, n, c, heads, d, depth) = (2, 32, 8, 2, 4, 2);
+        let stack = DitStack::random(cfg(2), depth, heads, d, c, 9);
+        let hs = items(b, n, c, 10);
+        let mut cache = RequestPlanCache::new(4);
+        let keys = [Some(1u64), Some(2u64)];
+        let mods = ones(b);
+        let served = stack.forward_serving(&hs, &mods, &keys, &mut cache, true);
+        let light = stack.forward_only(&hs, &mods);
+        for bi in 0..b {
+            assert_eq!(served[bi].data, light[bi].data, "serving == forward-only");
+        }
+        // one entry per (stream, layer); all misses on the first pass
+        assert_eq!(cache.len(), b * depth);
+        assert_eq!(cache.stats().misses as usize, b * depth);
+        assert_eq!(cache.stats().hits, 0);
+        for li in 0..depth {
+            assert_eq!(cache.layer_stats(li).misses as usize, b);
+        }
+        // second pass on the same inputs: every (stream, layer) hits, and
+        // replay is bitwise identical
+        let served2 = stack.forward_serving(&hs, &mods, &keys, &mut cache, true);
+        for bi in 0..b {
+            assert_eq!(served2[bi].data, served[bi].data);
+        }
+        assert_eq!(cache.stats().hits as usize, b * depth);
+        // full-state serving equals forward-only serving bitwise
+        let mut cache_full = RequestPlanCache::new(4);
+        let served_full = stack.forward_serving(&hs, &mods, &keys, &mut cache_full, false);
+        for bi in 0..b {
+            assert_eq!(served_full[bi].data, served[bi].data);
+        }
+    }
+
+    #[test]
+    fn layers_have_independent_masks_and_projections() {
+        // depth 2: layer 1's input is post-residual, so its predicted masks
+        // differ from layer 0's — and the cache keeps them apart
+        let (n, c, heads, d) = (32, 8, 2, 4);
+        let stack = DitStack::random(cfg(1), 2, heads, d, c, 11);
+        let hs = items(1, n, c, 12);
+        let fwd = stack.forward_fresh(&hs, &ones(1));
+        // some (batch, head) slot must label at least one block differently
+        // between the two layers: the post-residual geometry is its own
+        let mut any_differ = false;
+        for (m0, m1) in fwd.per_layer[0]
+            .per_head
+            .iter()
+            .map(|p| &p.mask)
+            .zip(fwd.per_layer[1].per_head.iter().map(|p| &p.mask))
+        {
+            assert!(!Arc::ptr_eq(m0, m1));
+            any_differ |= (0..m0.tm)
+                .any(|i| (0..m0.tn).any(|j| m0.label(i, j) != m1.label(i, j)));
+        }
+        assert!(any_differ, "layers should predict different masks on this workload");
+    }
+
+    #[test]
+    fn from_params_extracts_per_layer_with_shared_fallback() {
+        let (c, heads, d, depth) = (6, 2, 3, 2);
+        let hd = heads * d;
+        let spec = |name: &str, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: "float32".to_string(),
+        };
+        let specs = [
+            spec("params.s.attn.wq.w", &[c, hd]),
+            spec("params.s.attn.wk.w", &[c, hd]),
+            spec("params.s.attn.wv.w", &[c, hd]),
+            spec("params.s.attn.wo.w", &[hd, c]),
+            spec("params.s.layers.0.attn.sla_proj.0", &[d, d]),
+            spec("params.s.layers.0.attn.sla_proj.1", &[d, d]),
+        ];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::init(&refs, 3);
+        // give layer 0's projections a recognizable value
+        store.tensors[4] = crate::runtime::HostTensor::new(vec![d, d], vec![0.5; d * d]);
+        let stack =
+            DitStack::from_params(&store, "params.s", cfg(1), depth, heads, heads, d, c);
+        assert_eq!(stack.depth(), depth);
+        // layer 0 head 0 got its leaf; layer 1 fell back to zeros (no
+        // stack-shared sla_proj leaves exist)
+        assert_eq!(stack.layers[0].engine.projs[0].data, vec![0.5; d * d]);
+        assert!(stack.layers[1].engine.projs[0].data.iter().all(|&x| x == 0.0));
+        // both layers share the stack weights
+        assert_eq!(stack.layers[0].wq.data, stack.layers[1].wq.data);
+        // and the stack runs
+        let hs = items(1, 16, c, 4);
+        let out = stack.forward_only(&hs, &ones(1));
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn auto_agg_stack_matches_reference_with_auto() {
+        // Auto aggregation resolves deterministically from each mask /
+        // plan, so the integrated and reference paths still agree when both
+        // run Auto through fresh per-mask prediction
+        let auto_cfg = SlaConfig { agg: AggStrategy::Auto, ..cfg(2) };
+        let stack = DitStack::random(auto_cfg, 2, 2, 4, 8, 13);
+        let hs = items(2, 32, 8, 14);
+        let mods = ones(2);
+        let reference = stack.reference_forward(&hs, &mods);
+        let light = stack.forward_only(&hs, &mods);
+        for bi in 0..2 {
+            assert_eq!(light[bi].data, reference[bi].data);
+        }
+    }
+
+    #[test]
+    fn set_layer_projs_changes_that_layer_only() {
+        let (n, c, heads, d) = (16, 8, 2, 4);
+        let mut stack = DitStack::random(cfg(1), 2, heads, d, c, 15);
+        let hs = items(1, n, c, 16);
+        let before = stack.forward_only(&hs, &ones(1));
+        let mut rng = Rng::new(17);
+        let projs: Vec<Mat> = (0..heads).map(|_| Mat::randn(d, d, &mut rng).scaled(0.3)).collect();
+        stack.set_layer_projs(1, projs);
+        let after = stack.forward_only(&hs, &ones(1));
+        assert_ne!(before[0].data, after[0].data, "layer 1 projections must matter");
+    }
+
+    #[test]
+    fn modulation_scalar_is_observable_through_the_norm() {
+        // rms_norm is scale-invariant, so conditioning must be injected
+        // AFTER it — two different mods must change the output
+        let stack = DitStack::random(cfg(1), 1, 2, 4, 8, 18);
+        let hs = items(1, 32, 8, 19);
+        let a = stack.forward_only(&hs, &[0.6]);
+        let b = stack.forward_only(&hs, &[1.4]);
+        assert_ne!(a[0].data, b[0].data, "modulation must be observable");
+        // while pre-scaling the INPUT is erased by the norm (same output)
+        let mut scaled: Vec<Mat> = hs.clone();
+        scaled[0].scale(3.0);
+        let c = stack.forward_only(&scaled, &[0.6]);
+        // attention inputs identical up to eps; outputs differ only through
+        // the residual base, which IS scaled — so just check attention
+        // didn't blow up; the real scale-invariance claim is covered by the
+        // mod-sensitivity assert above
+        assert!(c[0].data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -218,12 +218,32 @@ impl NativeFineTuner {
     /// Zero-initialized projections: step 0's loss is exactly the
     /// sparse-only gap to the teacher.
     pub fn new(cfg: SlaConfig, heads: usize, kv_heads: usize, d: usize, lr: f32) -> Self {
-        NativeFineTuner {
-            engine: BatchSlaEngine::with_kv_heads(cfg.clone(), heads, kv_heads, d),
-            planner: MaskPlanner::frozen(cfg),
+        Self::from_engine(
+            BatchSlaEngine::with_kv_heads(cfg.clone(), heads, kv_heads, d),
             lr,
-            losses: Vec::new(),
-        }
+        )
+    }
+
+    /// Adopt an existing engine (its config and current projections) — the
+    /// entry point for fine-tuning in place.
+    pub fn from_engine(engine: BatchSlaEngine, lr: f32) -> Self {
+        let planner = MaskPlanner::frozen(engine.cfg.clone());
+        NativeFineTuner { engine, planner, lr, losses: Vec::new() }
+    }
+
+    /// Fine-tune ONE layer of a [`DitStack`](crate::model::DitStack): the
+    /// layer's engine (config + projections) is cloned into the tuner;
+    /// write the tuned projections back with `DitStack::set_layer_projs`
+    /// (or `NativeSlaBackend::set_layer_projs` on the serving backend).
+    /// The fine-tuner deliberately keeps the FULL-state forward
+    /// (`forward_plan`), never the serving path's forward-only mode — the
+    /// batched backward replays qphi/kphi/os/ol/lse/H_i/Z_i.
+    pub fn for_stack_layer(stack: &crate::model::DitStack, layer: usize, lr: f32) -> Self {
+        let src = &stack.layers[layer].engine;
+        Self::from_engine(
+            BatchSlaEngine::with_projs(src.cfg.clone(), src.kv_heads, src.projs.clone()),
+            lr,
+        )
     }
 
     /// Re-predict the plan every `refresh_every` steps instead of freezing
@@ -369,6 +389,37 @@ mod tests {
         }
         assert_eq!(ft.planner.stats().misses, 3);
         assert_eq!(ft.planner.stats().hits, 0);
+    }
+
+    #[test]
+    fn stack_layer_finetune_writes_back_into_the_stack() {
+        use crate::model::DitStack;
+        // distill layer 1 of a depth-2 stack against its own full-attention
+        // teacher, then write the tuned projections back
+        let (b, n, c, heads, d) = (1, 32, 8, 2, 4);
+        let mut stack = DitStack::random(cfg(8), 2, heads, d, c, 40);
+        let mut rng = Rng::new(41);
+        let hs: Vec<crate::tensor::Mat> =
+            (0..b).map(|_| crate::tensor::Mat::randn(n, c, &mut rng)).collect();
+        let mods = vec![1.0f32; b];
+        let before = stack.forward_only(&hs, &mods);
+        let mut ft = NativeFineTuner::for_stack_layer(&stack, 1, 2.0);
+        assert_eq!(ft.engine.heads, heads);
+        let (q, k, v) = qkv4(b, heads, n, d, 42);
+        let target = ft.targets(&q, &k, &v);
+        let first = ft.step(&q, &k, &v, &target);
+        let mut last = first;
+        for _ in 0..20 {
+            last = ft.step(&q, &k, &v, &target);
+        }
+        assert!(last < first, "distillation must descend: {first} -> {last}");
+        // the tuner worked on a clone: the stack is untouched until the
+        // explicit write-back below
+        let untouched = stack.forward_only(&hs, &mods);
+        assert_eq!(before[0].data, untouched[0].data);
+        stack.set_layer_projs(1, ft.engine.projs.clone());
+        let after = stack.forward_only(&hs, &mods);
+        assert_ne!(before[0].data, after[0].data, "write-back must take effect");
     }
 
     #[test]

@@ -96,13 +96,8 @@ impl Json {
         Ok(v)
     }
 
-    // ---- serialization ---------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
+    // ---- serialization (via Display; `.to_string()` comes from the
+    // blanket ToString impl) ----------------------------------------------
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -155,6 +150,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

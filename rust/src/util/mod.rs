@@ -6,5 +6,6 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sendptr;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,25 @@
+//! The crate's single audited raw-pointer Send/Sync wrapper.
+//!
+//! Parallel writers (the threadpool's result slots, the kernels' disjoint
+//! output rows, the batched engine's head slabs) share one mutable buffer
+//! across worker threads by construction-time disjointness that the borrow
+//! checker cannot see. `SendPtr` erases the `*mut T` so closures capturing
+//! it stay `Sync`; every use site documents its own disjointness invariant
+//! at the `unsafe` dereference.
+
+/// Raw mutable pointer that asserts Send + Sync. SAFETY contract for
+/// constructors: every thread dereferencing the pointer must touch a
+/// disjoint region, and the pointee must outlive all such accesses (in
+/// this crate: the submitting call blocks until every worker finishes).
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor (rather than field access) so edition-2021 closures capture
+    /// the Sync wrapper whole, not the raw pointer field.
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}

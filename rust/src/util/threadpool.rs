@@ -1,8 +1,26 @@
-//! Scoped-thread data parallelism (rayon substitute).
+//! Persistent-worker data parallelism (rayon substitute).
 //!
-//! `parallel_for_chunks` splits an index range across worker threads using
-//! `std::thread::scope`; work is balanced by contiguous chunking. Used by
-//! the attention simulator's hot loops and the bench harness.
+//! `parallel_for_chunks` splits an index range across a process-wide pool of
+//! long-lived worker threads; work is balanced by contiguous chunking. The
+//! pool is spawned once on first use and reused by every subsequent call, so
+//! per-thread state — most importantly the kernel `SlaWorkspace` TLS scratch
+//! (see `attention::plan`) — survives across batched engine invocations
+//! instead of being rebuilt per call (the previous `std::thread::scope`
+//! implementation spawned fresh OS threads, and therefore fresh TLS, on
+//! every invocation). The submitting thread participates in execution, so a
+//! call never deadlocks even when every worker is busy with other callers,
+//! and chunk *assignment* (which thread runs which chunk) never affects
+//! results: chunks are disjoint and the per-thread scratch is fully reset
+//! per work item. Task panics are caught per chunk and re-raised on the
+//! submitting thread after the job settles — callers observe the same
+//! panic the scoped implementation propagated, workers survive, and no
+//! in-flight chunk can outlive the stack frame that owns its closure.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+use super::sendptr::SendPtr;
 
 /// Number of workers: respects SLA_DIT_THREADS, defaults to available
 /// parallelism capped at 16.
@@ -17,9 +35,117 @@ pub fn default_threads() -> usize {
         .unwrap_or(4)
 }
 
-/// Run `f(start, end)` over disjoint chunks of `0..n` on `threads` workers.
-/// `f` must be Sync; chunks are contiguous so writers can slice disjoint
-/// output regions safely via interior mutability or raw splitting.
+/// One queued chunk of a `parallel_for_chunks` call. The closure and the
+/// completion state live on the submitting thread's stack; the submitting
+/// call blocks until `done.remaining` hits zero, so both raw pointers
+/// outlive every access (see `run_chunk`).
+struct Chunk {
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+    start: usize,
+    end: usize,
+    done: *const JobState,
+}
+
+// SAFETY: the pointers are only dereferenced while the submitting call is
+// blocked waiting for the job, which keeps both referents alive; the
+// closure itself is required to be Sync by `parallel_for_chunks`.
+unsafe impl Send for Chunk {}
+
+struct JobState {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    /// First panic payload raised by any chunk of this job; re-raised on
+    /// the submitting thread once every chunk has settled.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+struct Pool {
+    queue: Mutex<VecDeque<Chunk>>,
+    cv: Condvar,
+}
+
+static POOL: OnceLock<&'static Pool> = OnceLock::new();
+static POOL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Number of persistent worker threads ever spawned (test observability:
+/// stays constant across calls once the pool exists).
+pub fn pool_threads_spawned() -> usize {
+    POOL_THREADS.load(Ordering::Relaxed)
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        }));
+        let workers = default_threads();
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("sla-pool-{i}"))
+                .spawn(move || worker_loop(p))
+                .expect("spawn pool worker");
+            POOL_THREADS.fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    })
+}
+
+fn worker_loop(p: &'static Pool) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    let mut q = p.queue.lock().unwrap();
+    loop {
+        match q.pop_front() {
+            Some(c) => {
+                drop(q);
+                run_chunk(c);
+                q = p.queue.lock().unwrap();
+            }
+            None => q = p.cv.wait(q).unwrap(),
+        }
+    }
+}
+
+fn run_chunk(c: Chunk) {
+    // SAFETY: the submitting `parallel_for_chunks` call blocks until
+    // `remaining` reaches zero, so the closure behind `data` and the
+    // `JobState` behind `done` are both alive for the whole call. Panics in
+    // the task are CAUGHT so (a) the worker thread survives, (b) the
+    // decrement always happens (no hung submitter), and (c) the submitter
+    // unwinds only after every chunk has settled — no queued chunk can
+    // still reference the stack-owned closure when it does. After the final
+    // decrement releases the mutex this function never touches the job.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+        (c.call)(c.data, c.start, c.end)
+    }));
+    let done = unsafe { &*c.done };
+    if let Err(payload) = result {
+        let mut p = done.panic.lock().unwrap();
+        if p.is_none() {
+            *p = Some(payload);
+        }
+    }
+    let mut rem = done.remaining.lock().unwrap();
+    *rem -= 1;
+    if *rem == 0 {
+        done.cv.notify_all();
+    }
+}
+
+unsafe fn call_closure<F: Fn(usize, usize) + Sync>(data: *const (), start: usize, end: usize) {
+    let f = &*(data as *const F);
+    f(start, end);
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on the persistent
+/// pool. `f` must be Sync; chunks are contiguous so writers can slice
+/// disjoint output regions safely via interior mutability or raw splitting.
+/// Calls from inside a pool worker (nesting) run inline.
 pub fn parallel_for_chunks<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -28,22 +154,56 @@ where
         return;
     }
     let threads = threads.max(1).min(n);
-    if threads <= 1 || n <= 1 {
+    if threads <= 1 || n <= 1 || IS_POOL_WORKER.with(|x| x.get()) {
         f(0, n);
         return;
     }
     let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(start, end));
+    let nchunks = n.div_ceil(chunk);
+    if nchunks <= 1 {
+        f(0, n);
+        return;
+    }
+    let state = JobState {
+        remaining: Mutex::new(nchunks),
+        cv: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    let p = pool();
+    {
+        let mut q = p.queue.lock().unwrap();
+        for t in 0..nchunks {
+            q.push_back(Chunk {
+                data: &f as *const F as *const (),
+                call: call_closure::<F>,
+                start: t * chunk,
+                end: ((t + 1) * chunk).min(n),
+                done: &state as *const JobState,
+            });
         }
-    });
+        p.cv.notify_all();
+    }
+    // The submitting thread helps drain the queue (its own chunks or other
+    // callers' — correctness does not depend on ownership), then waits for
+    // its job to complete.
+    loop {
+        let c = p.queue.lock().unwrap().pop_front();
+        match c {
+            Some(c) => run_chunk(c),
+            None => break,
+        }
+    }
+    let mut rem = state.remaining.lock().unwrap();
+    while *rem > 0 {
+        rem = state.cv.wait(rem).unwrap();
+    }
+    drop(rem);
+    // a panic in any chunk propagates to the submitting thread, exactly as
+    // the previous scoped-thread implementation did — but only now, when no
+    // chunk can still reference `f` or `state`
+    if let Some(payload) = state.panic.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
 }
 
 /// Map `0..n` through `f` in parallel, collecting results in index order.
@@ -71,25 +231,13 @@ where
         for i in start..end {
             // SAFETY: chunks are disjoint, so each slot is written by exactly
             // one worker; the overwritten value is the initial None (its drop
-            // is a no-op) and `out` outlives the thread scope.
+            // is a no-op) and `out` outlives the blocking dispatch call.
             unsafe { *out_ptr.get().add(i) = Some(f(i)) };
         }
     });
     out.into_iter()
         .map(|x| x.expect("parallel_map_send: chunk coverage hole"))
         .collect()
-}
-
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-
-impl<T> SendPtr<T> {
-    /// Accessor (rather than field access) so edition-2021 closures capture
-    /// the Sync wrapper, not the raw pointer field.
-    fn get(&self) -> *mut T {
-        self.0
-    }
 }
 
 #[cfg(test)]
@@ -129,5 +277,58 @@ mod tests {
         parallel_for_chunks(0, 4, |_, _| panic!("should not run"));
         let v = parallel_map(1, 4, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn pool_threads_persist_across_calls() {
+        // the old scoped implementation spawned fresh threads per call; the
+        // persistent pool must spawn once and reuse — the spawn counter is
+        // flat across arbitrarily many dispatches
+        parallel_for_chunks(64, 4, |_, _| {});
+        let spawned = pool_threads_spawned();
+        assert!(spawned >= 1, "pool must exist after a parallel call");
+        for _ in 0..50 {
+            let v = parallel_map(32, 4, |i| i + 1);
+            assert_eq!(v[31], 32);
+        }
+        assert_eq!(pool_threads_spawned(), spawned, "no per-call thread spawns");
+    }
+
+    #[test]
+    #[should_panic(expected = "boom in chunk")]
+    fn task_panics_propagate_to_the_submitter() {
+        // a panicking chunk must fail the CALL (like the old scoped
+        // implementation), not hang the submitter or kill the pool
+        parallel_for_chunks(64, 4, |s, _| {
+            if s == 0 {
+                panic!("boom in chunk");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        // after a panicked job, the pool still serves new work correctly
+        let _ = std::panic::catch_unwind(|| {
+            parallel_for_chunks(64, 4, |_, _| panic!("deliberate"));
+        });
+        let v = parallel_map(100, 4, |i| i * 2);
+        assert_eq!(v, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_calls_run_inline_and_complete() {
+        // a chunk body that itself calls parallel_for_chunks must not
+        // deadlock: worker-side nesting runs inline, caller-side nesting
+        // re-enters the dispatch path
+        let total = AtomicUsize::new(0);
+        parallel_for_chunks(8, 4, |s, e| {
+            for _ in s..e {
+                parallel_for_chunks(16, 4, |s2, e2| {
+                    total.fetch_add(e2 - s2, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
     }
 }
