@@ -105,7 +105,10 @@ pub struct BatchSlaGrads {
 }
 
 /// The batched multi-head engine: per-head kernel config + learnable
-/// per-head compensation projections.
+/// per-head compensation projections. `Clone` deep-copies the projections
+/// — fine-tuners clone a layer's engine to train out of place and write
+/// back explicitly.
+#[derive(Clone)]
 pub struct BatchSlaEngine {
     /// Per-head kernel configuration. `cfg.threads` is the (batch x head)
     /// fan-out width; the inner per-head kernels always run single-threaded

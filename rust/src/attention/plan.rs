@@ -222,19 +222,35 @@ impl PlanStats {
 /// first use, then serves the cached plan for `refresh_every` consecutive
 /// steps before re-predicting. `refresh_every == 1` reproduces the
 /// pre-plan engine bitwise (a fresh prediction on every step).
+///
+/// Aging is **step-indexed** when the caller identifies its denoise steps:
+/// [`MaskPlanner::plan_for_step`] consumes one refresh unit per distinct
+/// step index, so an integrator that evaluates the model twice within one
+/// step (Heun's interior stages) ages the plan once, not twice. The
+/// unstepped [`MaskPlanner::plan_for`] keeps the historical per-call aging.
 #[derive(Debug)]
 pub struct MaskPlanner {
     pub cfg: SlaConfig,
     pub refresh_every: usize,
     plan: Option<Arc<AttentionPlan>>,
     age: usize,
+    /// Step index the plan last served (step-indexed aging); `None` for
+    /// unstepped calls.
+    last_step: Option<u64>,
     stats: PlanStats,
 }
 
 impl MaskPlanner {
     pub fn new(cfg: SlaConfig, refresh_every: usize) -> Self {
         assert!(refresh_every >= 1, "refresh_every must be >= 1");
-        MaskPlanner { cfg, refresh_every, plan: None, age: 0, stats: PlanStats::default() }
+        MaskPlanner {
+            cfg,
+            refresh_every,
+            plan: None,
+            age: 0,
+            last_step: None,
+            stats: PlanStats::default(),
+        }
     }
 
     /// Planner that predicts once and then keeps the plan frozen — the
@@ -245,17 +261,34 @@ impl MaskPlanner {
 
     /// The plan to execute this step: the cached one while fresh, else a
     /// new prediction. A shape change (batch, heads, or block grid) always
-    /// re-predicts.
+    /// re-predicts. Ages per CALL (every invocation consumes a refresh
+    /// unit); integrators that evaluate several times per denoise step
+    /// should use [`MaskPlanner::plan_for_step`] instead.
     pub fn plan_for(&mut self, q: &Tens4, k: &Tens4) -> Arc<AttentionPlan> {
+        self.plan_for_opt(None, q, k)
+    }
+
+    /// Step-indexed variant: a repeated `step` replays the cached plan
+    /// WITHOUT consuming a refresh unit (it still counts as a hit), so
+    /// Heun's two stages of one denoise step age the plan once.
+    pub fn plan_for_step(&mut self, step: u64, q: &Tens4, k: &Tens4) -> Arc<AttentionPlan> {
+        self.plan_for_opt(Some(step), q, k)
+    }
+
+    fn plan_for_opt(&mut self, step: Option<u64>, q: &Tens4, k: &Tens4) -> Arc<AttentionPlan> {
         let (b, h, n, _d) = q.dims();
         let tm = n / self.cfg.bq;
-        let stale = match &self.plan {
-            None => true,
-            Some(p) => {
-                p.batch != b || p.heads != h || p.tm != tm || self.age >= self.refresh_every
-            }
-        };
-        if stale {
+        let shape_ok = matches!(
+            &self.plan,
+            Some(p) if p.batch == b && p.heads == h && p.tm == tm
+        );
+        if shape_ok && step.is_some() && step == self.last_step {
+            // same denoise step revisited (e.g. Heun's second stage):
+            // replay without touching the age
+            self.stats.hits += 1;
+            return Arc::clone(self.plan.as_ref().expect("shape_ok implies a plan"));
+        }
+        if !shape_ok || self.age >= self.refresh_every {
             if self.plan.is_some() {
                 self.stats.refreshes += 1;
             }
@@ -266,6 +299,7 @@ impl MaskPlanner {
             self.stats.hits += 1;
             self.age = self.age.saturating_add(1);
         }
+        self.last_step = step;
         Arc::clone(self.plan.as_ref().expect("plan set above"))
     }
 
@@ -273,6 +307,7 @@ impl MaskPlanner {
     pub fn force_refresh(&mut self) {
         self.plan = None;
         self.age = 0;
+        self.last_step = None;
     }
 
     /// The current plan, if any (without advancing staleness accounting).
@@ -323,10 +358,15 @@ impl PlanCacheStats {
 
 struct CacheEntry {
     masks: Vec<Arc<CompressedMask>>,
-    /// Steps served by this entry since prediction (1 = just predicted).
+    /// Refresh units consumed by this entry since prediction (1 = just
+    /// predicted). With stamped lookups a unit is one DENOISE STEP; with
+    /// unstamped lookups it is one call.
     age: usize,
     heads: usize,
     tm: usize,
+    /// Denoise-step stamp of the last serve (step-indexed aging): a lookup
+    /// carrying the same stamp replays without consuming a refresh unit.
+    last_stamp: Option<u64>,
 }
 
 /// Per-request plan cache for the serving path, keyed by **(request
@@ -365,7 +405,9 @@ impl RequestPlanCache {
     /// counts a hit and advances the entry's age. `None` means the caller
     /// must predict and then [`RequestPlanCache::store`] the result (this
     /// split lets batched callers collect every miss first and resolve them
-    /// inside one wide execution fan instead of per request).
+    /// inside one wide execution fan instead of per request). Ages per
+    /// CALL; see [`RequestPlanCache::lookup_stamped`] for step-indexed
+    /// aging.
     pub fn lookup(
         &mut self,
         key: Option<u64>,
@@ -373,10 +415,37 @@ impl RequestPlanCache {
         heads: usize,
         tm: usize,
     ) -> Option<Vec<Arc<CompressedMask>>> {
+        self.lookup_stamped(key, layer, heads, tm, None)
+    }
+
+    /// Step-indexed lookup: `stamp` identifies the denoise step this call
+    /// belongs to. A lookup whose stamp equals the entry's last-served
+    /// stamp replays WITHOUT consuming a refresh unit (still a hit), so an
+    /// integrator evaluating twice within one step — Heun's interior
+    /// stages — ages the plan once per step, not per call. `None` stamps
+    /// reproduce the per-call aging of [`RequestPlanCache::lookup`].
+    pub fn lookup_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        heads: usize,
+        tm: usize,
+        stamp: Option<u64>,
+    ) -> Option<Vec<Arc<CompressedMask>>> {
         let key = key?;
         let hit = match self.entries.get_mut(&(key, layer as u32)) {
+            Some(e)
+                if e.heads == heads
+                    && e.tm == tm
+                    && stamp.is_some()
+                    && e.last_stamp == stamp =>
+            {
+                // same denoise step revisited: no refresh unit consumed
+                Some(e.masks.clone())
+            }
             Some(e) if e.age < self.refresh_every && e.heads == heads && e.tm == tm => {
                 e.age += 1;
+                e.last_stamp = stamp;
                 Some(e.masks.clone())
             }
             _ => None,
@@ -398,6 +467,19 @@ impl RequestPlanCache {
         masks: &[Arc<CompressedMask>],
         tm: usize,
     ) {
+        self.store_stamped(key, layer, masks, tm, None)
+    }
+
+    /// Step-indexed store: records the denoise-step stamp the prediction
+    /// was made at, so the SAME step's later stages replay it for free.
+    pub fn store_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+        stamp: Option<u64>,
+    ) {
         let sparsity: f64 = masks.iter().map(|m| m.sparsity()).sum();
         self.stats.misses += 1;
         self.stats.planned += masks.len() as u64;
@@ -414,7 +496,13 @@ impl RequestPlanCache {
             }
             self.entries.insert(
                 ck,
-                CacheEntry { masks: masks.to_vec(), age: 1, heads: masks.len(), tm },
+                CacheEntry {
+                    masks: masks.to_vec(),
+                    age: 1,
+                    heads: masks.len(),
+                    tm,
+                    last_stamp: stamp,
+                },
             );
         }
     }
@@ -519,6 +607,18 @@ impl StackPlanner {
     /// The plan to execute for stack layer `layer` this step.
     pub fn plan_for(&mut self, layer: usize, q: &Tens4, k: &Tens4) -> Arc<AttentionPlan> {
         self.planners[layer].plan_for(q, k)
+    }
+
+    /// Step-indexed variant (see [`MaskPlanner::plan_for_step`]): one
+    /// refresh unit per distinct denoise step per layer.
+    pub fn plan_for_step(
+        &mut self,
+        layer: usize,
+        step: u64,
+        q: &Tens4,
+        k: &Tens4,
+    ) -> Arc<AttentionPlan> {
+        self.planners[layer].plan_for_step(step, q, k)
     }
 
     /// Drop every layer's cached plan; the next step predicts fresh.
@@ -661,6 +761,56 @@ mod tests {
         // force_refresh drops the plan without predicting
         planner.force_refresh();
         assert!(planner.current().is_none());
+    }
+
+    #[test]
+    fn planner_step_indexed_aging_counts_steps_not_calls() {
+        // Heun shape: two calls per denoise step. Per-step aging must
+        // consume ONE refresh unit per step, so refresh_every=2 replans on
+        // steps 0, 2, 4 — not after every pair of calls.
+        let (q, k) = qk4(1, 2, 32, 8, 40);
+        let mut planner = MaskPlanner::new(cfg(8), 2);
+        let mut plans = Vec::new();
+        for step in 0..5u64 {
+            plans.push(planner.plan_for_step(step, &q, &k)); // stage 1
+            let again = planner.plan_for_step(step, &q, &k); // stage 2
+            assert!(Arc::ptr_eq(&plans[step as usize], &again), "step {step}");
+        }
+        let s = planner.stats();
+        // steps 0, 2, 4 predict; steps 1, 3 replay; every second stage hits
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.hits, 7);
+        assert!(Arc::ptr_eq(&plans[0], &plans[1]), "step 1 replays step 0's plan");
+        assert!(!Arc::ptr_eq(&plans[1], &plans[2]), "step 2 re-predicts");
+        // the per-call path on the same schedule would burn 2 units/step:
+        let mut per_call = MaskPlanner::new(cfg(8), 2);
+        for _ in 0..10 {
+            let _ = per_call.plan_for(&q, &k);
+        }
+        assert_eq!(per_call.stats().misses, 5, "per-call aging replans every 2 calls");
+    }
+
+    #[test]
+    fn request_cache_stamped_lookup_ages_per_step() {
+        let mut cache = RequestPlanCache::new(2);
+        let masks: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2];
+        // step 0: miss + store, then the same step's second stage hits
+        // without consuming a unit
+        assert!(cache.lookup_stamped(Some(1), 0, 2, 4, Some(0)).is_none());
+        cache.store_stamped(Some(1), 0, &masks, 4, Some(0));
+        assert!(cache.lookup_stamped(Some(1), 0, 2, 4, Some(0)).is_some());
+        // step 1 consumes the second unit (age 2); its second stage is free
+        assert!(cache.lookup_stamped(Some(1), 0, 2, 4, Some(1)).is_some());
+        assert!(cache.lookup_stamped(Some(1), 0, 2, 4, Some(1)).is_some());
+        // step 2: both units consumed -> stale, caller must re-predict
+        assert!(cache.lookup_stamped(Some(1), 0, 2, 4, Some(2)).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (3, 1));
+        // unstamped lookups on a fresh entry keep per-call aging
+        cache.store_stamped(Some(2), 0, &masks, 4, None);
+        assert!(cache.lookup(Some(2), 0, 2, 4).is_some());
+        assert!(cache.lookup(Some(2), 0, 2, 4).is_none(), "2 calls = 2 units");
     }
 
     #[test]

@@ -224,7 +224,14 @@ fn forward_impl(
 }
 
 /// Algorithm 2 + the Eq. 6 chain with config and projection borrowed:
-/// given dO, produce dQ, dK, dV, dProj. Replays the mask stored in `fwd`.
+/// given dO, produce dQ, dK, dV, dProj. Replays the mask stored in `fwd`
+/// — gradients flow through the kernel, never the mask policy (the
+/// paper's mask-frozen regime). This is the per-(batch, head) leaf of the
+/// full training chain: `BatchSlaEngine::backward` fans it across the
+/// grid, and `DitStack::backward` threads the resulting dQ/dK/dV on
+/// through the q/k/v projections, RMS-norm VJP, adaLN t-modulation, and
+/// residual stream of every layer (finite-difference pinned at both
+/// levels: `tests/batch_parity.rs` and `tests/stack_grad.rs`).
 pub fn sla_backward(
     cfg: &SlaConfig,
     proj: &Mat,

@@ -42,6 +42,23 @@ pub trait VelocityBackend {
         self.velocity_batch(calls)
     }
 
+    /// Stamped batched hook: like `velocity_batch_keyed`, plus a per-call
+    /// denoise-step stamp — two calls carrying the same `(key, stamp)`
+    /// belong to the SAME denoise step (Heun's two stages), so a
+    /// step-indexed plan cache consumes one refresh unit for the pair
+    /// instead of two. `None` stamps mean per-call aging. The default
+    /// ignores the stamps.
+    fn velocity_batch_stamped(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        debug_assert_eq!(calls.len(), stamps.len(), "velocity_batch_stamped: stamps mismatch");
+        let _ = stamps;
+        self.velocity_batch_keyed(calls, keys)
+    }
+
     /// A request stream finished: plan-caching backends evict its cached
     /// plan. Default: no-op.
     fn end_request(&self, key: u64) {
@@ -168,10 +185,15 @@ pub struct NativeSlaBackend {
     channels: usize,
     cond_dim: usize,
     video: (usize, usize, usize),
-    /// Keyed calls a cached per-(request, layer) plan serves before
-    /// re-prediction (== denoise steps for the Euler scheduler path; Heun's
-    /// interior steps make two keyed calls each). 1 (default) predicts
-    /// every call — bitwise identical to the pre-plan-cache engine.
+    /// DENOISE STEPS a cached per-(request, layer) plan serves before
+    /// re-prediction, for stamped callers (the scheduler and the keyed
+    /// sampler both stamp — Heun's two stages of one step consume one
+    /// unit); unstamped keyed calls age per call. 1 (default) predicts
+    /// every step: bitwise identical to the pre-plan-cache engine on
+    /// per-call paths (unstamped / one-eval-per-step integrators) — under
+    /// stamped Heun sampling, a step's second stage REPLAYS its first
+    /// stage's masks rather than predicting from the midpoint state, which
+    /// is the step-indexed semantics, not the historical per-call one.
     plan_refresh: usize,
     /// Serving mode: skip materializing backward state (default true;
     /// bitwise-identical outputs either way).
@@ -285,9 +307,10 @@ impl NativeSlaBackend {
         }
     }
 
-    /// Serve each (request, layer) attention plan for `refresh_every` keyed
-    /// calls before re-predicting (1 = predict every call; one call per
-    /// denoise step under the Euler scheduler, two per interior Heun step).
+    /// Serve each (request, layer) attention plan for `refresh_every`
+    /// denoise steps before re-predicting (stamped callers; plan aging is
+    /// step-indexed, so Heun's two stages of one step consume one unit —
+    /// unstamped keyed calls count per call). 1 = predict every step.
     /// Resets the cache.
     pub fn with_plan_refresh(mut self, refresh_every: usize) -> Self {
         self.plan_refresh = refresh_every;
@@ -399,6 +422,18 @@ impl VelocityBackend for NativeSlaBackend {
         self.velocity_batch_keyed(calls, &keys)
     }
 
+    /// Unstamped keyed path: per-call plan aging (each keyed call consumes
+    /// one refresh unit). Integrators that evaluate more than once per
+    /// denoise step should use `velocity_batch_stamped`.
+    fn velocity_batch_keyed(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+        keys: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        let stamps = vec![None; calls.len()];
+        self.velocity_batch_stamped(calls, keys, &stamps)
+    }
+
     /// All requests of a tick through ONE batched engine invocation per
     /// stack layer, with per-(request, layer) attention plans reused across
     /// denoise steps: call `i`'s key looks up layer `l`'s cached per-head
@@ -406,15 +441,22 @@ impl VelocityBackend for NativeSlaBackend {
     /// mask prediction (Eq. 2–3) — in-task, inside the execution fan. In
     /// forward-only mode (default) no backward state is materialized at any
     /// layer; outputs are bitwise identical to the full-state path.
-    fn velocity_batch_keyed(
+    ///
+    /// `stamps[i]` tags call `i`'s denoise step: plan aging is step-indexed
+    /// (one refresh unit per distinct step per stream), so Heun's two
+    /// stages of one step replay the same plan for one unit. `None` stamps
+    /// reproduce the historical per-call aging.
+    fn velocity_batch_stamped(
         &self,
         calls: &[(&HostTensor, f32, &HostTensor)],
         keys: &[Option<u64>],
+        stamps: &[Option<u64>],
     ) -> Result<Vec<HostTensor>> {
         if calls.is_empty() {
             return Ok(Vec::new());
         }
         anyhow::ensure!(calls.len() == keys.len(), "one key per call required");
+        anyhow::ensure!(calls.len() == stamps.len(), "one stamp per call required");
         let bsz = calls.len();
         let (n, c) = (self.seq_len, self.channels);
         for (x, _, cond) in calls.iter() {
@@ -457,8 +499,14 @@ impl VelocityBackend for NativeSlaBackend {
         // request of the tick, masks via the (request, layer) plan cache
         let hs = {
             let mut cache = self.plan_cache.borrow_mut();
-            self.stack
-                .forward_serving(&h0, &mods, keys, &mut cache, self.forward_only)
+            self.stack.forward_serving_stamped(
+                &h0,
+                &mods,
+                keys,
+                stamps,
+                &mut cache,
+                self.forward_only,
+            )
         };
         // velocity head: the stack's residual delta, leaked input term kept
         // from the single-layer model (v = 0.5 * (h_L - h_0) - 0.2 * x)
@@ -498,7 +546,7 @@ impl VelocityBackend for NativeSlaBackend {
 }
 
 /// The native backend is also a diffusion `Denoiser`, with the batched
-/// hooks forwarding to `velocity_batch`/`velocity_batch_keyed` — so
+/// hooks forwarding to `velocity_batch`/`velocity_batch_stamped` — so
 /// `diffusion::sample_batch` advances every sequence (cond and uncond CFG
 /// branches fused) through one engine invocation per integrator stage, and
 /// keyed sampling reuses per-stream attention plans across denoise steps.
@@ -530,6 +578,20 @@ impl crate::diffusion::Denoiser for NativeSlaBackend {
         let calls: Vec<(&HostTensor, f32, &HostTensor)> =
             xs.iter().zip(conds).map(|(x, c)| (*x, t, *c)).collect();
         self.velocity_batch_keyed(&calls, keys)
+    }
+
+    fn velocity_many_stamped(
+        &self,
+        xs: &[&HostTensor],
+        t: f32,
+        conds: &[&HostTensor],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        assert_eq!(xs.len(), conds.len(), "velocity_many_stamped: xs/conds mismatch");
+        let calls: Vec<(&HostTensor, f32, &HostTensor)> =
+            xs.iter().zip(conds).map(|(x, c)| (*x, t, *c)).collect();
+        VelocityBackend::velocity_batch_stamped(self, &calls, keys, stamps)
     }
 
     fn release_streams(&self, keys: &[u64]) {
@@ -659,6 +721,33 @@ mod tests {
         // next call for the same key predicts again
         let _ = b.velocity_batch_keyed(&[(&x, 0.1, &c)], &[Some(5)]).unwrap();
         assert_eq!(b.plan_cache_stats().misses, 2);
+    }
+
+    #[test]
+    fn heun_two_stage_steps_consume_one_refresh_unit() {
+        use crate::diffusion::{sample_batch, Integrator, SamplerConfig};
+        let b = backend().with_plan_refresh(2);
+        let (x, c) = xc(50, 32, 4, 6);
+        let noises = vec![x];
+        let conds = vec![c];
+        let uncond = HostTensor::zeros(vec![6]);
+        let cfg = SamplerConfig {
+            steps: 4,
+            integrator: Integrator::Heun,
+            plan_stream_base: Some(500),
+            ..Default::default()
+        };
+        let out = sample_batch(&b, &noises, &conds, &uncond, &cfg).unwrap();
+        assert_eq!(out[0].nfe, 7, "3 interior two-stage steps + 1 final Euler stage");
+        let s = b.plan_cache_stats();
+        // step-indexed aging at refresh_every=2: steps {0,1} share the
+        // first prediction, steps {2,3} the second — Heun's second stages
+        // carry their step's stamp and replay for free. Per-call aging
+        // would have re-predicted on 4 of the 7 calls.
+        assert_eq!(s.misses, 2, "one refresh unit per STEP, not per stage call");
+        assert_eq!(s.hits, 5);
+        // sampling released the stream at the end
+        assert_eq!(s.evictions, 1);
     }
 
     #[test]

@@ -199,7 +199,12 @@ impl<'b> Coordinator<'b> {
     /// Advance every request in `batch` by one denoise step (Euler, CFG
     /// when requested) through a SINGLE keyed `velocity_batch` call, so a
     /// plan-caching backend reuses each request's attention plan across
-    /// denoise steps. Returns measured model-call seconds.
+    /// denoise steps. Every entry carries its request's own denoise-step
+    /// index as the plan-aging stamp (requests in one tick sit at different
+    /// steps), so step-indexed backends age each stream per STEP — under
+    /// this Euler scheduler that coincides with per-call aging, which the
+    /// plan-stat regression tests pin down. Returns measured model-call
+    /// seconds.
     fn advance_batch(&self, batch: &mut [ActiveReq], nfe: &mut usize) -> Result<f64> {
         if batch.is_empty() {
             return Ok(0.0);
@@ -209,17 +214,20 @@ impl<'b> Coordinator<'b> {
             let mut calls: Vec<(&HostTensor, f32, &HostTensor)> =
                 Vec::with_capacity(batch.len());
             let mut keys: Vec<Option<u64>> = Vec::with_capacity(batch.len());
+            let mut stamps: Vec<Option<u64>> = Vec::with_capacity(batch.len());
             for a in batch.iter() {
                 let t0 = a.ts[a.step_idx];
                 calls.push((&a.x, t0, &a.cond));
                 keys.push(Some(Self::stream_key(a.req.id, false)));
+                stamps.push(Some(a.step_idx as u64));
                 if a.req.uses_cfg() {
                     calls.push((&a.x, t0, &a.uncond));
                     keys.push(Some(Self::stream_key(a.req.id, true)));
+                    stamps.push(Some(a.step_idx as u64));
                 }
             }
             *nfe += calls.len();
-            self.backend.velocity_batch_keyed(&calls, &keys)?
+            self.backend.velocity_batch_stamped(&calls, &keys, &stamps)?
         };
         let dur = start.elapsed().as_secs_f64();
         let mut vi = 0usize;
@@ -635,6 +643,59 @@ mod tests {
         for ((id_a, xa), (id_b, xb)) in batched.iter().zip(&serial) {
             assert_eq!(id_a, id_b);
             assert_eq!(xa.data, xb.data);
+        }
+    }
+
+    #[test]
+    fn scheduler_threads_per_request_step_stamps() {
+        // every tick entry must carry its request's OWN denoise-step index
+        // as the plan-aging stamp (CFG entries share their request's stamp)
+        struct StampMock {
+            seen: std::sync::Mutex<Vec<Vec<Option<u64>>>>,
+        }
+        impl VelocityBackend for StampMock {
+            fn velocity(&self, x: &HostTensor, _t: f32, _c: &HostTensor)
+                -> Result<HostTensor> {
+                let mut v = x.clone();
+                for d in &mut v.data {
+                    *d = -*d * 0.1;
+                }
+                Ok(v)
+            }
+            fn velocity_batch_stamped(
+                &self,
+                calls: &[(&HostTensor, f32, &HostTensor)],
+                keys: &[Option<u64>],
+                stamps: &[Option<u64>],
+            ) -> Result<Vec<HostTensor>> {
+                assert_eq!(keys.len(), stamps.len());
+                self.seen.lock().unwrap().push(stamps.to_vec());
+                calls.iter().map(|(x, t, c)| self.velocity(x, *t, c)).collect()
+            }
+            fn shape(&self) -> (usize, usize, usize) {
+                (16, 2, 4)
+            }
+            fn variant(&self) -> &str {
+                "stamp-mock"
+            }
+            fn video(&self) -> (usize, usize, usize) {
+                (2, 2, 4)
+            }
+        }
+        let mock = StampMock { seen: std::sync::Mutex::new(Vec::new()) };
+        let coord = Coordinator::new(&mock, CoordinatorConfig::default());
+        // 2 lockstep requests x 3 steps, one with CFG: 3 entries per tick
+        let mut trace = reqs(2, 3);
+        trace[1].cfg_weight = 2.0;
+        coord.run_trace(&trace, None).unwrap();
+        let seen = mock.seen.lock().unwrap().clone();
+        assert_eq!(seen.len(), 3, "one batched call per tick");
+        for (step, stamps) in seen.iter().enumerate() {
+            assert_eq!(
+                stamps,
+                &vec![Some(step as u64); 3],
+                "tick {step}: all entries advance their request's step {step}"
+            );
         }
     }
 

@@ -44,6 +44,24 @@ pub trait Denoiser {
         self.velocity_many(xs, t, conds)
     }
 
+    /// Stamped batched hook: `stamps[i]` is the DENOISE-STEP index entry
+    /// `i`'s evaluation belongs to. Heun's interior steps evaluate the
+    /// model twice within one step — both calls carry the same stamp, so a
+    /// step-indexed plan cache ages once per step instead of once per call.
+    /// The default ignores the stamps (per-call aging).
+    fn velocity_many_stamped(
+        &self,
+        xs: &[&HostTensor],
+        t: f32,
+        conds: &[&HostTensor],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        debug_assert_eq!(xs.len(), stamps.len(), "velocity_many_stamped: stamps mismatch");
+        let _ = stamps;
+        self.velocity_many_keyed(xs, t, conds, keys)
+    }
+
     /// The streams are finished (sampling completed): plan-caching
     /// backends drop whatever they cached for these keys. Default: no-op.
     fn release_streams(&self, keys: &[u64]) {
@@ -75,14 +93,15 @@ pub struct SamplerConfig {
     /// timestep shift (Wan-style): s(t) = shift*t / (1 + (shift-1)*t)
     pub shift: f32,
     /// When set, item `i` is keyed as stream `base + 2*i` (cond branch) and
-    /// `base + 2*i + 1` (uncond branch) through `velocity_many_keyed`, so a
-    /// plan-caching backend can reuse attention plans across denoise steps
-    /// (a multi-layer backend fans each stream key into per-(stream, layer)
-    /// cache entries internally); the streams are released when sampling
-    /// finishes (also on error). `None` (default) uses the unkeyed hook —
-    /// no cross-step caching.
-    /// NOTE: a backend's plan age advances per keyed CALL, so Heun's
-    /// interior steps (two stages per step) consume two refresh units.
+    /// `base + 2*i + 1` (uncond branch) through `velocity_many_stamped`, so
+    /// a plan-caching backend can reuse attention plans across denoise
+    /// steps (a multi-layer backend fans each stream key into per-(stream,
+    /// layer) cache entries internally); the streams are released when
+    /// sampling finishes (also on error). `None` (default) uses the unkeyed
+    /// hook — no cross-step caching.
+    /// Every stage call also carries the denoise-step index as its stamp,
+    /// so step-indexed backends age plans per STEP: Heun's interior steps
+    /// (two stages per step) consume ONE refresh unit, not two.
     pub plan_stream_base: Option<u64>,
 }
 
@@ -168,7 +187,8 @@ pub fn sample_batch(
         cfg.plan_stream_base.map(|base| base + 2 * item as u64 + branch)
     };
 
-    let guided = |xs: &[HostTensor], t: f32, nfe: &mut usize| -> Result<Vec<HostTensor>> {
+    let guided = |xs: &[HostTensor], t: f32, step: u64, nfe: &mut usize|
+     -> Result<Vec<HostTensor>> {
         let nb = xs.len();
         let mut xr: Vec<&HostTensor> = xs.iter().collect();
         let mut cr: Vec<&HostTensor> = conds.iter().collect();
@@ -179,7 +199,11 @@ pub fn sample_batch(
             cr.extend(std::iter::repeat(uncond).take(nb));
             keys.extend((0..nb).map(|i| stream_key(i, 1)));
         }
-        let vall = den.velocity_many_keyed(&xr, t, &cr, &keys)?;
+        // every entry of this stage belongs to denoise step `step`: Heun's
+        // second stage repeats the stamp, so step-indexed plan caches age
+        // once per step
+        let stamps: Vec<Option<u64>> = vec![Some(step); keys.len()];
+        let vall = den.velocity_many_stamped(&xr, t, &cr, &keys, &stamps)?;
         *nfe += if use_cfg { 2 } else { 1 };
         if !use_cfg {
             return Ok(vall);
@@ -202,10 +226,10 @@ pub fn sample_batch(
     // happens on the error path (a leaked stream would let a later run with
     // the same keys replay this run's plans)
     let integrated = (|| -> Result<()> {
-        for w in ts.windows(2) {
+        for (step, w) in ts.windows(2).enumerate() {
             let (t0, t1) = (w[0], w[1]);
             let dt = t0 - t1; // positive
-            let v0 = guided(&xs, t0, &mut nfe_each)?;
+            let v0 = guided(&xs, t0, step as u64, &mut nfe_each)?;
             match cfg.integrator {
                 Integrator::Euler => {
                     for (x, v) in xs.iter_mut().zip(&v0) {
@@ -224,7 +248,9 @@ pub fn sample_batch(
                     if t1 <= 0.0 {
                         xs = xp; // final step: Euler (no second eval at t=0)
                     } else {
-                        let v1 = guided(&xp, t1, &mut nfe_each)?;
+                        // second Heun stage of the SAME denoise step: same
+                        // stamp, so the plan cache serves it for free
+                        let v1 = guided(&xp, t1, step as u64, &mut nfe_each)?;
                         for ((x, a), b) in xs.iter_mut().zip(&v0).zip(&v1) {
                             for ((xv, &av), &bv) in
                                 x.data.iter_mut().zip(&a.data).zip(&b.data)
@@ -494,6 +520,62 @@ mod tests {
         let mut released = den.released.lock().unwrap().clone();
         released.sort_unstable();
         assert_eq!(released, vec![100, 101, 102, 103]);
+    }
+
+    /// Heun's two stages of one denoise step must carry the SAME stamp
+    /// (that is what lets a step-indexed plan cache charge one refresh
+    /// unit for the pair), and stamps advance with the window index.
+    #[test]
+    fn heun_stages_share_their_step_stamp() {
+        use std::sync::Mutex;
+        struct StampRecorder {
+            seen: Mutex<Vec<Vec<Option<u64>>>>,
+        }
+        impl Denoiser for StampRecorder {
+            fn velocity(&self, x: &HostTensor, _t: f32, _c: &HostTensor)
+                -> Result<HostTensor> {
+                let mut v = x.clone();
+                for d in &mut v.data {
+                    *d *= 0.5;
+                }
+                Ok(v)
+            }
+            fn velocity_many_stamped(
+                &self,
+                xs: &[&HostTensor],
+                t: f32,
+                conds: &[&HostTensor],
+                keys: &[Option<u64>],
+                stamps: &[Option<u64>],
+            ) -> Result<Vec<HostTensor>> {
+                assert_eq!(keys.len(), stamps.len());
+                self.seen.lock().unwrap().push(stamps.to_vec());
+                xs.iter().zip(conds).map(|(x, c)| self.velocity(x, t, c)).collect()
+            }
+        }
+        let den = StampRecorder { seen: Mutex::new(Vec::new()) };
+        let noises = vec![HostTensor::zeros(vec![2])];
+        let conds = vec![HostTensor::zeros(vec![1])];
+        let uncond = HostTensor::zeros(vec![1]);
+        let cfg = SamplerConfig {
+            steps: 3,
+            integrator: Integrator::Heun,
+            plan_stream_base: Some(0),
+            ..Default::default()
+        };
+        let out = sample_batch(&den, &noises, &conds, &uncond, &cfg).unwrap();
+        assert_eq!(out[0].nfe, 5, "2 two-stage steps + 1 final Euler stage");
+        let seen = den.seen.lock().unwrap().clone();
+        let got: Vec<u64> = seen
+            .iter()
+            .map(|stamps| {
+                assert_eq!(stamps.len(), 1);
+                stamps[0].expect("keyed sampling always stamps")
+            })
+            .collect();
+        // windows 0 and 1 evaluate twice (same stamp), window 2 ends at
+        // t=0 and evaluates once
+        assert_eq!(got, vec![0, 0, 1, 1, 2]);
     }
 
     #[test]

@@ -29,8 +29,11 @@
 //! no backward state materialized. The serving scheduler batches every
 //! tick's requests — CFG branches fused — into one keyed engine invocation
 //! per layer, and the native fine-tuner drives the batched backward under
-//! the paper's mask-frozen regime (full-state path, per stack layer via
-//! `NativeFineTuner::for_stack_layer`).
+//! the paper's mask-frozen regime (full-state path): per stack layer via
+//! `NativeFineTuner::for_stack_layer`, or ALL layers jointly via
+//! `NativeFineTuner::for_stack`, which sweeps `DitStack::backward` through
+//! the residual + RMS-norm + adaLN-modulation chain (finite-difference
+//! pinned in `tests/stack_grad.rs`).
 //!
 //! See DESIGN.md (repo root) for the system inventory and experiment index.
 

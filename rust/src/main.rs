@@ -6,6 +6,7 @@
 //!   generate   sample one video with a fine-tuned (or fresh) model
 //!   serve      run the coordinator over a synthetic request trace
 //!   analyze    Fig. 1 / Fig. 3 attention-weight analyses (native kernels)
+//!   bench-compare  gate BENCH_*.json perf artifacts against a previous run
 
 use anyhow::Result;
 
@@ -82,6 +83,15 @@ fn cli() -> Cli {
                 .flag("out", "sample", "output stem for PGM files")
                 .flag("upscale", "8", "pixel upscale factor"),
         )
+        .command(
+            Command::new(
+                "bench-compare",
+                "diff BENCH_*.json perf artifacts against a previous run's",
+            )
+            .flag("old", "prev_bench", "previous run's artifact dir (absent = seed run)")
+            .flag("new", "rust/bench_results", "fresh artifact dir")
+            .flag("threshold", "15.0", "max allowed ns/step regression, percent"),
+        )
 }
 
 fn main() {
@@ -104,6 +114,7 @@ fn main() {
             "serve-tcp" => cmd_serve_tcp(&args),
             "hlo" => cmd_hlo(&args),
             "export" => cmd_export(&args),
+            "bench-compare" => cmd_bench_compare(&args),
             _ => unreachable!(),
         }
     };
@@ -333,4 +344,185 @@ fn cmd_export(args: &sla_dit::util::cli::Args) -> Result<()> {
     println!("wrote {} PGM files (last = film strip): {:?}", files.len(),
              files.last().unwrap());
     Ok(())
+}
+
+/// Diff the fresh `BENCH_*.json` perf artifacts against a previous run's
+/// (the CI perf gate): for every experiment present in BOTH dirs with an
+/// identical workload stanza (same `shape` payload and same smoke flag),
+/// every `*_ns_per_step` metric may regress by at most `--threshold`
+/// percent. A missing/empty `--old` dir is the trajectory's seed run and
+/// passes; shape changes make runs incomparable and are skipped loudly.
+fn cmd_bench_compare(args: &sla_dit::util::cli::Args) -> Result<()> {
+    use sla_dit::util::json::Json;
+    let old_dir = args.get_str("old");
+    let new_dir = args.get_str("new");
+    let threshold = args.get_f64("threshold")?;
+    let load = |dir: &str| -> Result<Vec<(String, Json)>> {
+        let mut out = Vec::new();
+        let rd = match std::fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(_) => return Ok(out), // absent dir = no artifacts
+        };
+        for entry in rd.flatten() {
+            let fname = entry.file_name().to_string_lossy().to_string();
+            if !(fname.starts_with("BENCH_") && fname.ends_with(".json")) {
+                continue;
+            }
+            let text = std::fs::read_to_string(entry.path())?;
+            let v = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {fname}: {e}"))?;
+            let exp = v.get("experiment").as_str().unwrap_or(&fname).to_string();
+            out.push((exp, v));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    };
+    let news = load(&new_dir)?;
+    anyhow::ensure!(
+        !news.is_empty(),
+        "no BENCH_*.json artifacts under {new_dir:?} — run `cargo bench` first"
+    );
+    let olds = load(&old_dir)?;
+    if olds.is_empty() {
+        println!(
+            "bench-compare: no previous artifacts under {old_dir:?} — seeding the \
+             perf trajectory with {} experiment(s), nothing to gate",
+            news.len()
+        );
+        return Ok(());
+    }
+    // coverage loss is reported loudly: an experiment present only in the
+    // PREVIOUS artifacts means the trajectory silently lost it
+    for (exp, _) in &olds {
+        if !news.iter().any(|(e, _)| e == exp) {
+            println!(
+                "{exp}: present in the previous run but MISSING from this one — \
+                 perf coverage lost (renamed or removed harness entry?)"
+            );
+        }
+    }
+    let mut compared = 0usize;
+    let mut regressions: Vec<String> = Vec::new();
+    for (exp, newv) in &news {
+        let Some((_, oldv)) = olds.iter().find(|(e, _)| e == exp) else {
+            println!("{exp}: new experiment (no previous artifact) — skipped");
+            continue;
+        };
+        let np = newv.get("payload");
+        let op = oldv.get("payload");
+        if newv.get("smoke") != oldv.get("smoke")
+            || np.get("shape").to_string() != op.get("shape").to_string()
+        {
+            println!("{exp}: workload shape changed — runs not comparable, skipped");
+            continue;
+        }
+        let Some(fields) = np.as_obj() else {
+            println!("{exp}: payload is not an object — skipped");
+            continue;
+        };
+        // per-metric coverage loss is as loud as the experiment-level one:
+        // a gated metric that vanishes from the fresh payload must not
+        // disappear from the report
+        if let Some(old_fields) = op.as_obj() {
+            for key in old_fields.keys() {
+                if key.ends_with("_ns_per_step") && fields.get(key.as_str()).is_none() {
+                    println!(
+                        "{exp}/{key}: gated in the previous run but MISSING from this \
+                         one — per-metric perf coverage lost (renamed field?)"
+                    );
+                }
+            }
+        }
+        for (key, nv) in fields {
+            if !key.ends_with("_ns_per_step") {
+                continue;
+            }
+            let (Some(new_ns), Some(old_ns)) = (nv.as_f64(), op.get(key).as_f64())
+            else {
+                continue; // metric newly added this run: nothing to gate yet
+            };
+            if old_ns <= 0.0 {
+                continue;
+            }
+            let delta_pct = 100.0 * (new_ns - old_ns) / old_ns;
+            compared += 1;
+            let verdict = if delta_pct > threshold { "REGRESSION" } else { "ok" };
+            println!(
+                "{exp:<10} {key:<28} {old_ns:>14.0} -> {new_ns:>14.0} ns/step \
+                 ({delta_pct:+7.1}%)  {verdict}"
+            );
+            if delta_pct > threshold {
+                regressions.push(format!("{exp}/{key}: {delta_pct:+.1}%"));
+            }
+        }
+    }
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "{} perf regression(s) beyond {threshold}%: {}",
+        regressions.len(),
+        regressions.join(", ")
+    );
+    if compared == 0 {
+        // both dirs non-empty yet nothing matched: the gate did not test
+        // anything this run (every entry renamed / reshaped). Pass — a
+        // workload change is legitimate and the next run re-seeds on it —
+        // but say so unmistakably instead of looking like a clean bill.
+        println!(
+            "bench-compare: WARNING — 0 comparable metrics (every experiment new, \
+             renamed, or reshaped); the gate was VACUOUS this run and the next \
+             comparison starts from this run's artifacts"
+        );
+        return Ok(());
+    }
+    println!(
+        "bench-compare: {compared} metric(s) within {threshold}% of the previous run"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bc_args(old: &str, new: &str, threshold: &str) -> sla_dit::util::cli::Args {
+        let mut a = sla_dit::util::cli::Args::default();
+        a.values.insert("old".into(), old.into());
+        a.values.insert("new".into(), new.into());
+        a.values.insert("threshold".into(), threshold.into());
+        a
+    }
+
+    #[test]
+    fn bench_compare_gates_ns_per_step_regressions() {
+        let base = std::env::temp_dir().join(format!("sla_bc_{}", std::process::id()));
+        let old = base.join("old");
+        let new = base.join("new");
+        std::fs::create_dir_all(&old).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        let rec = |ns: f64, n: usize| {
+            format!(
+                r#"{{"experiment":"stack","smoke":true,"payload":{{"shape":{{"b":2,"h":2,"n":{n},"d":16,"block":16}},"full_ns_per_step":{ns},"mask_sparsity":0.5}}}}"#
+            )
+        };
+        std::fs::write(old.join("BENCH_stack.json"), rec(100.0, 128)).unwrap();
+        std::fs::write(new.join("BENCH_stack.json"), rec(110.0, 128)).unwrap();
+        let (o, n) = (old.to_str().unwrap(), new.to_str().unwrap());
+        // +10% passes a 15% gate, fails a 5% gate
+        cmd_bench_compare(&bc_args(o, n, "15.0")).unwrap();
+        let err = cmd_bench_compare(&bc_args(o, n, "5.0")).unwrap_err();
+        assert!(err.to_string().contains("regression"), "{err}");
+        // an IMPROVEMENT passes even a 0% gate
+        std::fs::write(new.join("BENCH_stack.json"), rec(90.0, 128)).unwrap();
+        cmd_bench_compare(&bc_args(o, n, "0.0")).unwrap();
+        // changed workload shape: not comparable, skipped (passes)
+        std::fs::write(new.join("BENCH_stack.json"), rec(900.0, 256)).unwrap();
+        cmd_bench_compare(&bc_args(o, n, "0.0")).unwrap();
+        // missing previous dir seeds the trajectory (passes)
+        std::fs::write(new.join("BENCH_stack.json"), rec(100.0, 128)).unwrap();
+        let nope = base.join("nope");
+        cmd_bench_compare(&bc_args(nope.to_str().unwrap(), n, "15.0")).unwrap();
+        // but an empty NEW dir is an error (the bench step did not run)
+        assert!(cmd_bench_compare(&bc_args(o, nope.to_str().unwrap(), "15.0")).is_err());
+        std::fs::remove_dir_all(&base).ok();
+    }
 }

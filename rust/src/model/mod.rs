@@ -7,4 +7,7 @@ mod params;
 pub mod stack;
 
 pub use params::{init_param, ParamStore};
-pub use stack::{rms_norm_rows, DitLayer, DitStack, StackForward};
+pub use stack::{
+    rms_norm_backward, rms_norm_rows, DitLayer, DitStack, LayerGradients, LayerTape,
+    StackForward, StackGradients, StackTrainForward,
+};

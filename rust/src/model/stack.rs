@@ -33,7 +33,14 @@
 //!    resolved in-task inside the execution fan and harvested back;
 //!  * [`DitStack::reference_forward`] — the layer-looped single-engine
 //!    reference (serial loops, plain `engine.forward`) the parity tests
-//!    pin the integrated paths against.
+//!    pin the integrated paths against;
+//!  * [`DitStack::forward_train`] — the training path: same hidden states,
+//!    plus a per-layer [`LayerTape`] (layer inputs, packed q/k/v, full
+//!    engine state) that [`DitStack::backward`] replays in reverse through
+//!    the residual + RMS-norm + adaLN-modulation chain, producing
+//!    [`StackGradients`] (per-layer `dproj`/`dwq`/`dwk`/`dwv`/`dwo`, plus
+//!    `dhs` and the per-item t-modulation gradient `dmods`). Pinned by the
+//!    finite-difference harness in `tests/stack_grad.rs`.
 
 use std::sync::Arc;
 
@@ -64,9 +71,41 @@ pub fn rms_norm_rows(x: &Mat, eps: f32) -> Mat {
     out
 }
 
+/// VJP of [`rms_norm_rows`]: given `dL/dy` for `y = x * s(x)` with
+/// `s = (mean(x^2) + eps)^(-1/2)`, produce `dL/dx` row by row:
+///
+/// ```text
+///   dx = s * dy - (dy . x) * s^3 / C * x
+/// ```
+///
+/// RMS normalization is scale-invariant (`y(a x) = y(x)` up to eps), so the
+/// Jacobian annihilates the input direction: `J x -> 0` as `eps -> 0` —
+/// equivalently `dx . x ~ 0` for every upstream `dy` (property-tested in
+/// `tests/stack_grad.rs`). This is why the adaLN timestep modulation must
+/// multiply AFTER the norm, and why its gradient couples into this VJP: the
+/// backward sees `dy = mod * du`, while `dmod = du . y` rides the same `du`.
+pub fn rms_norm_backward(x: &Mat, dy: &Mat, eps: f32) -> Mat {
+    assert_eq!((x.rows, x.cols), (dy.rows, dy.cols), "rms_norm_backward shape");
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let inv_c = 1.0 / x.cols as f32;
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let dyr = dy.row(r);
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() * inv_c;
+        let s = 1.0 / (ms + eps).sqrt();
+        let dot: f32 = dyr.iter().zip(xr).map(|(a, b)| a * b).sum();
+        let coef = dot * s * s * s * inv_c;
+        for ((o, &dv), &xv) in out.row_mut(r).iter_mut().zip(dyr).zip(xr) {
+            *o = s * dv - coef * xv;
+        }
+    }
+    out
+}
+
 /// One DiT attention block: the batched SLA engine (per-layer Eq. 6
 /// projections live in `engine.projs`) plus the layer's channel-space
 /// weights.
+#[derive(Clone)]
 pub struct DitLayer {
     pub engine: BatchSlaEngine,
     /// `(C, heads * d)` query projection.
@@ -88,7 +127,65 @@ pub struct StackForward {
     pub per_layer: Vec<BatchSlaOutput>,
 }
 
+/// One layer's retained training state: everything [`DitStack::backward`]
+/// needs to replay the layer in reverse without recomputing attention.
+pub struct LayerTape {
+    /// Hidden states ENTERING the layer (pre-norm residual input), per item.
+    pub h_in: Vec<Mat>,
+    /// `[B, H, N, d]` queries the layer's engine consumed.
+    pub q4: Tens4,
+    /// `[B, Hkv, N, d]` keys.
+    pub k4: Tens4,
+    /// `[B, Hkv, N, d]` values.
+    pub v4: Tens4,
+    /// Full-state engine output (masks + qphi/kphi/os/ol/lse/H_i/Z_i).
+    pub out: BatchSlaOutput,
+}
+
+/// Training forward: final hidden states plus the per-layer tape the stack
+/// backward consumes. Produced by [`DitStack::forward_train`]; hidden
+/// states are bitwise identical to every other execution path.
+pub struct StackTrainForward {
+    /// Final hidden state per batch item, `(N, C)` each.
+    pub hs: Vec<Mat>,
+    /// Per-layer retained state, index = layer (0 = first executed).
+    pub tape: Vec<LayerTape>,
+}
+
+/// One layer's parameter gradients from a stack backward sweep.
+///
+/// With stack-shared weights (the `from_params` fallback), the true
+/// gradient of the SHARED leaf is the sum of these per-layer entries —
+/// the backward always reports per layer and leaves the reduction to the
+/// caller, so per-layer and shared parameterizations use one code path.
+pub struct LayerGradients {
+    /// Eq. 6 compensation-projection gradient per query head, `(d, d)`.
+    pub dproj: Vec<Mat>,
+    /// `(C, heads * d)` query-projection gradient.
+    pub dwq: Mat,
+    /// `(C, kv_heads * d)` key-projection gradient.
+    pub dwk: Mat,
+    /// `(C, kv_heads * d)` value-projection gradient.
+    pub dwv: Mat,
+    /// `(heads * d, C)` output-projection gradient.
+    pub dwo: Mat,
+}
+
+/// Everything a stack backward produces: gradients w.r.t. the inputs (for
+/// chaining into an embedding/patchify layer), the per-item adaLN
+/// modulation scalars (the t-conditioning path), and per-layer weights.
+pub struct StackGradients {
+    /// Gradient w.r.t. the input hidden states, per batch item, `(N, C)`.
+    pub dhs: Vec<Mat>,
+    /// Gradient w.r.t. the per-item modulation scalar, summed over layers
+    /// (every layer multiplies the SAME per-item scalar after its norm).
+    pub dmods: Vec<f32>,
+    /// Per-layer parameter gradients, index = layer.
+    pub layers: Vec<LayerGradients>,
+}
+
 /// `L` pre-norm residual SLA attention blocks (see module docs).
+#[derive(Clone)]
 pub struct DitStack {
     pub layers: Vec<DitLayer>,
     pub heads: usize,
@@ -162,22 +259,40 @@ impl DitStack {
         channels: usize,
         seed: u64,
     ) -> Self {
+        Self::random_gqa(cfg, depth, heads, heads, head_dim, channels, seed)
+    }
+
+    /// GQA variant of [`DitStack::random`]: `heads` query heads share
+    /// `kv_heads` K/V heads, so `wk`/`wv` are `(C, kv_heads * d)` and the
+    /// engines accumulate `dK`/`dV` across each group in the backward.
+    /// With `kv_heads == heads` this is bitwise-identical to `random`.
+    pub fn random_gqa(
+        cfg: SlaConfig,
+        depth: usize,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        channels: usize,
+        seed: u64,
+    ) -> Self {
         assert!(depth >= 1, "stack needs at least one layer");
+        assert!(heads > 0 && kv_heads > 0 && heads % kv_heads == 0, "bad head grouping");
         let mut rng = Rng::new(seed);
         let hd = heads * head_dim;
+        let kvd = kv_heads * head_dim;
         let layers = (0..depth)
             .map(|_| DitLayer {
-                engine: BatchSlaEngine::new(cfg.clone(), heads, head_dim),
+                engine: BatchSlaEngine::with_kv_heads(cfg.clone(), heads, kv_heads, head_dim),
                 wq: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
-                wk: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
-                wv: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
+                wk: Mat::randn(channels, kvd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
+                wv: Mat::randn(channels, kvd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
                 wo: Mat::randn(hd, channels, &mut rng).scaled(1.0 / (hd as f32).sqrt()),
             })
             .collect();
         DitStack {
             layers,
             heads,
-            kv_heads: heads,
+            kv_heads,
             head_dim,
             channels,
             norm_eps: RMS_EPS,
@@ -220,6 +335,14 @@ impl DitStack {
             v4.set_item_packed(bi, vp);
         }
         (q4, k4, v4)
+    }
+
+    /// The packed engine inputs layer `li` would consume for these hidden
+    /// states — `project_layer` exposed for tests and distillation drivers
+    /// that need the exact `(q4, k4, v4)` a stack layer sees.
+    pub fn layer_inputs(&self, li: usize, hs: &[Mat], mods: &[f32]) -> (Tens4, Tens4, Tens4) {
+        self.check_inputs(hs, mods);
+        self.project_layer(li, hs, mods)
     }
 
     /// Merge heads, apply the output projection, add the residual.
@@ -288,6 +411,184 @@ impl DitStack {
         StackForward { hs, per_layer }
     }
 
+    /// Step-indexed variant of [`DitStack::forward`]: every layer's plan
+    /// is fetched with `planner.plan_for_step(li, step, ..)`, so a driver
+    /// that evaluates the stack more than once within one denoise step —
+    /// Heun's two interior stages — consumes ONE refresh unit per layer
+    /// per step instead of one per call. (The keyed SERVING path gets the
+    /// same semantics from `forward_serving_stamped`'s cache stamps; this
+    /// is the planner-side equivalent for sampler/training drivers that
+    /// own a [`StackPlanner`] directly.)
+    pub fn forward_step(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        planner: &mut StackPlanner,
+        step: u64,
+    ) -> StackForward {
+        self.check_inputs(hs, mods);
+        assert_eq!(planner.depth(), self.depth(), "planner depth != stack depth");
+        let mut hs = hs.to_vec();
+        let mut per_layer = Vec::with_capacity(self.depth());
+        for li in 0..self.depth() {
+            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
+            let plan = planner.plan_for_step(li, step, &q4, &k4);
+            let out = self.layers[li].engine.forward_plan(&q4, &k4, &v4, &plan);
+            self.apply_output(li, &mut hs, &out.o);
+            per_layer.push(out);
+        }
+        StackForward { hs, per_layer }
+    }
+
+    /// Training forward: like [`DitStack::forward`] (or
+    /// [`DitStack::forward_fresh`] when `planner` is `None`) but retaining
+    /// the full per-layer tape — each layer's input hidden states, packed
+    /// `(q4, k4, v4)`, and full-state engine output — which
+    /// [`DitStack::backward`] replays in reverse. Hidden states are bitwise
+    /// identical to the other execution paths.
+    pub fn forward_train(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        mut planner: Option<&mut StackPlanner>,
+    ) -> StackTrainForward {
+        self.check_inputs(hs, mods);
+        if let Some(p) = planner.as_deref_mut() {
+            assert_eq!(p.depth(), self.depth(), "planner depth != stack depth");
+        }
+        let mut hs = hs.to_vec();
+        let mut tape = Vec::with_capacity(self.depth());
+        for li in 0..self.depth() {
+            let h_in = hs.clone();
+            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
+            let out = match planner.as_deref_mut() {
+                Some(p) => {
+                    let plan = p.plan_for(li, &q4, &k4);
+                    self.layers[li].engine.forward_plan(&q4, &k4, &v4, &plan)
+                }
+                None => self.layers[li].engine.forward(&q4, &k4, &v4),
+            };
+            self.apply_output(li, &mut hs, &out.o);
+            tape.push(LayerTape { h_in, q4, k4, v4, out });
+        }
+        StackTrainForward { hs, tape }
+    }
+
+    /// Full-stack backward: starting from `dout = dL/dh_L` on the final
+    /// hidden states, propagate through every pre-norm residual block in
+    /// reverse. Per layer (reverse order):
+    ///
+    /// ```text
+    ///   dWo  = merge(O)^T dh          (residual-path gradient only)
+    ///   dO   = dh Wo^T                (+ any injected per-layer loss grad)
+    ///   dq/dk/dv/dproj = engine.backward(q4, k4, v4, state, dO)
+    ///   dW{q,k,v} = u^T d{q,k,v}      (u = rms_norm(h_in) * mod)
+    ///   du   = dq Wq^T + dk Wk^T + dv Wv^T
+    ///   dmod += du . rms_norm(h_in)   (the adaLN t-conditioning gradient)
+    ///   dh   = dh + rms_norm_backward(h_in, mod * du)
+    /// ```
+    ///
+    /// The residual passes `dh` through unchanged (identity), the norm VJP
+    /// adds the attention-path term, and — because RMS norm is
+    /// scale-invariant — the t-modulation gradient `dmod` couples into the
+    /// same `du` the norm backward consumes. Masks are replayed from the
+    /// tape: gradients flow through the kernels, never the mask policy
+    /// (the paper's mask-frozen regime). Results are independent of
+    /// `cfg.threads` (per-item partials are reduced in item order).
+    pub fn backward(
+        &self,
+        fwd: &StackTrainForward,
+        mods: &[f32],
+        dout: &[Mat],
+    ) -> StackGradients {
+        let none: Vec<Option<Tens4>> = (0..self.depth()).map(|_| None).collect();
+        self.backward_with_attn_grads(fwd, mods, dout, &none)
+    }
+
+    /// [`DitStack::backward`] with an optional extra gradient injected
+    /// directly on each layer's attention output `O_l` (`[B, H, N, d]`) —
+    /// the hook joint distillation uses to place a per-layer loss on every
+    /// layer's fused attention output in ONE backward sweep (the injected
+    /// term bypasses `Wo`: it is a loss on `O_l` itself, not on the
+    /// residual stream).
+    pub fn backward_with_attn_grads(
+        &self,
+        fwd: &StackTrainForward,
+        mods: &[f32],
+        dout: &[Mat],
+        attn_douts: &[Option<Tens4>],
+    ) -> StackGradients {
+        let b = fwd.hs.len();
+        assert_eq!(dout.len(), b, "one output gradient per batch item");
+        assert_eq!(mods.len(), b, "one modulation scalar per batch item");
+        assert_eq!(fwd.tape.len(), self.depth(), "tape is for a different depth");
+        assert_eq!(attn_douts.len(), self.depth(), "one attention-grad slot per layer");
+        let n = fwd.hs[0].rows;
+        let threads = self.threads();
+        let hd = self.heads * self.head_dim;
+        let mut dh: Vec<Mat> = dout.to_vec();
+        let mut dmods = vec![0.0f32; b];
+        let mut layer_grads: Vec<LayerGradients> = Vec::with_capacity(self.depth());
+        for li in (0..self.depth()).rev() {
+            let tape = &fwd.tape[li];
+            let lay = &self.layers[li];
+            // ---- output projection + residual merge, per item ----
+            let dh_ref: &[Mat] = &dh;
+            let wo_parts: Vec<(Mat, Mat)> =
+                threadpool::parallel_map_send(b, threads, |bi| {
+                    let am = tape.out.o.item_packed(bi); // (N, H*d)
+                    let dwo_i = am.matmul_tn(&dh_ref[bi]); // (H*d, C)
+                    let da = dh_ref[bi].matmul_nt(&lay.wo); // (N, H*d)
+                    (dwo_i, da)
+                });
+            let mut dwo = Mat::zeros(hd, self.channels);
+            let mut do4 = Tens4::zeros(b, self.heads, n, self.head_dim);
+            for (bi, (dwo_i, da)) in wo_parts.iter().enumerate() {
+                dwo.add_assign(dwo_i);
+                do4.set_item_packed(bi, da);
+            }
+            if let Some(extra) = &attn_douts[li] {
+                do4.add_assign(extra);
+            }
+            // ---- attention backward (Alg. 2 + Eq. 6 chain, batched) ----
+            let g = lay.engine.backward(&tape.q4, &tape.k4, &tape.v4, &tape.out, &do4);
+            // ---- channel-space chain: w-grads, t-modulation, norm ----
+            let chain: Vec<(Mat, Mat, Mat, Mat, f32)> =
+                threadpool::parallel_map_send(b, threads, |bi| {
+                    let dq = g.dq.item_packed(bi); // (N, H*d)
+                    let dk = g.dk.item_packed(bi); // (N, Hkv*d)
+                    let dv = g.dv.item_packed(bi);
+                    let nrm = rms_norm_rows(&tape.h_in[bi], self.norm_eps);
+                    let mut u = nrm.clone();
+                    u.scale(mods[bi]);
+                    let dwq_i = u.matmul_tn(&dq); // (C, H*d)
+                    let dwk_i = u.matmul_tn(&dk); // (C, Hkv*d)
+                    let dwv_i = u.matmul_tn(&dv);
+                    let mut du = dq.matmul_nt(&lay.wq); // (N, C)
+                    du.add_assign(&dk.matmul_nt(&lay.wk));
+                    du.add_assign(&dv.matmul_nt(&lay.wv));
+                    let dmod: f32 =
+                        du.data.iter().zip(&nrm.data).map(|(a, c)| a * c).sum();
+                    du.scale(mods[bi]);
+                    let dx = rms_norm_backward(&tape.h_in[bi], &du, self.norm_eps);
+                    (dwq_i, dwk_i, dwv_i, dx, dmod)
+                });
+            let mut dwq = Mat::zeros(self.channels, hd);
+            let mut dwk = Mat::zeros(self.channels, self.kv_heads * self.head_dim);
+            let mut dwv = Mat::zeros(self.channels, self.kv_heads * self.head_dim);
+            for (bi, (dwq_i, dwk_i, dwv_i, dx, dmod)) in chain.iter().enumerate() {
+                dwq.add_assign(dwq_i);
+                dwk.add_assign(dwk_i);
+                dwv.add_assign(dwv_i);
+                dh[bi].add_assign(dx);
+                dmods[bi] += dmod;
+            }
+            layer_grads.push(LayerGradients { dproj: g.dproj, dwq, dwk, dwv, dwo });
+        }
+        layer_grads.reverse();
+        StackGradients { dhs: dh, dmods, layers: layer_grads }
+    }
+
     /// Forward-only serving mode: fresh per-layer prediction through the
     /// light kernels — bitwise identical to [`DitStack::forward_fresh`]'s
     /// hidden states with no backward state materialized at any layer.
@@ -317,9 +618,28 @@ impl DitStack {
         cache: &mut RequestPlanCache,
         forward_only: bool,
     ) -> Vec<Mat> {
+        let stamps: Vec<Option<u64>> = vec![None; keys.len()];
+        self.forward_serving_stamped(hs, mods, keys, &stamps, cache, forward_only)
+    }
+
+    /// [`DitStack::forward_serving`] with per-item denoise-step stamps:
+    /// `stamps[i]` tags which denoise step item `i`'s call belongs to, so
+    /// the cache ages per STEP instead of per call (two calls with the same
+    /// (key, stamp) — Heun's interior stages — consume one refresh unit).
+    /// `None` stamps reproduce the per-call aging exactly.
+    pub fn forward_serving_stamped(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+        cache: &mut RequestPlanCache,
+        forward_only: bool,
+    ) -> Vec<Mat> {
         self.check_inputs(hs, mods);
         let b = hs.len();
         assert_eq!(keys.len(), b, "one stream key per batch item");
+        assert_eq!(stamps.len(), b, "one step stamp per batch item");
         let heads = self.heads;
         let mut hs = hs.to_vec();
         for li in 0..self.depth() {
@@ -329,7 +649,7 @@ impl DitStack {
             let mut slots: Vec<Option<Arc<CompressedMask>>> = Vec::with_capacity(b * heads);
             let mut missing: Vec<usize> = Vec::new();
             for (bi, key) in keys.iter().enumerate() {
-                match cache.lookup(*key, li, heads, tm) {
+                match cache.lookup_stamped(*key, li, heads, tm, stamps[bi]) {
                     Some(ms) => slots.extend(ms.into_iter().map(Some)),
                     None => {
                         missing.push(bi);
@@ -350,7 +670,7 @@ impl DitStack {
                 let ms: Vec<Arc<CompressedMask>> = (0..heads)
                     .map(|hi| Arc::clone(&masks[bi * heads + hi]))
                     .collect();
-                cache.store(keys[bi], li, &ms, tm);
+                cache.store_stamped(keys[bi], li, &ms, tm, stamps[bi]);
             }
             self.apply_output(li, &mut hs, &o4);
         }
@@ -423,6 +743,109 @@ mod tests {
     }
 
     #[test]
+    fn rms_norm_backward_matches_finite_differences() {
+        // per-entry FD on the isolated VJP (the stack-level checks live in
+        // tests/stack_grad.rs)
+        let mut rng = Rng::new(77);
+        let x = Mat::randn(3, 8, &mut rng);
+        let g = Mat::randn(3, 8, &mut rng);
+        let dx = rms_norm_backward(&x, &g, 1e-6);
+        let f = |m: &Mat| -> f64 {
+            rms_norm_rows(m, 1e-6)
+                .data
+                .iter()
+                .zip(&g.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum()
+        };
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 11, 17, 23] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let num = ((f(&xp) - f(&xm)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (num - dx.data[idx]).abs() < 1e-3 * num.abs().max(1.0),
+                "idx {idx}: numeric {num} vs analytic {}",
+                dx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_train_matches_forward_fresh_bitwise() {
+        let (b, n, c, heads, d, depth) = (2, 32, 10, 2, 4, 3);
+        let stack = DitStack::random(cfg(3), depth, heads, d, c, 21);
+        let hs = items(b, n, c, 22);
+        let mods = [0.7f32, 1.3];
+        let fresh = stack.forward_fresh(&hs, &mods);
+        let train = stack.forward_train(&hs, &mods, None);
+        for bi in 0..b {
+            assert_eq!(train.hs[bi].data, fresh.hs[bi].data, "item {bi}");
+        }
+        assert_eq!(train.tape.len(), depth);
+        // the tape retains each layer's INPUT hidden states: layer 0 sees
+        // the stack inputs, layer 1 sees layer 0's residual output
+        for bi in 0..b {
+            assert_eq!(train.tape[0].h_in[bi].data, hs[bi].data);
+            assert_ne!(train.tape[1].h_in[bi].data, hs[bi].data);
+        }
+        // planner-fed variant is bitwise identical too (refresh_every = 1)
+        let mut planner = StackPlanner::new(cfg(3), depth, 1);
+        let planned = stack.forward_train(&hs, &mods, Some(&mut planner));
+        for bi in 0..b {
+            assert_eq!(planned.hs[bi].data, fresh.hs[bi].data);
+        }
+        assert_eq!(planner.total_stats().misses as usize, depth);
+    }
+
+    #[test]
+    fn backward_is_thread_count_invariant() {
+        let (b, n, c, heads, d, depth) = (2, 32, 8, 2, 4, 2);
+        let hs = items(b, n, c, 24);
+        let mods = [0.9f32, 1.1];
+        let run = |threads: usize| {
+            let stack = DitStack::random(cfg(threads), depth, heads, d, c, 23);
+            let fwd = stack.forward_train(&hs, &mods, None);
+            let dout: Vec<Mat> = fwd.hs.clone();
+            let g = stack.backward(&fwd, &mods, &dout);
+            (g.dhs[0].data.clone(), g.dmods.clone(), g.layers[0].dwq.data.clone())
+        };
+        let (dh1, dm1, dwq1) = run(1);
+        let (dh8, dm8, dwq8) = run(8);
+        assert_eq!(dh1, dh8);
+        assert_eq!(dm1, dm8);
+        assert_eq!(dwq1, dwq8);
+    }
+
+    #[test]
+    fn backward_attn_grad_injection_adds_to_the_residual_chain() {
+        // injecting a zero attention grad changes nothing; injecting the
+        // layer's own dO duplicates exactly the attention-path terms
+        let (b, n, c, heads, d) = (1, 32, 8, 2, 4);
+        let stack = DitStack::random(cfg(2), 1, heads, d, c, 25);
+        let hs = items(b, n, c, 26);
+        let mods = [1.0f32];
+        let fwd = stack.forward_train(&hs, &mods, None);
+        let dout: Vec<Mat> = fwd.hs.clone();
+        let plain = stack.backward(&fwd, &mods, &dout);
+        let zeros = vec![Some(Tens4::zeros(b, heads, n, d))];
+        let with_zero = stack.backward_with_attn_grads(&fwd, &mods, &dout, &zeros);
+        assert_eq!(plain.layers[0].dproj[0].data, with_zero.layers[0].dproj[0].data);
+        assert_eq!(plain.dhs[0].data, with_zero.dhs[0].data);
+        // dWo sees only the residual-path gradient, never the injection
+        let mut injected_do = Tens4::zeros(b, heads, n, d);
+        for (i, v) in injected_do.data.iter_mut().enumerate() {
+            *v = 0.01 * (i % 7) as f32;
+        }
+        let with_inj =
+            stack.backward_with_attn_grads(&fwd, &mods, &dout, &[Some(injected_do)]);
+        assert_eq!(plain.layers[0].dwo.data, with_inj.layers[0].dwo.data);
+        assert_ne!(plain.layers[0].dproj[0].data, with_inj.layers[0].dproj[0].data);
+    }
+
+    #[test]
     fn stack_forward_matches_layer_looped_reference_bitwise() {
         // the acceptance parity: L >= 2, batched/planned/forward-only paths
         // all equal the serial layer-looped single-engine reference
@@ -443,6 +866,35 @@ mod tests {
         }
         assert_eq!(fresh.per_layer.len(), depth);
         assert_eq!(planner.total_stats().misses as usize, depth);
+    }
+
+    #[test]
+    fn forward_step_ages_plans_per_step_not_per_call() {
+        // a Heun-style driver: two stack evaluations per denoise step.
+        // refresh_every = 2 must replan on steps 0, 2 — not every 2 CALLS
+        let (b, n, c, heads, d, depth) = (1, 32, 8, 2, 4, 2);
+        let stack = DitStack::random(cfg(2), depth, heads, d, c, 30);
+        let hs = items(b, n, c, 31);
+        let mods = ones(b);
+        let mut planner = StackPlanner::new(cfg(2), depth, 2);
+        for step in 0..3u64 {
+            let o1 = stack.forward_step(&hs, &mods, &mut planner, step);
+            let o2 = stack.forward_step(&hs, &mods, &mut planner, step);
+            // static inputs: both stages bitwise identical
+            assert_eq!(o1.hs[0].data, o2.hs[0].data, "step {step}");
+        }
+        for li in 0..depth {
+            let s = planner.stats(li);
+            // steps 0 and 2 predict; step 1 replays; all second stages free
+            assert_eq!(s.misses, 2, "layer {li}");
+            assert_eq!(s.hits, 4, "layer {li}");
+        }
+        // the per-call forward on the same schedule burns twice the units
+        let mut per_call = StackPlanner::new(cfg(2), depth, 2);
+        for _ in 0..6 {
+            let _ = stack.forward(&hs, &mods, &mut per_call);
+        }
+        assert_eq!(per_call.stats(0).misses, 3, "per-call aging replans every 2 calls");
     }
 
     #[test]
