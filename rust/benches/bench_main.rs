@@ -5,13 +5,16 @@
 //!   cargo bench -- fig1          # one experiment
 //!   cargo bench -- table1 fig6a  # a subset
 //!
-//! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack, table1,
-//! table2, table3, perf. `batch` compares the batched multi-head SLA engine
-//! against a serial per-head kernel loop on a [B=4, H=8, N=1024, d=64]
-//! workload; `plan` measures fresh-predict vs cached-plan step latency
-//! across plan refresh intervals; `stack` measures the L-layer DiT stack's
-//! full-state vs forward-only vs cached-plan serving paths (smoke shapes
-//! via SLA_BENCH_SMOKE=1).
+//! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack,
+//! stack_backward, adaptive_plan, table1, table2, table3, perf. `batch`
+//! compares the batched multi-head SLA engine against a serial per-head
+//! kernel loop on a [B=4, H=8, N=1024, d=64] workload; `plan` measures
+//! fresh-predict vs cached-plan step latency across plan refresh
+//! intervals; `stack` measures the L-layer DiT stack's full-state vs
+//! forward-only vs cached-plan serving paths; `stack_backward` times
+//! `DitStack::forward_train` + `backward` (the joint-distillation step);
+//! `adaptive_plan` compares Fixed(1) vs churn-adaptive plan refresh on the
+//! stamped serving path (smoke shapes via SLA_BENCH_SMOKE=1).
 //! Knobs (env): SLA_BENCH_PRETRAIN, SLA_BENCH_FINETUNE, SLA_BENCH_PROMPTS,
 //! SLA_BENCH_GEN_STEPS, SLA_BENCH_SMOKE, SLA_BENCH_PLAN_N,
 //! SLA_BENCH_PLAN_STEPS, SLA_BENCH_STACK_N, SLA_BENCH_STACK_DEPTH,
@@ -21,6 +24,8 @@
 //! bench_results/results.jsonl, and written per experiment to the
 //! machine-readable bench_results/BENCH_<name>.json artifacts CI uploads.
 
+#[path = "harness/adaptive_plan.rs"]
+mod adaptive_plan;
 #[path = "harness/common.rs"]
 mod common;
 #[path = "harness/figs.rs"]
@@ -31,6 +36,8 @@ mod kernels;
 mod perf;
 #[path = "harness/plans.rs"]
 mod plans;
+#[path = "harness/stack_backward.rs"]
+mod stack_backward;
 #[path = "harness/stacks.rs"]
 mod stacks;
 #[path = "harness/tables.rs"]
@@ -42,7 +49,17 @@ fn main() {
         .filter(|a| !a.starts_with("--")) // ignore cargo-bench flags like --bench
         .collect();
     let all = [
-        "fig1", "fig3", "fig6a", "fig6b", "batch", "plan", "stack", "table1", "table2",
+        "fig1",
+        "fig3",
+        "fig6a",
+        "fig6b",
+        "batch",
+        "plan",
+        "stack",
+        "stack_backward",
+        "adaptive_plan",
+        "table1",
+        "table2",
         "table3",
     ];
     let selected: Vec<&str> = if args.is_empty() {
@@ -62,6 +79,8 @@ fn main() {
             "batch" => kernels::batch(),
             "plan" => plans::plan(),
             "stack" => stacks::stack(),
+            "stack_backward" => stack_backward::stack_backward(),
+            "adaptive_plan" => adaptive_plan::adaptive_plan(),
             "table1" => tables::table1(),
             "table2" => tables::table2(),
             "table3" => tables::table3(),

@@ -1,0 +1,99 @@
+//! `stack_backward` experiment: the full-stack training path.
+//!
+//! Measures, per optimizer-relevant call on a depth-L `DitStack`:
+//!  * `forward_train` — the tape-retaining training forward (hidden states
+//!    bitwise-identical to serving, plus per-layer `LayerTape`);
+//!  * `backward`      — the full reverse sweep (engine Alg. 2 backward per
+//!    layer + channel-space chain + RMS-norm VJP + adaLN t-grad);
+//!  * their sum       — one distillation step's gradient cost.
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes so the
+//! harness entry cannot bit-rot without burning CI minutes, and the
+//! `BENCH_stack_backward.json` artifact feeds the bench-compare perf gate.
+
+use anyhow::Result;
+
+use sla_dit::attention::SlaConfig;
+use sla_dit::model::DitStack;
+use sla_dit::tensor::Mat;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+use crate::common::{env_usize, log_result, shape_json, time_median, write_bench_json};
+
+pub fn stack_backward() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (bsz, heads, n, d, c, blk, depth, reps) = if smoke {
+        (2usize, 2usize, 128usize, 16usize, 32usize, 16usize, 2usize, 2usize)
+    } else {
+        (
+            2,
+            4,
+            env_usize("SLA_BENCH_STACK_N", 1024).min(512),
+            32,
+            128,
+            64,
+            env_usize("SLA_BENCH_STACK_DEPTH", 3),
+            3,
+        )
+    };
+    let cfg = SlaConfig {
+        bq: blk,
+        bkv: blk,
+        kh_pct: 5.0,
+        kl_pct: 10.0,
+        threads: sla_dit::util::threadpool::default_threads().min(8),
+        ..Default::default()
+    };
+    let stack = DitStack::random(cfg, depth, heads, d, c, 910);
+    let mut rng = Rng::new(911);
+    let hs: Vec<Mat> = (0..bsz).map(|_| Mat::randn(n, c, &mut rng)).collect();
+    let mods = vec![1.0f32; bsz];
+    println!(
+        "workload: B={bsz} L={depth} H={heads} N={n} d={d} C={c} block={blk} \
+         (kh=5%, kl=10%){}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    // tape-retaining training forward
+    let t_fwd = time_median(reps, || {
+        let _ = stack.forward_train(&hs, &mods, None);
+    });
+    // full-stack reverse sweep over a retained tape (loss grad = outputs)
+    let fwd = stack.forward_train(&hs, &mods, None);
+    let dout: Vec<Mat> = fwd.hs.clone();
+    let t_bwd = time_median(reps, || {
+        let _ = stack.backward(&fwd, &mods, &dout);
+    });
+    let t_step = t_fwd + t_bwd;
+
+    println!("\n{:<28} {:>12} {:>10}", "path", "ms/call", "vs fwd");
+    println!("{:<28} {:>12.2} {:>9.2}x", "forward_train (tape)", t_fwd * 1e3, 1.0);
+    println!(
+        "{:<28} {:>12.2} {:>9.2}x",
+        "backward (full sweep)",
+        t_bwd * 1e3,
+        t_bwd / t_fwd
+    );
+    println!(
+        "{:<28} {:>12.2} {:>9.2}x",
+        "train step (fwd + bwd)",
+        t_step * 1e3,
+        t_step / t_fwd
+    );
+
+    let payload = Json::obj(vec![
+        ("shape", shape_json(bsz, heads, n, d, blk)),
+        ("depth", Json::num(depth as f64)),
+        ("channels", Json::num(c as f64)),
+        ("forward_train_ns_per_step", Json::num(t_fwd * 1e9)),
+        ("backward_ns_per_step", Json::num(t_bwd * 1e9)),
+        ("train_step_ns_per_step", Json::num(t_step * 1e9)),
+        ("backward_vs_forward", Json::num(t_bwd / t_fwd)),
+    ]);
+    log_result("stack_backward", payload.clone());
+    write_bench_json("stack_backward", payload);
+    println!("\nexpected shape: backward within a small constant factor of the tape");
+    println!("forward (the reverse sweep re-walks every layer's kernels once)");
+    Ok(())
+}

@@ -102,6 +102,37 @@ impl CompressedMask {
     }
 }
 
+/// Plan-governance churn metric: the fraction of blocks whose 3-way label
+/// differs between two masks on the same (Tm x Tn) grid. 0.0 means the
+/// plans are identical, 1.0 means every block changed category. Symmetric
+/// by construction, and monotone in the number of flipped blocks. Panics
+/// on mismatched grids — a grid change is a shape change, not churn, and
+/// callers handle it as a fresh plan.
+pub fn mask_churn(a: &CompressedMask, b: &CompressedMask) -> f64 {
+    assert_eq!(
+        (a.tm, a.tn),
+        (b.tm, b.tn),
+        "mask_churn: block grids differ ({}, {}) vs ({}, {})",
+        a.tm,
+        a.tn,
+        b.tm,
+        b.tn
+    );
+    let changed = a
+        .labels
+        .iter()
+        .zip(&b.labels)
+        .filter(|(x, y)| x != y)
+        .count();
+    changed as f64 / (a.tm * a.tn) as f64
+}
+
+/// `1 - mask_churn`: the fraction of blocks the two masks agree on — the
+/// similarity the CFG cross-branch plan-sharing policy thresholds.
+pub fn mask_similarity(a: &CompressedMask, b: &CompressedMask) -> f64 {
+    1.0 - mask_churn(a, b)
+}
+
 /// Mean-pool (N, d) along tokens into (N/block, d).
 pub fn pool_tokens(x: &Mat, block: usize) -> Mat {
     assert_eq!(x.rows % block, 0, "N={} % block={} != 0", x.rows, block);
@@ -372,6 +403,48 @@ mod tests {
         // 8 blocks per row: 2 critical, 2 negligible, 4 marginal
         assert!((m.marginal_fraction() - 0.5).abs() < 1e-9);
         assert_eq!(m.max_row_critical(), 2);
+    }
+
+    #[test]
+    fn mask_churn_identical_disjoint_and_symmetric() {
+        let crit = CompressedMask::all(4, 4, Label::Critical);
+        let marg = CompressedMask::all(4, 4, Label::Marginal);
+        assert_eq!(mask_churn(&crit, &crit), 0.0);
+        assert_eq!(mask_churn(&crit, &marg), 1.0);
+        assert_eq!(mask_similarity(&crit, &marg), 0.0);
+        // half the blocks flipped: churn = 0.5, symmetric
+        let mut labels = vec![1i8; 16];
+        for l in labels.iter_mut().take(8) {
+            *l = -1;
+        }
+        let half = CompressedMask::from_labels(4, 4, labels);
+        assert!((mask_churn(&crit, &half) - 0.5).abs() < 1e-12);
+        assert_eq!(mask_churn(&crit, &half), mask_churn(&half, &crit));
+    }
+
+    #[test]
+    fn mask_churn_monotone_under_increasing_flips() {
+        let base = CompressedMask::all(3, 5, Label::Marginal);
+        let mut prev = 0.0;
+        for flips in 0..=15usize {
+            let mut labels = vec![0i8; 15];
+            for l in labels.iter_mut().take(flips) {
+                *l = 1;
+            }
+            let flipped = CompressedMask::from_labels(3, 5, labels);
+            let c = mask_churn(&base, &flipped);
+            assert!((c - flips as f64 / 15.0).abs() < 1e-12);
+            assert!(c >= prev, "churn must not decrease as flips grow");
+            prev = c;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "block grids differ")]
+    fn mask_churn_rejects_mismatched_grids() {
+        let a = CompressedMask::all(4, 4, Label::Critical);
+        let b = CompressedMask::all(8, 8, Label::Critical);
+        let _ = mask_churn(&a, &b);
     }
 
     // ---- property tests (util::prop): mask invariants under random ----

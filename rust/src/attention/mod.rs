@@ -35,11 +35,11 @@ pub mod sparse;
 pub use batch::{BatchSlaEngine, BatchSlaGrads, BatchSlaLight, BatchSlaOutput};
 pub use flops::FlopsReport;
 pub use linear::Phi;
-pub use mask::{CompressedMask, Label, MaskPolicy};
+pub use mask::{mask_churn, mask_similarity, CompressedMask, Label, MaskPolicy};
 pub use opt::AggStrategy;
 pub use plan::{
-    AttentionPlan, MaskPlanner, PlanCacheStats, PlanStats, RequestPlanCache, SlaWorkspace,
-    StackPlanner,
+    AttentionPlan, ChurnEvent, MaskPlanner, PlanCacheStats, PlanDeltaStats, PlanStats,
+    RefreshPolicy, RequestPlanCache, ShareConfig, SlaWorkspace, StackPlanner,
 };
 pub use sla::{
     sla_backward, sla_forward, sla_forward_only, SlaConfig, SlaKernel, SlaLightOutput,

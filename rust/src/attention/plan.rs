@@ -21,6 +21,12 @@
 //!    **(request stream, stack layer)** (one stream per request and CFG
 //!    branch), with aggregate and per-layer hit/miss/refresh/eviction
 //!    accounting surfaced through `ServeReport`.
+//!  * **Plan governance** — [`RefreshPolicy`] (a `Fixed` interval, bitwise
+//!    identical to the historical `refresh_every`, or churn-`Adaptive`
+//!    per-stream widening/snap-back), [`PlanDeltaStats`] (mask churn
+//!    observed at refreshes, per layer), and [`ShareConfig`] (CFG
+//!    cross-branch plan sharing: an uncond stream whose masks track its
+//!    cond partner's serves the partner's `Arc`-shared plan).
 //!  * [`SlaWorkspace`] — the reusable per-thread scratch (`s`, `m`, `l`,
 //!    `acc`, `p`) the fused kernels borrow via [`with_workspace`]: no
 //!    per-block or per-row-block allocations. Workers are the persistent
@@ -33,7 +39,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::full::NEG_INF;
-use super::mask::{predict_mask, CompressedMask, MaskPolicy};
+use super::mask::{mask_churn, predict_mask, CompressedMask, MaskPolicy};
 use super::opt::AggStrategy;
 use super::sla::SlaConfig;
 use crate::tensor::Tens4;
@@ -196,6 +202,218 @@ impl AttentionPlan {
     }
 }
 
+// ---------------------------------------------------------------------------
+// plan governance: refresh policies, churn accounting, cross-branch sharing
+// ---------------------------------------------------------------------------
+
+/// Mean churn between two equal-length mask sets (per (batch, head) slot,
+/// or per head for one cached serving entry). `None` when the sets are not
+/// comparable — different lengths or different block grids — which callers
+/// treat as a shape change (fresh plan, no churn observation).
+pub fn mean_mask_churn(old: &[Arc<CompressedMask>], new: &[Arc<CompressedMask>]) -> Option<f64> {
+    if old.len() != new.len() || old.is_empty() {
+        return None;
+    }
+    let mut sum = 0.0;
+    for (a, b) in old.iter().zip(new) {
+        if (a.tm, a.tn) != (b.tm, b.tn) {
+            return None;
+        }
+        sum += mask_churn(a, b);
+    }
+    Some(sum / old.len() as f64)
+}
+
+/// When a cached plan is re-predicted, governed by churn observed at each
+/// refresh. Every policy state machine lives per STREAM — per `MaskPlanner`
+/// (so per stack layer under a `StackPlanner`) and per (request stream,
+/// layer) cache entry on the serving side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RefreshPolicy {
+    /// Serve each plan for exactly `n` refresh units before re-predicting —
+    /// bitwise-identical to the historical global `refresh_every = n` knob
+    /// (churn is still *observed* at refreshes, but never changes which
+    /// masks execute).
+    Fixed(usize),
+    /// Churn-driven per-stream interval: start at `base`; when a refresh
+    /// observes churn at or below `low_water` the interval doubles (capped
+    /// at `max_interval` — the masks are stable, prediction is wasted
+    /// work); churn at or above `high_water` snaps the interval to 1 (the
+    /// plan is invalidated immediately: every following step re-predicts
+    /// until the distribution settles); churn in between keeps the current
+    /// interval.
+    Adaptive {
+        base: usize,
+        low_water: f64,
+        high_water: f64,
+        max_interval: usize,
+    },
+}
+
+impl RefreshPolicy {
+    /// Conservative adaptive defaults: start like `refresh_every = 1`,
+    /// widen on near-identical refreshes, snap back above 35% churn.
+    pub fn adaptive_default() -> Self {
+        RefreshPolicy::Adaptive {
+            base: 1,
+            low_water: 0.05,
+            high_water: 0.35,
+            max_interval: 16,
+        }
+    }
+
+    /// Panic on nonsensical parameters (zero intervals, inverted bands).
+    pub fn validate(&self) {
+        match *self {
+            RefreshPolicy::Fixed(n) => {
+                assert!(n >= 1, "Fixed refresh interval must be >= 1");
+            }
+            RefreshPolicy::Adaptive { base, low_water, high_water, max_interval } => {
+                assert!(base >= 1, "Adaptive base interval must be >= 1");
+                assert!(max_interval >= base, "max_interval must be >= base");
+                assert!(
+                    (0.0..=1.0).contains(&low_water) && low_water <= high_water,
+                    "need 0 <= low_water <= high_water"
+                );
+            }
+        }
+    }
+
+    /// The interval a brand-new stream (or a stream after a shape change)
+    /// starts at.
+    pub fn base_interval(&self) -> usize {
+        match *self {
+            RefreshPolicy::Fixed(n) => n,
+            RefreshPolicy::Adaptive { base, .. } => base,
+        }
+    }
+
+    /// The stream's next effective interval after a refresh that observed
+    /// `churn` against the plan it replaced.
+    pub fn next_interval(&self, current: usize, churn: f64) -> usize {
+        match *self {
+            RefreshPolicy::Fixed(n) => n,
+            RefreshPolicy::Adaptive { low_water, high_water, max_interval, .. } => {
+                if churn >= high_water {
+                    1
+                } else if churn <= low_water {
+                    current.saturating_mul(2).min(max_interval)
+                } else {
+                    current
+                }
+            }
+        }
+    }
+}
+
+/// Churn accounting aggregated at every refresh that had a comparable
+/// predecessor (same block grid): how much the predicted masks actually
+/// move between refreshes. Zero observations = no refresh has replaced a
+/// same-shape plan yet.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanDeltaStats {
+    /// Refreshes with a comparable (same-grid) predecessor.
+    pub observed: u64,
+    /// Summed per-refresh mean churn (mean = sum / observed).
+    pub churn_sum: f64,
+    /// Churn of the most recent observed refresh.
+    pub last_churn: f64,
+    /// Largest churn ever observed (cumulative, not per trace).
+    pub max_churn: f64,
+}
+
+impl PlanDeltaStats {
+    pub fn record(&mut self, churn: f64) {
+        self.observed += 1;
+        self.churn_sum += churn;
+        self.last_churn = churn;
+        if churn > self.max_churn {
+            self.max_churn = churn;
+        }
+    }
+
+    pub fn mean_churn(&self) -> f64 {
+        if self.observed == 0 {
+            return 0.0;
+        }
+        self.churn_sum / self.observed as f64
+    }
+
+    /// Counter-wise difference vs an earlier snapshot, for per-trace
+    /// reporting. `last_churn`/`max_churn` keep the CURRENT values (a max
+    /// has no meaningful delta).
+    pub fn delta_since(&self, earlier: &PlanDeltaStats) -> PlanDeltaStats {
+        PlanDeltaStats {
+            observed: self.observed - earlier.observed,
+            churn_sum: self.churn_sum - earlier.churn_sum,
+            last_churn: self.last_churn,
+            max_churn: self.max_churn,
+        }
+    }
+}
+
+/// CFG cross-branch plan sharing: when one request's cond and uncond
+/// streams predict near-identical masks for `consecutive` refreshes in a
+/// row, the uncond branch starts serving the cond branch's `Arc`-shared
+/// plan instead of predicting its own — halving steady-state planning work
+/// for CFG serving — and un-shares when the cond branch's own refresh churn
+/// signals the geometry is moving again.
+///
+/// Relies on the repo-wide stream-key convention (scheduler and sampler
+/// both follow it): a request's cond branch is the EVEN key, its uncond
+/// branch the adjacent odd key (`cond | 1`); a branch's partner is
+/// `key ^ 1`. See `diffusion::branch_stream_keys`.
+#[derive(Clone, Copy, Debug)]
+pub struct ShareConfig {
+    /// Mask similarity (`1 - churn`) at or above which an uncond refresh
+    /// counts toward the sharing streak.
+    pub similarity_threshold: f64,
+    /// Consecutive similar uncond refreshes before sharing starts.
+    pub consecutive: usize,
+    /// Cond-branch refresh churn at or above which an active share is
+    /// dropped (the only divergence signal observable while the uncond
+    /// branch predicts nothing).
+    pub divergence_churn: f64,
+}
+
+impl Default for ShareConfig {
+    fn default() -> Self {
+        ShareConfig {
+            similarity_threshold: 0.9,
+            consecutive: 2,
+            divergence_churn: 0.25,
+        }
+    }
+}
+
+/// Per-(branch pair, layer) sharing state machine.
+#[derive(Clone, Copy, Debug, Default)]
+struct ShareState {
+    /// Consecutive similar uncond refreshes observed so far.
+    streak: u32,
+    /// Whether the uncond branch currently serves the cond branch's plan.
+    shared: bool,
+}
+
+/// One observed refresh, recorded when the churn log is enabled
+/// (`RequestPlanCache::with_churn_log`): enough to reconstruct the
+/// per-(request stream, layer) churn trajectory a serving run produced
+/// (`sla-dit plan-report` pretty-prints these).
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnEvent {
+    /// Stream key the refresh belonged to.
+    pub key: u64,
+    /// Stack layer of the refreshed entry.
+    pub layer: u32,
+    /// Denoise-step stamp the refresh was served under (`None` on
+    /// unstamped paths).
+    pub stamp: Option<u64>,
+    /// Mean per-head churn vs the replaced plan.
+    pub churn: f64,
+    /// Effective refresh interval AFTER the policy consumed this churn.
+    pub interval: usize,
+}
+
 /// Planner accounting: how often plans were reused vs re-predicted.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanStats {
@@ -219,9 +437,13 @@ impl PlanStats {
 
 /// Owns mask-prediction policy and staleness for one logical stream of
 /// attention problems (a fine-tune loop, a sampler batch): predicts on
-/// first use, then serves the cached plan for `refresh_every` consecutive
-/// steps before re-predicting. `refresh_every == 1` reproduces the
-/// pre-plan engine bitwise (a fresh prediction on every step).
+/// first use, then serves the cached plan for the stream's effective
+/// refresh interval before re-predicting. The interval is governed by a
+/// [`RefreshPolicy`]: `Fixed(n)` is bitwise-identical to the historical
+/// `refresh_every = n` knob (so `Fixed(1)` reproduces the pre-plan engine:
+/// a fresh prediction on every step), while `Adaptive` widens the interval
+/// when refreshes observe low mask churn and snaps it back to 1 on high
+/// churn. Churn is aggregated in [`MaskPlanner::delta_stats`] either way.
 ///
 /// Aging is **step-indexed** when the caller identifies its denoise steps:
 /// [`MaskPlanner::plan_for_step`] consumes one refresh unit per distinct
@@ -231,25 +453,37 @@ impl PlanStats {
 #[derive(Debug)]
 pub struct MaskPlanner {
     pub cfg: SlaConfig,
-    pub refresh_every: usize,
+    policy: RefreshPolicy,
+    /// Effective interval right now (== `refresh_every` under `Fixed`).
+    interval: usize,
     plan: Option<Arc<AttentionPlan>>,
     age: usize,
     /// Step index the plan last served (step-indexed aging); `None` for
     /// unstepped calls.
     last_step: Option<u64>,
     stats: PlanStats,
+    delta: PlanDeltaStats,
 }
 
 impl MaskPlanner {
     pub fn new(cfg: SlaConfig, refresh_every: usize) -> Self {
-        assert!(refresh_every >= 1, "refresh_every must be >= 1");
+        Self::with_policy(cfg, RefreshPolicy::Fixed(refresh_every))
+    }
+
+    /// Planner governed by an explicit refresh policy. `Fixed(n)` is
+    /// bitwise-identical to [`MaskPlanner::new`]`(cfg, n)`.
+    pub fn with_policy(cfg: SlaConfig, policy: RefreshPolicy) -> Self {
+        policy.validate();
+        let base = policy.base_interval();
         MaskPlanner {
             cfg,
-            refresh_every,
+            policy,
+            interval: base,
             plan: None,
             age: 0,
             last_step: None,
             stats: PlanStats::default(),
+            delta: PlanDeltaStats::default(),
         }
     }
 
@@ -288,12 +522,28 @@ impl MaskPlanner {
             self.stats.hits += 1;
             return Arc::clone(self.plan.as_ref().expect("shape_ok implies a plan"));
         }
-        if !shape_ok || self.age >= self.refresh_every {
+        if !shape_ok || self.age >= self.interval {
             if self.plan.is_some() {
                 self.stats.refreshes += 1;
             }
             self.stats.misses += 1;
-            self.plan = Some(Arc::new(AttentionPlan::predict(&self.cfg, q, k)));
+            let fresh = Arc::new(AttentionPlan::predict(&self.cfg, q, k));
+            // churn vs the replaced plan is a pure OBSERVATION (it can
+            // steer the NEXT interval, never which masks execute now) —
+            // so Fixed policies stay bitwise-identical to the historical
+            // behavior while still reporting churn
+            let churn = match &self.plan {
+                Some(old) if shape_ok => mean_mask_churn(&old.masks, &fresh.masks),
+                _ => None,
+            };
+            self.interval = match churn {
+                Some(c) => {
+                    self.delta.record(c);
+                    self.policy.next_interval(self.interval, c)
+                }
+                None => self.policy.base_interval(),
+            };
+            self.plan = Some(fresh);
             self.age = 1;
         } else {
             self.stats.hits += 1;
@@ -303,11 +553,14 @@ impl MaskPlanner {
         Arc::clone(self.plan.as_ref().expect("plan set above"))
     }
 
-    /// Drop the cached plan; the next `plan_for` predicts fresh.
+    /// Drop the cached plan; the next `plan_for` predicts fresh (and the
+    /// adaptive interval restarts from the policy base — a forced refresh
+    /// is a statement that history no longer applies).
     pub fn force_refresh(&mut self) {
         self.plan = None;
         self.age = 0;
         self.last_step = None;
+        self.interval = self.policy.base_interval();
     }
 
     /// The current plan, if any (without advancing staleness accounting).
@@ -317,6 +570,26 @@ impl MaskPlanner {
 
     pub fn stats(&self) -> PlanStats {
         self.stats
+    }
+
+    /// Churn observed at this planner's refreshes.
+    pub fn delta_stats(&self) -> PlanDeltaStats {
+        self.delta
+    }
+
+    /// The live effective refresh interval (policy-widened / snapped).
+    pub fn current_interval(&self) -> usize {
+        self.interval
+    }
+
+    /// The policy's BASE refresh interval (the historical knob; mutating
+    /// behavior goes through [`MaskPlanner::with_policy`], never a field).
+    pub fn refresh_every(&self) -> usize {
+        self.policy.base_interval()
+    }
+
+    pub fn policy(&self) -> RefreshPolicy {
+        self.policy
     }
 }
 
@@ -337,6 +610,15 @@ pub struct PlanCacheStats {
     pub planned: u64,
     /// Summed sparsity over those predictions (mean = sum / planned).
     pub sparsity_sum: f64,
+    /// Subset of `hits` served by the CFG partner branch's shared plan
+    /// (cross-branch sharing, see [`ShareConfig`]).
+    pub share_hits: u64,
+    /// Share activations (an uncond stream started serving its cond
+    /// partner's plan).
+    pub shares: u64,
+    /// Shares dropped on divergence (cond-branch churn at or above
+    /// `ShareConfig::divergence_churn`).
+    pub unshares: u64,
 }
 
 impl PlanCacheStats {
@@ -367,31 +649,77 @@ struct CacheEntry {
     /// Denoise-step stamp of the last serve (step-indexed aging): a lookup
     /// carrying the same stamp replays without consuming a refresh unit.
     last_stamp: Option<u64>,
+    /// This entry's effective refresh interval (per-(request, layer)
+    /// adaptation; constant under a `Fixed` policy).
+    interval: usize,
 }
 
 /// Per-request plan cache for the serving path, keyed by **(request
 /// stream, stack layer)**: each in-flight request (and each of its CFG
 /// branches) owns one entry per DiT layer — deeper layers see
 /// post-residual hidden states, so their masks are their own and two
-/// layers must never cross-hit. Per-head masks are reused for
-/// `refresh_every` denoise steps; `end_request` drops every layer of a
-/// finished stream. Counters are kept both in aggregate and per layer.
+/// layers must never cross-hit. Per-head masks are reused for each entry's
+/// effective refresh interval (denoise steps on stamped paths); the
+/// interval is governed per (request stream, layer) by a [`RefreshPolicy`]
+/// — `Fixed(n)` is bitwise-identical to the historical `refresh_every = n`
+/// knob. `end_request` drops every layer of a finished stream. Counters
+/// and churn deltas are kept both in aggregate and per layer, and CFG
+/// cross-branch sharing ([`ShareConfig`]) can serve an uncond stream from
+/// its cond partner's plan.
 pub struct RequestPlanCache {
-    pub refresh_every: usize,
+    policy: RefreshPolicy,
+    share: Option<ShareConfig>,
     entries: HashMap<(u64, u32), CacheEntry>,
+    /// Sharing state per (cond/EVEN stream key, layer).
+    share_state: HashMap<(u64, u32), ShareState>,
     stats: PlanCacheStats,
     per_layer: Vec<PlanCacheStats>,
+    delta: PlanDeltaStats,
+    delta_per_layer: Vec<PlanDeltaStats>,
+    /// Optional per-refresh event log (`with_churn_log`), for the
+    /// `plan-report` trajectory dump; refreshes are rare, so the push is
+    /// off the steady-state hot path.
+    churn_log: Option<Vec<ChurnEvent>>,
 }
 
 impl RequestPlanCache {
     pub fn new(refresh_every: usize) -> Self {
-        assert!(refresh_every >= 1, "refresh_every must be >= 1");
+        Self::with_policy(RefreshPolicy::Fixed(refresh_every))
+    }
+
+    /// Cache governed by an explicit refresh policy; `Fixed(n)` is
+    /// bitwise-identical to [`RequestPlanCache::new`]`(n)`.
+    pub fn with_policy(policy: RefreshPolicy) -> Self {
+        policy.validate();
         RequestPlanCache {
-            refresh_every,
+            policy,
+            share: None,
             entries: HashMap::new(),
+            share_state: HashMap::new(),
             stats: PlanCacheStats::default(),
             per_layer: Vec::new(),
+            delta: PlanDeltaStats::default(),
+            delta_per_layer: Vec::new(),
+            churn_log: None,
         }
+    }
+
+    /// Enable CFG cross-branch plan sharing (even key = cond branch, its
+    /// partner = `key | 1`; see [`ShareConfig`]).
+    pub fn with_sharing(mut self, share: ShareConfig) -> Self {
+        assert!(share.consecutive >= 1, "sharing needs >= 1 similar refresh");
+        assert!(
+            (0.0..=1.0).contains(&share.similarity_threshold),
+            "similarity_threshold must be in [0, 1]"
+        );
+        self.share = Some(share);
+        self
+    }
+
+    /// Record a [`ChurnEvent`] per observed refresh (trajectory dumps).
+    pub fn with_churn_log(mut self) -> Self {
+        self.churn_log = Some(Vec::new());
+        self
     }
 
     fn layer_slot(&mut self, layer: usize) -> &mut PlanCacheStats {
@@ -399,6 +727,13 @@ impl RequestPlanCache {
             self.per_layer.resize(layer + 1, PlanCacheStats::default());
         }
         &mut self.per_layer[layer]
+    }
+
+    fn delta_slot(&mut self, layer: usize) -> &mut PlanDeltaStats {
+        if self.delta_per_layer.len() <= layer {
+            self.delta_per_layer.resize(layer + 1, PlanDeltaStats::default());
+        }
+        &mut self.delta_per_layer[layer]
     }
 
     /// The cached masks for `(key, layer)`, if fresh and shape-compatible —
@@ -433,17 +768,51 @@ impl RequestPlanCache {
         stamp: Option<u64>,
     ) -> Option<Vec<Arc<CompressedMask>>> {
         let key = key?;
-        let hit = match self.entries.get_mut(&(key, layer as u32)) {
-            Some(e)
-                if e.heads == heads
-                    && e.tm == tm
-                    && stamp.is_some()
-                    && e.last_stamp == stamp =>
-            {
-                // same denoise step revisited: no refresh unit consumed
-                Some(e.masks.clone())
+        // same-denoise-step replay takes precedence over EVERYTHING,
+        // including an active share: the step-indexed invariant (Heun's
+        // stage 2 replays exactly stage 1's masks) must hold even on the
+        // step a share activates or the partner's plan refreshes
+        if stamp.is_some() {
+            let replay = match self.entries.get(&(key, layer as u32)) {
+                Some(e) if e.heads == heads && e.tm == tm && e.last_stamp == stamp => {
+                    Some(e.masks.clone())
+                }
+                _ => None,
+            };
+            if let Some(masks) = replay {
+                self.stats.hits += 1;
+                self.layer_slot(layer).hits += 1;
+                return Some(masks);
             }
-            Some(e) if e.age < self.refresh_every && e.heads == heads && e.tm == tm => {
+        }
+        // cross-branch sharing: a SHARED uncond (odd) stream serves its
+        // cond partner's plan — a read that never touches the partner's
+        // aging (the cond branch's own lookups age it). The served plan is
+        // MIRRORED into this stream's own entry so (a) the same step's
+        // later stages replay exactly these masks via the stamp check
+        // above, and (b) an un-share resumes from the last plan actually
+        // served, never a frozen pre-share one.
+        if let Some(masks) = self.shared_partner_masks(key, layer, heads, tm) {
+            self.stats.hits += 1;
+            self.stats.share_hits += 1;
+            let ls = self.layer_slot(layer);
+            ls.hits += 1;
+            ls.share_hits += 1;
+            self.entries.insert(
+                (key, layer as u32),
+                CacheEntry {
+                    masks: masks.clone(),
+                    age: 1,
+                    heads,
+                    tm,
+                    last_stamp: stamp,
+                    interval: self.policy.base_interval(),
+                },
+            );
+            return Some(masks);
+        }
+        let hit = match self.entries.get_mut(&(key, layer as u32)) {
+            Some(e) if e.age < e.interval && e.heads == heads && e.tm == tm => {
                 e.age += 1;
                 e.last_stamp = stamp;
                 Some(e.masks.clone())
@@ -455,6 +824,32 @@ impl RequestPlanCache {
             self.layer_slot(layer).hits += 1;
         }
         hit
+    }
+
+    /// The cond partner's masks when `key` is an uncond (odd) stream whose
+    /// pair is actively shared and the partner entry is shape-compatible.
+    fn shared_partner_masks(
+        &self,
+        key: u64,
+        layer: usize,
+        heads: usize,
+        tm: usize,
+    ) -> Option<Vec<Arc<CompressedMask>>> {
+        self.share?;
+        if key & 1 == 0 {
+            return None;
+        }
+        let pair = key & !1;
+        match self.share_state.get(&(pair, layer as u32)) {
+            Some(st) if st.shared => {}
+            _ => return None,
+        }
+        let e = self.entries.get(&(pair, layer as u32))?;
+        if e.heads == heads && e.tm == tm {
+            Some(e.masks.clone())
+        } else {
+            None
+        }
     }
 
     /// Record a fresh per-head prediction for `(key, layer)`: counts the
@@ -472,6 +867,11 @@ impl RequestPlanCache {
 
     /// Step-indexed store: records the denoise-step stamp the prediction
     /// was made at, so the SAME step's later stages replay it for free.
+    /// This is also where the governance layer observes: a store that
+    /// replaces a same-grid entry measures mask churn, feeds it to the
+    /// refresh policy (per-(request, layer) interval adaptation), and —
+    /// with sharing enabled — drives the cross-branch state machine
+    /// (uncond similarity streaks, cond divergence un-sharing).
     pub fn store_stamped(
         &mut self,
         key: Option<u64>,
@@ -490,9 +890,30 @@ impl RequestPlanCache {
         ls.sparsity_sum += sparsity;
         if let Some(k) = key {
             let ck = (k, layer as u32);
-            if self.entries.contains_key(&ck) {
+            // observe the replaced entry before overwriting it
+            let prior: Option<(usize, Option<f64>)> = self
+                .entries
+                .get(&ck)
+                .map(|old| (old.interval, mean_mask_churn(&old.masks, masks)));
+            let mut interval = self.policy.base_interval();
+            if let Some((old_interval, churn)) = prior {
                 self.stats.refreshes += 1;
                 self.layer_slot(layer).refreshes += 1;
+                if let Some(c) = churn {
+                    interval = self.policy.next_interval(old_interval, c);
+                    self.delta.record(c);
+                    self.delta_slot(layer).record(c);
+                    if let Some(log) = &mut self.churn_log {
+                        log.push(ChurnEvent {
+                            key: k,
+                            layer: layer as u32,
+                            stamp,
+                            churn: c,
+                            interval,
+                        });
+                    }
+                    self.observe_cond_divergence(k, layer, c, stamp);
+                }
             }
             self.entries.insert(
                 ck,
@@ -502,8 +923,105 @@ impl RequestPlanCache {
                     heads: masks.len(),
                     tm,
                     last_stamp: stamp,
+                    interval,
                 },
             );
+            self.observe_branch_similarity(k, layer, masks, tm);
+        }
+    }
+
+    /// A cond (even) stream's refresh churn at or above the divergence
+    /// threshold drops its pair's active share: the attention geometry is
+    /// moving, so the branches can no longer be assumed aligned. The
+    /// uncond entry (a mirror of previously shared serves) is evicted too,
+    /// so the uncond branch re-predicts on its very next lookup instead of
+    /// serving a stale plan at the exact moment churn says it moved —
+    /// EXCEPT when the mirror was served for this very denoise step (the
+    /// divergence-observing store can land between Heun's two stages, and
+    /// stage 2 must still replay stage 1's masks; such a mirror expires by
+    /// normal aging instead).
+    fn observe_cond_divergence(
+        &mut self,
+        key: u64,
+        layer: usize,
+        churn: f64,
+        stamp: Option<u64>,
+    ) {
+        let sc = match self.share {
+            Some(sc) => sc,
+            None => return,
+        };
+        if key & 1 != 0 || churn < sc.divergence_churn {
+            return;
+        }
+        let mut dropped = false;
+        if let Some(st) = self.share_state.get_mut(&(key, layer as u32)) {
+            if st.shared {
+                st.shared = false;
+                st.streak = 0;
+                dropped = true;
+            }
+        }
+        if dropped {
+            let uk = (key | 1, layer as u32);
+            let mid_step = stamp.is_some()
+                && matches!(self.entries.get(&uk), Some(e) if e.last_stamp == stamp);
+            if !mid_step {
+                self.entries.remove(&uk);
+            }
+            self.stats.unshares += 1;
+            self.layer_slot(layer).unshares += 1;
+        }
+    }
+
+    /// An uncond (odd) stream's fresh prediction is compared against its
+    /// cond partner's cached plan: `consecutive` similar refreshes in a
+    /// row activate sharing (the uncond branch then serves the partner's
+    /// `Arc`-shared plan and stops predicting); a dissimilar refresh
+    /// resets the streak and any active share.
+    fn observe_branch_similarity(
+        &mut self,
+        key: u64,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+    ) {
+        let sc = match self.share {
+            Some(sc) => sc,
+            None => return,
+        };
+        if key & 1 == 0 {
+            return;
+        }
+        let pair = key & !1;
+        let churn = {
+            let pe = match self.entries.get(&(pair, layer as u32)) {
+                Some(pe) => pe,
+                None => return,
+            };
+            if pe.heads != masks.len() || pe.tm != tm {
+                return;
+            }
+            match mean_mask_churn(&pe.masks, masks) {
+                Some(c) => c,
+                None => return,
+            }
+        };
+        let mut activated = false;
+        let st = self.share_state.entry((pair, layer as u32)).or_default();
+        if 1.0 - churn >= sc.similarity_threshold {
+            st.streak = st.streak.saturating_add(1);
+            if !st.shared && st.streak as usize >= sc.consecutive {
+                st.shared = true;
+                activated = true;
+            }
+        } else {
+            st.streak = 0;
+            st.shared = false;
+        }
+        if activated {
+            self.stats.shares += 1;
+            self.layer_slot(layer).shares += 1;
         }
     }
 
@@ -530,7 +1048,8 @@ impl RequestPlanCache {
     }
 
     /// Drop every layer's entry for a finished request (no-op if absent);
-    /// each removed (key, layer) entry counts one eviction.
+    /// each removed (key, layer) entry counts one eviction. Ending either
+    /// branch of a pair also drops the pair's sharing state.
     pub fn end_request(&mut self, key: u64) {
         let layers: Vec<u32> = self
             .entries
@@ -542,6 +1061,10 @@ impl RequestPlanCache {
             self.entries.remove(&(key, l));
             self.stats.evictions += 1;
             self.layer_slot(l as usize).evictions += 1;
+        }
+        if self.share.is_some() {
+            let pair = key & !1;
+            self.share_state.retain(|k, _| k.0 != pair);
         }
     }
 
@@ -568,6 +1091,51 @@ impl RequestPlanCache {
     pub fn layers_tracked(&self) -> usize {
         self.per_layer.len()
     }
+
+    /// Churn observed at refreshes, aggregated across all layers.
+    pub fn delta_stats(&self) -> PlanDeltaStats {
+        self.delta
+    }
+
+    /// Churn observed at one stack layer's refreshes (zeros when the layer
+    /// never refreshed a comparable entry).
+    pub fn layer_delta_stats(&self, layer: usize) -> PlanDeltaStats {
+        self.delta_per_layer.get(layer).copied().unwrap_or_default()
+    }
+
+    /// The refresh policy governing every entry.
+    pub fn policy(&self) -> RefreshPolicy {
+        self.policy
+    }
+
+    /// The policy's BASE refresh interval (the historical knob; live
+    /// per-entry intervals are [`RequestPlanCache::entry_interval`]).
+    pub fn refresh_every(&self) -> usize {
+        self.policy.base_interval()
+    }
+
+    /// The live effective refresh interval of one (request, layer) entry
+    /// (`None` when the entry does not exist).
+    pub fn entry_interval(&self, key: u64, layer: usize) -> Option<usize> {
+        self.entries.get(&(key, layer as u32)).map(|e| e.interval)
+    }
+
+    /// Whether the uncond branch of `cond_key`'s pair currently serves the
+    /// cond plan (always false without sharing enabled).
+    pub fn share_active(&self, cond_key: u64, layer: usize) -> bool {
+        match self.share_state.get(&(cond_key & !1, layer as u32)) {
+            Some(st) => st.shared,
+            None => false,
+        }
+    }
+
+    /// The recorded refresh events (empty unless `with_churn_log`).
+    pub fn churn_log(&self) -> &[ChurnEvent] {
+        match &self.churn_log {
+            Some(log) => log,
+            None => &[],
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -586,10 +1154,29 @@ pub struct StackPlanner {
 
 impl StackPlanner {
     pub fn new(cfg: SlaConfig, depth: usize, refresh_every: usize) -> Self {
+        Self::with_policy(cfg, depth, RefreshPolicy::Fixed(refresh_every))
+    }
+
+    /// One policy instance per layer: each layer's interval adapts to its
+    /// OWN observed churn (deeper layers see post-residual hidden states
+    /// and drift at their own rate), so one stack mixes wide intervals on
+    /// stable layers with step-1 refresh on churning ones.
+    pub fn with_policy(cfg: SlaConfig, depth: usize, policy: RefreshPolicy) -> Self {
         assert!(depth >= 1, "stack needs at least one layer");
         StackPlanner {
             planners: (0..depth)
-                .map(|_| MaskPlanner::new(cfg.clone(), refresh_every))
+                .map(|_| MaskPlanner::with_policy(cfg.clone(), policy))
+                .collect(),
+        }
+    }
+
+    /// Explicit per-layer policies (`policies.len()` = stack depth).
+    pub fn with_policies(cfg: SlaConfig, policies: &[RefreshPolicy]) -> Self {
+        assert!(!policies.is_empty(), "stack needs at least one layer");
+        StackPlanner {
+            planners: policies
+                .iter()
+                .map(|p| MaskPlanner::with_policy(cfg.clone(), *p))
                 .collect(),
         }
     }
@@ -636,6 +1223,11 @@ impl StackPlanner {
     /// Layer `layer`'s accounting.
     pub fn stats(&self, layer: usize) -> PlanStats {
         self.planners[layer].stats()
+    }
+
+    /// Layer `layer`'s refresh-churn accounting.
+    pub fn delta_stats(&self, layer: usize) -> PlanDeltaStats {
+        self.planners[layer].delta_stats()
     }
 
     /// Accounting summed across every layer.
@@ -962,6 +1554,247 @@ mod tests {
         fz.force_refresh();
         assert!(fz.layer(0).current().is_none());
         assert!(fz.layer(1).current().is_none());
+    }
+
+    #[test]
+    fn mean_mask_churn_compares_only_matching_sets() {
+        let crit = || Arc::new(CompressedMask::all(4, 4, Label::Critical));
+        let marg = || Arc::new(CompressedMask::all(4, 4, Label::Marginal));
+        let big = || Arc::new(CompressedMask::all(8, 8, Label::Critical));
+        assert_eq!(mean_mask_churn(&[crit(), crit()], &[crit(), crit()]), Some(0.0));
+        assert_eq!(mean_mask_churn(&[crit(), crit()], &[marg(), crit()]), Some(0.5));
+        assert_eq!(mean_mask_churn(&[crit()], &[crit(), crit()]), None, "length");
+        assert_eq!(mean_mask_churn(&[crit()], &[big()]), None, "grid");
+        assert_eq!(mean_mask_churn(&[], &[]), None, "empty");
+    }
+
+    #[test]
+    fn refresh_policy_transitions() {
+        let fixed = RefreshPolicy::Fixed(3);
+        assert_eq!(fixed.base_interval(), 3);
+        assert_eq!(fixed.next_interval(3, 0.0), 3);
+        assert_eq!(fixed.next_interval(3, 1.0), 3);
+        let ad = RefreshPolicy::Adaptive {
+            base: 1,
+            low_water: 0.1,
+            high_water: 0.4,
+            max_interval: 8,
+        };
+        assert_eq!(ad.base_interval(), 1);
+        assert_eq!(ad.next_interval(2, 0.05), 4, "low churn doubles");
+        assert_eq!(ad.next_interval(8, 0.0), 8, "cap holds");
+        assert_eq!(ad.next_interval(8, 0.9), 1, "high churn snaps to 1");
+        assert_eq!(ad.next_interval(4, 0.25), 4, "mid-band keeps");
+        RefreshPolicy::adaptive_default().validate();
+    }
+
+    #[test]
+    fn fixed_policy_equals_legacy_constructor() {
+        let (q, k) = qk4(1, 2, 32, 8, 91);
+        let mut a = MaskPlanner::new(cfg(8), 3);
+        let mut b = MaskPlanner::with_policy(cfg(8), RefreshPolicy::Fixed(3));
+        for _ in 0..7 {
+            let pa = a.plan_for(&q, &k);
+            let pb = b.plan_for(&q, &k);
+            for (ma, mb) in pa.masks.iter().zip(&pb.masks) {
+                for i in 0..ma.tm {
+                    for j in 0..ma.tn {
+                        assert_eq!(ma.label(i, j), mb.label(i, j));
+                    }
+                }
+            }
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(b.current_interval(), 3);
+        assert_eq!(b.refresh_every(), 3);
+        // churn is observed (static inputs -> 0) but never changes Fixed
+        assert_eq!(b.delta_stats().observed, 2, "refreshes at steps 3, 6");
+        assert_eq!(b.delta_stats().mean_churn(), 0.0);
+    }
+
+    #[test]
+    fn planner_adaptive_interval_widens_on_static_masks() {
+        let (q, k) = qk4(1, 2, 32, 8, 90);
+        let policy = RefreshPolicy::Adaptive {
+            base: 1,
+            low_water: 0.05,
+            high_water: 0.35,
+            max_interval: 4,
+        };
+        let mut planner = MaskPlanner::with_policy(cfg(8), policy);
+        // static q/k: every refresh re-predicts identical masks (churn 0),
+        // so the interval doubles per refresh up to the cap — misses land
+        // at steps 0, 1, 3, 7 (interval 1, 2, 4) and then every 4 steps
+        let mut misses_at = Vec::new();
+        let mut last = 0;
+        for step in 0..12 {
+            let _ = planner.plan_for(&q, &k);
+            let m = planner.stats().misses;
+            if m != last {
+                misses_at.push(step);
+                last = m;
+            }
+        }
+        assert_eq!(misses_at, vec![0, 1, 3, 7, 11]);
+        assert_eq!(planner.current_interval(), 4, "capped at max_interval");
+        let d = planner.delta_stats();
+        assert_eq!(d.observed, 4);
+        assert_eq!(d.mean_churn(), 0.0);
+        // force_refresh restarts the adaptation from base
+        planner.force_refresh();
+        assert_eq!(planner.current_interval(), 1);
+    }
+
+    #[test]
+    fn request_cache_adaptive_interval_widens_and_snaps_back() {
+        let policy = RefreshPolicy::Adaptive {
+            base: 1,
+            low_water: 0.05,
+            high_water: 0.35,
+            max_interval: 8,
+        };
+        let mut cache = RequestPlanCache::with_policy(policy).with_churn_log();
+        let crit: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2];
+        let marg: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal)); 2];
+        // first prediction: interval starts at base
+        assert!(cache.lookup(Some(8), 0, 2, 4).is_none());
+        cache.store(Some(8), 0, &crit, 4);
+        assert_eq!(cache.entry_interval(8, 0), Some(1));
+        // identical re-prediction (churn 0): interval doubles to 2
+        assert!(cache.lookup(Some(8), 0, 2, 4).is_none());
+        cache.store(Some(8), 0, &crit, 4);
+        assert_eq!(cache.entry_interval(8, 0), Some(2));
+        // one hit, stale again, identical -> widen to 4
+        assert!(cache.lookup(Some(8), 0, 2, 4).is_some());
+        assert!(cache.lookup(Some(8), 0, 2, 4).is_none());
+        cache.store(Some(8), 0, &crit, 4);
+        assert_eq!(cache.entry_interval(8, 0), Some(4));
+        // injected distribution shift: the refresh observes churn 1.0 and
+        // the plan is invalidated immediately (interval snaps to 1)
+        for _ in 0..3 {
+            assert!(cache.lookup(Some(8), 0, 2, 4).is_some());
+        }
+        assert!(cache.lookup(Some(8), 0, 2, 4).is_none());
+        cache.store(Some(8), 0, &marg, 4);
+        assert_eq!(cache.entry_interval(8, 0), Some(1));
+        let d = cache.delta_stats();
+        assert_eq!(d.observed, 3);
+        assert!((d.last_churn - 1.0).abs() < 1e-12);
+        assert!((d.max_churn - 1.0).abs() < 1e-12);
+        assert!((d.mean_churn() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(cache.layer_delta_stats(0).observed, 3);
+        let log = cache.churn_log();
+        assert_eq!(log.len(), 3);
+        assert_eq!((log[0].interval, log[1].interval, log[2].interval), (2, 4, 1));
+        assert!((log[2].churn - 1.0).abs() < 1e-12);
+        assert_eq!(log[0].key, 8);
+    }
+
+    #[test]
+    fn request_cache_cfg_share_state_machine() {
+        let mut cache = RequestPlanCache::new(2).with_sharing(ShareConfig {
+            similarity_threshold: 0.9,
+            consecutive: 2,
+            divergence_churn: 0.25,
+        });
+        let crit: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2];
+        let marg: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal)); 2];
+        let (ck, uk) = (4u64, 5u64); // cond = even, uncond = odd partner
+        // refresh 1: both branches predict identical masks -> streak 1
+        cache.store(Some(ck), 0, &crit, 4);
+        cache.store(Some(uk), 0, &crit, 4);
+        assert!(!cache.share_active(ck, 0));
+        // age both entries out, refresh 2: still identical -> share starts
+        assert!(cache.lookup(Some(ck), 0, 2, 4).is_some());
+        assert!(cache.lookup(Some(uk), 0, 2, 4).is_some());
+        assert!(cache.lookup(Some(ck), 0, 2, 4).is_none());
+        cache.store(Some(ck), 0, &crit, 4);
+        assert!(cache.lookup(Some(uk), 0, 2, 4).is_none());
+        cache.store(Some(uk), 0, &crit, 4);
+        assert!(cache.share_active(ck, 0));
+        assert_eq!(cache.stats().shares, 1);
+        // uncond lookups now serve the cond plan by Arc — pure reads that
+        // never consume the cond entry's refresh units
+        let shared = cache.lookup(Some(uk), 0, 2, 4).expect("shared plan");
+        let _ = cache.lookup(Some(uk), 0, 2, 4).expect("still shared");
+        let cond_masks = cache.lookup(Some(ck), 0, 2, 4).expect("cond fresh");
+        assert!(Arc::ptr_eq(&shared[0], &cond_masks[0]));
+        assert_eq!(cache.stats().share_hits, 2);
+        assert_eq!(cache.layer_stats(0).share_hits, 2);
+        // divergence: the cond branch refreshes onto disjoint masks
+        // (churn 1.0 >= 0.25) -> the share is dropped AND the uncond
+        // mirror entry is evicted, so the branch re-predicts immediately
+        // instead of serving a stale plan right when churn says it moved
+        assert!(cache.lookup(Some(ck), 0, 2, 4).is_none());
+        cache.store(Some(ck), 0, &marg, 4);
+        assert!(!cache.share_active(ck, 0));
+        assert_eq!(cache.stats().unshares, 1);
+        assert!(cache.lookup(Some(uk), 0, 2, 4).is_none(), "mirror evicted");
+        // ending either branch clears the pair's sharing state
+        cache.end_request(uk);
+        cache.end_request(ck);
+        assert!(cache.is_empty());
+        assert!(!cache.share_active(ck, 0));
+    }
+
+    #[test]
+    fn mid_step_divergence_keeps_the_same_stamp_mirror() {
+        // the divergence-observing cond store can land BETWEEN Heun's two
+        // stages (lookups precede stores within a stage): the un-share
+        // must not evict a mirror serving the in-flight denoise step, or
+        // stage 2 would re-predict different masks than stage 1
+        let mut cache = RequestPlanCache::new(2).with_sharing(ShareConfig {
+            similarity_threshold: 1.0,
+            consecutive: 1,
+            divergence_churn: 0.25,
+        });
+        let crit: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2];
+        let marg: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal)); 2];
+        let (ck, uk) = (6u64, 7u64);
+        // step 0: identical predictions; consecutive = 1 -> shared at once
+        cache.store_stamped(Some(ck), 0, &crit, 4, Some(0));
+        cache.store_stamped(Some(uk), 0, &crit, 4, Some(0));
+        assert!(cache.share_active(ck, 0));
+        // step 1: cond hit, uncond share-read (mirror stamped 1)
+        assert!(cache.lookup_stamped(Some(ck), 0, 2, 4, Some(1)).is_some());
+        assert!(cache.lookup_stamped(Some(uk), 0, 2, 4, Some(1)).is_some());
+        // step 2 stage 1: cond aged out (miss); uncond share-read mirrors
+        // the still-cached cond plan under stamp 2...
+        assert!(cache.lookup_stamped(Some(ck), 0, 2, 4, Some(2)).is_none());
+        let stage1 = cache.lookup_stamped(Some(uk), 0, 2, 4, Some(2)).expect("share");
+        // ...then the cond store observes divergence churn mid-step
+        cache.store_stamped(Some(ck), 0, &marg, 4, Some(2));
+        assert!(!cache.share_active(ck, 0));
+        assert_eq!(cache.stats().unshares, 1);
+        // stage 2 of the SAME step still replays stage 1's masks
+        let stage2 = cache
+            .lookup_stamped(Some(uk), 0, 2, 4, Some(2))
+            .expect("same-step replay must survive the un-share");
+        assert!(Arc::ptr_eq(&stage1[0], &stage2[0]));
+        // afterwards the mirror ages normally: one more step of bounded
+        // staleness, then the uncond branch re-predicts
+        assert!(cache.lookup_stamped(Some(uk), 0, 2, 4, Some(3)).is_some());
+        assert!(cache.lookup_stamped(Some(uk), 0, 2, 4, Some(4)).is_none());
+    }
+
+    #[test]
+    fn sharing_disabled_never_diverts_or_counts() {
+        // without with_sharing, odd keys behave exactly as before
+        let mut cache = RequestPlanCache::new(4);
+        let crit: Vec<Arc<CompressedMask>> =
+            vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2];
+        cache.store(Some(6), 0, &crit, 4);
+        cache.store(Some(7), 0, &crit, 4);
+        let own = cache.lookup(Some(7), 0, 2, 4).expect("own entry");
+        assert!(Arc::ptr_eq(&own[0], &crit[0]));
+        let s = cache.stats();
+        assert_eq!((s.share_hits, s.shares, s.unshares), (0, 0, 0));
     }
 
     #[test]

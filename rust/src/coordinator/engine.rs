@@ -4,7 +4,9 @@ use std::cell::RefCell;
 
 use anyhow::Result;
 
-use crate::attention::plan::{PlanCacheStats, RequestPlanCache};
+use crate::attention::plan::{
+    ChurnEvent, PlanCacheStats, PlanDeltaStats, RefreshPolicy, RequestPlanCache, ShareConfig,
+};
 use crate::attention::{BatchSlaEngine, SlaConfig};
 use crate::model::{DitStack, ParamStore};
 use crate::runtime::{Artifact, HostTensor, Runtime, TensorSpec};
@@ -65,10 +67,25 @@ pub trait VelocityBackend {
         let _ = key;
     }
 
-    /// Plan-cache counters (hits/misses/refreshes/evictions + mean mask
-    /// sparsity) for backends that cache plans; `None` otherwise.
+    /// Plan-cache counters (hits/misses/refreshes/evictions, cross-branch
+    /// share counters, + mean mask sparsity) for backends that cache
+    /// plans; `None` otherwise.
     fn plan_stats(&self) -> Option<PlanCacheStats> {
         None
+    }
+
+    /// Mask churn observed at plan refreshes (the plan-governance delta
+    /// metric), aggregated across layers; `None` for backends that do not
+    /// cache plans.
+    fn plan_delta(&self) -> Option<PlanDeltaStats> {
+        None
+    }
+
+    /// Per-stack-layer (cache counters, churn deltas), index = layer.
+    /// Empty for backends that do not cache plans — `ServeReport` diffs
+    /// this across a trace to surface per-layer churn/sharing.
+    fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
+        Vec::new()
     }
 
     /// (seq_len, channels, cond_dim) of the model this backend serves.
@@ -185,16 +202,22 @@ pub struct NativeSlaBackend {
     channels: usize,
     cond_dim: usize,
     video: (usize, usize, usize),
-    /// DENOISE STEPS a cached per-(request, layer) plan serves before
-    /// re-prediction, for stamped callers (the scheduler and the keyed
+    /// Refresh policy governing per-(request, layer) plan lifetimes, in
+    /// DENOISE STEPS for stamped callers (the scheduler and the keyed
     /// sampler both stamp — Heun's two stages of one step consume one
-    /// unit); unstamped keyed calls age per call. 1 (default) predicts
-    /// every step: bitwise identical to the pre-plan-cache engine on
-    /// per-call paths (unstamped / one-eval-per-step integrators) — under
-    /// stamped Heun sampling, a step's second stage REPLAYS its first
-    /// stage's masks rather than predicting from the midpoint state, which
-    /// is the step-indexed semantics, not the historical per-call one.
-    plan_refresh: usize,
+    /// unit); unstamped keyed calls age per call. `Fixed(1)` (default)
+    /// predicts every step: bitwise identical to the pre-plan-cache engine
+    /// on per-call paths (unstamped / one-eval-per-step integrators) —
+    /// under stamped Heun sampling, a step's second stage REPLAYS its
+    /// first stage's masks rather than predicting from the midpoint state,
+    /// which is the step-indexed semantics, not the historical per-call
+    /// one. `Adaptive` widens each (request, layer) interval on low
+    /// observed churn and snaps it back to 1 on high churn.
+    plan_policy: RefreshPolicy,
+    /// CFG cross-branch plan sharing (off by default).
+    plan_share: Option<ShareConfig>,
+    /// Record per-refresh churn events (for `plan-report`; off by default).
+    plan_log: bool,
     /// Serving mode: skip materializing backward state (default true;
     /// bitwise-identical outputs either way).
     forward_only: bool,
@@ -266,7 +289,18 @@ impl NativeSlaBackend {
         let refs: Vec<&TensorSpec> = specs.iter().collect();
         let params = ParamStore::init(&refs, seed);
         Self::from_params(
-            video, channels, cond_dim, heads, head_dim, depth, cfg, params, 1, true,
+            video,
+            channels,
+            cond_dim,
+            heads,
+            head_dim,
+            depth,
+            cfg,
+            params,
+            RefreshPolicy::Fixed(1),
+            None,
+            false,
+            true,
         )
     }
 
@@ -282,7 +316,9 @@ impl NativeSlaBackend {
         depth: usize,
         cfg: SlaConfig,
         params: ParamStore,
-        plan_refresh: usize,
+        plan_policy: RefreshPolicy,
+        plan_share: Option<ShareConfig>,
+        plan_log: bool,
         forward_only: bool,
     ) -> Self {
         let seq_len = video.0 * video.1 * video.2;
@@ -290,6 +326,7 @@ impl NativeSlaBackend {
         let stack = DitStack::from_params(
             &params, NATIVE_BASE, cfg, depth, heads, heads, head_dim, channels,
         );
+        let cache = Self::build_cache(plan_policy, plan_share, plan_log);
         NativeSlaBackend {
             stack,
             params,
@@ -301,20 +338,71 @@ impl NativeSlaBackend {
             channels,
             cond_dim,
             video,
-            plan_refresh,
+            plan_policy,
+            plan_share,
+            plan_log,
             forward_only,
-            plan_cache: RefCell::new(RequestPlanCache::new(plan_refresh)),
+            plan_cache: RefCell::new(cache),
         }
+    }
+
+    fn build_cache(
+        policy: RefreshPolicy,
+        share: Option<ShareConfig>,
+        log: bool,
+    ) -> RequestPlanCache {
+        let mut cache = RequestPlanCache::with_policy(policy);
+        if let Some(sc) = share {
+            cache = cache.with_sharing(sc);
+        }
+        if log {
+            cache = cache.with_churn_log();
+        }
+        cache
+    }
+
+    fn reset_cache(&mut self) {
+        self.plan_cache = RefCell::new(Self::build_cache(
+            self.plan_policy,
+            self.plan_share,
+            self.plan_log,
+        ));
     }
 
     /// Serve each (request, layer) attention plan for `refresh_every`
     /// denoise steps before re-predicting (stamped callers; plan aging is
     /// step-indexed, so Heun's two stages of one step consume one unit —
     /// unstamped keyed calls count per call). 1 = predict every step.
+    /// Shorthand for `with_plan_policy(RefreshPolicy::Fixed(refresh_every))`.
     /// Resets the cache.
-    pub fn with_plan_refresh(mut self, refresh_every: usize) -> Self {
-        self.plan_refresh = refresh_every;
-        self.plan_cache = RefCell::new(RequestPlanCache::new(refresh_every));
+    pub fn with_plan_refresh(self, refresh_every: usize) -> Self {
+        self.with_plan_policy(RefreshPolicy::Fixed(refresh_every))
+    }
+
+    /// Govern per-(request, layer) plan lifetimes with an explicit refresh
+    /// policy (`Fixed(n)` = the historical `refresh_every = n`, bitwise;
+    /// `Adaptive` = churn-driven widening / snap-back). Resets the cache.
+    pub fn with_plan_policy(mut self, policy: RefreshPolicy) -> Self {
+        policy.validate();
+        self.plan_policy = policy;
+        self.reset_cache();
+        self
+    }
+
+    /// Enable CFG cross-branch plan sharing (see `ShareConfig`; relies on
+    /// the even-cond / odd-uncond stream-key pairing the scheduler and
+    /// keyed sampler both produce). Resets the cache.
+    pub fn with_plan_sharing(mut self, share: ShareConfig) -> Self {
+        self.plan_share = Some(share);
+        self.reset_cache();
+        self
+    }
+
+    /// Record a churn event per observed plan refresh (consumed by
+    /// `sla-dit plan-report`). Resets the cache.
+    pub fn with_plan_churn_log(mut self) -> Self {
+        self.plan_log = true;
+        self.reset_cache();
         self
     }
 
@@ -350,6 +438,26 @@ impl NativeSlaBackend {
     /// Per-layer plan-cache counters.
     pub fn plan_layer_stats(&self, layer: usize) -> PlanCacheStats {
         self.plan_cache.borrow().layer_stats(layer)
+    }
+
+    /// Aggregate refresh-churn accounting.
+    pub fn plan_delta_stats(&self) -> PlanDeltaStats {
+        self.plan_cache.borrow().delta_stats()
+    }
+
+    /// Per-layer refresh-churn accounting.
+    pub fn plan_layer_delta(&self, layer: usize) -> PlanDeltaStats {
+        self.plan_cache.borrow().layer_delta_stats(layer)
+    }
+
+    /// The recorded churn events (empty unless `with_plan_churn_log`).
+    pub fn plan_churn_log(&self) -> Vec<ChurnEvent> {
+        self.plan_cache.borrow().churn_log().to_vec()
+    }
+
+    /// Live effective refresh interval of one (stream key, layer) entry.
+    pub fn plan_entry_interval(&self, key: u64, layer: usize) -> Option<usize> {
+        self.plan_cache.borrow().entry_interval(key, layer)
     }
 
     /// Adopt fine-tuned per-head projections for layer 0 (single-layer
@@ -399,7 +507,9 @@ impl NativeSlaBackend {
             self.depth,
             self.engine().cfg.clone(),
             self.params.clone(),
-            self.plan_refresh,
+            self.plan_policy,
+            self.plan_share,
+            self.plan_log,
             self.forward_only,
         );
         *self = refreshed;
@@ -530,6 +640,17 @@ impl VelocityBackend for NativeSlaBackend {
 
     fn plan_stats(&self) -> Option<PlanCacheStats> {
         Some(self.plan_cache.borrow().stats())
+    }
+
+    fn plan_delta(&self) -> Option<PlanDeltaStats> {
+        Some(self.plan_cache.borrow().delta_stats())
+    }
+
+    fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
+        let cache = self.plan_cache.borrow();
+        (0..cache.layers_tracked())
+            .map(|li| (cache.layer_stats(li), cache.layer_delta_stats(li)))
+            .collect()
     }
 
     fn shape(&self) -> (usize, usize, usize) {
@@ -748,6 +869,97 @@ mod tests {
         assert_eq!(s.hits, 5);
         // sampling released the stream at the end
         assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn heun_adaptive_widened_interval_still_ages_per_step() {
+        use crate::diffusion::{sample_batch, Integrator, SamplerConfig};
+        // adaptive policy with low_water = 1.0: EVERY observed churn
+        // widens, so the interval trajectory is deterministic regardless
+        // of the data: 1 -> 2 -> 4. The regression pinned here: Heun's
+        // two-stage steps must STILL consume one refresh unit per STEP
+        // while the interval is policy-widened (stage 2 replays stage 1's
+        // plan via the stamp, never burning a widened unit).
+        let b = backend()
+            .with_plan_policy(RefreshPolicy::Adaptive {
+                base: 1,
+                low_water: 1.0,
+                high_water: 2.0,
+                max_interval: 8,
+            })
+            .with_plan_churn_log();
+        let (x, c) = xc(51, 32, 4, 6);
+        let noises = vec![x];
+        let conds = vec![c];
+        let uncond = HostTensor::zeros(vec![6]);
+        let cfg = SamplerConfig {
+            steps: 4,
+            integrator: Integrator::Heun,
+            plan_stream_base: Some(600),
+            ..Default::default()
+        };
+        let out = sample_batch(&b, &noises, &conds, &uncond, &cfg).unwrap();
+        assert_eq!(out[0].nfe, 7, "3 interior two-stage steps + 1 final Euler stage");
+        let s = b.plan_cache_stats();
+        // interval 1 at step 0, widened to 2 after step 1's refresh, to 4
+        // after step 3's: misses at steps 0, 1, 3; every other stage call
+        // (second stages + step 2's first stage) replays for free
+        assert_eq!(s.misses, 3, "adaptive widening + step-indexed aging");
+        assert_eq!(s.hits, 4);
+        let log = b.plan_churn_log();
+        let intervals: Vec<usize> = log.iter().map(|e| e.interval).collect();
+        assert_eq!(intervals, vec![2, 4], "each refresh doubled the interval");
+        assert_eq!(log[0].stamp, Some(1));
+        assert_eq!(log[1].stamp, Some(3));
+        assert_eq!(s.evictions, 1, "only the cond stream had an entry to evict");
+    }
+
+    #[test]
+    fn cfg_branch_sharing_serves_cond_plan_and_matches_bitwise() {
+        // genuinely identical branches (same x, same conditioning): after
+        // `consecutive` similar refreshes the uncond stream serves the
+        // cond stream's Arc-shared plan — halving planning work — and the
+        // two branches stay bitwise identical throughout
+        let b = b_sharing();
+        let (x, c) = xc(52, 32, 4, 6);
+        let (ck, uk) = (20u64, 21u64); // even cond / odd uncond pair
+        for step in 0..8u64 {
+            let out = b
+                .velocity_batch_stamped(
+                    &[(&x, 0.5, &c), (&x, 0.5, &c)],
+                    &[Some(ck), Some(uk)],
+                    &[Some(step), Some(step)],
+                )
+                .unwrap();
+            assert_eq!(out[0].data, out[1].data, "step {step}: branches diverged");
+        }
+        let s = b.plan_cache_stats();
+        // cond predicts at steps 0,2,4,6; uncond only at 0,2 — sharing
+        // activates at its step-2 refresh (streak 2) and every later
+        // uncond lookup is a cross-branch share hit (steps 3..7)
+        assert_eq!(s.misses, 6);
+        assert_eq!(s.shares, 1);
+        assert_eq!(s.share_hits, 5);
+        assert_eq!(s.hits, 10);
+        assert_eq!(s.unshares, 0, "static stream never diverges");
+        assert_eq!(b.plan_layer_stats(0).share_hits, 5);
+        // the uncond branch stopped planning: its last stored entry is the
+        // step-2 one, while the shared reads never aged the cond entry
+        // beyond its own per-step schedule
+        assert!(VelocityBackend::plan_stats(&b).unwrap().share_hits > 0);
+        VelocityBackend::end_request(&b, ck);
+        VelocityBackend::end_request(&b, uk);
+        assert_eq!(b.plan_cache_stats().evictions, 2);
+    }
+
+    fn b_sharing() -> NativeSlaBackend {
+        backend()
+            .with_plan_policy(RefreshPolicy::Fixed(2))
+            .with_plan_sharing(ShareConfig {
+                similarity_threshold: 1.0,
+                consecutive: 2,
+                divergence_churn: 0.25,
+            })
     }
 
     #[test]

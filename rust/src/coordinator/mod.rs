@@ -13,5 +13,5 @@ mod scheduler;
 mod server;
 
 pub use engine::{ArtifactBackend, NativeSlaBackend, VelocityBackend};
-pub use scheduler::{Coordinator, CoordinatorConfig, ServeReport};
+pub use scheduler::{Coordinator, CoordinatorConfig, PlanLayerReport, ServeReport};
 pub use server::Server;

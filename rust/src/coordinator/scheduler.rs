@@ -61,6 +61,22 @@ pub struct ReqStat {
     pub nfe: usize,
 }
 
+/// Per-stack-layer plan accounting over one trace (deltas, not cumulative
+/// backend counters): cache traffic, refresh churn, and cross-branch
+/// sharing, surfaced so per-layer drift is observable from the CLI.
+#[derive(Clone, Debug, Default)]
+pub struct PlanLayerReport {
+    pub hits: u64,
+    pub misses: u64,
+    pub refreshes: u64,
+    /// Hits served by the CFG partner branch's shared plan.
+    pub share_hits: u64,
+    /// Refreshes that observed churn against a same-grid predecessor.
+    pub churn_observed: u64,
+    /// Mean churn over those refreshes.
+    pub mean_churn: f64,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub stats: Vec<ReqStat>,
@@ -82,6 +98,19 @@ pub struct ServeReport {
     pub plan_refreshes: u64,
     /// Mean sparsity of the masks predicted by the backend's planner.
     pub plan_mean_sparsity: f64,
+    /// Cross-branch sharing over this trace: hits served from the CFG
+    /// partner's plan, share activations, and divergence un-shares.
+    pub plan_share_hits: u64,
+    pub plan_shares: u64,
+    pub plan_unshares: u64,
+    /// Refresh churn over this trace: refreshes that observed a comparable
+    /// predecessor, and their mean/max churn (max is the backend's
+    /// cumulative max — a max has no meaningful per-trace delta).
+    pub plan_churn_observed: u64,
+    pub plan_mean_churn: f64,
+    pub plan_max_churn: f64,
+    /// Per-stack-layer accounting (deltas over this trace), index = layer.
+    pub plan_layers: Vec<PlanLayerReport>,
 }
 
 impl ServeReport {
@@ -144,6 +173,31 @@ impl ServeReport {
                 100.0 * self.plan_hit_rate(),
                 100.0 * self.plan_mean_sparsity,
             ));
+            s.push_str(&format!(
+                " plan_churn[n={} mean={:.1}% max={:.1}%]",
+                self.plan_churn_observed,
+                100.0 * self.plan_mean_churn,
+                100.0 * self.plan_max_churn,
+            ));
+            if self.plan_share_hits + self.plan_shares + self.plan_unshares > 0 {
+                s.push_str(&format!(
+                    " plan_share[hits={} shares={} unshares={}]",
+                    self.plan_share_hits, self.plan_shares, self.plan_unshares,
+                ));
+            }
+            for (li, l) in self.plan_layers.iter().enumerate() {
+                s.push_str(&format!(
+                    " L{li}[hits={} misses={} churn={:.1}%{}]",
+                    l.hits,
+                    l.misses,
+                    100.0 * l.mean_churn,
+                    if l.share_hits > 0 {
+                        format!(" share_hits={}", l.share_hits)
+                    } else {
+                        String::new()
+                    },
+                ));
+            }
         }
         s
     }
@@ -266,6 +320,8 @@ impl<'b> Coordinator<'b> {
         let mut clock = 0.0f64;
         // plan-cache counters are cumulative on the backend; report deltas
         let plan0 = self.backend.plan_stats().unwrap_or_default();
+        let delta0 = self.backend.plan_delta().unwrap_or_default();
+        let layers0 = self.backend.plan_layers();
 
         while !pending.is_empty() || !active.is_empty() {
             // admit arrivals under the backpressure cap
@@ -347,7 +403,35 @@ impl<'b> Coordinator<'b> {
             } else {
                 (p1.sparsity_sum - plan0.sparsity_sum) / planned as f64
             };
+            report.plan_share_hits = p1.share_hits - plan0.share_hits;
+            report.plan_shares = p1.shares - plan0.shares;
+            report.plan_unshares = p1.unshares - plan0.unshares;
         }
+        if let Some(d1) = self.backend.plan_delta() {
+            let d = d1.delta_since(&delta0);
+            report.plan_churn_observed = d.observed;
+            report.plan_mean_churn = d.mean_churn();
+            report.plan_max_churn = d.max_churn;
+        }
+        // per-layer deltas: the layer vector can have grown during the
+        // trace, so pad the starting snapshot with zeros
+        let layers1 = self.backend.plan_layers();
+        report.plan_layers = layers1
+            .iter()
+            .enumerate()
+            .map(|(li, (s1, d1))| {
+                let (s0, d0) = layers0.get(li).copied().unwrap_or_default();
+                let d = d1.delta_since(&d0);
+                PlanLayerReport {
+                    hits: s1.hits - s0.hits,
+                    misses: s1.misses - s0.misses,
+                    refreshes: s1.refreshes - s0.refreshes,
+                    share_hits: s1.share_hits - s0.share_hits,
+                    churn_observed: d.observed,
+                    mean_churn: d.mean_churn(),
+                }
+            })
+            .collect();
         Ok(report)
     }
 
@@ -756,6 +840,86 @@ mod tests {
         assert_eq!(backend.plan_layer_stats(1).misses, 2);
         // finished requests evicted BOTH layers of both streams
         assert_eq!(backend.plan_cache_stats().evictions, 4);
+        // ...and flows into the report's per-layer deltas
+        assert_eq!(rep.plan_layers.len(), 2);
+        for (li, l) in rep.plan_layers.iter().enumerate() {
+            assert_eq!(l.misses, 2, "layer {li}");
+            assert_eq!(l.hits, 6, "layer {li}");
+            assert_eq!(l.refreshes, 0, "refresh_every=4 never replaced a plan");
+            assert_eq!(l.churn_observed, 0, "no refresh -> no churn observation");
+        }
+        assert!(rep.summary().contains("L1[hits=6 misses=2"), "{}", rep.summary());
+    }
+
+    #[test]
+    fn summary_surfaces_churn_and_sharing_per_layer() {
+        // unit test on the summary string: PlanDeltaStats / per-layer
+        // stats / share counters must all be CLI-observable
+        let rep = ServeReport {
+            plan_hits: 10,
+            plan_misses: 4,
+            plan_refreshes: 2,
+            plan_mean_sparsity: 0.5,
+            plan_share_hits: 3,
+            plan_shares: 1,
+            plan_unshares: 1,
+            plan_churn_observed: 2,
+            plan_mean_churn: 0.125,
+            plan_max_churn: 0.25,
+            plan_layers: vec![
+                PlanLayerReport {
+                    hits: 6,
+                    misses: 2,
+                    refreshes: 1,
+                    share_hits: 3,
+                    churn_observed: 1,
+                    mean_churn: 0.25,
+                },
+                PlanLayerReport {
+                    hits: 4,
+                    misses: 2,
+                    refreshes: 1,
+                    share_hits: 0,
+                    churn_observed: 1,
+                    mean_churn: 0.0,
+                },
+            ],
+            ..Default::default()
+        };
+        let s = rep.summary();
+        assert!(s.contains("plan_churn[n=2 mean=12.5% max=25.0%]"), "{s}");
+        assert!(s.contains("plan_share[hits=3 shares=1 unshares=1]"), "{s}");
+        assert!(s.contains("L0[hits=6 misses=2 churn=25.0% share_hits=3]"), "{s}");
+        assert!(s.contains("L1[hits=4 misses=2 churn=0.0%]"), "{s}");
+        // without any plan traffic, none of the plan segments render
+        let empty = ServeReport::default();
+        assert!(!empty.summary().contains("plan_churn"));
+    }
+
+    #[test]
+    fn adaptive_native_backend_reports_churn_through_scheduler() {
+        use super::engine::NativeSlaBackend;
+        use crate::attention::{RefreshPolicy, SlaConfig};
+        let backend = NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+        .with_plan_policy(RefreshPolicy::adaptive_default());
+        let coord = Coordinator::new(&backend, CoordinatorConfig::default());
+        let rep = coord.run_trace(&reqs(2, 6), None).unwrap();
+        assert_eq!(rep.stats.len(), 2);
+        // adaptive base = 1: every stream refreshes at step 1 at the
+        // latest, so churn was observed and surfaced in the report
+        assert!(rep.plan_churn_observed > 0);
+        assert!(rep.plan_misses >= 4, "2 streams x >= 2 predictions");
+        assert!(rep.summary().contains("plan_churn["), "{}", rep.summary());
+        assert_eq!(rep.plan_layers.len(), 1);
+        assert!(rep.plan_layers[0].misses >= 4);
     }
 
     #[test]

@@ -93,7 +93,9 @@ pub struct SamplerConfig {
     /// timestep shift (Wan-style): s(t) = shift*t / (1 + (shift-1)*t)
     pub shift: f32,
     /// When set, item `i` is keyed as stream `base + 2*i` (cond branch) and
-    /// `base + 2*i + 1` (uncond branch) through `velocity_many_stamped`, so
+    /// `base + 2*i + 1` (uncond branch) — see [`branch_stream_keys`]; keep
+    /// `base` even so cross-branch plan sharing can pair the branches —
+    /// through `velocity_many_stamped`, so
     /// a plan-caching backend can reuse attention plans across denoise
     /// steps (a multi-layer backend fans each stream key into per-(stream,
     /// layer) cache entries internally); the streams are released when
@@ -115,6 +117,25 @@ impl Default for SamplerConfig {
             plan_stream_base: None,
         }
     }
+}
+
+/// The repo-wide plan-stream key layout for one sampled item's CFG branch
+/// pair: the cond branch is `base + 2*item` (EVEN), its uncond branch the
+/// adjacent odd key. A branch's partner is therefore always `key ^ 1` with
+/// cond on the even side — the invariant the plan cache's cross-branch
+/// sharing (`attention::plan::ShareConfig`) keys on. The scheduler's
+/// `(request_id << 1) | uncond` layout satisfies the same contract. An odd
+/// `base` would silently flip the cond/uncond roles — with plan sharing
+/// enabled that pairs the branches BACKWARDS (similarity tracked on the
+/// wrong stream, divergence watched on the wrong stream) — so it is
+/// rejected loudly in every build.
+pub fn branch_stream_keys(base: u64, item: usize) -> (u64, u64) {
+    assert!(
+        base % 2 == 0,
+        "plan_stream_base must be even for CFG branch pairing (got {base})"
+    );
+    let cond = base + 2 * item as u64;
+    (cond, cond + 1)
 }
 
 /// The timestep grid from 1.0 down to 0.0 (inclusive endpoints), optionally
@@ -184,7 +205,14 @@ pub fn sample_batch(
     let mut nfe_each = 0usize; // per-item evaluations (same for every item)
     let use_cfg = (cfg.cfg_weight - 1.0).abs() >= 1e-6;
     let stream_key = |item: usize, branch: u64| -> Option<u64> {
-        cfg.plan_stream_base.map(|base| base + 2 * item as u64 + branch)
+        cfg.plan_stream_base.map(|base| {
+            let (cond, uncond) = branch_stream_keys(base, item);
+            if branch == 0 {
+                cond
+            } else {
+                uncond
+            }
+        })
     };
 
     let guided = |xs: &[HostTensor], t: f32, step: u64, nfe: &mut usize|
@@ -283,6 +311,28 @@ pub fn sample_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn branch_stream_keys_pair_even_cond_with_adjacent_odd() {
+        for item in 0..4usize {
+            let (cond, uncond) = branch_stream_keys(100, item);
+            assert_eq!(cond % 2, 0, "cond branch must be the even key");
+            assert_eq!(uncond, cond + 1);
+            assert_eq!(cond ^ 1, uncond, "partner is key ^ 1");
+            assert_eq!(uncond & !1, cond, "pair base recovers the cond key");
+        }
+        // distinct items never collide
+        let keys: Vec<u64> = (0..4)
+            .flat_map(|i| {
+                let (c, u) = branch_stream_keys(0, i);
+                [c, u]
+            })
+            .collect();
+        let mut dedup = keys.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+    }
 
     #[test]
     fn timestep_grid_endpoints() {

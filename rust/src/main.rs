@@ -6,6 +6,7 @@
 //!   generate   sample one video with a fine-tuned (or fresh) model
 //!   serve      run the coordinator over a synthetic request trace
 //!   analyze    Fig. 1 / Fig. 3 attention-weight analyses (native kernels)
+//!   plan-report  native serving run + per-(request, layer) churn dump
 //!   bench-compare  gate BENCH_*.json perf artifacts against a previous run
 
 use anyhow::Result;
@@ -85,6 +86,27 @@ fn cli() -> Cli {
         )
         .command(
             Command::new(
+                "plan-report",
+                "serve a native trace, dump per-(request, layer) plan-churn trajectories",
+            )
+            .flag("requests", "4", "number of requests")
+            .flag("steps", "8", "denoise steps per request")
+            .flag("rate", "4.0", "arrival rate (req/s)")
+            .flag("depth", "2", "DiT stack depth")
+            .flag("policy", "adaptive", "refresh policy: fixed | adaptive")
+            .flag("refresh", "1", "base refresh interval, denoise steps")
+            .flag("low-water", "0.05", "adaptive: churn at/below this doubles the interval")
+            .flag("high-water", "0.35", "adaptive: churn at/above this snaps the interval to 1")
+            .flag("max-interval", "16", "adaptive: interval cap")
+            .flag("share", "1", "CFG cross-branch plan sharing (1 = on, 0 = off)")
+            .flag("share-threshold", "0.9", "mask similarity activating the share streak")
+            .flag("share-k", "2", "consecutive similar refreshes before sharing starts")
+            .flag("divergence", "0.25", "cond-branch churn that breaks an active share")
+            .flag("max-active", "8", "in-flight cap (backpressure)")
+            .flag("batch-per-tick", "4", "denoise steps per scheduler tick"),
+        )
+        .command(
+            Command::new(
                 "bench-compare",
                 "diff BENCH_*.json perf artifacts against a previous run's",
             )
@@ -114,6 +136,7 @@ fn main() {
             "serve-tcp" => cmd_serve_tcp(&args),
             "hlo" => cmd_hlo(&args),
             "export" => cmd_export(&args),
+            "plan-report" => cmd_plan_report(&args),
             "bench-compare" => cmd_bench_compare(&args),
             _ => unreachable!(),
         }
@@ -346,6 +369,94 @@ fn cmd_export(args: &sla_dit::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve a synthetic trace through the pure-Rust `NativeSlaBackend` (no
+/// PJRT artifacts needed) under an explicit plan-refresh policy, then
+/// pretty-print the per-(request, branch, layer) mask-churn trajectories
+/// the plan-governance layer observed — the CLI window onto adaptive
+/// refresh intervals and CFG cross-branch sharing.
+fn cmd_plan_report(args: &sla_dit::util::cli::Args) -> Result<()> {
+    use sla_dit::attention::{RefreshPolicy, ShareConfig, SlaConfig};
+    use sla_dit::coordinator::NativeSlaBackend;
+    use std::collections::BTreeMap;
+    let depth = args.get_usize("depth")?;
+    let base = args.get_usize("refresh")?;
+    let policy = match args.get_str("policy").as_str() {
+        "fixed" => RefreshPolicy::Fixed(base),
+        "adaptive" => RefreshPolicy::Adaptive {
+            base,
+            low_water: args.get_f64("low-water")?,
+            high_water: args.get_f64("high-water")?,
+            max_interval: args.get_usize("max-interval")?,
+        },
+        other => anyhow::bail!("--policy must be fixed | adaptive, got {other:?}"),
+    };
+    // a small native model (N = 2*4*4 tokens, 2 heads of dim 4): the
+    // report is about plan governance, not model scale
+    let sla = SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() };
+    let mut backend = NativeSlaBackend::with_depth((2, 4, 4), 4, 6, 2, 4, depth, sla, 7)
+        .with_plan_policy(policy)
+        .with_plan_churn_log();
+    if args.get_usize("share")? != 0 {
+        backend = backend.with_plan_sharing(ShareConfig {
+            similarity_threshold: args.get_f64("share-threshold")?,
+            consecutive: args.get_usize("share-k")?,
+            divergence_churn: args.get_f64("divergence")?,
+        });
+    }
+    let coord = Coordinator::new(
+        &backend,
+        CoordinatorConfig {
+            max_active: args.get_usize("max-active")?,
+            batch_per_tick: args.get_usize("batch-per-tick")?,
+            ..Default::default()
+        },
+    );
+    let steps = args.get_usize("steps")?;
+    let trace = RequestGen::generate(&WorkloadConfig {
+        requests: args.get_usize("requests")?,
+        rate: args.get_f64("rate")?,
+        steps_choices: vec![steps],
+        ..Default::default()
+    });
+    println!(
+        "plan-report: {} requests x {steps} steps, depth {depth}, policy {policy:?}",
+        trace.len()
+    );
+    let report = coord.run_trace(&trace, None)?;
+    println!("{}", report.summary());
+    // group the refresh log into per-(stream, layer) churn trajectories
+    let log = backend.plan_churn_log();
+    let mut by_stream: BTreeMap<(u64, u32), Vec<(f64, usize)>> = BTreeMap::new();
+    for e in &log {
+        by_stream.entry((e.key, e.layer)).or_default().push((e.churn, e.interval));
+    }
+    if by_stream.is_empty() {
+        println!(
+            "no refresh churn observed (no plan aged out against a comparable \
+             predecessor — long intervals or very short requests)"
+        );
+        return Ok(());
+    }
+    println!(
+        "\nchurn trajectories (one row per (request, branch, layer); bars = churn \
+         per refresh; right column = final interval):"
+    );
+    for ((key, layer), events) in &by_stream {
+        let churns: Vec<f64> = events.iter().map(|(c, _)| *c).collect();
+        let mean = churns.iter().sum::<f64>() / churns.len() as f64;
+        let last_interval = events.last().map(|(_, i)| *i).unwrap_or(0);
+        println!(
+            "  req {:>3} {} L{layer}: {:>2} refreshes, mean churn {:>5.1}%  {}  -> interval {last_interval}",
+            key >> 1,
+            if key & 1 == 0 { "cond  " } else { "uncond" },
+            events.len(),
+            100.0 * mean,
+            metrics::sparkline(&churns),
+        );
+    }
+    Ok(())
+}
+
 /// Diff the fresh `BENCH_*.json` perf artifacts against a previous run's
 /// (the CI perf gate): for every experiment present in BOTH dirs with an
 /// identical workload stanza (same `shape` payload and same smoke flag),
@@ -490,6 +601,41 @@ mod tests {
         a.values.insert("new".into(), new.into());
         a.values.insert("threshold".into(), threshold.into());
         a
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn plan_report_runs_adaptive_and_fixed_natively() {
+        // the CLI smoke CI also runs: parse fills every default, then the
+        // command must serve the native trace and render the dump
+        let c = cli();
+        let (cmd, args) = c
+            .parse(&sv(&["plan-report", "--requests", "2", "--steps", "3"]))
+            .unwrap();
+        assert_eq!(cmd.name, "plan-report");
+        cmd_plan_report(&args).unwrap();
+        let (_, args) = c
+            .parse(&sv(&[
+                "plan-report",
+                "--requests",
+                "2",
+                "--steps",
+                "3",
+                "--policy",
+                "fixed",
+                "--share",
+                "0",
+            ]))
+            .unwrap();
+        cmd_plan_report(&args).unwrap();
+        // unknown policy is a loud error, not a silent default
+        let (_, args) = c
+            .parse(&sv(&["plan-report", "--policy", "nope"]))
+            .unwrap();
+        assert!(cmd_plan_report(&args).is_err());
     }
 
     #[test]

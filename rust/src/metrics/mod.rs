@@ -86,6 +86,33 @@ pub fn temporal_consistency(x: &HostTensor, frames: usize) -> f64 {
     corr_sum / (frames - 1) as f64
 }
 
+/// Render a value series as a compact unicode sparkline (one bar glyph per
+/// sample, min..max normalized). Used by `sla-dit plan-report` to visualize
+/// per-(request, layer) mask-churn trajectories in the terminal. A constant
+/// series renders as the lowest bar; empty input renders empty.
+pub fn sparkline(xs: &[f64]) -> String {
+    const BARS: [char; 8] = [
+        '\u{2581}', '\u{2582}', '\u{2583}', '\u{2584}', '\u{2585}', '\u{2586}', '\u{2587}',
+        '\u{2588}',
+    ];
+    if xs.is_empty() {
+        return String::new();
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let span = (hi - lo).max(1e-12);
+    xs.iter()
+        .map(|&x| {
+            let idx = (((x - lo) / span) * 7.0).round() as usize;
+            BARS[idx.min(7)]
+        })
+        .collect()
+}
+
 /// One row of the Table 1/2 quality panel for a fine-tuned variant.
 #[derive(Clone, Debug)]
 pub struct QualityReport {
@@ -157,6 +184,21 @@ mod tests {
         let t = HostTensor::new(vec![16, 4], data);
         let c = temporal_consistency(&t, 2);
         assert!((c - 1.0).abs() < 1e-6, "corr {c}");
+    }
+
+    #[test]
+    fn sparkline_normalizes_and_handles_degenerate_input() {
+        assert_eq!(sparkline(&[]), "");
+        // constant series: every glyph is the lowest bar
+        assert_eq!(sparkline(&[0.5, 0.5, 0.5]), "\u{2581}\u{2581}\u{2581}");
+        // a ramp uses the full bar range, monotonically
+        let s: Vec<char> = sparkline(&[0.0, 0.25, 0.5, 0.75, 1.0]).chars().collect();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[0], '\u{2581}');
+        assert_eq!(s[4], '\u{2588}');
+        for w in s.windows(2) {
+            assert!(w[1] >= w[0], "ramp must be monotone");
+        }
     }
 
     #[test]

@@ -444,7 +444,7 @@ mod tests {
         let (engine, planner) =
             store.batch_engine_with_planner("params.l", cfg, 1, 1, d, 3);
         assert_eq!(engine.heads, 1);
-        assert_eq!(planner.refresh_every, 3);
+        assert_eq!(planner.refresh_every(), 3);
         assert_eq!(planner.cfg.bq, engine.cfg.bq);
         assert!(planner.current().is_none());
     }

@@ -898,6 +898,47 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_stack_planner_widens_per_layer_on_static_stream() {
+        use crate::attention::plan::RefreshPolicy;
+        // static hidden states: every refresh re-predicts identical masks
+        // (churn 0), so each layer's interval doubles independently —
+        // governance composes with step-indexed aging through forward_step
+        let (b, n, c, heads, d, depth) = (1, 32, 8, 2, 4, 2);
+        let stack = DitStack::random(cfg(2), depth, heads, d, c, 40);
+        let hs = items(b, n, c, 41);
+        let mods = ones(b);
+        let policy = RefreshPolicy::Adaptive {
+            base: 1,
+            low_water: 0.05,
+            high_water: 0.35,
+            max_interval: 8,
+        };
+        let mut planner = StackPlanner::with_policy(cfg(2), depth, policy);
+        let reference = stack.forward_fresh(&hs, &mods);
+        for step in 0..8u64 {
+            let out = stack.forward_step(&hs, &mods, &mut planner, step);
+            // replayed plans on a static stream stay bitwise identical
+            assert_eq!(out.hs[0].data, reference.hs[0].data, "step {step}");
+        }
+        for li in 0..depth {
+            // misses at steps 0, 1, 3, 7 (interval 1 -> 2 -> 4 -> 8)
+            assert_eq!(planner.stats(li).misses, 4, "layer {li}");
+            assert_eq!(planner.stats(li).hits, 4, "layer {li}");
+            assert_eq!(planner.layer(li).current_interval(), 8, "layer {li}");
+            let delta = planner.delta_stats(li);
+            assert_eq!(delta.observed, 3);
+            assert_eq!(delta.mean_churn(), 0.0, "static stream has zero churn");
+        }
+        // explicit per-layer policies: layer 0 fixed, layer 1 adaptive
+        let mut mixed = StackPlanner::with_policies(cfg(2), &[RefreshPolicy::Fixed(1), policy]);
+        for step in 0..4u64 {
+            let _ = stack.forward_step(&hs, &mods, &mut mixed, step);
+        }
+        assert_eq!(mixed.stats(0).misses, 4, "Fixed(1) predicts every step");
+        assert_eq!(mixed.stats(1).misses, 3, "adaptive layer widened (0, 1, 3)");
+    }
+
+    #[test]
     fn planner_reuse_and_frozen_regime_across_layers() {
         let (b, n, c, heads, d, depth) = (1, 32, 8, 2, 4, 2);
         let stack = DitStack::random(cfg(2), depth, heads, d, c, 7);

@@ -1,0 +1,483 @@
+//! Plan-governance differential + property tests:
+//!
+//! * `RefreshPolicy::Fixed(n)` is **bitwise identical** to the pre-policy
+//!   planner (manual replay bookkeeping AND the legacy constructor) on a
+//!   scripted drifting Q/K trajectory — the governance layer must be a pure
+//!   superset of the old `refresh_every` knob;
+//! * churn metric properties: 0 for identical masks, 1 for disjoint ones,
+//!   symmetric, exact and monotone under increasing block flips;
+//! * an end-to-end scheduler trace through a scripted plan-caching backend:
+//!   the adaptive policy WIDENS the interval on a static mask stream and
+//!   snaps back to 1 (immediate invalidation) on an injected distribution
+//!   shift, then re-widens once the shifted stream stabilizes;
+//! * the serving stack path: adaptive widening on static hidden states and
+//!   snap-back when the stream is swapped mid-trajectory;
+//! * CFG cross-branch sharing on genuinely identical branches: share/hit
+//!   counters fire and sampled outputs stay bitwise equal to a
+//!   sharing-disabled run.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use sla_dit::attention::mask::{mask_churn, CompressedMask, Label};
+use sla_dit::attention::plan::{
+    mean_mask_churn, AttentionPlan, MaskPlanner, PlanCacheStats, PlanDeltaStats, RefreshPolicy,
+    RequestPlanCache, ShareConfig,
+};
+use sla_dit::attention::{BatchSlaEngine, SlaConfig};
+use sla_dit::coordinator::{Coordinator, CoordinatorConfig, NativeSlaBackend, VelocityBackend};
+use sla_dit::diffusion::{sample_batch, SamplerConfig};
+use sla_dit::model::DitStack;
+use sla_dit::runtime::HostTensor;
+use sla_dit::tensor::{Mat, Tens4};
+use sla_dit::util::rng::Rng;
+use sla_dit::workload::VideoRequest;
+
+fn cfg(block: usize) -> SlaConfig {
+    SlaConfig {
+        bq: block,
+        bkv: block,
+        kh_pct: 25.0,
+        kl_pct: 25.0,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+fn qkv4(b: usize, h: usize, n: usize, d: usize, rng: &mut Rng) -> (Tens4, Tens4, Tens4) {
+    (
+        Tens4::randn(b, h, n, d, rng),
+        Tens4::randn(b, h, n, d, rng),
+        Tens4::randn(b, h, n, d, rng),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// differential: Fixed(n) == the pre-governance planner, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixed_policy_bitwise_identical_to_pre_policy_planner() {
+    let (b, h, n, d) = (1usize, 2usize, 64usize, 8usize);
+    let c = cfg(8);
+    let engine = BatchSlaEngine::new(c.clone(), h, d);
+    let steps = 9usize;
+    let mut rng = Rng::new(400);
+    let traj: Vec<(Tens4, Tens4, Tens4)> =
+        (0..steps).map(|_| qkv4(b, h, n, d, &mut rng)).collect();
+    for refresh in [1usize, 2, 3] {
+        let mut governed = MaskPlanner::with_policy(c.clone(), RefreshPolicy::Fixed(refresh));
+        let mut legacy = MaskPlanner::new(c.clone(), refresh);
+        // the pre-PR semantics, scripted by hand: predict exactly at steps
+        // where step % refresh == 0, replay the last prediction otherwise
+        let mut manual: Option<AttentionPlan> = None;
+        for (step, (q, k, v)) in traj.iter().enumerate() {
+            if step % refresh == 0 {
+                manual = Some(AttentionPlan::predict(&c, q, k));
+            }
+            let pg = governed.plan_for(q, k);
+            let pl = legacy.plan_for(q, k);
+            let og = engine.forward_plan(q, k, v, &pg);
+            let ol = engine.forward_plan(q, k, v, &pl);
+            let om = engine.forward_plan(q, k, v, manual.as_ref().unwrap());
+            assert_eq!(
+                og.o.data, om.o.data,
+                "refresh {refresh} step {step}: Fixed policy != manual replay"
+            );
+            assert_eq!(
+                ol.o.data, om.o.data,
+                "refresh {refresh} step {step}: legacy constructor != manual replay"
+            );
+        }
+        assert_eq!(governed.stats(), legacy.stats(), "refresh {refresh}");
+        assert_eq!(governed.current_interval(), refresh);
+        // churn was OBSERVED on the drifting stream without changing
+        // anything (drifting Q/K -> strictly positive churn)
+        if refresh < steps {
+            let delta = governed.delta_stats();
+            assert!(delta.observed > 0);
+            assert!(delta.mean_churn() > 0.0, "drifting masks must churn");
+        }
+    }
+}
+
+#[test]
+fn fixed_policy_backend_matches_legacy_refresh_knob() {
+    // the serving cache under Fixed(n) == the historical with_plan_refresh(n)
+    let mk = |policy: bool| -> NativeSlaBackend {
+        let b = NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        );
+        if policy {
+            b.with_plan_policy(RefreshPolicy::Fixed(3))
+        } else {
+            b.with_plan_refresh(3)
+        }
+    };
+    let (a, b) = (mk(true), mk(false));
+    let mut rng = Rng::new(401);
+    for step in 0..6u64 {
+        let x = HostTensor::new(vec![32, 4], rng.normal_vec(32 * 4));
+        let c = HostTensor::new(vec![6], rng.normal_vec(6));
+        let oa = a
+            .velocity_batch_stamped(&[(&x, 0.5, &c)], &[Some(2)], &[Some(step)])
+            .unwrap();
+        let ob = b
+            .velocity_batch_stamped(&[(&x, 0.5, &c)], &[Some(2)], &[Some(step)])
+            .unwrap();
+        assert_eq!(oa[0].data, ob[0].data, "step {step}");
+    }
+    let (sa, sb) = (a.plan_cache_stats(), b.plan_cache_stats());
+    assert_eq!((sa.hits, sa.misses, sa.refreshes), (sb.hits, sb.misses, sb.refreshes));
+    assert_eq!(sa.misses, 2, "predict at steps 0 and 3");
+}
+
+// ---------------------------------------------------------------------------
+// churn metric properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_churn_identity_disjointness_symmetry_monotonicity() {
+    use sla_dit::util::prop;
+    // rotate every label to a DIFFERENT one: guarantees full disagreement
+    fn rotate(l: i8) -> i8 {
+        match l {
+            1 => 0,
+            0 => -1,
+            _ => 1,
+        }
+    }
+    prop::check(
+        "plan-churn-props",
+        17,
+        24,
+        |rng| {
+            let tm = 2 + rng.below(5);
+            let tn = 2 + rng.below(5);
+            let labels: Vec<i8> =
+                (0..tm * tn).map(|_| [1i8, 0, -1][rng.below(3)]).collect();
+            (tm, tn, labels)
+        },
+        |&(tm, tn, ref labels)| {
+            let total = tm * tn;
+            let a = CompressedMask::from_labels(tm, tn, labels.clone());
+            if mask_churn(&a, &a) != 0.0 {
+                return Err("identical masks must have churn 0".into());
+            }
+            let disjoint = CompressedMask::from_labels(
+                tm,
+                tn,
+                labels.iter().map(|&l| rotate(l)).collect(),
+            );
+            if mask_churn(&a, &disjoint) != 1.0 {
+                return Err("fully disjoint masks must have churn 1".into());
+            }
+            if mask_churn(&a, &disjoint) != mask_churn(&disjoint, &a) {
+                return Err("churn must be symmetric".into());
+            }
+            // flipping the first k blocks yields churn exactly k/total,
+            // non-decreasing in k
+            let mut prev = -1.0;
+            for k in 0..=total {
+                let flipped: Vec<i8> = labels
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| if i < k { rotate(l) } else { l })
+                    .collect();
+                let b = CompressedMask::from_labels(tm, tn, flipped);
+                let ch = mask_churn(&a, &b);
+                if (ch - k as f64 / total as f64).abs() > 1e-12 {
+                    return Err(format!("k={k}: churn {ch} != {}", k as f64 / total as f64));
+                }
+                if mask_churn(&b, &a) != ch {
+                    return Err(format!("k={k}: asymmetric churn"));
+                }
+                if ch < prev {
+                    return Err(format!("k={k}: churn decreased ({prev} -> {ch})"));
+                }
+                prev = ch;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end scheduler trace: widen on static masks, snap on injected shift
+// ---------------------------------------------------------------------------
+
+/// Scripted plan-caching backend: mask prediction is a lookup into a
+/// script keyed by the denoise-step stamp (stable masks before `shift_at`,
+/// disjoint ones after), so the adaptive governance sees EXACTLY churn 0
+/// until the injected shift and churn 1 at it. Velocity is zero so the
+/// integration itself is inert.
+struct ChurnScriptBackend {
+    cache: RefCell<RequestPlanCache>,
+    stable: Vec<Arc<CompressedMask>>,
+    shifted: Vec<Arc<CompressedMask>>,
+    shift_at: u64,
+}
+
+impl ChurnScriptBackend {
+    fn new(policy: RefreshPolicy, shift_at: u64) -> Self {
+        ChurnScriptBackend {
+            cache: RefCell::new(RequestPlanCache::with_policy(policy).with_churn_log()),
+            stable: vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2],
+            shifted: vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal)); 2],
+            shift_at,
+        }
+    }
+}
+
+impl VelocityBackend for ChurnScriptBackend {
+    fn velocity(&self, x: &HostTensor, _t: f32, _c: &HostTensor) -> Result<HostTensor> {
+        let mut v = x.clone();
+        for d in &mut v.data {
+            *d = 0.0;
+        }
+        Ok(v)
+    }
+
+    fn velocity_batch_stamped(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        let mut cache = self.cache.borrow_mut();
+        for (i, key) in keys.iter().enumerate() {
+            let stamp = stamps[i];
+            if cache.lookup_stamped(*key, 0, 2, 4, stamp).is_none() {
+                let masks = if stamp.unwrap_or(0) < self.shift_at {
+                    &self.stable
+                } else {
+                    &self.shifted
+                };
+                cache.store_stamped(*key, 0, masks, 4, stamp);
+            }
+        }
+        calls.iter().map(|(x, t, c)| self.velocity(x, *t, c)).collect()
+    }
+
+    fn end_request(&self, key: u64) {
+        self.cache.borrow_mut().end_request(key);
+    }
+
+    fn plan_stats(&self) -> Option<PlanCacheStats> {
+        Some(self.cache.borrow().stats())
+    }
+
+    fn plan_delta(&self) -> Option<PlanDeltaStats> {
+        Some(self.cache.borrow().delta_stats())
+    }
+
+    fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
+        let cache = self.cache.borrow();
+        (0..cache.layers_tracked())
+            .map(|li| (cache.layer_stats(li), cache.layer_delta_stats(li)))
+            .collect()
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (16, 2, 4)
+    }
+
+    fn variant(&self) -> &str {
+        "churn-script"
+    }
+
+    fn video(&self) -> (usize, usize, usize) {
+        (2, 2, 4)
+    }
+}
+
+#[test]
+fn scheduler_trace_adaptive_widens_then_snaps_back_on_shift() {
+    let policy = RefreshPolicy::Adaptive {
+        base: 1,
+        low_water: 0.05,
+        high_water: 0.35,
+        max_interval: 8,
+    };
+    let backend = ChurnScriptBackend::new(policy, 6);
+    let coord = Coordinator::new(
+        &backend,
+        CoordinatorConfig { max_active: 1, batch_per_tick: 1, ..Default::default() },
+    );
+    let trace = vec![VideoRequest {
+        id: 0,
+        prompt_seed: 0,
+        steps: 12,
+        cfg_weight: 1.0,
+        arrival_s: 0.0,
+    }];
+    let rep = coord.run_trace(&trace, None).unwrap();
+    assert_eq!(rep.stats.len(), 1);
+    // interval trajectory on a 12-step request with the shift at step 6:
+    //   miss@0 (int 1), miss@1 -> widen 2, hit@2, miss@3 -> widen 4,
+    //   hits@4-6 (the shift lands while the stale stable plan replays),
+    //   miss@7 -> churn 1.0 -> SNAP to 1, miss@8 -> widen 2, hit@9,
+    //   miss@10 -> widen 4, hit@11
+    let log = backend.cache.borrow().churn_log().to_vec();
+    let churns: Vec<f64> = log.iter().map(|e| e.churn).collect();
+    let intervals: Vec<usize> = log.iter().map(|e| e.interval).collect();
+    assert_eq!(churns, vec![0.0, 0.0, 1.0, 0.0, 0.0]);
+    assert_eq!(intervals, vec![2, 4, 1, 2, 4]);
+    assert!(
+        log[2].churn >= 0.35 && log[2].interval == 1,
+        "high churn must invalidate immediately"
+    );
+    assert_eq!(log[2].stamp, Some(7), "the shift is observed at step 7's refresh");
+    // the report surfaces the same governance story
+    assert_eq!(rep.plan_misses, 6, "steps 0, 1, 3, 7, 8, 10 predicted");
+    assert_eq!(rep.plan_hits, 6);
+    assert_eq!(rep.plan_churn_observed, 5);
+    assert!((rep.plan_mean_churn - 0.2).abs() < 1e-12);
+    assert!((rep.plan_max_churn - 1.0).abs() < 1e-12);
+    assert_eq!(rep.plan_layers.len(), 1);
+    assert_eq!(rep.plan_layers[0].churn_observed, 5);
+    let s = rep.summary();
+    assert!(s.contains("plan_churn[n=5 mean=20.0% max=100.0%]"), "{s}");
+    // a Fixed(1) run on the same script never widens: every step predicts
+    let fixed = ChurnScriptBackend::new(RefreshPolicy::Fixed(1), 6);
+    let coord2 = Coordinator::new(
+        &fixed,
+        CoordinatorConfig { max_active: 1, batch_per_tick: 1, ..Default::default() },
+    );
+    let rep2 = coord2.run_trace(&trace, None).unwrap();
+    assert_eq!(rep2.plan_misses, 12);
+    assert_eq!(rep2.plan_hits, 0);
+}
+
+// ---------------------------------------------------------------------------
+// serving stack path: widen on a static stream, snap when the stream moves
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stack_serving_adaptive_widens_on_static_stream_and_snaps_on_swap() {
+    let (n, c, heads, d, depth) = (32usize, 8usize, 2usize, 4usize, 2usize);
+    let stack = DitStack::random(cfg(8), depth, heads, d, c, 50);
+    let mut rng = Rng::new(51);
+    let hs_a: Vec<Mat> = vec![Mat::randn(n, c, &mut rng)];
+    let hs_b: Vec<Mat> = vec![Mat::randn(n, c, &mut rng)];
+    let mods = vec![1.0f32];
+    // precondition: the two streams predict different layer-0 masks (else
+    // the "shift" would be invisible — pick other seeds if this fires)
+    let sla = cfg(8);
+    let (qa, ka, _) = stack.layer_inputs(0, &hs_a, &mods);
+    let (qb, kb, _) = stack.layer_inputs(0, &hs_b, &mods);
+    let pa = AttentionPlan::predict(&sla, &qa, &ka);
+    let pb = AttentionPlan::predict(&sla, &qb, &kb);
+    let shift_churn = mean_mask_churn(&pa.masks, &pb.masks).expect("same grid");
+    assert!(shift_churn > 0.0, "seeds must produce distinct masks");
+    // adaptive band chosen so churn == 0 widens and ANY nonzero churn
+    // snaps (the smallest representable churn is 1/(tm*tn*heads) >> 1e-9)
+    let policy = RefreshPolicy::Adaptive {
+        base: 1,
+        low_water: 0.0,
+        high_water: 1e-9,
+        max_interval: 8,
+    };
+    let mut cache = RequestPlanCache::with_policy(policy).with_churn_log();
+    let keys = [Some(2u64)];
+    for step in 0..10u64 {
+        let hs = if step < 5 { &hs_a } else { &hs_b };
+        let stamps = [Some(step)];
+        let out = stack.forward_serving_stamped(hs, &mods, &keys, &stamps, &mut cache, true);
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+    // static phase: misses at steps 0, 1, 3 per layer (interval 1, 2, 4);
+    // the swap at step 5 replays the stale plan until it ages out at step
+    // 7, whose refresh observes nonzero churn and snaps the interval to 1
+    let log = cache.churn_log().to_vec();
+    let l0: Vec<(f64, usize, Option<u64>)> = log
+        .iter()
+        .filter(|e| e.layer == 0)
+        .map(|e| (e.churn, e.interval, e.stamp))
+        .collect();
+    assert_eq!(l0[0], (0.0, 2, Some(1)));
+    assert_eq!(l0[1], (0.0, 4, Some(3)));
+    assert!(l0[2].0 > 0.0, "the swap must register as churn");
+    assert_eq!((l0[2].1, l0[2].2), (1, Some(7)), "immediate invalidation");
+    assert_eq!(cache.entry_interval(2, 0), Some(2), "re-widened after step 8");
+    // each layer governs independently; the static phase alone gives every
+    // layer at least the step-1/3/7 refresh observations (layer 1's churn
+    // VALUE at the swap depends on its own post-residual geometry)
+    assert!(cache.layer_delta_stats(1).observed >= 3);
+    assert_eq!(cache.layer_stats(0).misses, 5, "steps 0, 1, 3, 7, 8");
+}
+
+// ---------------------------------------------------------------------------
+// CFG cross-branch sharing on genuinely identical branches
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cfg_sharing_identical_branches_counts_and_stays_bitwise() {
+    let mk = |share: bool| -> NativeSlaBackend {
+        let b = NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+        .with_plan_policy(RefreshPolicy::Fixed(100));
+        if share {
+            // consecutive = 1: one identical refresh activates the share,
+            // and the frozen-ish Fixed(100) interval guarantees the cond
+            // plan never refreshes mid-flight (so the shared reads stay
+            // exactly the plan both branches would have predicted)
+            b.with_plan_sharing(ShareConfig {
+                similarity_threshold: 1.0,
+                consecutive: 1,
+                divergence_churn: 1.0,
+            })
+        } else {
+            b
+        }
+    };
+    let shared = mk(true);
+    let plain = mk(false);
+    let mut rng = Rng::new(60);
+    let noises = vec![HostTensor::new(vec![32, 4], rng.normal_vec(32 * 4))];
+    let cond = HostTensor::new(vec![6], rng.normal_vec(6));
+    let conds = vec![cond.clone()];
+    // genuinely identical branches: the "uncond" embedding IS the cond one
+    let scfg = SamplerConfig {
+        steps: 6,
+        cfg_weight: 2.0,
+        plan_stream_base: Some(100),
+        ..Default::default()
+    };
+    let out_shared = sample_batch(&shared, &noises, &conds, &cond, &scfg).unwrap();
+    let out_plain = sample_batch(&plain, &noises, &conds, &cond, &scfg).unwrap();
+    assert_eq!(out_shared[0].nfe, 12, "CFG doubles evaluations");
+    assert_eq!(
+        out_shared[0].sample.data, out_plain[0].sample.data,
+        "sharing must not change identical-branch outputs"
+    );
+    let ss = shared.plan_cache_stats();
+    // cond + uncond each predicted once at step 0; the uncond refresh
+    // activated sharing immediately (consecutive = 1), so steps 1..5 served
+    // the uncond branch from the cond plan
+    assert_eq!(ss.misses, 2);
+    assert_eq!(ss.shares, 1);
+    assert_eq!(ss.share_hits, 5);
+    assert_eq!(ss.hits, 10);
+    assert_eq!(ss.unshares, 0);
+    // sampling released both streams at the end
+    assert_eq!(ss.evictions, 2);
+    let sp = plain.plan_cache_stats();
+    assert_eq!(sp.misses, 2, "without sharing each branch predicted once too");
+    assert_eq!((sp.share_hits, sp.shares), (0, 0));
+}
