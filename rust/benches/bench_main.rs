@@ -6,7 +6,8 @@
 //!   cargo bench -- table1 fig6a  # a subset
 //!
 //! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack,
-//! stack_backward, adaptive_plan, table1, table2, table3, perf. `batch`
+//! stack_backward, adaptive_plan, serve, table1, table2, table3, perf.
+//! `batch`
 //! compares the batched multi-head SLA engine against a serial per-head
 //! kernel loop on a [B=4, H=8, N=1024, d=64] workload; `plan` measures
 //! fresh-predict vs cached-plan step latency across plan refresh
@@ -36,6 +37,8 @@ mod kernels;
 mod perf;
 #[path = "harness/plans.rs"]
 mod plans;
+#[path = "harness/serve.rs"]
+mod serve;
 #[path = "harness/stack_backward.rs"]
 mod stack_backward;
 #[path = "harness/stacks.rs"]
@@ -58,6 +61,7 @@ fn main() {
         "stack",
         "stack_backward",
         "adaptive_plan",
+        "serve",
         "table1",
         "table2",
         "table3",
@@ -81,6 +85,7 @@ fn main() {
             "stack" => stacks::stack(),
             "stack_backward" => stack_backward::stack_backward(),
             "adaptive_plan" => adaptive_plan::adaptive_plan(),
+            "serve" => serve::serve(),
             "table1" => tables::table1(),
             "table2" => tables::table2(),
             "table3" => tables::table3(),

@@ -1,0 +1,182 @@
+//! `serve` experiment: concurrent TCP serving throughput.
+//!
+//! Stands up the real JSON-lines `Server` (connection-handler pool +
+//! bounded admission queue + `max_active` compute workers) over a shared
+//! `NativeSlaBackend` and pushes the SAME total request load through 1 vs 4
+//! client threads. Kernel threading is pinned to 1 so any speedup comes
+//! from request-level parallelism — the `Send + Sync` backend refactor —
+//! not from the intra-call threadpool. Also splits per-request latency into
+//! queue wait vs compute (the `ServeReport` breakdown).
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes; the
+//! `BENCH_serve.json` artifact feeds the bench-compare perf gate via its
+//! `clients{1,4}_ns_per_step` metrics.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use sla_dit::attention::SlaConfig;
+use sla_dit::coordinator::{CoordinatorConfig, NativeSlaBackend, ServeReport, Server};
+use sla_dit::util::json::Json;
+
+use crate::common::{env_usize, log_result, shape_json, write_bench_json};
+
+/// Serve `total_requests` (split evenly across `clients` connections)
+/// through a fresh server over `backend`; returns (wall seconds, report).
+fn run_serving(
+    backend: &NativeSlaBackend,
+    clients: usize,
+    total_requests: usize,
+    steps: usize,
+) -> Result<(f64, ServeReport)> {
+    let srv = Server::new(backend, CoordinatorConfig { max_active: 4, ..Default::default() })
+        .with_accept_threads(4)
+        .with_queue_depth(8);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let per_client = total_requests / clients;
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let server = s.spawn(|| srv.serve(listener, Some(clients)));
+        let mut cs = Vec::new();
+        for ci in 0..clients as u64 {
+            cs.push(s.spawn(move || -> std::io::Result<()> {
+                let mut stream = TcpStream::connect(addr)?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                for r in 0..per_client as u64 {
+                    let seed = 100 * ci + r;
+                    let line = format!(
+                        "{{\"id\": {ci}, \"prompt_seed\": {seed}, \"steps\": {steps}}}\n"
+                    );
+                    stream.write_all(line.as_bytes())?;
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp)?;
+                }
+                stream.write_all(b"quit\n")?;
+                Ok(())
+            }));
+        }
+        for c in cs {
+            c.join().unwrap()?;
+        }
+        let served = server.join().unwrap()?;
+        anyhow::ensure!(served == total_requests, "served {served} != {total_requests}");
+        Ok(())
+    })?;
+    Ok((t0.elapsed().as_secs_f64(), srv.report()))
+}
+
+/// Median wall time over `reps` runs (reports come from the last run).
+fn run_median(
+    backend: &NativeSlaBackend,
+    clients: usize,
+    total_requests: usize,
+    steps: usize,
+    reps: usize,
+) -> Result<(f64, ServeReport)> {
+    let mut walls = Vec::new();
+    let mut last = None;
+    for _ in 0..reps.max(1) {
+        let (w, rep) = run_serving(backend, clients, total_requests, steps)?;
+        walls.push(w);
+        last = Some(rep);
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok((walls[walls.len() / 2], last.unwrap()))
+}
+
+pub fn serve() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (video, c, heads, d, depth, blk, steps, requests, reps) = if smoke {
+        ((2usize, 4usize, 4usize), 4usize, 2usize, 4usize, 1usize, 8usize, 3usize, 4usize, 2usize)
+    } else {
+        (
+            (2, 8, 8),
+            8,
+            4,
+            16,
+            2,
+            16,
+            env_usize("SLA_BENCH_GEN_STEPS", 4),
+            env_usize("SLA_BENCH_SERVE_REQUESTS", 8),
+            3,
+        )
+    };
+    let n = video.0 * video.1 * video.2;
+    // threads=1: isolate request-level parallelism from kernel threading
+    let backend = NativeSlaBackend::with_depth(
+        video,
+        c,
+        6,
+        heads,
+        d,
+        depth,
+        SlaConfig {
+            bq: blk,
+            bkv: blk,
+            kh_pct: 25.0,
+            kl_pct: 25.0,
+            threads: 1,
+            ..Default::default()
+        },
+        7,
+    )
+    .with_plan_refresh(steps.max(1));
+    println!(
+        "workload: L={depth} H={heads} N={n} d={d} C={c} block={blk}, {requests} requests x \
+         {steps} steps, 4 workers{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let (w1, rep1) = run_median(&backend, 1, requests, steps, reps)?;
+    let (w4, rep4) = run_median(&backend, 4, requests, steps, reps)?;
+    let denom = (requests * steps) as f64;
+    let (rps1, rps4) = (requests as f64 / w1, requests as f64 / w4);
+
+    println!(
+        "\n{:<18} {:>12} {:>10} {:>14} {:>14}",
+        "clients", "ms total", "req/s", "wait ms/req", "compute ms/req"
+    );
+    for (label, w, rps, rep) in
+        [("1 (serial)", w1, rps1, &rep1), ("4 (parallel)", w4, rps4, &rep4)]
+    {
+        println!(
+            "{:<18} {:>12.2} {:>10.2} {:>14.3} {:>14.3}",
+            label,
+            w * 1e3,
+            rps,
+            1e3 * rep.queue_wait_s / requests as f64,
+            1e3 * rep.compute_s / requests as f64,
+        );
+    }
+    println!(
+        "\nspeedup: {:.2}x req/s going 1 -> 4 client threads (queue depth max {})",
+        rps4 / rps1,
+        rep4.queue_depth_max
+    );
+
+    let payload = Json::obj(vec![
+        ("shape", shape_json(1, heads, n, d, blk)),
+        ("depth", Json::num(depth as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("clients1_ns_per_step", Json::num(w1 * 1e9 / denom)),
+        ("clients4_ns_per_step", Json::num(w4 * 1e9 / denom)),
+        ("rps_1", Json::num(rps1)),
+        ("rps_4", Json::num(rps4)),
+        ("speedup_rps", Json::num(rps4 / rps1)),
+        ("queue_wait_ns_mean_4", Json::num(rep4.queue_wait_s * 1e9 / requests as f64)),
+        ("compute_ns_mean_4", Json::num(rep4.compute_s * 1e9 / requests as f64)),
+        ("queue_depth_max_4", Json::num(rep4.queue_depth_max as f64)),
+        ("conn_errors", Json::num((rep1.conn_errors + rep4.conn_errors) as f64)),
+    ]);
+    log_result("serve", payload.clone());
+    write_bench_json("serve", payload);
+    println!("\nexpected shape: >1x req/s from 1 -> 4 clients (the backend is shared");
+    println!("Send + Sync, so 4 workers compute concurrently); per-request compute");
+    println!("stays flat while queue wait absorbs the contention");
+    Ok(())
+}

@@ -39,7 +39,8 @@ pub use mask::{mask_churn, mask_similarity, CompressedMask, Label, MaskPolicy};
 pub use opt::AggStrategy;
 pub use plan::{
     AttentionPlan, ChurnEvent, MaskPlanner, PlanCacheStats, PlanDeltaStats, PlanStats,
-    RefreshPolicy, RequestPlanCache, ShareConfig, SlaWorkspace, StackPlanner,
+    RefreshPolicy, RequestPlanCache, ServingPlanCache, ShareConfig, SharedPlanCache,
+    SlaWorkspace, StackPlanner,
 };
 pub use sla::{
     sla_backward, sla_forward, sla_forward_only, SlaConfig, SlaKernel, SlaLightOutput,

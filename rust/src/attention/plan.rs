@@ -21,6 +21,12 @@
 //!    **(request stream, stack layer)** (one stream per request and CFG
 //!    branch), with aggregate and per-layer hit/miss/refresh/eviction
 //!    accounting surfaced through `ServeReport`.
+//!  * [`SharedPlanCache`] — the `Send + Sync` wrapper the threaded serving
+//!    front-end uses: `RequestPlanCache` shards behind `Mutex`es, routed by
+//!    request id (`key >> 1`) so a request's cond/uncond CFG pair always
+//!    lands in ONE shard and the sharing state machine is preserved
+//!    verbatim. Single-threaded use is bitwise-identical to the unsharded
+//!    cache; counters aggregate across shards.
 //!  * **Plan governance** — [`RefreshPolicy`] (a `Fixed` interval, bitwise
 //!    identical to the historical `refresh_every`, or churn-`Adaptive`
 //!    per-stream widening/snap-back), [`PlanDeltaStats`] (mask churn
@@ -36,7 +42,7 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::full::NEG_INF;
 use super::mask::{mask_churn, predict_mask, CompressedMask, MaskPolicy};
@@ -350,6 +356,21 @@ impl PlanDeltaStats {
             max_churn: self.max_churn,
         }
     }
+
+    /// Accumulation for aggregating [`SharedPlanCache`] shards:
+    /// `observed`/`churn_sum` add, `max_churn` takes the max, and
+    /// `last_churn` keeps the last observing shard's value in shard order
+    /// (reports consume mean/max, not `last_churn`).
+    pub fn merge(&mut self, o: &PlanDeltaStats) {
+        self.observed += o.observed;
+        self.churn_sum += o.churn_sum;
+        if o.observed > 0 {
+            self.last_churn = o.last_churn;
+        }
+        if o.max_churn > self.max_churn {
+            self.max_churn = o.max_churn;
+        }
+    }
 }
 
 /// CFG cross-branch plan sharing: when one request's cond and uncond
@@ -635,6 +656,20 @@ impl PlanCacheStats {
             return 0.0;
         }
         self.sparsity_sum / self.planned as f64
+    }
+
+    /// Counter-wise accumulation, for aggregating [`SharedPlanCache`]
+    /// shards into one view.
+    pub fn merge(&mut self, o: &PlanCacheStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.refreshes += o.refreshes;
+        self.evictions += o.evictions;
+        self.planned += o.planned;
+        self.sparsity_sum += o.sparsity_sum;
+        self.share_hits += o.share_hits;
+        self.shares += o.shares;
+        self.unshares += o.unshares;
     }
 }
 
@@ -1135,6 +1170,252 @@ impl RequestPlanCache {
             Some(log) => log,
             None => &[],
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread-safe sharded cache for concurrent serving
+// ---------------------------------------------------------------------------
+
+/// The plan-cache access contract the DiT serving path is generic over:
+/// implemented by `&mut RequestPlanCache` (exclusive, single-threaded) and
+/// by `&SharedPlanCache` (sharded locking, concurrent serving). Both
+/// expose identical lookup/store semantics, so a trajectory driven through
+/// either produces bitwise-identical masks and counters.
+pub trait ServingPlanCache {
+    fn lookup_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        heads: usize,
+        tm: usize,
+        stamp: Option<u64>,
+    ) -> Option<Vec<Arc<CompressedMask>>>;
+
+    fn store_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+        stamp: Option<u64>,
+    );
+}
+
+impl ServingPlanCache for RequestPlanCache {
+    fn lookup_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        heads: usize,
+        tm: usize,
+        stamp: Option<u64>,
+    ) -> Option<Vec<Arc<CompressedMask>>> {
+        RequestPlanCache::lookup_stamped(self, key, layer, heads, tm, stamp)
+    }
+
+    fn store_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+        stamp: Option<u64>,
+    ) {
+        RequestPlanCache::store_stamped(self, key, layer, masks, tm, stamp)
+    }
+}
+
+impl ServingPlanCache for &SharedPlanCache {
+    fn lookup_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        heads: usize,
+        tm: usize,
+        stamp: Option<u64>,
+    ) -> Option<Vec<Arc<CompressedMask>>> {
+        SharedPlanCache::lookup_stamped(self, key, layer, heads, tm, stamp)
+    }
+
+    fn store_stamped(
+        &mut self,
+        key: Option<u64>,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+        stamp: Option<u64>,
+    ) {
+        SharedPlanCache::store_stamped(self, key, layer, masks, tm, stamp)
+    }
+}
+
+/// `Send + Sync` request-plan cache: [`RequestPlanCache`] shards behind
+/// `Mutex`es so concurrent serving workers can plan without a global lock.
+///
+/// Shard routing is by REQUEST, not by stream: stream keys encode the CFG
+/// branch in the low bit (`cond = id << 1`, `uncond = cond | 1`), so
+/// routing by `key >> 1` pins a request's cond/uncond pair to one shard
+/// and the PR-5 cross-branch sharing state machine runs unchanged inside
+/// it. Everything a single stream does is therefore bitwise-identical to
+/// the unsharded cache; cross-shard aggregation only touches counters
+/// (summed via [`PlanCacheStats::merge`] / [`PlanDeltaStats::merge`]).
+///
+/// Unkeyed (`None`) traffic is never cached: lookups miss without taking
+/// any lock, stores land in shard 0 so their miss/planned/sparsity
+/// accounting still matches the unsharded cache exactly.
+pub struct SharedPlanCache {
+    shards: Vec<Mutex<RequestPlanCache>>,
+}
+
+impl SharedPlanCache {
+    /// Default shard count for serving: enough to keep a handful of
+    /// worker threads from serializing on one lock, small enough that
+    /// counter aggregation stays trivial.
+    pub const DEFAULT_SHARDS: usize = 8;
+
+    /// Build with `shards` shards, each constructed by `make` (shards must
+    /// be configured identically; `make` is called once per shard).
+    pub fn with_shards(shards: usize, make: impl Fn() -> RequestPlanCache) -> Self {
+        let shards = shards.max(1);
+        SharedPlanCache {
+            shards: (0..shards).map(|_| Mutex::new(make())).collect(),
+        }
+    }
+
+    /// Single shard, wrapping an existing cache (exact drop-in for code
+    /// that built one `RequestPlanCache`).
+    pub fn single(cache: RequestPlanCache) -> Self {
+        SharedPlanCache { shards: vec![Mutex::new(cache)] }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning stream `key`: routed by request id (`key >> 1`) so
+    /// a CFG pair (even cond key, odd uncond key) shares a shard.
+    fn shard(&self, key: u64) -> &Mutex<RequestPlanCache> {
+        &self.shards[(key >> 1) as usize % self.shards.len()]
+    }
+
+    /// See [`RequestPlanCache::lookup_stamped`]; locks only the owning
+    /// shard (`None` keys miss without locking).
+    pub fn lookup_stamped(
+        &self,
+        key: Option<u64>,
+        layer: usize,
+        heads: usize,
+        tm: usize,
+        stamp: Option<u64>,
+    ) -> Option<Vec<Arc<CompressedMask>>> {
+        let k = key?;
+        self.shard(k).lock().unwrap().lookup_stamped(Some(k), layer, heads, tm, stamp)
+    }
+
+    /// See [`RequestPlanCache::store_stamped`]; `None`-key stores count in
+    /// shard 0 (never cached, only accounted).
+    pub fn store_stamped(
+        &self,
+        key: Option<u64>,
+        layer: usize,
+        masks: &[Arc<CompressedMask>],
+        tm: usize,
+        stamp: Option<u64>,
+    ) {
+        let shard = match key {
+            Some(k) => self.shard(k),
+            None => &self.shards[0],
+        };
+        shard.lock().unwrap().store_stamped(key, layer, masks, tm, stamp)
+    }
+
+    /// See [`RequestPlanCache::end_request`].
+    pub fn end_request(&self, key: u64) {
+        self.shard(key).lock().unwrap().end_request(key);
+    }
+
+    /// Live (request, layer) entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate counters summed across shards.
+    pub fn stats(&self) -> PlanCacheStats {
+        let mut out = PlanCacheStats::default();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().stats());
+        }
+        out
+    }
+
+    /// One layer's counters summed across shards.
+    pub fn layer_stats(&self, layer: usize) -> PlanCacheStats {
+        let mut out = PlanCacheStats::default();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().layer_stats(layer));
+        }
+        out
+    }
+
+    /// Max layers tracked by any shard.
+    pub fn layers_tracked(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().layers_tracked()).max().unwrap_or(0)
+    }
+
+    /// Churn stats merged across shards (see [`PlanDeltaStats::merge`]).
+    pub fn delta_stats(&self) -> PlanDeltaStats {
+        let mut out = PlanDeltaStats::default();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().delta_stats());
+        }
+        out
+    }
+
+    /// One layer's churn stats merged across shards.
+    pub fn layer_delta_stats(&self, layer: usize) -> PlanDeltaStats {
+        let mut out = PlanDeltaStats::default();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap().layer_delta_stats(layer));
+        }
+        out
+    }
+
+    /// The refresh policy governing every shard (identical by
+    /// construction).
+    pub fn policy(&self) -> RefreshPolicy {
+        self.shards[0].lock().unwrap().policy()
+    }
+
+    /// The policy's BASE refresh interval.
+    pub fn refresh_every(&self) -> usize {
+        self.shards[0].lock().unwrap().refresh_every()
+    }
+
+    /// See [`RequestPlanCache::entry_interval`].
+    pub fn entry_interval(&self, key: u64, layer: usize) -> Option<usize> {
+        self.shard(key).lock().unwrap().entry_interval(key, layer)
+    }
+
+    /// See [`RequestPlanCache::share_active`].
+    pub fn share_active(&self, cond_key: u64, layer: usize) -> bool {
+        self.shard(cond_key).lock().unwrap().share_active(cond_key, layer)
+    }
+
+    /// Recorded refresh events concatenated in shard order. A stream lives
+    /// entirely in one shard, so every per-(key, layer) trajectory stays
+    /// in event order; only interleaving BETWEEN requests differs from the
+    /// unsharded cache.
+    pub fn churn_log(&self) -> Vec<ChurnEvent> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend_from_slice(s.lock().unwrap().churn_log());
+        }
+        out
     }
 }
 

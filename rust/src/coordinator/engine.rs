@@ -1,11 +1,10 @@
 //! Velocity-model backends for the coordinator.
 
-use std::cell::RefCell;
-
 use anyhow::Result;
 
 use crate::attention::plan::{
     ChurnEvent, PlanCacheStats, PlanDeltaStats, RefreshPolicy, RequestPlanCache, ShareConfig,
+    SharedPlanCache,
 };
 use crate::attention::{BatchSlaEngine, SlaConfig};
 use crate::model::{DitStack, ParamStore};
@@ -13,10 +12,13 @@ use crate::runtime::{Artifact, HostTensor, Runtime, TensorSpec};
 use crate::tensor::Mat;
 use crate::util::threadpool;
 
-/// Abstract denoiser the scheduler drives. Not Send/Sync: the xla crate's
-/// PJRT handles are Rc-based, so serving is single-threaded; concurrency is
-/// modeled at the scheduler level (virtual clock) and measured natively.
-pub trait VelocityBackend {
+/// Abstract denoiser the scheduler drives. `Send + Sync` is part of the
+/// contract: the threaded serving front-end (`coordinator::server`) shares
+/// one backend across its accept/worker threads, so backends keep interior
+/// mutability behind locks — `NativeSlaBackend` shards its plan cache
+/// (`SharedPlanCache`), `ArtifactBackend`'s compile cache is a `Mutex` over
+/// `Arc`-shared PJRT handles.
+pub trait VelocityBackend: Send + Sync {
     fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor>;
 
     /// Batched hook: many (x, t, cond) triples in one call — the scheduler
@@ -221,9 +223,14 @@ pub struct NativeSlaBackend {
     /// Serving mode: skip materializing backward state (default true;
     /// bitwise-identical outputs either way).
     forward_only: bool,
-    /// Per-request plan cache keyed by (request id, CFG branch, layer);
-    /// serving is single-threaded (see trait docs), so a RefCell suffices.
-    plan_cache: RefCell<RequestPlanCache>,
+    /// Shard count of the plan cache (rebuilt with the cache on every
+    /// `reset_cache`; see `with_plan_shards`).
+    plan_shards: usize,
+    /// Per-request plan cache keyed by (request id, CFG branch, layer),
+    /// sharded behind mutexes by request id so concurrent serving workers
+    /// plan without a global lock — this is what makes the backend
+    /// `Send + Sync` (asserted at compile time in the tests).
+    plan_cache: SharedPlanCache,
 }
 
 const NATIVE_BASE: &str = "params.native";
@@ -301,6 +308,7 @@ impl NativeSlaBackend {
             None,
             false,
             true,
+            SharedPlanCache::DEFAULT_SHARDS,
         )
     }
 
@@ -320,13 +328,14 @@ impl NativeSlaBackend {
         plan_share: Option<ShareConfig>,
         plan_log: bool,
         forward_only: bool,
+        plan_shards: usize,
     ) -> Self {
         let seq_len = video.0 * video.1 * video.2;
         let wc = params.get_mat("params.native.cond.w").expect("wc");
         let stack = DitStack::from_params(
             &params, NATIVE_BASE, cfg, depth, heads, heads, head_dim, channels,
         );
-        let cache = Self::build_cache(plan_policy, plan_share, plan_log);
+        let cache = Self::build_cache(plan_policy, plan_share, plan_log, plan_shards);
         NativeSlaBackend {
             stack,
             params,
@@ -342,7 +351,8 @@ impl NativeSlaBackend {
             plan_share,
             plan_log,
             forward_only,
-            plan_cache: RefCell::new(cache),
+            plan_shards,
+            plan_cache: cache,
         }
     }
 
@@ -350,23 +360,27 @@ impl NativeSlaBackend {
         policy: RefreshPolicy,
         share: Option<ShareConfig>,
         log: bool,
-    ) -> RequestPlanCache {
-        let mut cache = RequestPlanCache::with_policy(policy);
-        if let Some(sc) = share {
-            cache = cache.with_sharing(sc);
-        }
-        if log {
-            cache = cache.with_churn_log();
-        }
-        cache
+        shards: usize,
+    ) -> SharedPlanCache {
+        SharedPlanCache::with_shards(shards, || {
+            let mut cache = RequestPlanCache::with_policy(policy);
+            if let Some(sc) = share {
+                cache = cache.with_sharing(sc);
+            }
+            if log {
+                cache = cache.with_churn_log();
+            }
+            cache
+        })
     }
 
     fn reset_cache(&mut self) {
-        self.plan_cache = RefCell::new(Self::build_cache(
+        self.plan_cache = Self::build_cache(
             self.plan_policy,
             self.plan_share,
             self.plan_log,
-        ));
+            self.plan_shards,
+        );
     }
 
     /// Serve each (request, layer) attention plan for `refresh_every`
@@ -406,6 +420,16 @@ impl NativeSlaBackend {
         self
     }
 
+    /// Shard count of the plan cache's lock striping (default
+    /// [`SharedPlanCache::DEFAULT_SHARDS`]). Counters and per-stream
+    /// behavior are shard-count-invariant — this only tunes lock
+    /// contention under concurrent serving. Resets the cache.
+    pub fn with_plan_shards(mut self, shards: usize) -> Self {
+        self.plan_shards = shards.max(1);
+        self.reset_cache();
+        self
+    }
+
     /// Toggle forward-only serving (default on). Outputs are bitwise
     /// identical either way; full-state mode exists for parity testing and
     /// as the fine-tune-adjacent path.
@@ -431,33 +455,38 @@ impl NativeSlaBackend {
         self.depth
     }
 
+    /// The sharded serving plan cache (read access for tests/telemetry).
+    pub fn plan_cache(&self) -> &SharedPlanCache {
+        &self.plan_cache
+    }
+
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
-        self.plan_cache.borrow().stats()
+        self.plan_cache.stats()
     }
 
     /// Per-layer plan-cache counters.
     pub fn plan_layer_stats(&self, layer: usize) -> PlanCacheStats {
-        self.plan_cache.borrow().layer_stats(layer)
+        self.plan_cache.layer_stats(layer)
     }
 
     /// Aggregate refresh-churn accounting.
     pub fn plan_delta_stats(&self) -> PlanDeltaStats {
-        self.plan_cache.borrow().delta_stats()
+        self.plan_cache.delta_stats()
     }
 
     /// Per-layer refresh-churn accounting.
     pub fn plan_layer_delta(&self, layer: usize) -> PlanDeltaStats {
-        self.plan_cache.borrow().layer_delta_stats(layer)
+        self.plan_cache.layer_delta_stats(layer)
     }
 
     /// The recorded churn events (empty unless `with_plan_churn_log`).
     pub fn plan_churn_log(&self) -> Vec<ChurnEvent> {
-        self.plan_cache.borrow().churn_log().to_vec()
+        self.plan_cache.churn_log()
     }
 
     /// Live effective refresh interval of one (stream key, layer) entry.
     pub fn plan_entry_interval(&self, key: u64, layer: usize) -> Option<usize> {
-        self.plan_cache.borrow().entry_interval(key, layer)
+        self.plan_cache.entry_interval(key, layer)
     }
 
     /// Adopt fine-tuned per-head projections for layer 0 (single-layer
@@ -511,6 +540,7 @@ impl NativeSlaBackend {
             self.plan_share,
             self.plan_log,
             self.forward_only,
+            self.plan_shards,
         );
         *self = refreshed;
         Ok(loaded)
@@ -583,9 +613,9 @@ impl VelocityBackend for NativeSlaBackend {
             );
         }
         let threads = self.stack.threads();
-        // hoist the fields the worker closures need: `self` holds a RefCell
-        // (the plan cache) and is therefore !Sync, so the parallel closures
-        // must capture plain Sync references instead of `&self`
+        // hoist the hot fields so the worker closures capture narrow
+        // references (the backend is Sync — the sharded plan cache locks
+        // per shard — but the embedding fan only needs these two)
         let wc = &self.wc;
         let cond_dim = self.cond_dim;
         // per-request embedding in parallel: h_0 = x + cond embedding
@@ -606,18 +636,16 @@ impl VelocityBackend for NativeSlaBackend {
         });
         let mods: Vec<f32> = calls.iter().map(|(_, t, _)| 0.5 + 0.5 * t).collect();
         // the L-layer stack: per layer, one batched engine call over every
-        // request of the tick, masks via the (request, layer) plan cache
-        let hs = {
-            let mut cache = self.plan_cache.borrow_mut();
-            self.stack.forward_serving_stamped(
-                &h0,
-                &mods,
-                keys,
-                stamps,
-                &mut cache,
-                self.forward_only,
-            )
-        };
+        // request of the tick, masks via the sharded (request, layer) plan
+        // cache — each lookup/store locks only the owning shard
+        let hs = self.stack.forward_serving_shared(
+            &h0,
+            &mods,
+            keys,
+            stamps,
+            &self.plan_cache,
+            self.forward_only,
+        );
         // velocity head: the stack's residual delta, leaked input term kept
         // from the single-layer model (v = 0.5 * (h_L - h_0) - 0.2 * x)
         let res: Vec<HostTensor> = threadpool::parallel_map_send(bsz, threads, |bi| {
@@ -635,21 +663,20 @@ impl VelocityBackend for NativeSlaBackend {
     }
 
     fn end_request(&self, key: u64) {
-        self.plan_cache.borrow_mut().end_request(key);
+        self.plan_cache.end_request(key);
     }
 
     fn plan_stats(&self) -> Option<PlanCacheStats> {
-        Some(self.plan_cache.borrow().stats())
+        Some(self.plan_cache.stats())
     }
 
     fn plan_delta(&self) -> Option<PlanDeltaStats> {
-        Some(self.plan_cache.borrow().delta_stats())
+        Some(self.plan_cache.delta_stats())
     }
 
     fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
-        let cache = self.plan_cache.borrow();
-        (0..cache.layers_tracked())
-            .map(|li| (cache.layer_stats(li), cache.layer_delta_stats(li)))
+        (0..self.plan_cache.layers_tracked())
+            .map(|li| (self.plan_cache.layer_stats(li), self.plan_cache.layer_delta_stats(li)))
             .collect()
     }
 
@@ -716,9 +743,8 @@ impl crate::diffusion::Denoiser for NativeSlaBackend {
     }
 
     fn release_streams(&self, keys: &[u64]) {
-        let mut cache = self.plan_cache.borrow_mut();
         for &k in keys {
-            cache.end_request(k);
+            self.plan_cache.end_request(k);
         }
     }
 }
@@ -746,6 +772,41 @@ mod tests {
             HostTensor::new(vec![n, c], rng.normal_vec(n * c)),
             HostTensor::new(vec![cd], rng.normal_vec(cd)),
         )
+    }
+
+    #[test]
+    fn backend_is_send_and_sync() {
+        // the acceptance assertion for the threaded serving front-end:
+        // both backends (and the trait object) cross thread boundaries
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<NativeSlaBackend>();
+        assert_send_sync::<ArtifactBackend>();
+        assert_send_sync::<dyn VelocityBackend>();
+    }
+
+    #[test]
+    fn plan_counters_are_shard_count_invariant() {
+        // identical keyed trajectories through 1-shard and 8-shard caches
+        // must produce identical outputs and identical counters
+        let b1 = backend().with_plan_refresh(4).with_plan_shards(1);
+        let b8 = backend().with_plan_refresh(4).with_plan_shards(8);
+        let (x, c) = xc(60, 32, 4, 6);
+        let (x2, c2) = xc(61, 32, 4, 6);
+        for step in 0..3u64 {
+            let t = 0.9 - 0.2 * step as f32;
+            let calls = [(&x, t, &c), (&x2, t, &c2)];
+            let keys = [Some(14u64), Some(92u64)];
+            let stamps = [Some(step), Some(step)];
+            let o1 = b1.velocity_batch_stamped(&calls, &keys, &stamps).unwrap();
+            let o8 = b8.velocity_batch_stamped(&calls, &keys, &stamps).unwrap();
+            assert_eq!(o1[0].data, o8[0].data, "step {step}");
+            assert_eq!(o1[1].data, o8[1].data, "step {step}");
+        }
+        let (s1, s8) = (b1.plan_cache_stats(), b8.plan_cache_stats());
+        assert_eq!(s1.hits, s8.hits);
+        assert_eq!(s1.misses, s8.misses);
+        assert_eq!(s1.planned, s8.planned);
+        assert_eq!(s1.sparsity_sum, s8.sparsity_sum);
     }
 
     #[test]

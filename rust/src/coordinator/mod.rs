@@ -3,15 +3,17 @@
 //! round-robin scheduling (continuous batching at denoise-step granularity),
 //! backpressure, and latency metrics.
 //!
-//! The denoiser is abstracted (`VelocityBackend`) so the scheduler logic is
-//! testable without compiled artifacts; `ArtifactBackend` is the real PJRT
-//! implementation and `NativeSlaBackend` is the pure-Rust path that runs a
-//! whole scheduler tick through one batched multi-head SLA engine call.
+//! The denoiser is abstracted (`VelocityBackend`, a `Send + Sync` trait) so
+//! the scheduler logic is testable without compiled artifacts;
+//! `ArtifactBackend` is the real PJRT implementation and `NativeSlaBackend`
+//! is the pure-Rust path that runs a whole scheduler tick through one
+//! batched multi-head SLA engine call. The TCP `Server` shares one backend
+//! across a pool of connection handlers and `max_active` compute workers.
 
 mod engine;
 mod scheduler;
 mod server;
 
 pub use engine::{ArtifactBackend, NativeSlaBackend, VelocityBackend};
-pub use scheduler::{Coordinator, CoordinatorConfig, PlanLayerReport, ServeReport};
+pub use scheduler::{Coordinator, CoordinatorConfig, PlanLayerReport, ReqStat, ServeReport};
 pub use server::Server;

@@ -111,6 +111,17 @@ pub struct ServeReport {
     pub plan_max_churn: f64,
     /// Per-stack-layer accounting (deltas over this trace), index = layer.
     pub plan_layers: Vec<PlanLayerReport>,
+    /// Queue-wait vs compute breakdown: total seconds requests spent
+    /// waiting for admission (queued behind the `max_active` cap) vs total
+    /// seconds inside model compute. `run_trace` fills these from the
+    /// virtual clock; the TCP front-end fills them from wall time.
+    pub queue_wait_s: f64,
+    pub compute_s: f64,
+    /// Deepest the admission queue got over the trace.
+    pub queue_depth_max: usize,
+    /// Per-connection I/O errors survived by the TCP front-end (always 0
+    /// for virtual-clock traces).
+    pub conn_errors: u64,
 }
 
 impl ServeReport {
@@ -138,6 +149,14 @@ impl ServeReport {
         (self.total_s - self.denoise_s - self.idle_s).max(0.0)
     }
 
+    /// Mean per-request admission-queue wait.
+    pub fn mean_queue_wait(&self) -> f64 {
+        if self.stats.is_empty() {
+            return 0.0;
+        }
+        self.queue_wait_s / self.stats.len() as f64
+    }
+
     /// Fraction of plan lookups served from cache.
     pub fn plan_hit_rate(&self) -> f64 {
         let total = self.plan_hits + self.plan_misses;
@@ -163,6 +182,19 @@ impl ServeReport {
             self.latency_percentile(95.0),
             self.throughput_rps(),
         );
+        if self.queue_wait_s > 0.0
+            || self.compute_s > 0.0
+            || self.queue_depth_max > 0
+            || self.conn_errors > 0
+        {
+            s.push_str(&format!(
+                " queue[wait_mean={:.2}s depth_max={}] compute={:.2}s conn_errors={}",
+                self.mean_queue_wait(),
+                self.queue_depth_max,
+                self.compute_s,
+                self.conn_errors,
+            ));
+        }
         if self.plan_hits + self.plan_misses > 0 {
             s.push_str(&format!(
                 " plan_hits={} plan_misses={} plan_refreshes={} plan_hit_rate={:.1}% \
@@ -334,6 +366,9 @@ impl<'b> Coordinator<'b> {
                     _ => break,
                 }
             }
+            // queue depth = arrived requests parked behind the cap
+            let depth = pending.iter().take_while(|r| r.arrival_s <= clock).count();
+            report.queue_depth_max = report.queue_depth_max.max(depth);
             if active.is_empty() {
                 // idle: fast-forward the virtual clock to the next arrival
                 if let Some(r) = pending.front() {
@@ -392,6 +427,8 @@ impl<'b> Coordinator<'b> {
         }
         report.total_s = clock;
         report.stats.sort_by_key(|s| s.id);
+        report.queue_wait_s = report.stats.iter().map(|s| s.wait_s).sum();
+        report.compute_s = report.denoise_s;
         if let Some(p1) = self.backend.plan_stats() {
             report.plan_hits = p1.hits - plan0.hits;
             report.plan_misses = p1.misses - plan0.misses;
@@ -439,14 +476,28 @@ impl<'b> Coordinator<'b> {
     /// `generate` command and the quality harness).
     pub fn generate_one(&self, prompt_seed: u64, steps: usize, cfg_weight: f32)
         -> Result<HostTensor> {
-        let req = VideoRequest { id: 0, prompt_seed, steps, cfg_weight, arrival_s: 0.0 };
+        self.generate_one_keyed(0, prompt_seed, steps, cfg_weight)
+    }
+
+    /// `generate_one` with an explicit request id for the plan-cache stream
+    /// keys. Concurrent callers (the threaded TCP front-end) MUST pass
+    /// distinct ids so their streams cannot collide; the output itself only
+    /// depends on (prompt_seed, steps, cfg_weight), never on `req_id`.
+    pub fn generate_one_keyed(
+        &self,
+        req_id: u64,
+        prompt_seed: u64,
+        steps: usize,
+        cfg_weight: f32,
+    ) -> Result<HostTensor> {
+        let req = VideoRequest { id: req_id, prompt_seed, steps, cfg_weight, arrival_s: 0.0 };
         let mut a = self.fresh_request_state(&req, 0.0);
         let mut nfe = 0;
         // ts has steps+1 entries: the loop runs exactly `steps` advances,
         // the last of which lands on t=0. Batch of one keeps a single copy
         // of the step/CFG logic. Streams are evicted on the error path too:
-        // generate_one always keys as request 0, so a leaked entry would be
-        // replayed by the NEXT generation's different prompt.
+        // a leaked entry would be replayed by the NEXT generation reusing
+        // the same request id with a different prompt.
         let advanced = (|| -> Result<()> {
             while a.step_idx + 1 < a.ts.len() {
                 self.advance_batch(std::slice::from_mut(&mut a), &mut nfe)?;
@@ -894,6 +945,56 @@ mod tests {
         // without any plan traffic, none of the plan segments render
         let empty = ServeReport::default();
         assert!(!empty.summary().contains("plan_churn"));
+    }
+
+    #[test]
+    fn summary_surfaces_queue_and_connection_counters() {
+        let rep = ServeReport {
+            stats: vec![
+                ReqStat { id: 0, wait_s: 1.0, latency_s: 2.0, steps: 4, nfe: 4 },
+                ReqStat { id: 1, wait_s: 3.0, latency_s: 4.0, steps: 4, nfe: 4 },
+            ],
+            queue_wait_s: 4.0,
+            compute_s: 1.5,
+            queue_depth_max: 3,
+            conn_errors: 2,
+            ..Default::default()
+        };
+        let s = rep.summary();
+        assert!(
+            s.contains("queue[wait_mean=2.00s depth_max=3] compute=1.50s conn_errors=2"),
+            "{s}"
+        );
+        // an all-zero breakdown stays out of the summary
+        assert!(!ServeReport::default().summary().contains("queue["));
+    }
+
+    #[test]
+    fn run_trace_fills_queue_breakdown() {
+        let mock = Mock { calls: AtomicUsize::new(0) };
+        let coord = Coordinator::new(
+            &mock,
+            CoordinatorConfig { max_active: 1, batch_per_tick: 4, ..Default::default() },
+        );
+        let rep = coord.run_trace(&reqs(3, 3), None).unwrap();
+        // 3 simultaneous arrivals through a width-1 server: 2 sat queued
+        assert_eq!(rep.queue_depth_max, 2);
+        let wait_sum: f64 = rep.stats.iter().map(|s| s.wait_s).sum();
+        assert!((rep.queue_wait_s - wait_sum).abs() < 1e-12);
+        assert_eq!(rep.compute_s, rep.denoise_s);
+        assert_eq!(rep.conn_errors, 0);
+        assert!(rep.summary().contains("queue[wait_mean="), "{}", rep.summary());
+    }
+
+    #[test]
+    fn generate_one_keyed_output_is_key_invariant() {
+        // the request id only namespaces plan-cache streams; the sample
+        // depends on (prompt_seed, steps, cfg_weight) alone
+        let mock = Mock { calls: AtomicUsize::new(0) };
+        let coord = Coordinator::new(&mock, CoordinatorConfig::default());
+        let a = coord.generate_one(42, 4, 1.0).unwrap();
+        let b = coord.generate_one_keyed(9001, 42, 4, 1.0).unwrap();
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

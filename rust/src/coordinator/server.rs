@@ -4,115 +4,433 @@
 //!   {"id": 1, "prompt_seed": 5, "steps": 8, "cfg": 1.0}
 //! Response (one per line):
 //!   {"id": 1, "ok": true, "shape": [256, 8], "latency_s": 0.42,
+//!    "queue_wait_s": 0.01, "compute_s": 0.41,
 //!    "temporal_consistency": 0.93, "mean": ..., "std": ...}
 //!
-//! The PJRT backend is single-threaded (Rc-based handles), so the server is
-//! an accept-loop that drains each connection in turn; concurrency shaping
-//! (admission, fairness) happens in the scheduler, not in socket threads.
+//! Validation: `id` and `prompt_seed` are REQUIRED numbers (`prompt_seed`
+//! additionally a non-negative integer <= 2^53); `steps` (default 8, range
+//! 1..=1000) and `cfg` (default 1.0, finite) are the only optional fields.
+//! Anything missing or mistyped is answered with
+//! `{"ok": false, "error": ...}` — echoing `id` when it was parseable —
+//! instead of being silently defaulted.
+//!
+//! Threading: the native backend is `Send + Sync` (sharded-mutex plan
+//! cache, `Arc`-shared executable handles), so the server runs a pool of
+//! `accept_threads` connection handlers feeding a bounded job queue
+//! (capacity `queue_depth`, blocking producers = backpressure) drained by
+//! `max_active` compute workers. Each connection is served in request
+//! order; distinct connections proceed in parallel. One bad client costs
+//! its own connection only: per-connection I/O errors are logged with the
+//! peer address, counted (`connection_errors`), and the accept loop keeps
+//! serving everyone else. Every request runs under a fresh internal plan
+//! stream key, so concurrent generations can never collide in the plan
+//! cache and outputs depend only on `(prompt_seed, steps, cfg)`.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
 use super::engine::VelocityBackend;
-use super::scheduler::{Coordinator, CoordinatorConfig};
+use super::scheduler::{Coordinator, CoordinatorConfig, ReqStat, ServeReport};
 use crate::metrics;
+use crate::runtime::HostTensor;
 use crate::util::json::Json;
+
+/// A validated request line. The output is a pure function of these three
+/// sampling fields; `id` is only echoed back to the client.
+#[derive(Clone, Copy, Debug)]
+struct ParsedReq {
+    id: f64,
+    prompt_seed: u64,
+    steps: usize,
+    cfg: f32,
+}
+
+/// One admitted unit of work: a validated request plus the channel its
+/// connection handler is blocked on.
+struct Job {
+    key: u64,
+    req: ParsedReq,
+    enqueued: Instant,
+    resp: mpsc::Sender<Json>,
+}
+
+/// Minimal bounded MPMC channel (Mutex + two Condvars): `push` blocks while
+/// full (producer backpressure), `pop` blocks while empty, `close` wakes
+/// everyone. No external channel crates in the offline mirror.
+struct Chan<T> {
+    state: Mutex<ChanState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct ChanState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Chan<T> {
+    fn new(cap: usize) -> Self {
+        Chan {
+            state: Mutex::new(ChanState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; returns the queue depth after insertion, or `None`
+    /// (dropping `item`) if the channel is closed.
+    fn push(&self, item: T) -> Option<usize> {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return None;
+        }
+        st.items.push_back(item);
+        let depth = st.items.len();
+        self.not_empty.notify_one();
+        Some(depth)
+    }
+
+    /// Blocking pop; `None` once the channel is closed AND drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(x) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+fn err_json(id: Option<f64>, msg: impl Into<String>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(false)), ("error", Json::str(msg.into()))];
+    if let Some(id) = id {
+        pairs.push(("id", Json::num(id)));
+    }
+    Json::obj(pairs)
+}
 
 pub struct Server<'b> {
     coord: Coordinator<'b>,
     frames: usize,
+    accept_threads: usize,
+    queue_depth: usize,
+    /// Fresh plan-stream key per request; also the `ReqStat` id.
+    next_key: AtomicU64,
+    conn_errors: AtomicU64,
+    nfe: AtomicUsize,
+    depth_max: AtomicUsize,
+    stats: Mutex<Vec<ReqStat>>,
+    total_s: Mutex<f64>,
 }
 
 impl<'b> Server<'b> {
     pub fn new(backend: &'b dyn VelocityBackend, cfg: CoordinatorConfig) -> Self {
         let frames = backend.video().0;
-        Server { coord: Coordinator::new(backend, cfg), frames }
+        let queue_depth = cfg.max_active.max(1) * 2;
+        Server {
+            coord: Coordinator::new(backend, cfg),
+            frames,
+            accept_threads: 4,
+            queue_depth,
+            next_key: AtomicU64::new(1),
+            conn_errors: AtomicU64::new(0),
+            nfe: AtomicUsize::new(0),
+            depth_max: AtomicUsize::new(0),
+            stats: Mutex::new(Vec::new()),
+            total_s: Mutex::new(0.0),
+        }
     }
 
-    /// Handle one already-parsed request line; returns the JSON response.
-    pub fn handle(&self, line: &str) -> Json {
-        let parsed = match Json::parse(line) {
-            Ok(j) => j,
-            Err(e) => {
-                return Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str(format!("bad json: {e}"))),
-                ])
+    /// Size of the connection-handler pool (parallel client connections).
+    pub fn with_accept_threads(mut self, n: usize) -> Self {
+        self.accept_threads = n.max(1);
+        self
+    }
+
+    /// Capacity of the admission queue; producers block when it is full.
+    pub fn with_queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n.max(1);
+        self
+    }
+
+    /// Per-connection I/O errors survived so far (bad clients, resets).
+    pub fn connection_errors(&self) -> u64 {
+        self.conn_errors.load(Ordering::Relaxed)
+    }
+
+    /// Serving telemetry accumulated across all `serve` calls and direct
+    /// `handle` invocations: per-request queue-wait vs compute split, the
+    /// deepest the admission queue got, and connection errors survived.
+    pub fn report(&self) -> ServeReport {
+        let mut stats = self.stats.lock().unwrap().clone();
+        stats.sort_by_key(|s| s.id);
+        let queue_wait_s: f64 = stats.iter().map(|s| s.wait_s).sum();
+        let compute_s: f64 = stats.iter().map(|s| s.latency_s - s.wait_s).sum();
+        ServeReport {
+            total_s: *self.total_s.lock().unwrap(),
+            denoise_s: compute_s,
+            nfe: self.nfe.load(Ordering::Relaxed),
+            queue_wait_s,
+            compute_s,
+            queue_depth_max: self.depth_max.load(Ordering::Relaxed),
+            conn_errors: self.conn_errors.load(Ordering::Relaxed),
+            stats,
+            ..Default::default()
+        }
+    }
+
+    /// Parse + validate one request line; `Err` carries the complete error
+    /// response (validation rules in the module header).
+    fn parse_request(&self, line: &str) -> Result<ParsedReq, Json> {
+        let parsed =
+            Json::parse(line).map_err(|e| err_json(None, format!("bad json: {e}")))?;
+        if parsed.as_obj().is_none() {
+            return Err(err_json(None, "request must be a json object"));
+        }
+        let id = match parsed.get("id") {
+            Json::Num(x) => *x,
+            Json::Null => return Err(err_json(None, "missing required field \"id\"")),
+            _ => return Err(err_json(None, "field \"id\" must be a number")),
+        };
+        let seed = match parsed.get("prompt_seed") {
+            Json::Num(x) => *x,
+            Json::Null => {
+                return Err(err_json(Some(id), "missing required field \"prompt_seed\""))
+            }
+            _ => return Err(err_json(Some(id), "field \"prompt_seed\" must be a number")),
+        };
+        if !seed.is_finite() || seed.fract() != 0.0 || !(0.0..=9.007199254740992e15).contains(&seed)
+        {
+            return Err(err_json(
+                Some(id),
+                "field \"prompt_seed\" must be an integer in [0, 2^53]",
+            ));
+        }
+        let steps = match parsed.get("steps") {
+            Json::Null => 8,
+            Json::Num(x) if x.fract() == 0.0 && (1.0..=1000.0).contains(x) => *x as usize,
+            _ => {
+                return Err(err_json(Some(id), "field \"steps\" must be an integer in [1, 1000]"))
             }
         };
-        let id = parsed.get("id").as_f64().unwrap_or(0.0);
-        let prompt_seed = parsed.get("prompt_seed").as_f64().unwrap_or(0.0) as u64;
-        let steps = parsed.get("steps").as_usize().unwrap_or(8).clamp(1, 1000);
-        let cfg_w = parsed.get("cfg").as_f64().unwrap_or(1.0) as f32;
-        let t0 = std::time::Instant::now();
-        match self.coord.generate_one(prompt_seed, steps, cfg_w) {
-            Ok(x) => {
-                let n = x.data.len() as f64;
-                let mean = x.data.iter().map(|&v| v as f64).sum::<f64>() / n;
-                let var = x
-                    .data
-                    .iter()
-                    .map(|&v| (v as f64 - mean) * (v as f64 - mean))
-                    .sum::<f64>()
-                    / n;
-                Json::obj(vec![
-                    ("id", Json::num(id)),
-                    ("ok", Json::Bool(true)),
-                    ("shape", Json::Arr(x.shape.iter().map(|&d| Json::num(d as f64)).collect())),
-                    ("latency_s", Json::num(t0.elapsed().as_secs_f64())),
-                    ("temporal_consistency",
-                     Json::num(metrics::temporal_consistency(&x, self.frames))),
-                    ("mean", Json::num(mean)),
-                    ("std", Json::num(var.sqrt())),
-                ])
-            }
+        let cfg = match parsed.get("cfg") {
+            Json::Null => 1.0,
+            Json::Num(x) if x.is_finite() => *x as f32,
+            _ => return Err(err_json(Some(id), "field \"cfg\" must be a finite number")),
+        };
+        Ok(ParsedReq { id, prompt_seed: seed as u64, steps, cfg })
+    }
+
+    fn success_json(&self, req: &ParsedReq, x: &HostTensor, wait_s: f64, compute_s: f64) -> Json {
+        let n = x.data.len() as f64;
+        let mean = x.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = x
+            .data
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / n;
+        Json::obj(vec![
+            ("id", Json::num(req.id)),
+            ("ok", Json::Bool(true)),
+            ("shape", Json::Arr(x.shape.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("latency_s", Json::num(wait_s + compute_s)),
+            ("queue_wait_s", Json::num(wait_s)),
+            ("compute_s", Json::num(compute_s)),
+            ("temporal_consistency", Json::num(metrics::temporal_consistency(x, self.frames))),
+            ("mean", Json::num(mean)),
+            ("std", Json::num(var.sqrt())),
+        ])
+    }
+
+    /// Run one validated request to completion and record its telemetry.
+    /// `enqueued` marks admission time, so the elapsed time on entry is the
+    /// queue wait (zero for the direct `handle` path).
+    fn execute(&self, key: u64, req: &ParsedReq, enqueued: Instant) -> Json {
+        let wait_s = enqueued.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let out = self.coord.generate_one_keyed(key, req.prompt_seed, req.steps, req.cfg);
+        let compute_s = t0.elapsed().as_secs_f64();
+        let resp = match out {
+            Ok(x) => self.success_json(req, &x, wait_s, compute_s),
             Err(e) => Json::obj(vec![
-                ("id", Json::num(id)),
+                ("id", Json::num(req.id)),
                 ("ok", Json::Bool(false)),
                 ("error", Json::str(format!("{e:#}"))),
             ]),
+        };
+        let nfe = req.steps * if req.cfg != 1.0 { 2 } else { 1 };
+        self.nfe.fetch_add(nfe, Ordering::Relaxed);
+        self.stats.lock().unwrap().push(ReqStat {
+            id: key,
+            wait_s,
+            latency_s: wait_s + compute_s,
+            steps: req.steps,
+            nfe,
+        });
+        resp
+    }
+
+    /// Handle one request line synchronously (CLI/tests entry point; the
+    /// TCP path routes through the worker pool instead).
+    pub fn handle(&self, line: &str) -> Json {
+        match self.parse_request(line) {
+            Err(resp) => resp,
+            Ok(req) => {
+                let key = self.next_key.fetch_add(1, Ordering::Relaxed);
+                self.execute(key, &req, Instant::now())
+            }
         }
     }
 
-    fn drain_connection(&self, stream: TcpStream) -> Result<usize> {
-        let peer = stream.peer_addr().ok();
-        let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        let mut served = 0;
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            if line.trim() == "quit" {
-                break;
-            }
-            let resp = self.handle(&line);
-            writer.write_all(resp.to_string().as_bytes())?;
-            writer.write_all(b"\n")?;
-            served += 1;
-        }
-        eprintln!("[server] connection {peer:?}: served {served} requests");
-        Ok(served)
-    }
-
-    /// Accept-loop. Stops after `max_connections` connections (None = forever).
-    pub fn serve(&self, listener: TcpListener, max_connections: Option<usize>)
-        -> Result<usize> {
-        let mut total = 0;
-        let mut conns = 0;
-        for stream in listener.incoming() {
-            total += self.drain_connection(stream?)?;
-            conns += 1;
-            if let Some(max) = max_connections {
-                if conns >= max {
-                    break;
+    /// Answer one request line from a connection handler: validation errors
+    /// are answered immediately; valid requests go through the bounded job
+    /// queue and block here until a worker responds (so each connection
+    /// sees its responses in request order).
+    fn serve_line(&self, line: &str, jobs: &Chan<Job>) -> Json {
+        match self.parse_request(line) {
+            Err(resp) => resp,
+            Ok(req) => {
+                let key = self.next_key.fetch_add(1, Ordering::Relaxed);
+                let (tx, rx) = mpsc::channel();
+                let job = Job { key, req, enqueued: Instant::now(), resp: tx };
+                match jobs.push(job) {
+                    Some(depth) => {
+                        self.depth_max.fetch_max(depth, Ordering::Relaxed);
+                        rx.recv().unwrap_or_else(|_| {
+                            err_json(Some(req.id), "worker pool shut down mid-request")
+                        })
+                    }
+                    // queue closed (shutdown race): fall back to inline
+                    None => self.execute(key, &req, Instant::now()),
                 }
             }
         }
-        Ok(total)
+    }
+
+    fn worker_loop(&self, jobs: &Chan<Job>) {
+        while let Some(job) = jobs.pop() {
+            let resp = self.execute(job.key, &job.req, job.enqueued);
+            // a dead receiver just means the connection went away; the
+            // handler already counted the I/O error
+            let _ = job.resp.send(resp);
+        }
+    }
+
+    /// Drain one connection serially; every I/O failure is contained here
+    /// (logged + counted), never propagated to the accept loop. Returns the
+    /// number of request lines answered.
+    fn drain_connection(&self, stream: TcpStream, jobs: &Chan<Job>) -> usize {
+        let peer = stream.peer_addr().ok();
+        let mut served = 0usize;
+        let io: std::io::Result<()> = (|| {
+            let mut writer = stream.try_clone()?;
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let line = line?;
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if line == "quit" {
+                    break;
+                }
+                let resp = self.serve_line(line, jobs);
+                writer.write_all(resp.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                served += 1;
+            }
+            Ok(())
+        })();
+        match io {
+            Ok(()) => eprintln!("[server] connection {peer:?}: served {served} requests"),
+            Err(e) => {
+                self.conn_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[server] connection {peer:?}: I/O error after {served} requests: {e} \
+                     (connection dropped, server continues)"
+                );
+            }
+        }
+        served
+    }
+
+    /// Accept loop. Stops after `max_connections` accept attempts (None =
+    /// forever). Accepted connections are dispatched to the handler pool;
+    /// accept errors and per-connection errors are counted and survived.
+    pub fn serve(&self, listener: TcpListener, max_connections: Option<usize>)
+        -> Result<usize> {
+        let t_start = Instant::now();
+        let conns: Chan<TcpStream> = Chan::new(self.accept_threads * 4);
+        let jobs: Chan<Job> = Chan::new(self.queue_depth);
+        let served = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let mut workers = Vec::new();
+            for _ in 0..self.coord.cfg.max_active.max(1) {
+                workers.push(s.spawn(|| self.worker_loop(&jobs)));
+            }
+            let mut handlers = Vec::new();
+            for _ in 0..self.accept_threads {
+                handlers.push(s.spawn(|| {
+                    while let Some(stream) = conns.pop() {
+                        let n = self.drain_connection(stream, &jobs);
+                        served.fetch_add(n, Ordering::Relaxed);
+                    }
+                }));
+            }
+            let mut accepted = 0usize;
+            for stream in listener.incoming() {
+                accepted += 1;
+                match stream {
+                    Ok(st) => {
+                        let _ = conns.push(st);
+                    }
+                    Err(e) => {
+                        self.conn_errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[server] accept error: {e} (continuing)");
+                    }
+                }
+                if let Some(max) = max_connections {
+                    if accepted >= max {
+                        break;
+                    }
+                }
+            }
+            // shutdown: stop feeding handlers, let them finish their
+            // connections, then drain the workers
+            conns.close();
+            for h in handlers {
+                let _ = h.join();
+            }
+            jobs.close();
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+        *self.total_s.lock().unwrap() += t_start.elapsed().as_secs_f64();
+        Ok(served.load(Ordering::Relaxed))
     }
 }
 
@@ -152,6 +470,7 @@ mod tests {
         assert_eq!(resp.get("id").as_f64(), Some(7.0));
         assert_eq!(resp.get("shape").as_arr().unwrap().len(), 2);
         assert!(resp.get("latency_s").as_f64().unwrap() >= 0.0);
+        assert!(resp.get("compute_s").as_f64().unwrap() >= 0.0);
     }
 
     #[test]
@@ -161,6 +480,61 @@ mod tests {
         let resp = srv.handle("not json at all");
         assert_eq!(resp.get("ok"), &Json::Bool(false));
         assert!(resp.get("error").as_str().unwrap().contains("bad json"));
+    }
+
+    #[test]
+    fn handle_rejects_missing_or_mistyped_id() {
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        for line in [r#"{"prompt_seed": 3}"#, r#"{"id": "seven", "prompt_seed": 3}"#] {
+            let resp = srv.handle(line);
+            assert_eq!(resp.get("ok"), &Json::Bool(false), "{line}");
+            assert!(resp.get("error").as_str().unwrap().contains("\"id\""), "{line}");
+            // no parseable id => none echoed back
+            assert_eq!(resp.get("id"), &Json::Null, "{line}");
+        }
+    }
+
+    #[test]
+    fn handle_rejects_bad_fields_echoing_id() {
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let cases = [
+            (r#"{"id": 9}"#, "prompt_seed"),
+            (r#"{"id": 9, "prompt_seed": "abc"}"#, "prompt_seed"),
+            (r#"{"id": 9, "prompt_seed": 2.5}"#, "prompt_seed"),
+            (r#"{"id": 9, "prompt_seed": -1}"#, "prompt_seed"),
+            (r#"{"id": 9, "prompt_seed": 3, "steps": "fast"}"#, "steps"),
+            (r#"{"id": 9, "prompt_seed": 3, "steps": 0}"#, "steps"),
+            (r#"{"id": 9, "prompt_seed": 3, "steps": 5000}"#, "steps"),
+            (r#"{"id": 9, "prompt_seed": 3, "steps": 2.5}"#, "steps"),
+            (r#"{"id": 9, "prompt_seed": 3, "cfg": "strong"}"#, "cfg"),
+        ];
+        for (line, field) in cases {
+            let resp = srv.handle(line);
+            assert_eq!(resp.get("ok"), &Json::Bool(false), "{line}");
+            assert!(
+                resp.get("error").as_str().unwrap().contains(field),
+                "{line} -> {resp}"
+            );
+            // id was parseable, so the error is addressable
+            assert_eq!(resp.get("id").as_f64(), Some(9.0), "{line}");
+        }
+        // non-object requests are rejected outright
+        let resp = srv.handle("[1, 2]");
+        assert_eq!(resp.get("ok"), &Json::Bool(false));
+    }
+
+    #[test]
+    fn handle_defaults_only_optional_fields() {
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        // steps and cfg are genuinely optional; nothing else is
+        let resp = srv.handle(r#"{"id": 1, "prompt_seed": 5}"#);
+        assert_eq!(resp.get("ok"), &Json::Bool(true));
+        // explicit null counts as missing for optional fields
+        let resp = srv.handle(r#"{"id": 2, "prompt_seed": 5, "steps": null, "cfg": null}"#);
+        assert_eq!(resp.get("ok"), &Json::Bool(true));
     }
 
     #[test]
@@ -192,5 +566,82 @@ mod tests {
         assert_eq!(r1.get("ok"), &Json::Bool(true));
         // same prompt seed + steps => identical deterministic sample stats
         assert_eq!(r1.get("mean"), r2.get("mean"));
+        // telemetry accumulated: 2 requests, compute time, no conn errors
+        let rep = srv.report();
+        assert_eq!(rep.stats.len(), 2);
+        assert!(rep.compute_s > 0.0);
+        assert_eq!(rep.conn_errors, 0);
+        assert!(rep.summary().contains("queue["), "{}", rep.summary());
+    }
+
+    #[test]
+    fn bad_client_does_not_kill_server() {
+        // regression: one client dying mid-request (non-UTF-8 garbage, then
+        // an abrupt drop) used to propagate its read error out of `serve`,
+        // killing the accept loop for everyone. Now it is logged, counted,
+        // and the other client is served normally.
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let bad = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // half a request, then bytes that can never be a JSON line
+            s.write_all(b"{\"id\": 3, \"prompt_seed\"").unwrap();
+            s.write_all(&[0xff, 0xfe, 0xfd]).unwrap();
+            // drop without newline or quit: connection dies mid-request
+        });
+        let good = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 4, \"prompt_seed\": 2, \"steps\": 2}\n").unwrap();
+            let mut line = String::new();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            reader.read_line(&mut line).unwrap();
+            s.write_all(b"quit\n").unwrap();
+            line
+        });
+
+        let served = srv.serve(listener, Some(2)).unwrap();
+        bad.join().unwrap();
+        let line = good.join().unwrap();
+        assert_eq!(served, 1, "the well-behaved client was served");
+        assert_eq!(srv.connection_errors(), 1, "the bad client was counted, not fatal");
+        let r = Json::parse(line.trim()).unwrap();
+        assert_eq!(r.get("ok"), &Json::Bool(true));
+        assert_eq!(r.get("id").as_f64(), Some(4.0));
+        assert_eq!(srv.report().conn_errors, 1);
+    }
+
+    #[test]
+    fn invalid_then_valid_lines_on_one_connection() {
+        // malformed lines get error responses; the connection stays usable
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default()).with_accept_threads(2);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 5, \"steps\": 2}\n").unwrap(); // no prompt_seed
+            s.write_all(b"{\"id\": 6, \"prompt_seed\": 1, \"steps\": 2}\n").unwrap();
+            s.write_all(b"quit\n").unwrap();
+            let mut lines = Vec::new();
+            let reader = BufReader::new(s);
+            for line in reader.lines().take(2) {
+                lines.push(line.unwrap());
+            }
+            lines
+        });
+
+        let served = srv.serve(listener, Some(1)).unwrap();
+        let lines = client.join().unwrap();
+        assert_eq!(served, 2, "error responses count as served lines");
+        let r1 = Json::parse(&lines[0]).unwrap();
+        assert_eq!(r1.get("ok"), &Json::Bool(false));
+        assert_eq!(r1.get("id").as_f64(), Some(5.0));
+        let r2 = Json::parse(&lines[1]).unwrap();
+        assert_eq!(r2.get("ok"), &Json::Bool(true));
+        assert_eq!(srv.connection_errors(), 0);
     }
 }

@@ -53,7 +53,8 @@ fn cli() -> Cli {
                 .flag("requests", "8", "number of requests")
                 .flag("rate", "2.0", "arrival rate (req/s)")
                 .flag("max-active", "8", "in-flight cap (backpressure)")
-                .flag("batch-per-tick", "4", "denoise steps per scheduler tick"),
+                .flag("batch-per-tick", "4", "denoise steps per scheduler tick")
+                .flag("threads", "0", "kernel threads per model call (0 = auto)"),
         )
         .command(
             Command::new("analyze", "attention-weight distribution / stable-rank analyses")
@@ -67,7 +68,11 @@ fn cli() -> Cli {
                 .flag("variant", "sla", "model config name")
                 .flag("ckpt", "", "checkpoint to load")
                 .flag("addr", "127.0.0.1:7878", "listen address")
-                .flag("connections", "0", "stop after N connections (0 = forever)"),
+                .flag("connections", "0", "stop after N connections (0 = forever)")
+                .flag("accept-threads", "4", "parallel connection handlers")
+                .flag("max-active", "8", "compute workers (admission cap)")
+                .flag("queue-depth", "0", "admission queue capacity (0 = 2x max-active)")
+                .flag("threads", "0", "kernel threads per model call (0 = auto)"),
         )
         .command(
             Command::new("hlo", "analyze an HLO artifact: op counts, fusion, est FLOPs")
@@ -237,7 +242,18 @@ fn cmd_generate(args: &sla_dit::util::cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// `--threads 0` keeps the SLA_DIT_THREADS / auto default; any other value
+/// pins the kernel threadpool width before the backend is constructed.
+fn apply_thread_knob(args: &sla_dit::util::cli::Args) -> Result<()> {
+    let threads = args.get_usize("threads")?;
+    if threads > 0 {
+        std::env::set_var("SLA_DIT_THREADS", threads.to_string());
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &sla_dit::util::cli::Args) -> Result<()> {
+    apply_thread_knob(args)?;
     let rt = Runtime::open(args.get_str("artifacts"))?;
     let variant = args.get_str("variant");
     let mut backend = ArtifactBackend::new(&rt, &variant, 0)?;
@@ -311,6 +327,7 @@ fn cmd_analyze(args: &sla_dit::util::cli::Args) -> Result<()> {
 
 fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
     use sla_dit::coordinator::Server;
+    apply_thread_knob(args)?;
     let rt = Runtime::open(args.get_str("artifacts"))?;
     let mut backend = ArtifactBackend::new(&rt, &args.get_str("variant"), 0)?;
     let ckpt = args.get_str("ckpt");
@@ -319,12 +336,24 @@ fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
     }
     let addr = args.get_str("addr");
     let listener = std::net::TcpListener::bind(&addr)?;
-    println!("listening on {addr} (protocol: one JSON request per line; `quit` ends a connection)");
-    let srv = Server::new(&backend, CoordinatorConfig::default());
+    let max_active = args.get_usize("max-active")?;
+    let accept_threads = args.get_usize("accept-threads")?;
+    let queue_depth = match args.get_usize("queue-depth")? {
+        0 => max_active.max(1) * 2,
+        n => n,
+    };
+    println!(
+        "listening on {addr} (one JSON request per line; `quit` ends a connection; \
+         {accept_threads} connection handlers, {max_active} workers, queue depth {queue_depth})"
+    );
+    let srv = Server::new(&backend, CoordinatorConfig { max_active, ..Default::default() })
+        .with_accept_threads(accept_threads)
+        .with_queue_depth(queue_depth);
     let conns = args.get_usize("connections")?;
     let max = if conns == 0 { None } else { Some(conns) };
     let served = srv.serve(listener, max)?;
     println!("served {served} requests");
+    println!("{}", srv.report().summary());
     Ok(())
 }
 

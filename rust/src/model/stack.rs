@@ -45,7 +45,7 @@
 use std::sync::Arc;
 
 use crate::attention::mask::CompressedMask;
-use crate::attention::plan::{RequestPlanCache, StackPlanner};
+use crate::attention::plan::{RequestPlanCache, ServingPlanCache, SharedPlanCache, StackPlanner};
 use crate::attention::{BatchSlaEngine, BatchSlaOutput, SlaConfig};
 use crate::model::ParamStore;
 use crate::tensor::{Mat, Tens4};
@@ -634,6 +634,37 @@ impl DitStack {
         keys: &[Option<u64>],
         stamps: &[Option<u64>],
         cache: &mut RequestPlanCache,
+        forward_only: bool,
+    ) -> Vec<Mat> {
+        self.forward_serving_cached(hs, mods, keys, stamps, cache, forward_only)
+    }
+
+    /// [`DitStack::forward_serving_stamped`] against the `Send + Sync`
+    /// sharded cache — the threaded serving front-end's entry point. The
+    /// per-item sequence of cache operations is identical (the serial item
+    /// loop below runs under whichever cache it is handed), so outputs and
+    /// counters are bitwise-equal to the exclusive-cache path.
+    pub fn forward_serving_shared(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+        cache: &SharedPlanCache,
+        forward_only: bool,
+    ) -> Vec<Mat> {
+        let mut cache = cache;
+        self.forward_serving_cached(hs, mods, keys, stamps, &mut cache, forward_only)
+    }
+
+    /// The cache-generic serving body both public entry points share.
+    fn forward_serving_cached<C: ServingPlanCache>(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+        cache: &mut C,
         forward_only: bool,
     ) -> Vec<Mat> {
         self.check_inputs(hs, mods);

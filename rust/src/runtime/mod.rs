@@ -15,28 +15,29 @@ pub use tensors::HostTensor;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
 /// Lazy-compiling executable registry over one PJRT CPU client.
 ///
-/// NOTE: the `xla` crate's PJRT handles are Rc-based (!Send), so the runtime
-/// and everything holding an `Artifact` is single-threaded by construction;
-/// the coordinator's scheduling is virtual-clock based and doesn't need
-/// threads on the PJRT path (native-kernel benches use the threadpool).
+/// Executable handles are `Arc`-shared and the compile cache sits behind a
+/// `Mutex`, so a `Runtime` (and every `Artifact` it hands out) can be shared
+/// across the threaded serving front-end — the `VelocityBackend` trait
+/// requires `Send + Sync`. Compilation holds the lock only around cache
+/// bookkeeping; a rare duplicate compile under contention is benign (last
+/// insert wins, both handles are valid).
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 /// A compiled executable + its manifest signature (cheap to clone via Arc).
 #[derive(Clone)]
 pub struct Artifact {
-    exec: Rc<xla::PjRtLoadedExecutable>,
+    exec: Arc<xla::PjRtLoadedExecutable>,
     pub spec: ArtifactSpec,
 }
 
@@ -49,7 +50,7 @@ impl Runtime {
             .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
         let manifest = Manifest::parse(&text)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Default artifacts dir: $SLA_DIT_ARTIFACTS or ./artifacts.
@@ -70,7 +71,7 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
             .clone();
-        if let Some(exec) = self.cache.borrow().get(name) {
+        if let Some(exec) = self.cache.lock().unwrap().get(name) {
             return Ok(Artifact { exec: exec.clone(), spec });
         }
         let path = self.dir.join(&spec.file);
@@ -83,8 +84,8 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        let exec = Rc::new(exec);
-        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        let exec = Arc::new(exec);
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
         Ok(Artifact { exec, spec })
     }
 

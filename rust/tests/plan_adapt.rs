@@ -16,15 +16,14 @@
 //!   counters fire and sampled outputs stay bitwise equal to a
 //!   sharing-disabled run.
 
-use std::cell::RefCell;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use sla_dit::attention::mask::{mask_churn, CompressedMask, Label};
 use sla_dit::attention::plan::{
     mean_mask_churn, AttentionPlan, MaskPlanner, PlanCacheStats, PlanDeltaStats, RefreshPolicy,
-    RequestPlanCache, ShareConfig,
+    RequestPlanCache, ShareConfig, SharedPlanCache,
 };
 use sla_dit::attention::{BatchSlaEngine, SlaConfig};
 use sla_dit::coordinator::{Coordinator, CoordinatorConfig, NativeSlaBackend, VelocityBackend};
@@ -220,7 +219,7 @@ fn prop_churn_identity_disjointness_symmetry_monotonicity() {
 /// until the injected shift and churn 1 at it. Velocity is zero so the
 /// integration itself is inert.
 struct ChurnScriptBackend {
-    cache: RefCell<RequestPlanCache>,
+    cache: Mutex<RequestPlanCache>,
     stable: Vec<Arc<CompressedMask>>,
     shifted: Vec<Arc<CompressedMask>>,
     shift_at: u64,
@@ -229,7 +228,7 @@ struct ChurnScriptBackend {
 impl ChurnScriptBackend {
     fn new(policy: RefreshPolicy, shift_at: u64) -> Self {
         ChurnScriptBackend {
-            cache: RefCell::new(RequestPlanCache::with_policy(policy).with_churn_log()),
+            cache: Mutex::new(RequestPlanCache::with_policy(policy).with_churn_log()),
             stable: vec![Arc::new(CompressedMask::all(4, 4, Label::Critical)); 2],
             shifted: vec![Arc::new(CompressedMask::all(4, 4, Label::Marginal)); 2],
             shift_at,
@@ -252,7 +251,7 @@ impl VelocityBackend for ChurnScriptBackend {
         keys: &[Option<u64>],
         stamps: &[Option<u64>],
     ) -> Result<Vec<HostTensor>> {
-        let mut cache = self.cache.borrow_mut();
+        let mut cache = self.cache.lock().unwrap();
         for (i, key) in keys.iter().enumerate() {
             let stamp = stamps[i];
             if cache.lookup_stamped(*key, 0, 2, 4, stamp).is_none() {
@@ -268,19 +267,19 @@ impl VelocityBackend for ChurnScriptBackend {
     }
 
     fn end_request(&self, key: u64) {
-        self.cache.borrow_mut().end_request(key);
+        self.cache.lock().unwrap().end_request(key);
     }
 
     fn plan_stats(&self) -> Option<PlanCacheStats> {
-        Some(self.cache.borrow().stats())
+        Some(self.cache.lock().unwrap().stats())
     }
 
     fn plan_delta(&self) -> Option<PlanDeltaStats> {
-        Some(self.cache.borrow().delta_stats())
+        Some(self.cache.lock().unwrap().delta_stats())
     }
 
     fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
-        let cache = self.cache.borrow();
+        let cache = self.cache.lock().unwrap();
         (0..cache.layers_tracked())
             .map(|li| (cache.layer_stats(li), cache.layer_delta_stats(li)))
             .collect()
@@ -326,7 +325,7 @@ fn scheduler_trace_adaptive_widens_then_snaps_back_on_shift() {
     //   hits@4-6 (the shift lands while the stale stable plan replays),
     //   miss@7 -> churn 1.0 -> SNAP to 1, miss@8 -> widen 2, hit@9,
     //   miss@10 -> widen 4, hit@11
-    let log = backend.cache.borrow().churn_log().to_vec();
+    let log = backend.cache.lock().unwrap().churn_log().to_vec();
     let churns: Vec<f64> = log.iter().map(|e| e.churn).collect();
     let intervals: Vec<usize> = log.iter().map(|e| e.interval).collect();
     assert_eq!(churns, vec![0.0, 0.0, 1.0, 0.0, 0.0]);
@@ -480,4 +479,82 @@ fn cfg_sharing_identical_branches_counts_and_stays_bitwise() {
     let sp = plain.plan_cache_stats();
     assert_eq!(sp.misses, 2, "without sharing each branch predicted once too");
     assert_eq!((sp.share_hits, sp.shares), (0, 0));
+}
+
+// ---------------------------------------------------------------------------
+// sharded-locking differential: SharedPlanCache == RequestPlanCache exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_cache_differential_fixed_and_sharing_under_locking() {
+    // the Send + Sync refactor's correctness contract: an identical keyed
+    // stamped trajectory driven through the exclusive cache
+    // (forward_serving_stamped) and through the sharded mutex cache
+    // (forward_serving_shared, 3 shards) must produce bitwise-equal hidden
+    // states AND identical counters — Fixed(n) aging and the CFG sharing
+    // state machine are invariant under the new locking
+    let (n, c, heads, d, depth) = (32usize, 8usize, 2usize, 4usize, 2usize);
+    let stack = DitStack::random(cfg(8), depth, heads, d, c, 70);
+    let mut rng = Rng::new(71);
+    let ha = Mat::randn(n, c, &mut rng);
+    let hb = Mat::randn(n, c, &mut rng);
+    // three streams: a CFG pair (cond 4 / uncond 5, identical states so
+    // sharing can activate) plus an unrelated request (key 16)
+    let items = vec![ha.clone(), ha.clone(), hb.clone()];
+    let mods = vec![1.0f32; 3];
+    let keys = [Some(4u64), Some(5), Some(16)];
+    for share in [false, true] {
+        let mk = || {
+            let cache = RequestPlanCache::with_policy(RefreshPolicy::Fixed(2));
+            if share {
+                cache.with_sharing(ShareConfig {
+                    similarity_threshold: 1.0,
+                    consecutive: 1,
+                    divergence_churn: 1.0,
+                })
+            } else {
+                cache
+            }
+        };
+        let mut excl = mk();
+        let sharded = SharedPlanCache::with_shards(3, &mk);
+        for step in 0..6u64 {
+            let stamps = [Some(step); 3];
+            let a = stack.forward_serving_stamped(&items, &mods, &keys, &stamps, &mut excl, true);
+            let b = stack.forward_serving_shared(&items, &mods, &keys, &stamps, &sharded, true);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.data, y.data, "share={share} step={step} item={i}");
+            }
+        }
+        let (se, ss) = (excl.stats(), sharded.stats());
+        assert_eq!(se.hits, ss.hits, "share={share}");
+        assert_eq!(se.misses, ss.misses, "share={share}");
+        assert_eq!(se.refreshes, ss.refreshes, "share={share}");
+        assert_eq!(se.planned, ss.planned, "share={share}");
+        assert_eq!(se.sparsity_sum, ss.sparsity_sum, "share={share}");
+        assert_eq!(se.share_hits, ss.share_hits, "share={share}");
+        assert_eq!(se.shares, ss.shares, "share={share}");
+        assert_eq!(se.unshares, ss.unshares, "share={share}");
+        if share {
+            assert!(ss.share_hits > 0, "the pair must actually share");
+            assert_eq!(sharded.share_active(4, 0), excl.share_active(4, 0));
+        }
+        for li in 0..depth {
+            let (le, ls) = (excl.layer_stats(li), sharded.layer_stats(li));
+            assert_eq!(le.hits, ls.hits, "share={share} layer={li}");
+            assert_eq!(le.misses, ls.misses, "share={share} layer={li}");
+            assert_eq!(le.share_hits, ls.share_hits, "share={share} layer={li}");
+        }
+        let (de, ds) = (excl.delta_stats(), sharded.delta_stats());
+        assert_eq!(de.observed, ds.observed, "share={share}");
+        assert_eq!(de.churn_sum, ds.churn_sum, "share={share}");
+        assert_eq!(de.max_churn, ds.max_churn, "share={share}");
+        // eviction parity, incl. the pair's sharing state
+        for k in [4u64, 5, 16] {
+            excl.end_request(k);
+            sharded.end_request(k);
+        }
+        assert_eq!(excl.stats().evictions, sharded.stats().evictions, "share={share}");
+        assert!(sharded.is_empty());
+    }
 }
