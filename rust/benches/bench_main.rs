@@ -6,8 +6,8 @@
 //!   cargo bench -- table1 fig6a  # a subset
 //!
 //! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack,
-//! stack_backward, adaptive_plan, serve, table1, table2, table3, perf.
-//! `batch`
+//! stack_backward, adaptive_plan, serve, table1, table2, table3, perf,
+//! kernel. `batch`
 //! compares the batched multi-head SLA engine against a serial per-head
 //! kernel loop on a [B=4, H=8, N=1024, d=64] workload; `plan` measures
 //! fresh-predict vs cached-plan step latency across plan refresh
@@ -33,6 +33,8 @@ mod common;
 mod figs;
 #[path = "harness/kernels.rs"]
 mod kernels;
+#[path = "harness/microbench.rs"]
+mod microbench;
 #[path = "harness/perf.rs"]
 mod perf;
 #[path = "harness/plans.rs"]
@@ -65,6 +67,8 @@ fn main() {
         "table1",
         "table2",
         "table3",
+        "perf",
+        "kernel",
     ];
     let selected: Vec<&str> = if args.is_empty() {
         all.to_vec()
@@ -90,8 +94,9 @@ fn main() {
             "table2" => tables::table2(),
             "table3" => tables::table3(),
             "perf" => perf::perf(),
+            "kernel" => microbench::kernel(),
             other => {
-                eprintln!("unknown experiment {other:?}; known: {all:?} + perf");
+                eprintln!("unknown experiment {other:?}; known: {all:?}");
                 continue;
             }
         };

@@ -1,0 +1,104 @@
+//! `cargo bench -- kernel`: microbenchmarks for the SIMD micro-kernel
+//! primitives in `tensor::microkernel` — the 8-lane dot (vs the scalar
+//! reference), the fused axpy accumulate, the row-softmax reduction pair
+//! (max + exp_sub_sum), and the blocked gemm_nt tile that powers
+//! `online_softmax_step`. Results go to bench_results/BENCH_kernel.json so
+//! the bench-compare ratchet catches primitive-level regressions before
+//! they show up (diluted) in the end-to-end batch/stack numbers.
+//!
+//! SLA_BENCH_SMOKE=1 shrinks the iteration counts; vector lengths stay at
+//! the kernel's real operating point (d=64 rows, 64x64 tiles) either way
+//! so the numbers remain comparable across smoke and full runs of the
+//! same flag.
+
+use anyhow::Result;
+
+use sla_dit::tensor::microkernel as mk;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+use crate::common::{shape_json, time_median, write_bench_json};
+
+pub fn kernel() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let d = 64usize; // head dim: the length every hot dot/axpy runs at
+    let tile = 64usize; // bq = bkv = 64 gemm_nt tile
+    let iters = if smoke { 2_000usize } else { 200_000 };
+    let reps = if smoke { 3 } else { 7 };
+
+    let mut rng = Rng::new(97);
+    let a: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let bvec: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let at: Vec<f32> = (0..tile * d).map(|_| rng.normal_f32()).collect();
+    let bt: Vec<f32> = (0..tile * d).map(|_| rng.normal_f32()).collect();
+    let mut out = vec![0.0f32; tile * tile];
+    let mut row: Vec<f32> = (0..tile).map(|_| rng.normal_f32()).collect();
+    let mut acc = vec![0.0f32; d];
+
+    println!("-- micro-kernel primitives (len={d}, tile={tile}x{tile}, {iters} iters) --");
+    println!("{:<16} {:>12} {:>14}", "primitive", "ns/call", "GFLOP/s");
+    let mut fields: Vec<(&str, Json)> = vec![("shape", shape_json(1, 1, tile, d, tile))];
+    let mut report = |name: &'static str, key: &'static str, secs: f64, flops: f64| {
+        let per_call = secs / iters as f64;
+        println!("{:<16} {:>12.1} {:>14.2}", name, per_call * 1e9, flops / per_call / 1e9);
+        fields.push((key, Json::num(per_call * 1e9)));
+    };
+
+    // checksum accumulator so the timed loops cannot be optimized away
+    let mut sink = 0.0f32;
+
+    let t = time_median(reps, || {
+        for _ in 0..iters {
+            sink += mk::dot_scalar(std::hint::black_box(&a), std::hint::black_box(&bvec));
+        }
+    });
+    report("dot_scalar", "dot_scalar_ns_per_step", t, 2.0 * d as f64);
+
+    let t = time_median(reps, || {
+        for _ in 0..iters {
+            sink += mk::dot(std::hint::black_box(&a), std::hint::black_box(&bvec));
+        }
+    });
+    report("dot", "dot_ns_per_step", t, 2.0 * d as f64);
+
+    let t = time_median(reps, || {
+        for _ in 0..iters {
+            mk::axpy(std::hint::black_box(&mut acc), 1.0 + sink * 1e-30, &bvec);
+        }
+    });
+    report("axpy", "axpy_ns_per_step", t, 2.0 * d as f64);
+    sink += acc[0];
+
+    // row-softmax reduction pair at the kernel's row width
+    let t = time_median(reps, || {
+        for _ in 0..iters {
+            let mx = mk::max(std::hint::black_box(&row), f32::NEG_INFINITY);
+            sink += mk::exp_sub_sum(std::hint::black_box(&mut row), mx);
+        }
+    });
+    report("softmax_row", "softmax_row_ns_per_step", t, 3.0 * tile as f64);
+
+    // gemm tile: fewer iterations, same accounting
+    let gemm_iters = (iters / 100).max(1);
+    let t = time_median(reps, || {
+        for _ in 0..gemm_iters {
+            mk::gemm_nt(std::hint::black_box(&at), tile, &bt, tile, d, &mut out);
+        }
+    });
+    let per_call = t / gemm_iters as f64;
+    let gemm_flops = 2.0 * (tile * tile * d) as f64;
+    println!(
+        "{:<16} {:>12.1} {:>14.2}",
+        "gemm_nt",
+        per_call * 1e9,
+        gemm_flops / per_call / 1e9
+    );
+    fields.push(("gemm_nt_ns_per_step", Json::num(per_call * 1e9)));
+    sink += out[0];
+
+    println!("(checksum {sink:e})");
+    #[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
+    println!("arch-simd: avx2+fma {}", if mk::avx::usable() { "ACTIVE" } else { "unavailable" });
+    write_bench_json("kernel", Json::obj(fields));
+    Ok(())
+}

@@ -1,6 +1,11 @@
 //! `cargo bench -- perf`: the L3 optimization experiments behind
 //! EXPERIMENTS.md §Perf — aggregation-strategy sweep (A.3), thread scaling,
 //! and block-shape sweep on the native SLA kernel.
+//!
+//! SLA_BENCH_SMOKE=1 shrinks the workload (N=512, d=32, fewer reps/sweep
+//! points) so the CI smoke bench finishes in seconds; the run is recorded
+//! to bench_results/BENCH_perf.json either way, keyed by shape + smoke
+//! flag so bench-compare only ratchets like-for-like runs.
 
 use anyhow::Result;
 
@@ -10,10 +15,13 @@ use sla_dit::attention::{mask, MaskPolicy, SlaConfig, SlaKernel};
 
 use sla_dit::util::json::Json;
 
-use crate::common::{clustered_qkv, log_result, time_median};
+use crate::common::{clustered_qkv, log_result, shape_json, time_median, write_bench_json};
 
 pub fn perf() -> Result<()> {
-    let (n, d, b) = (4096usize, 64usize, 64usize);
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (n, d, b) = if smoke { (512usize, 32usize, 32usize) } else { (4096, 64, 64) };
+    let agg_reps = if smoke { 2 } else { 5 };
+    let fwd_reps = if smoke { 2 } else { 3 };
     let (q, k, v) = clustered_qkv(n, d, 16, 1.6, 21);
 
     // ---- A.3 aggregation strategies at the paper's 85%-marginal regime ----
@@ -23,6 +31,7 @@ pub fn perf() -> Result<()> {
     let state = precompute_state(&kphi, &v, b);
     println!("{:<12} {:>10}", "strategy", "time(ms)");
     let mut jrows = Vec::new();
+    let mut agg_ns = Vec::new();
     for (name, strat) in [
         ("naive", AggStrategy::Naive),
         ("preagg", AggStrategy::PreAggregate),
@@ -30,16 +39,17 @@ pub fn perf() -> Result<()> {
         ("fr4", AggStrategy::FourRussians { g: 4 }),
         ("fr8", AggStrategy::FourRussians { g: 8 }),
     ] {
-        let t = time_median(5, || {
+        let t = time_median(agg_reps, || {
             let _ = aggregate_marginal(&state, &m, strat);
         });
         println!("{:<12} {:>10.2}", name, t * 1e3);
+        agg_ns.push((name, t * 1e9));
         jrows.push(Json::obj(vec![
             ("strategy", Json::str(name)),
             ("ms", Json::num(t * 1e3)),
         ]));
     }
-    log_result("perf_agg", Json::Arr(jrows));
+    log_result("perf_agg", Json::Arr(jrows.clone()));
 
     // ---- mid-density regime where Four Russians should shine ----
     println!("\n-- aggregation at ~50% marginal (Four-Russians regime) --");
@@ -51,7 +61,7 @@ pub fn perf() -> Result<()> {
         ("fr4", AggStrategy::FourRussians { g: 4 }),
         ("fr8", AggStrategy::FourRussians { g: 8 }),
     ] {
-        let t = time_median(5, || {
+        let t = time_median(agg_reps, || {
             let _ = aggregate_marginal(&state, &m50, strat);
         });
         println!("{:<12} {:>10.2}", name, t * 1e3);
@@ -60,16 +70,19 @@ pub fn perf() -> Result<()> {
     // ---- thread scaling on the fused forward ----
     println!("\n-- SLA forward thread scaling (N={n}) --");
     println!("{:<10} {:>10} {:>8}", "threads", "time(ms)", "scale");
+    let thread_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
     let mut t1 = 0.0;
-    for threads in [1usize, 2, 4, 8] {
+    let mut fwd_t1_ns = 0.0;
+    for &threads in thread_sweep {
         let cfg = SlaConfig { bq: b, bkv: b, kh_pct: 5.0, kl_pct: 10.0, threads,
                               ..Default::default() };
         let kern = SlaKernel::new(cfg, d);
-        let t = time_median(3, || {
+        let t = time_median(fwd_reps, || {
             let _ = kern.forward(&q, &k, &v, None);
         });
         if threads == 1 {
             t1 = t;
+            fwd_t1_ns = t * 1e9;
         }
         println!("{:<10} {:>10.2} {:>8.2}", threads, t * 1e3, t1 / t);
     }
@@ -77,13 +90,15 @@ pub fn perf() -> Result<()> {
     // ---- block-shape sweep (the L1 structural analogue) ----
     println!("\n-- block-shape sweep, SLA forward (N={n}) --");
     println!("{:<14} {:>10} {:>14}", "bq x bkv", "time(ms)", "VMEM est (KiB)");
-    for (bq, bkv) in [(32, 32), (32, 64), (64, 64), (64, 128), (128, 128)] {
+    let block_sweep: &[(usize, usize)] =
+        if smoke { &[(32, 32)] } else { &[(32, 32), (32, 64), (64, 64), (64, 128), (128, 128)] };
+    for &(bq, bkv) in block_sweep {
         if n % bq != 0 || n % bkv != 0 {
             continue;
         }
         let cfg = SlaConfig { bq, bkv, kh_pct: 5.0, kl_pct: 10.0, ..Default::default() };
         let kern = SlaKernel::new(cfg, d);
-        let t = time_median(3, || {
+        let t = time_median(fwd_reps, || {
             let _ = kern.forward(&q, &k, &v, None);
         });
         // per-program VMEM estimate: Q tile + K/V tile + S tile + H + Z + acc
@@ -91,5 +106,24 @@ pub fn perf() -> Result<()> {
         println!("{:<14} {:>10.2} {:>14.1}", format!("{bq}x{bkv}"), t * 1e3,
                  floats as f64 * 4.0 / 1024.0);
     }
+
+    // machine-readable artifact: the bench-compare ratchet tracks the
+    // single-thread fused forward and the aggregation strategies
+    let mut fields = vec![
+        ("shape", shape_json(1, 1, n, d, b)),
+        ("forward_t1_ns_per_step", Json::num(fwd_t1_ns)),
+    ];
+    for (name, ns) in &agg_ns {
+        let key: &'static str = match *name {
+            "naive" => "agg_naive_ns_per_step",
+            "preagg" => "agg_preagg_ns_per_step",
+            "fr2" => "agg_fr2_ns_per_step",
+            "fr4" => "agg_fr4_ns_per_step",
+            _ => "agg_fr8_ns_per_step",
+        };
+        fields.push((key, Json::num(*ns)));
+    }
+    fields.push(("rows", Json::Arr(jrows)));
+    write_bench_json("perf", Json::obj(fields));
     Ok(())
 }

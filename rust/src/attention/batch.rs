@@ -38,7 +38,9 @@ use std::sync::Arc;
 use super::mask::CompressedMask;
 use super::opt::AggStrategy;
 use super::plan::AttentionPlan;
-use super::sla::{sla_backward, sla_forward, sla_forward_only, SlaConfig, SlaGrads, SlaOutput};
+use super::sla::{
+    sla_backward_view, sla_forward_only_view, sla_forward_view, SlaConfig, SlaGrads, SlaOutput,
+};
 use crate::tensor::{Mat, Tens4};
 use crate::util::sendptr::SendPtr;
 use crate::util::threadpool;
@@ -328,10 +330,11 @@ impl BatchSlaEngine {
         let per_head: Vec<SlaOutput> =
             threadpool::parallel_map_send(b * h, fan, |i| {
                 let (bi, hi) = (i / h, i % h);
-                let qm = q.head_mat(bi, hi);
-                let km = k.head_mat(bi, hi / gsz);
-                let vm = v.head_mat(bi, hi / gsz);
-                sla_forward(inner, &self.projs[hi], &qm, &km, &vm, mask_of(i))
+                // zero-copy: head slabs of a Tens4 are contiguous row panels
+                let qm = q.head_view(bi, hi);
+                let km = k.head_view(bi, hi / gsz);
+                let vm = v.head_view(bi, hi / gsz);
+                sla_forward_view(inner, &self.projs[hi], qm, km, vm, mask_of(i))
             });
         let mut o = Tens4::zeros(b, h, n, d);
         for (i, r) in per_head.iter().enumerate() {
@@ -361,11 +364,17 @@ impl BatchSlaEngine {
         let out_masks: Vec<Arc<CompressedMask>> =
             threadpool::parallel_map_send(b * h, fan, |i| {
                 let (bi, hi) = (i / h, i % h);
-                let qm = q.head_mat(bi, hi);
-                let km = k.head_mat(bi, hi / gsz);
-                let vm = v.head_mat(bi, hi / gsz);
-                let lo =
-                    sla_forward_only(inner, &self.projs[hi], &qm, &km, &vm, masks[i].as_ref());
+                let qm = q.head_view(bi, hi);
+                let km = k.head_view(bi, hi / gsz);
+                let vm = v.head_view(bi, hi / gsz);
+                let lo = sla_forward_only_view(
+                    inner,
+                    &self.projs[hi],
+                    qm,
+                    km,
+                    vm,
+                    masks[i].as_ref(),
+                );
                 // SAFETY: task `i` writes exactly head slab `i` (rows
                 // `i*slab .. (i+1)*slab`) — disjoint per task, and `o`
                 // outlives the blocking fan.
@@ -397,11 +406,11 @@ impl BatchSlaEngine {
         let fan = self.cfg.threads.max(1);
         let grads: Vec<SlaGrads> = threadpool::parallel_map_send(b * h, fan, |i| {
             let (bi, hi) = (i / h, i % h);
-            let qm = q.head_mat(bi, hi);
-            let km = k.head_mat(bi, hi / gsz);
-            let vm = v.head_mat(bi, hi / gsz);
-            let dm = dout.head_mat(bi, hi);
-            sla_backward(&inner, &self.projs[hi], &qm, &km, &vm, &fwd.per_head[i], &dm)
+            let qm = q.head_view(bi, hi);
+            let km = k.head_view(bi, hi / gsz);
+            let vm = v.head_view(bi, hi / gsz);
+            let dm = dout.head_view(bi, hi);
+            sla_backward_view(&inner, &self.projs[hi], qm, km, vm, &fwd.per_head[i], dm)
         });
         let mut dq = Tens4::zeros(b, h, n, d);
         let mut dk = Tens4::zeros(b, self.kv_heads, n, d);

@@ -10,26 +10,41 @@ pub fn full_attention_flops(n: usize, d: usize) -> u64 {
     4 * (n as u64) * (n as u64) * (d as u64)
 }
 
-/// FLOPs of the sparse component given a mask: only critical blocks.
+/// FLOPs of the sparse component given a mask: only critical blocks, and
+/// within a critical block only its occupied sub-tile extents (the full
+/// `bq x bkv` rectangle when the mask carries no occupancy) — exactly what
+/// the kernel's occupancy-restricted runs execute.
 pub fn sparse_flops(mask: &CompressedMask, bq: usize, bkv: usize, d: usize) -> u64 {
-    let crit = mask.count(Label::Critical) as u64;
-    4 * crit * (bq as u64) * (bkv as u64) * (d as u64)
+    let mut f = 0u64;
+    for i in 0..mask.tm {
+        for &j in &mask.crit_rows[i] {
+            let j = j as usize;
+            let rq: usize = mask.occ_row_runs(i, j, bq).map(|(_, len)| len).sum();
+            let rk: usize = mask.occ_col_runs(i, j, bkv).map(|(_, len)| len).sum();
+            f += 4 * (rq as u64) * (rk as u64) * (d as u64);
+        }
+    }
+    f
 }
 
 /// FLOPs of the linear path: h_j precompute (2 N d dv) + z (N d) +
 /// marginal additions (marg * d * dv) + apply (2 N d dv + N d) + proj
-/// (2 N d d). dv = d here.
+/// (2 N d d). dv = d here. The apply + denominator terms count only rows
+/// of blocks with at least one marginal column — blocks without any have
+/// H_i = 0 and the kernel skips their O^l product entirely.
 pub fn linear_flops(mask: &CompressedMask, n: usize, bkv: usize, d: usize) -> u64 {
     let _ = bkv;
     let marg = mask.count(Label::Marginal) as u64;
+    let bq = (n / mask.tm.max(1)) as u64;
+    let n_apply = bq * mask.marg_rows.iter().filter(|r| !r.is_empty()).count() as u64;
     let n = n as u64;
     let d = d as u64;
-    2 * n * d * d        // h_j = phi(K_j)^T V_j over all blocks
-        + n * d          // z_j
-        + marg * d * d   // H_i aggregation (naive bound; preagg is cheaper)
-        + 2 * n * d * d  // phi(Q) H apply
-        + n * d          // denominators
-        + 2 * n * d * d  // Proj
+    2 * n * d * d              // h_j = phi(K_j)^T V_j over all blocks
+        + n * d                // z_j
+        + marg * d * d         // H_i aggregation (naive bound; preagg is cheaper)
+        + 2 * n_apply * d * d  // phi(Q) H apply (marginal-active blocks only)
+        + n_apply * d          // denominators
+        + 2 * n * d * d        // Proj
 }
 
 /// Mask-prediction cost (Eq. 2): pooling + pooled matmul + softmax.
@@ -171,6 +186,39 @@ mod tests {
         let rep = FlopsReport::linear_only(4096, 64);
         let frac = rep.total() as f64 / rep.full as f64;
         assert!(frac < 0.05, "linear fraction {frac}");
+    }
+
+    #[test]
+    fn occupancy_weighted_sparse_flops() {
+        use crate::attention::mask::SubBlockOcc;
+        let (bq, bkv, d) = (64, 64, 16);
+        let base = CompressedMask::all(2, 2, Label::Critical);
+        let dense = sparse_flops(&base, bq, bkv, d);
+        // Half the row tiles of block (0, 0) occupied; everything else full.
+        let mut occ = SubBlockOcc::all_occupied(2, 2, 16, bq, bkv);
+        occ.set_bitmaps(0, 0, 0b0011, 0b1111);
+        let m = base.with_occupancy(occ);
+        let f = sparse_flops(&m, bq, bkv, d);
+        let one_block = 4 * (bq as u64) * (bkv as u64) * (d as u64);
+        assert_eq!(f, dense - one_block / 2);
+        // An all-occupied occupancy grid must reduce to the dense count.
+        let all = CompressedMask::all(2, 2, Label::Critical)
+            .with_occupancy(SubBlockOcc::all_occupied(2, 2, 16, bq, bkv));
+        assert_eq!(sparse_flops(&all, bq, bkv, d), dense);
+    }
+
+    #[test]
+    fn linear_flops_skip_empty_marginal_rows() {
+        let (n, bkv, d) = (128, 64, 16);
+        // Row block 0 has a marginal column; row block 1 has none.
+        let m_skip = CompressedMask::from_labels(2, 2, vec![0, -1, -1, -1]);
+        let m_both = CompressedMask::from_labels(2, 2, vec![0, -1, 0, -1]);
+        let f_skip = linear_flops(&m_skip, n, bkv, d);
+        let f_both = linear_flops(&m_both, n, bkv, d);
+        // One fewer marginal block (d*d agg) and 64 fewer apply rows.
+        let rows = 64u64;
+        let d64 = d as u64;
+        assert_eq!(f_both - f_skip, d64 * d64 + 2 * rows * d64 * d64 + rows * d64);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Dense attention: naive O(N^2) reference and the blocked FlashAttention-
 //! style forward (the baseline Fig. 6 normalizes against).
 
-use crate::tensor::Mat;
+use crate::tensor::{microkernel as mk, Mat, MatView};
 
 pub const NEG_INF: f32 = -1e30;
 pub const EPS: f32 = 1e-6;
@@ -31,6 +31,7 @@ pub fn flash_forward(q: &Mat, k: &Mat, v: &Mat, bq: usize, bkv: usize) -> (Mat, 
     // scratch reused across blocks (no allocation in the j loop)
     let mut s = vec![0.0f32; bq * bkv];
 
+    let (qv, kv, vv) = (q.view(), k.view(), v.view());
     for bi in 0..tm {
         let r0 = bi * bq;
         let mut m = vec![NEG_INF; bq];
@@ -39,7 +40,7 @@ pub fn flash_forward(q: &Mat, k: &Mat, v: &Mat, bq: usize, bkv: usize) -> (Mat, 
         for bj in 0..tn {
             let c0 = bj * bkv;
             online_softmax_step(
-                q, k, v, r0, c0, bq, bkv, dv, scale, &mut s, &mut m, &mut l, &mut acc,
+                qv, kv, vv, r0, c0, bq, bkv, dv, scale, &mut s, &mut m, &mut l, &mut acc,
             );
         }
         for r in 0..bq {
@@ -55,13 +56,20 @@ pub fn flash_forward(q: &Mat, k: &Mat, v: &Mat, bq: usize, bkv: usize) -> (Mat, 
 }
 
 /// One (Qi, Kj/Vj) online-softmax update — shared by full, sparse, and SLA
-/// kernels. Updates (m, l, acc) in place; `s` is a bq x bkv scratch.
+/// kernels. Updates (m, l, acc) in place; `s` is scratch with at least
+/// `bq * bkv` slots. Takes zero-copy `MatView`s so callers (the batched
+/// engine in particular) can hand `Tens4` head slabs straight through, and
+/// the `bq`/`bkv` extents may be any sub-range of the caller's block grid —
+/// that is what lets the fine-grained occupancy path restrict a critical
+/// block to its occupied sub-tile runs. The QK^T panel product runs on the
+/// laned `gemm_nt` tile; the P·V accumulation stays on the bitwise-exact
+/// `axpy` kernel.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 pub fn online_softmax_step(
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
+    q: MatView<'_>,
+    k: MatView<'_>,
+    v: MatView<'_>,
     r0: usize,
     c0: usize,
     bq: usize,
@@ -74,44 +82,28 @@ pub fn online_softmax_step(
     acc: &mut [f32],
 ) {
     let d = q.cols;
-    // S = Qi Kj^T * scale
-    for r in 0..bq {
-        let qrow = q.row(r0 + r);
-        let srow = &mut s[r * bkv..(r + 1) * bkv];
-        for (c, sv) in srow.iter_mut().enumerate() {
-            let krow = k.row(c0 + c);
-            let mut accum = 0.0f32;
-            for t in 0..d {
-                accum += qrow[t] * krow[t];
-            }
-            *sv = accum * scale;
-        }
-    }
+    // S = Qi Kj^T * scale on contiguous row panels (zero-copy sub-slices)
+    let qp = &q.data[r0 * d..(r0 + bq) * d];
+    let kp = &k.data[c0 * d..(c0 + bkv) * d];
+    let sblk = &mut s[..bq * bkv];
+    mk::gemm_nt(qp, bq, kp, bkv, d, sblk);
+    mk::scale(sblk, scale);
     for r in 0..bq {
         let srow = &mut s[r * bkv..(r + 1) * bkv];
-        let rowmax = srow.iter().cloned().fold(NEG_INF, f32::max);
+        let rowmax = mk::max(srow, NEG_INF);
         let m_new = m[r].max(rowmax);
         let alpha = (m[r] - m_new).exp();
-        let mut psum = 0.0f32;
-        for sv in srow.iter_mut() {
-            *sv = (*sv - m_new).exp();
-            psum += *sv;
-        }
+        let psum = mk::exp_sub_sum(srow, m_new);
         l[r] = l[r] * alpha + psum;
         let arow = &mut acc[r * dv..(r + 1) * dv];
         if alpha != 1.0 {
-            for a in arow.iter_mut() {
-                *a *= alpha;
-            }
+            mk::scale(arow, alpha);
         }
         for (c, &p) in srow.iter().enumerate() {
             if p == 0.0 {
                 continue;
             }
-            let vrow = v.row(c0 + c);
-            for (a, &vv) in arow.iter_mut().zip(vrow) {
-                *a += p * vv;
-            }
+            mk::axpy(arow, p, v.row(c0 + c));
         }
         m[r] = m_new;
     }

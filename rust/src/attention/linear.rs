@@ -4,7 +4,7 @@
 
 use super::full::EPS;
 use super::mask::CompressedMask;
-use crate::tensor::Mat;
+use crate::tensor::{microkernel as mk, Mat, MatView};
 
 /// Feature map phi applied along the feature dimension.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,6 +27,19 @@ impl Phi {
     /// phi(x) row-wise.
     pub fn apply(&self, x: &Mat) -> Mat {
         let mut out = x.clone();
+        self.apply_in_place(&mut out);
+        out
+    }
+
+    /// phi over a borrowed view (the zero-copy kernel entry; numerics are
+    /// identical to `apply`).
+    pub fn apply_view(&self, x: MatView<'_>) -> Mat {
+        let mut out = x.to_mat();
+        self.apply_in_place(&mut out);
+        out
+    }
+
+    fn apply_in_place(&self, out: &mut Mat) {
         match self {
             Phi::Softmax => out.softmax_rows(),
             Phi::Elu1 => {
@@ -40,7 +53,6 @@ impl Phi {
                 }
             }
         }
-        out
     }
 
     /// VJP: given x and upstream grad g (w.r.t. phi(x)), return grad w.r.t. x.
@@ -90,23 +102,30 @@ pub fn precompute_state(kphi: &Mat, v: &Mat, bkv: usize) -> LinearState {
 /// see EXPERIMENTS.md §Perf).
 pub fn precompute_state_threads(kphi: &Mat, v: &Mat, bkv: usize, threads: usize)
     -> LinearState {
+    precompute_state_view(kphi, v.view(), bkv, threads)
+}
+
+/// View form of `precompute_state_threads`: `v` may be a borrowed `Tens4`
+/// head slab (the batched engine's zero-copy path).
+pub fn precompute_state_view(kphi: &Mat, v: MatView<'_>, bkv: usize, threads: usize)
+    -> LinearState {
     let n = kphi.rows;
     let d = kphi.cols;
     let dv = v.cols;
     let tn = n / bkv;
+    // zero-copy: each h_j = K_j^T V_j runs directly on contiguous row-panel
+    // views into kphi/v (no per-block rows_slice copies)
     let h: Vec<Mat> = crate::util::threadpool::parallel_map(tn, threads, |bj| {
-        let kb = kphi.rows_slice(bj * bkv, (bj + 1) * bkv);
-        let vb = v.rows_slice(bj * bkv, (bj + 1) * bkv);
-        kb.matmul_tn(&vb)
+        let kb = kphi.view().rows_view(bj * bkv, (bj + 1) * bkv);
+        let vb = v.rows_view(bj * bkv, (bj + 1) * bkv);
+        kb.matmul_tn(vb)
     });
     let _ = dv;
     let mut z = Mat::zeros(tn, d);
     for bj in 0..tn {
         let zrow = z.row_mut(bj);
         for r in bj * bkv..(bj + 1) * bkv {
-            for (zc, &kv) in zrow.iter_mut().zip(kphi.row(r)) {
-                *zc += kv;
-            }
+            mk::axpy(zrow, 1.0, kphi.row(r));
         }
     }
     LinearState { h, z }
@@ -130,16 +149,38 @@ pub fn linear_forward_global(qphi: &Mat, kphi: &Mat, v: &Mat) -> Mat {
 /// streams H rows and auto-vectorizes) — ~2x over the scalar row loop, see
 /// EXPERIMENTS.md §Perf.
 pub fn apply_linear(qphi: &Mat, h: &Mat, z: &[f32]) -> Mat {
-    let mut o = qphi.matmul(h);
-    for r in 0..qphi.rows {
-        let qrow = qphi.row(r);
-        let den: f32 = qrow.iter().zip(z).map(|(a, b)| a * b).sum::<f32>() + EPS;
-        let inv = 1.0 / den;
-        for ov in o.row_mut(r) {
-            *ov *= inv;
-        }
-    }
+    apply_linear_view(qphi.view(), h, z)
+}
+
+/// `apply_linear` on a borrowed view (zero-copy row-block panels).
+pub fn apply_linear_view(qphi: MatView<'_>, h: &Mat, z: &[f32]) -> Mat {
+    let mut o = Mat::zeros(qphi.rows, h.cols);
+    apply_linear_into(qphi, h, z, &mut o.data);
     o
+}
+
+/// Allocation-free `apply_linear`: writes the `(qphi.rows x h.cols)` result
+/// into `out` (a workspace staging buffer of at least that many slots).
+/// Bitwise-identical to `apply_linear_view` by construction — the view form
+/// delegates here.
+pub fn apply_linear_into(qphi: MatView<'_>, h: &Mat, z: &[f32], out: &mut [f32]) {
+    let (rows, dv) = (qphi.rows, h.cols);
+    debug_assert_eq!(qphi.cols, h.rows);
+    let out = &mut out[..rows * dv];
+    out.fill(0.0);
+    for r in 0..rows {
+        let qrow = qphi.row(r);
+        let orow = &mut out[r * dv..(r + 1) * dv];
+        // fused i-k-j matmul row: stream H rows through the axpy micro-kernel
+        for (kk, &a) in qrow.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            mk::axpy(orow, a, h.row(kk));
+        }
+        let den = mk::dot(qrow, z) + EPS;
+        mk::scale(orow, 1.0 / den);
+    }
 }
 
 /// Block-masked linear attention over marginal blocks (Eq. 5) — the naive
@@ -166,8 +207,8 @@ pub fn linear_forward_masked(
                 *zc += zv;
             }
         }
-        let qb = qphi.rows_slice(bi * bq, (bi + 1) * bq);
-        let ob = apply_linear(&qb, &hi, zi_all.row(bi));
+        let qb = qphi.view().rows_view(bi * bq, (bi + 1) * bq);
+        let ob = apply_linear_view(qb, &hi, zi_all.row(bi));
         for r in 0..bq {
             o.row_mut(bi * bq + r).copy_from_slice(ob.row(r));
         }

@@ -2,7 +2,7 @@
 //! classification (Eq. 3), plus the baseline mask policies (VSA-like,
 //! VMoBA-like, Sparge-like threshold) and the A.3 lookup tables.
 
-use crate::tensor::Mat;
+use crate::tensor::{microkernel as mk, Mat};
 
 /// Block label: the paper's {1, 0, -1}.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,6 +22,119 @@ impl Label {
     }
 }
 
+/// Sub-block fine-grained occupancy (FG-Attn-style): per-block bitmaps of
+/// which `sub`-token row/column tiles inside a critical block actually carry
+/// weight. The sparse branch computes only the cross product of occupied row
+/// runs x occupied col runs, so a barely-critical block stops paying the
+/// full O(bq x bkv). Non-critical blocks store the all-ones bitmap; a block
+/// whose bitmaps are all-ones executes bitwise-identically to the dense
+/// block path (one full-extent run).
+#[derive(Clone, Debug)]
+pub struct SubBlockOcc {
+    pub tm: usize,
+    pub tn: usize,
+    /// Sub-tile edge in tokens (divides both bq and bkv).
+    pub sub: usize,
+    /// Tiles per block along the query axis (bq / sub), at most 64.
+    pub row_tiles: u32,
+    /// Tiles per block along the key axis (bkv / sub), at most 64.
+    pub col_tiles: u32,
+    /// Per-block query-tile bitmaps, indexed `i * tn + j`, bit a = tile a.
+    row_bits: Vec<u64>,
+    /// Per-block key-tile bitmaps, same indexing.
+    col_bits: Vec<u64>,
+}
+
+#[inline]
+fn ones_mask(tiles: u32) -> u64 {
+    debug_assert!(tiles >= 1 && tiles <= 64);
+    if tiles == 64 {
+        u64::MAX
+    } else {
+        (1u64 << tiles) - 1
+    }
+}
+
+impl SubBlockOcc {
+    /// All tiles occupied everywhere — semantically identical to "no
+    /// occupancy information".
+    pub fn all_occupied(tm: usize, tn: usize, sub: usize, bq: usize, bkv: usize) -> Self {
+        assert!(sub > 0 && bq % sub == 0 && bkv % sub == 0, "sub must divide bq and bkv");
+        let row_tiles = (bq / sub) as u32;
+        let col_tiles = (bkv / sub) as u32;
+        assert!(row_tiles <= 64 && col_tiles <= 64, "at most 64 sub-tiles per block side");
+        SubBlockOcc {
+            tm,
+            tn,
+            sub,
+            row_tiles,
+            col_tiles,
+            row_bits: vec![ones_mask(row_tiles); tm * tn],
+            col_bits: vec![ones_mask(col_tiles); tm * tn],
+        }
+    }
+
+    #[inline]
+    pub fn row_bitmap(&self, i: usize, j: usize) -> u64 {
+        self.row_bits[i * self.tn + j]
+    }
+
+    #[inline]
+    pub fn col_bitmap(&self, i: usize, j: usize) -> u64 {
+        self.col_bits[i * self.tn + j]
+    }
+
+    pub fn set_bitmaps(&mut self, i: usize, j: usize, row: u64, col: u64) {
+        let idx = i * self.tn + j;
+        self.row_bits[idx] = row & ones_mask(self.row_tiles);
+        self.col_bits[idx] = col & ones_mask(self.col_tiles);
+    }
+
+    /// Fraction of the block's sub-tiles the kernel executes: the cross
+    /// product of occupied row tiles x occupied col tiles.
+    pub fn block_fraction(&self, i: usize, j: usize) -> f64 {
+        let r = self.row_bitmap(i, j).count_ones() as f64;
+        let c = self.col_bitmap(i, j).count_ones() as f64;
+        (r * c) / (self.row_tiles as f64 * self.col_tiles as f64)
+    }
+}
+
+/// Iterator over maximal contiguous occupied tile runs of one bitmap,
+/// yielding `(offset_tokens, len_tokens)` relative to the block origin. An
+/// all-ones bitmap yields exactly one full-extent run, which is what makes
+/// the occupancy path collapse bitwise onto the dense block path.
+pub struct OccRuns {
+    bits: u64,
+    tiles: u32,
+    sub: usize,
+    pos: u32,
+}
+
+impl Iterator for OccRuns {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        while self.pos < self.tiles && self.bits & (1u64 << self.pos) == 0 {
+            self.pos += 1;
+        }
+        if self.pos >= self.tiles {
+            return None;
+        }
+        let start = self.pos;
+        while self.pos < self.tiles && self.bits & (1u64 << self.pos) != 0 {
+            self.pos += 1;
+        }
+        Some((start as usize * self.sub, (self.pos - start) as usize * self.sub))
+    }
+}
+
+impl OccRuns {
+    /// The trivial single full-extent run (used when no occupancy is known).
+    fn full(extent: usize) -> OccRuns {
+        OccRuns { bits: 1, tiles: 1, sub: extent, pos: 0 }
+    }
+}
+
 /// (Tm x Tn) compressed mask with per-row lookup tables (Appendix A.3:
 /// "lookup table" optimization — the hot loops touch only the index lists,
 /// never scan full rows).
@@ -37,6 +150,8 @@ pub struct CompressedMask {
     /// per-column indices of critical / marginal rows (backward pass order)
     pub crit_cols: Vec<Vec<u32>>,
     pub marg_cols: Vec<Vec<u32>>,
+    /// optional sub-block fine-grained occupancy for critical blocks
+    occ: Option<SubBlockOcc>,
 }
 
 impl CompressedMask {
@@ -50,6 +165,7 @@ impl CompressedMask {
             marg_rows: vec![Vec::new(); tm],
             crit_cols: vec![Vec::new(); tn],
             marg_cols: vec![Vec::new(); tn],
+            occ: None,
         };
         for i in 0..tm {
             for j in 0..tn {
@@ -99,6 +215,58 @@ impl CompressedMask {
 
     pub fn all(tm: usize, tn: usize, l: Label) -> Self {
         Self::from_labels(tm, tn, vec![l.to_i8(); tm * tn])
+    }
+
+    /// Attach sub-block fine-grained occupancy (builder form).
+    pub fn with_occupancy(mut self, occ: SubBlockOcc) -> Self {
+        self.set_occupancy(occ);
+        self
+    }
+
+    pub fn set_occupancy(&mut self, occ: SubBlockOcc) {
+        assert_eq!((occ.tm, occ.tn), (self.tm, self.tn), "occupancy grid mismatch");
+        self.occ = Some(occ);
+    }
+
+    #[inline]
+    pub fn occupancy(&self) -> Option<&SubBlockOcc> {
+        self.occ.as_ref()
+    }
+
+    /// Occupied query-tile runs of block `(i, j)` as `(offset, len)` token
+    /// ranges relative to the block's row origin. Without occupancy (or for
+    /// an all-ones bitmap) this is the single run `(0, bq)`, so callers need
+    /// no separate dense path.
+    #[inline]
+    pub fn occ_row_runs(&self, i: usize, j: usize, bq: usize) -> OccRuns {
+        match &self.occ {
+            Some(occ) => {
+                debug_assert_eq!(occ.sub * occ.row_tiles as usize, bq, "occupancy bq mismatch");
+                OccRuns { bits: occ.row_bitmap(i, j), tiles: occ.row_tiles, sub: occ.sub, pos: 0 }
+            }
+            None => OccRuns::full(bq),
+        }
+    }
+
+    /// Occupied key-tile runs of block `(i, j)`; see `occ_row_runs`.
+    #[inline]
+    pub fn occ_col_runs(&self, i: usize, j: usize, bkv: usize) -> OccRuns {
+        match &self.occ {
+            Some(occ) => {
+                debug_assert_eq!(occ.sub * occ.col_tiles as usize, bkv, "occupancy bkv mismatch");
+                OccRuns { bits: occ.col_bitmap(i, j), tiles: occ.col_tiles, sub: occ.sub, pos: 0 }
+            }
+            None => OccRuns::full(bkv),
+        }
+    }
+
+    /// Fraction of block `(i, j)` the sparse kernel executes (1.0 without
+    /// occupancy) — the FLOP-accounting hook.
+    pub fn occupied_block_fraction(&self, i: usize, j: usize) -> f64 {
+        match &self.occ {
+            Some(occ) => occ.block_fraction(i, j),
+            None => 1.0,
+        }
     }
 }
 
@@ -289,11 +457,107 @@ pub fn predict_pc_maxpool(q: &Mat, k: &Mat, bq: usize, bkv: usize) -> Mat {
 /// Predict + classify in one call (the serving-path entry point).
 pub fn predict_mask(q: &Mat, k: &Mat, bq: usize, bkv: usize, policy: MaskPolicy)
     -> CompressedMask {
+    predict_mask_fg(q, k, bq, bkv, policy, None)
+}
+
+/// Fine-grained sparsity knobs (FG-Attn-style sub-block skipping).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FgConfig {
+    /// Sub-tile edge in tokens; must divide both bq and bkv, with at most
+    /// 64 tiles per block side.
+    pub sub: usize,
+    /// Additive margin in pooled-score space: a sub-tile row/column is kept
+    /// if its best score is within `margin` of the block max (weight ratio
+    /// e^-margin after softmax). Larger margin = more conservative (denser).
+    pub margin: f32,
+}
+
+impl Default for FgConfig {
+    fn default() -> Self {
+        // sub = 16 tiles a 64-token block into 4x4; margin 4.0 only drops
+        // sub-tiles whose best weight is < e^-4 ~ 1.8% of the block peak.
+        FgConfig { sub: 16, margin: 4.0 }
+    }
+}
+
+/// `predict_mask` plus optional sub-block occupancy population: when `fg` is
+/// set, every critical block gets row/column tile bitmaps from `sub`-pooled
+/// scores, and the sparse branch will skip unoccupied sub-tile runs.
+pub fn predict_mask_fg(
+    q: &Mat,
+    k: &Mat,
+    bq: usize,
+    bkv: usize,
+    policy: MaskPolicy,
+    fg: Option<FgConfig>,
+) -> CompressedMask {
     let pc = match policy {
         MaskPolicy::VmobaTopK { .. } => predict_pc_maxpool(q, k, bq, bkv),
         _ => predict_pc(q, k, bq, bkv),
     };
-    classify(&pc, policy)
+    let mask = classify(&pc, policy);
+    match fg {
+        Some(cfg) => {
+            let occ = predict_occupancy(q, k, &mask, bq, bkv, cfg);
+            mask.with_occupancy(occ)
+        }
+        None => mask,
+    }
+}
+
+/// Populate per-critical-block sub-tile bitmaps from `sub`-pooled QK scores.
+/// A row (col) tile is occupied iff its best score over the block is within
+/// `margin` of the block's max score; the argmax tile therefore always stays
+/// set, so no critical block ever goes fully dark.
+pub fn predict_occupancy(
+    q: &Mat,
+    k: &Mat,
+    mask: &CompressedMask,
+    bq: usize,
+    bkv: usize,
+    cfg: FgConfig,
+) -> SubBlockOcc {
+    assert!(cfg.margin >= 0.0, "fg margin must be non-negative");
+    let mut occ = SubBlockOcc::all_occupied(mask.tm, mask.tn, cfg.sub, bq, bkv);
+    let (rt, ct) = (occ.row_tiles as usize, occ.col_tiles as usize);
+    let qs = pool_tokens(q, cfg.sub);
+    let ks = pool_tokens(k, cfg.sub);
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut scores = vec![0.0f32; rt * ct];
+    for i in 0..mask.tm {
+        for &j in &mask.crit_rows[i] {
+            let j = j as usize;
+            let mut blk_max = f32::NEG_INFINITY;
+            for a in 0..rt {
+                let qrow = qs.row(i * rt + a);
+                for b in 0..ct {
+                    let s = mk::dot(qrow, ks.row(j * ct + b)) * scale;
+                    scores[a * ct + b] = s;
+                    blk_max = blk_max.max(s);
+                }
+            }
+            let cut = blk_max - cfg.margin;
+            let mut row = 0u64;
+            for a in 0..rt {
+                let best = mk::max(&scores[a * ct..(a + 1) * ct], f32::NEG_INFINITY);
+                if best >= cut {
+                    row |= 1u64 << a;
+                }
+            }
+            let mut col = 0u64;
+            for b in 0..ct {
+                let mut best = f32::NEG_INFINITY;
+                for a in 0..rt {
+                    best = best.max(scores[a * ct + b]);
+                }
+                if best >= cut {
+                    col |= 1u64 << b;
+                }
+            }
+            occ.set_bitmaps(i, j, row, col);
+        }
+    }
+    occ
 }
 
 #[cfg(test)]
@@ -510,6 +774,94 @@ mod tests {
                 }
                 if m.marg_rows[i].len() != m.tn - ch - cl {
                     return Err(format!("row {i}: marginal count off"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn occ_runs_iterate_maximal_contiguous_runs() {
+        // 32-token block, sub=4 => 8 tiles per side
+        let mut occ = SubBlockOcc::all_occupied(1, 1, 4, 32, 32);
+        occ.set_bitmaps(0, 0, 0b1011_0110, 0b0000_0001);
+        let mut m = CompressedMask::all(1, 1, Label::Critical);
+        m.set_occupancy(occ);
+        let rows: Vec<(usize, usize)> = m.occ_row_runs(0, 0, 32).collect();
+        assert_eq!(rows, vec![(4, 8), (16, 8), (28, 4)]);
+        let cols: Vec<(usize, usize)> = m.occ_col_runs(0, 0, 32).collect();
+        assert_eq!(cols, vec![(0, 4)]);
+        assert!((m.occupied_block_fraction(0, 0) - (5.0 / 8.0) * (1.0 / 8.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absent_or_all_ones_occupancy_yields_one_full_run() {
+        let m = CompressedMask::all(2, 2, Label::Critical);
+        assert_eq!(m.occ_row_runs(1, 0, 64).collect::<Vec<_>>(), vec![(0, 64)]);
+        assert_eq!(m.occupied_block_fraction(1, 0), 1.0);
+        let m2 = m.clone().with_occupancy(SubBlockOcc::all_occupied(2, 2, 16, 64, 64));
+        assert_eq!(m2.occ_row_runs(1, 0, 64).collect::<Vec<_>>(), vec![(0, 64)]);
+        assert_eq!(m2.occ_col_runs(0, 1, 64).collect::<Vec<_>>(), vec![(0, 64)]);
+        assert_eq!(m2.occupied_block_fraction(0, 0), 1.0);
+    }
+
+    #[test]
+    fn prop_predicted_occupancy_is_confined_to_critical_blocks() {
+        use crate::util::prop;
+        prop::check("occ-critical-only", 10, 24, gen_case, |&(n, d, b, kh, kl, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Mat::randn(n, d, &mut rng);
+            let k = Mat::randn(n, d, &mut rng);
+            let sub = if b % 4 == 0 { b / 4 } else { b };
+            let fg = FgConfig { sub, margin: 0.5 };
+            let policy = MaskPolicy::Sla { kh_pct: kh, kl_pct: kl };
+            let m = predict_mask_fg(&q, &k, b, b, policy, Some(fg));
+            let occ = match m.occupancy() {
+                Some(o) => o,
+                None => return Err("occupancy missing after predict_mask_fg".into()),
+            };
+            let full_row = (1u64 << occ.row_tiles) - 1;
+            let full_col = (1u64 << occ.col_tiles) - 1;
+            for i in 0..m.tm {
+                for j in 0..m.tn {
+                    let (rb, cb) = (occ.row_bitmap(i, j), occ.col_bitmap(i, j));
+                    if m.label(i, j) != 1 {
+                        // only critical blocks may be tightened
+                        if rb != full_row || cb != full_col {
+                            return Err(format!("non-critical ({i},{j}) tightened"));
+                        }
+                        continue;
+                    }
+                    // argmax tile always survives: no critical block goes dark
+                    if rb == 0 || cb == 0 {
+                        return Err(format!("critical ({i},{j}) fully dark"));
+                    }
+                    if rb & !full_row != 0 || cb & !full_col != 0 {
+                        return Err(format!("out-of-range bits at ({i},{j})"));
+                    }
+                    let f = m.occupied_block_fraction(i, j);
+                    if !(f > 0.0 && f <= 1.0) {
+                        return Err(format!("fraction {f} out of (0, 1] at ({i},{j})"));
+                    }
+                    // runs cover exactly the occupied tiles
+                    let run_tokens: usize =
+                        m.occ_row_runs(i, j, b).map(|(_, len)| len).sum();
+                    if run_tokens != rb.count_ones() as usize * sub {
+                        return Err(format!("row runs cover {run_tokens} tokens at ({i},{j})"));
+                    }
+                }
+            }
+            // an enormous margin keeps everything: occupancy degrades to
+            // all-ones, i.e. the dense block path
+            let loose = predict_mask_fg(
+                &q, &k, b, b, policy, Some(FgConfig { sub, margin: 1e9 }),
+            );
+            let locc = loose.occupancy().unwrap();
+            for i in 0..m.tm {
+                for j in 0..m.tn {
+                    if locc.row_bitmap(i, j) != full_row || locc.col_bitmap(i, j) != full_col {
+                        return Err(format!("huge margin tightened ({i},{j})"));
+                    }
                 }
             }
             Ok(())

@@ -35,7 +35,9 @@ pub mod sparse;
 pub use batch::{BatchSlaEngine, BatchSlaGrads, BatchSlaLight, BatchSlaOutput};
 pub use flops::FlopsReport;
 pub use linear::Phi;
-pub use mask::{mask_churn, mask_similarity, CompressedMask, Label, MaskPolicy};
+pub use mask::{
+    mask_churn, mask_similarity, CompressedMask, FgConfig, Label, MaskPolicy, SubBlockOcc,
+};
 pub use opt::AggStrategy;
 pub use plan::{
     AttentionPlan, ChurnEvent, MaskPlanner, PlanCacheStats, PlanDeltaStats, PlanStats,
@@ -43,6 +45,6 @@ pub use plan::{
     SlaWorkspace, StackPlanner,
 };
 pub use sla::{
-    sla_backward, sla_forward, sla_forward_only, SlaConfig, SlaKernel, SlaLightOutput,
-    SlaOutput,
+    sla_backward, sla_backward_view, sla_forward, sla_forward_only, sla_forward_only_view,
+    sla_forward_view, SlaConfig, SlaKernel, SlaLightOutput, SlaOutput,
 };

@@ -45,7 +45,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::full::NEG_INF;
-use super::mask::{mask_churn, predict_mask, CompressedMask, MaskPolicy};
+use super::mask::{mask_churn, predict_mask_fg, CompressedMask, MaskPolicy};
 use super::opt::AggStrategy;
 use super::sla::SlaConfig;
 use crate::tensor::Tens4;
@@ -56,8 +56,9 @@ use crate::util::threadpool;
 // ---------------------------------------------------------------------------
 
 /// Reusable scratch buffers for the fused SLA kernels: the online-softmax
-/// tile (`s`), running max / normalizer / accumulator (`m`, `l`, `acc`) and
-/// the backward's recomputed probability tile (`p`). One lives per OS
+/// tile (`s`), running max / normalizer / accumulator (`m`, `l`, `acc`),
+/// the linear-branch output staging panel (`ob`) and the probability tile
+/// (`p`, kept for external kernels that stage P). One lives per OS
 /// thread (see [`with_workspace`]); `ensure` resizes only when the block
 /// geometry changes, so repeated forward/backward calls on one long-lived
 /// thread are allocation-free after the first — and since the threadpool
@@ -70,6 +71,7 @@ pub struct SlaWorkspace {
     pub l: Vec<f32>,
     pub acc: Vec<f32>,
     pub p: Vec<f32>,
+    pub ob: Vec<f32>,
 }
 
 impl SlaWorkspace {
@@ -84,6 +86,7 @@ impl SlaWorkspace {
         self.l.resize(bq, 0.0);
         self.acc.resize(bq * dv, 0.0);
         self.p.resize(bq * bkv, 0.0);
+        self.ob.resize(bq * dv, 0.0);
     }
 
     /// Reset the online-softmax state for a new query row block. (`s` and
@@ -192,7 +195,7 @@ impl AttentionPlan {
                 let (bi, hi) = (i / h, i % h);
                 let qm = q.head_mat(bi, hi);
                 let km = k.head_mat(bi, hi / gsz);
-                Arc::new(predict_mask(&qm, &km, cfg.bq, cfg.bkv, policy))
+                Arc::new(predict_mask_fg(&qm, &km, cfg.bq, cfg.bkv, policy, cfg.fg))
             });
         Self::from_masks(b, h, cfg.bq, cfg.bkv, masks)
     }
@@ -1527,7 +1530,7 @@ impl StackPlanner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::mask::Label;
+    use crate::attention::mask::{predict_mask, Label};
     use crate::util::rng::Rng;
 
     fn cfg(b: usize) -> SlaConfig {

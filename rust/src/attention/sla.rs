@@ -22,11 +22,11 @@
 use std::sync::Arc;
 
 use super::full::{online_softmax_step, EPS, NEG_INF};
-use super::linear::{apply_linear, precompute_state_threads, Phi};
-use super::mask::{predict_mask, CompressedMask, MaskPolicy};
+use super::linear::{apply_linear_into, precompute_state_view, Phi};
+use super::mask::{predict_mask_fg, CompressedMask, FgConfig, MaskPolicy};
 use super::opt::{aggregate_marginal, AggStrategy};
 use super::plan::with_workspace;
-use crate::tensor::Mat;
+use crate::tensor::{microkernel as mk, Mat, MatView};
 use crate::util::sendptr::SendPtr;
 use crate::util::threadpool;
 
@@ -39,6 +39,11 @@ pub struct SlaConfig {
     pub phi: Phi,
     pub agg: AggStrategy,
     pub threads: usize,
+    /// Optional FG-Attn-style sub-block fine-grained sparsity: when set,
+    /// predicted masks carry per-critical-block occupancy bitmaps and the
+    /// sparse branch (forward AND backward) skips unoccupied sub-tile runs.
+    /// `None` (default) keeps the dense-block behaviour bit for bit.
+    pub fg: Option<FgConfig>,
 }
 
 impl Default for SlaConfig {
@@ -51,6 +56,7 @@ impl Default for SlaConfig {
             phi: Phi::Softmax,
             agg: AggStrategy::PreAggregate,
             threads: 1,
+            fg: None,
         }
     }
 }
@@ -98,6 +104,20 @@ pub fn sla_forward(
     v: &Mat,
     mask: Option<&Arc<CompressedMask>>,
 ) -> SlaOutput {
+    forward_impl(cfg, proj, q.view(), k.view(), v.view(), mask, true)
+}
+
+/// [`sla_forward`] on borrowed views: the batched engine's zero-copy entry —
+/// `Tens4` head slabs go straight in with no per-task `head_mat` copies.
+/// Numerics are identical to the `&Mat` form (which delegates here).
+pub fn sla_forward_view(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: MatView<'_>,
+    k: MatView<'_>,
+    v: MatView<'_>,
+    mask: Option<&Arc<CompressedMask>>,
+) -> SlaOutput {
     forward_impl(cfg, proj, q, k, v, mask, true)
 }
 
@@ -115,6 +135,18 @@ pub fn sla_forward_only(
     v: &Mat,
     mask: Option<&Arc<CompressedMask>>,
 ) -> SlaLightOutput {
+    sla_forward_only_view(cfg, proj, q.view(), k.view(), v.view(), mask)
+}
+
+/// [`sla_forward_only`] on borrowed views (see [`sla_forward_view`]).
+pub fn sla_forward_only_view(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: MatView<'_>,
+    k: MatView<'_>,
+    v: MatView<'_>,
+    mask: Option<&Arc<CompressedMask>>,
+) -> SlaLightOutput {
     let full = forward_impl(cfg, proj, q, k, v, mask, false);
     SlaLightOutput { o: full.o, mask: full.mask }
 }
@@ -122,9 +154,9 @@ pub fn sla_forward_only(
 fn forward_impl(
     cfg: &SlaConfig,
     proj: &Mat,
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
+    q: MatView<'_>,
+    k: MatView<'_>,
+    v: MatView<'_>,
     mask: Option<&Arc<CompressedMask>>,
     want_state: bool,
 ) -> SlaOutput {
@@ -133,19 +165,21 @@ fn forward_impl(
     let tm = n / cfg.bq;
     let mask: Arc<CompressedMask> = match mask {
         Some(m) => Arc::clone(m),
-        None => Arc::new(predict_mask(
-            q,
-            k,
+        // plan-miss only: materialize owned copies for the predictor
+        None => Arc::new(predict_mask_fg(
+            &q.to_mat(),
+            &k.to_mat(),
             cfg.bq,
             cfg.bkv,
             MaskPolicy::Sla { kh_pct: cfg.kh_pct, kl_pct: cfg.kl_pct },
+            cfg.fg,
         )),
     };
-    let qphi = cfg.phi.apply(q);
-    let kphi = cfg.phi.apply(k);
+    let qphi = cfg.phi.apply_view(q);
+    let kphi = cfg.phi.apply_view(k);
 
     // --- linear path: precompute h_j/z_j, aggregate per row block ---
-    let state = precompute_state_threads(&kphi, v, cfg.bkv, cfg.threads);
+    let state = precompute_state_view(&kphi, v, cfg.bkv, cfg.threads);
     let mask_ref: &CompressedMask = &mask;
     let (hi, zi) = aggregate_marginal(&state, mask_ref, cfg.agg);
 
@@ -169,25 +203,39 @@ fn forward_impl(
                     let r0 = bi * cfg.bq;
                     ws.begin_row_block();
                     for &bj in &mask_ref.crit_rows[bi] {
-                        online_softmax_step(
-                            q,
-                            k,
-                            v,
-                            r0,
-                            bj as usize * cfg.bkv,
-                            cfg.bq,
-                            cfg.bkv,
-                            dv,
-                            scale,
-                            &mut ws.s,
-                            &mut ws.m,
-                            &mut ws.l,
-                            &mut ws.acc,
-                        );
+                        let bj = bj as usize;
+                        let c0 = bj * cfg.bkv;
+                        // restrict the step to occupied sub-tile runs; with
+                        // no occupancy this is one full-extent (bq, bkv) run
+                        for (roff, rlen) in mask_ref.occ_row_runs(bi, bj, cfg.bq) {
+                            for (coff, clen) in mask_ref.occ_col_runs(bi, bj, cfg.bkv) {
+                                online_softmax_step(
+                                    q,
+                                    k,
+                                    v,
+                                    r0 + roff,
+                                    c0 + coff,
+                                    rlen,
+                                    clen,
+                                    dv,
+                                    scale,
+                                    &mut ws.s,
+                                    &mut ws.m[roff..roff + rlen],
+                                    &mut ws.l[roff..roff + rlen],
+                                    &mut ws.acc[roff * dv..(roff + rlen) * dv],
+                                );
+                            }
+                        }
                     }
-                    // O^l_i = phi(Q_i) H_i / (phi(Q_i) Z_i + eps)
-                    let qb = qphi_ref.rows_slice(r0, r0 + cfg.bq);
-                    let ob = apply_linear(&qb, &hi_ref[bi], zi_ref.row(bi));
+                    // O^l_i = phi(Q_i) H_i / (phi(Q_i) Z_i + eps); a block
+                    // with no marginal columns has H_i = 0, Z_i = 0, so its
+                    // O^l rows are exactly zero — skip the whole product and
+                    // leave the pre-zeroed rows (bitwise identical).
+                    let have_marg = !mask_ref.marg_rows[bi].is_empty();
+                    if have_marg {
+                        let qb = qphi_ref.view().rows_view(r0, r0 + cfg.bq);
+                        apply_linear_into(qb, &hi_ref[bi], zi_ref.row(bi), &mut ws.ob);
+                    }
                     for r in 0..cfg.bq {
                         // SAFETY: disjoint per-chunk row ranges.
                         let osrow = unsafe {
@@ -206,10 +254,15 @@ fn forward_impl(
                                 };
                             }
                         }
-                        let olrow = unsafe {
-                            std::slice::from_raw_parts_mut(ol_ptr.get().add((r0 + r) * dv), dv)
-                        };
-                        olrow.copy_from_slice(ob.row(r));
+                        if have_marg {
+                            let olrow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    ol_ptr.get().add((r0 + r) * dv),
+                                    dv,
+                                )
+                            };
+                            olrow.copy_from_slice(&ws.ob[r * dv..(r + 1) * dv]);
+                        }
                     }
                 }
             });
@@ -241,6 +294,23 @@ pub fn sla_backward(
     fwd: &SlaOutput,
     dout: &Mat,
 ) -> SlaGrads {
+    sla_backward_view(cfg, proj, q.view(), k.view(), v.view(), fwd, dout.view())
+}
+
+/// [`sla_backward`] on borrowed views (see [`sla_forward_view`]). The sparse
+/// dQ pass recomputes P and accumulates in one fused sweep (no probability
+/// tile staging), and every sparse loop is restricted to the same occupied
+/// sub-tile runs the forward executed — rows the forward never touched keep
+/// `lse = -inf` and are never read here.
+pub fn sla_backward_view(
+    cfg: &SlaConfig,
+    proj: &Mat,
+    q: MatView<'_>,
+    k: MatView<'_>,
+    v: MatView<'_>,
+    fwd: &SlaOutput,
+    dout: MatView<'_>,
+) -> SlaGrads {
     let (n, d) = (q.rows, q.cols);
     let dv_dim = v.cols;
     let tm = n / cfg.bq;
@@ -250,35 +320,36 @@ pub fn sla_backward(
 
     // chain through O = O^s + O^l proj
     let dos = dout; // dO^s = dO
-    let dol = dout.matmul_nt(proj); // dO^l = dO proj^T
-    let dproj = fwd.ol.matmul_tn(dout); // dProj = O^l^T dO
+    let dol = dout.matmul_nt(proj.view()); // dO^l = dO proj^T
+    let dproj = fwd.ol.view().matmul_tn(dout); // dProj = O^l^T dO
 
     // D^s, D^l
     let mut dssum = vec![0.0f32; n];
     let mut dlsum = vec![0.0f32; n];
     for r in 0..n {
-        dssum[r] = dos.row(r).iter().zip(fwd.os.row(r)).map(|(a, b)| a * b).sum();
-        dlsum[r] = dol.row(r).iter().zip(fwd.ol.row(r)).map(|(a, b)| a * b).sum();
+        dssum[r] = mk::dot(dos.row(r), fwd.os.row(r));
+        dlsum[r] = mk::dot(dol.row(r), fwd.ol.row(r));
     }
 
-    with_workspace(|ws| {
-        ws.ensure(cfg.bq, cfg.bkv, dv_dim);
-
-        // ---- pass 1 (per query block): dQ sparse, dQ^phi, dH_i, dZ_i ----
-        let mut dq = Mat::zeros(n, d);
-        let mut dqphi = Mat::zeros(n, d);
-        let mut dhi: Vec<Mat> = Vec::with_capacity(tm);
-        let mut dzi = Mat::zeros(tm, d);
-        for bi in 0..tm {
-            let r0 = bi * cfg.bq;
-            // linear-path per-row-block grads (Alg. 2 lines 4-5)
+    // ---- pass 1 (per query block): dQ sparse, dQ^phi, dH_i, dZ_i ----
+    let mut dq = Mat::zeros(n, d);
+    let mut dqphi = Mat::zeros(n, d);
+    let mut dhi: Vec<Mat> = Vec::with_capacity(tm);
+    let mut dzi = Mat::zeros(tm, d);
+    for bi in 0..tm {
+        let r0 = bi * cfg.bq;
+        // linear-path per-row-block grads (Alg. 2 lines 4-5). A block with
+        // no marginal columns has H_i = 0, Z_i = 0 and O^l_i = 0, so every
+        // quantity below is exactly zero (and dH_i/dZ_i are never read by
+        // pass 2) — skip it and keep the pre-zeroed buffers, bit for bit.
+        let mut dh = Mat::zeros(d, dv_dim);
+        if !mask.marg_rows[bi].is_empty() {
             let hi = &fwd.hi[bi];
             let zi = fwd.zi.row(bi);
-            let mut dh = Mat::zeros(d, dv_dim);
             let dz = dzi.row_mut(bi);
             for r in 0..cfg.bq {
                 let qrow = fwd.qphi.row(r0 + r);
-                let den: f32 = qrow.iter().zip(zi).map(|(a, b)| a * b).sum::<f32>() + EPS;
+                let den = mk::dot(qrow, zi) + EPS;
                 let inv = 1.0 / den;
                 let dolrow = dol.row(r0 + r);
                 let dl = dlsum[r0 + r];
@@ -286,149 +357,122 @@ pub fn sla_backward(
                 for (t, &qv) in qrow.iter().enumerate() {
                     let w = qv * inv;
                     if w != 0.0 {
-                        let dhrow = dh.row_mut(t);
-                        for (dhv, &dov) in dhrow.iter_mut().zip(dolrow) {
-                            *dhv += w * dov;
-                        }
+                        mk::axpy(dh.row_mut(t), w, dolrow);
                         dz[t] -= w * dl;
                     }
                 }
                 // dQ^phi = (dol H^T - D^l Z^T) / den
                 let dqprow = dqphi.row_mut(r0 + r);
                 for t in 0..d {
-                    let hrow = hi.row(t);
-                    let mut acc = 0.0f32;
-                    for (a, b) in dolrow.iter().zip(hrow) {
-                        acc += a * b;
-                    }
-                    dqprow[t] = (acc - dl * zi[t]) * inv;
-                }
-            }
-            dhi.push(dh);
-            // sparse-path dQ (Alg. 2 lines 11-12), via row lookup table;
-            // the probability tile lives in the per-thread workspace
-            for &bj in &mask.crit_rows[bi] {
-                let c0 = bj as usize * cfg.bkv;
-                for r in 0..cfg.bq {
-                    let qrow = q.row(r0 + r);
-                    let li = fwd.lse[r0 + r];
-                    let dorow = dos.row(r0 + r);
-                    let prow = &mut ws.p[r * cfg.bkv..(r + 1) * cfg.bkv];
-                    for (c, pv) in prow.iter_mut().enumerate() {
-                        let krow = k.row(c0 + c);
-                        let mut s = 0.0f32;
-                        for t in 0..d {
-                            s += qrow[t] * krow[t];
-                        }
-                        *pv = (s * scale - li).exp();
-                    }
-                    let dqrow = dq.row_mut(r0 + r);
-                    for (c, &pv) in prow.iter().enumerate() {
-                        let vrow = v.row(c0 + c);
-                        let mut dpv = 0.0f32;
-                        for (a, b) in dorow.iter().zip(vrow) {
-                            dpv += a * b;
-                        }
-                        let ds = pv * (dpv - dssum[r0 + r]) * scale;
-                        if ds == 0.0 {
-                            continue;
-                        }
-                        let krow = k.row(c0 + c);
-                        for (dqv, &kv) in dqrow.iter_mut().zip(krow) {
-                            *dqv += ds * kv;
-                        }
-                    }
+                    dqprow[t] = (mk::dot(dolrow, hi.row(t)) - dl * zi[t]) * inv;
                 }
             }
         }
-
-        // ---- pass 2 (per KV block): dK sparse, dV, dK^phi ----
-        let mut dk = Mat::zeros(n, d);
-        let mut dv = Mat::zeros(n, dv_dim);
-        let mut dkphi = Mat::zeros(n, d);
-        for bj in 0..tn {
+        dhi.push(dh);
+        // sparse-path dQ (Alg. 2 lines 11-12): fused recompute-and-
+        // accumulate over the occupied sub-tile runs of each critical block
+        for &bj in &mask.crit_rows[bi] {
+            let bj = bj as usize;
             let c0 = bj * cfg.bkv;
-            // sparse contributions from critical rows
-            for &bi in &mask.crit_cols[bj] {
-                let r0 = bi as usize * cfg.bq;
-                for r in 0..cfg.bq {
+            for (roff, rlen) in mask.occ_row_runs(bi, bj, cfg.bq) {
+                for r in roff..roff + rlen {
                     let qrow = q.row(r0 + r);
                     let li = fwd.lse[r0 + r];
                     let dorow = dos.row(r0 + r);
                     let dsr = dssum[r0 + r];
-                    for c in 0..cfg.bkv {
-                        let krow = k.row(c0 + c);
-                        let mut s = 0.0f32;
-                        for t in 0..d {
-                            s += qrow[t] * krow[t];
+                    let dqrow = dq.row_mut(r0 + r);
+                    for (coff, clen) in mask.occ_col_runs(bi, bj, cfg.bkv) {
+                        for c in coff..coff + clen {
+                            let krow = k.row(c0 + c);
+                            let pv = (mk::dot(qrow, krow) * scale - li).exp();
+                            let dpv = mk::dot(dorow, v.row(c0 + c));
+                            let ds = pv * (dpv - dsr) * scale;
+                            if ds == 0.0 {
+                                continue;
+                            }
+                            mk::axpy(dqrow, ds, krow);
                         }
-                        let pv = (s * scale - li).exp();
-                        if pv == 0.0 {
-                            continue;
-                        }
-                        // dV_j += P^T dO^s
-                        let dvrow = dv.row_mut(c0 + c);
-                        for (dvv, &dov) in dvrow.iter_mut().zip(dorow) {
-                            *dvv += pv * dov;
-                        }
-                        // dK_j += dS^T Q_i * scale
-                        let vrow = v.row(c0 + c);
-                        let mut dpv = 0.0f32;
-                        for (a, b) in dorow.iter().zip(vrow) {
-                            dpv += a * b;
-                        }
-                        let ds = pv * (dpv - dsr) * scale;
-                        let dkrow = dk.row_mut(c0 + c);
-                        for (dkv, &qv) in dkrow.iter_mut().zip(qrow) {
-                            *dkv += ds * qv;
-                        }
-                    }
-                }
-            }
-            // marginal aggregation: dH = sum_i dH_i, dZ = sum_i dZ_i over
-            // rows with mask[i,j] = 0 (Alg. 2 line 14)
-            let mut dh = Mat::zeros(d, dv_dim);
-            let mut dz = vec![0.0f32; d];
-            for &bi in &mask.marg_cols[bj] {
-                dh.add_assign(&dhi[bi as usize]);
-                for (a, &b) in dz.iter_mut().zip(dzi.row(bi as usize)) {
-                    *a += b;
-                }
-            }
-            // dK^phi_j = V_j dH^T + dZ^T (broadcast); dV_j += K^phi_j dH
-            for c in 0..cfg.bkv {
-                let vrow = v.row(c0 + c);
-                let dkprow = dkphi.row_mut(c0 + c);
-                for t in 0..d {
-                    let dhrow = dh.row(t);
-                    let mut acc = 0.0f32;
-                    for (a, b) in vrow.iter().zip(dhrow) {
-                        acc += a * b;
-                    }
-                    dkprow[t] = acc + dz[t];
-                }
-                let kprow = fwd.kphi.row(c0 + c);
-                let dvrow = dv.row_mut(c0 + c);
-                for (t, &kv) in kprow.iter().enumerate() {
-                    if kv == 0.0 {
-                        continue;
-                    }
-                    let dhrow = dh.row(t);
-                    for (dvv, &dhv) in dvrow.iter_mut().zip(dhrow) {
-                        *dvv += kv * dhv;
                     }
                 }
             }
         }
+    }
 
-        // chain dQ^phi / dK^phi through phi
-        let dq_phi = cfg.phi.vjp(q, &dqphi);
-        let dk_phi = cfg.phi.vjp(k, &dkphi);
-        dq.add_assign(&dq_phi);
-        dk.add_assign(&dk_phi);
+    // ---- pass 2 (per KV block): dK sparse, dV, dK^phi ----
+    let mut dk = Mat::zeros(n, d);
+    let mut dv = Mat::zeros(n, dv_dim);
+    let mut dkphi = Mat::zeros(n, d);
+    for bj in 0..tn {
+        let c0 = bj * cfg.bkv;
+        // sparse contributions from critical rows, over occupied runs
+        for &bi in &mask.crit_cols[bj] {
+            let bi = bi as usize;
+            let r0 = bi * cfg.bq;
+            for (roff, rlen) in mask.occ_row_runs(bi, bj, cfg.bq) {
+                for r in roff..roff + rlen {
+                    let qrow = q.row(r0 + r);
+                    let li = fwd.lse[r0 + r];
+                    let dorow = dos.row(r0 + r);
+                    let dsr = dssum[r0 + r];
+                    for (coff, clen) in mask.occ_col_runs(bi, bj, cfg.bkv) {
+                        for c in coff..coff + clen {
+                            let krow = k.row(c0 + c);
+                            let pv = (mk::dot(qrow, krow) * scale - li).exp();
+                            if pv == 0.0 {
+                                continue;
+                            }
+                            // dV_j += P^T dO^s
+                            mk::axpy(dv.row_mut(c0 + c), pv, dorow);
+                            // dK_j += dS^T Q_i * scale
+                            let dpv = mk::dot(dorow, v.row(c0 + c));
+                            let ds = pv * (dpv - dsr) * scale;
+                            mk::axpy(dk.row_mut(c0 + c), ds, qrow);
+                        }
+                    }
+                }
+            }
+        }
+        // marginal aggregation: dH = sum_i dH_i, dZ = sum_i dZ_i over
+        // rows with mask[i,j] = 0 (Alg. 2 line 14). With no marginal rows
+        // dH = 0 and dZ = 0, so dK^phi_j rows would be overwritten with
+        // exact zeros (matching their pre-zeroed state) and dV_j would gain
+        // signed zeros that cannot change any bit — skip the block.
+        if mask.marg_cols[bj].is_empty() {
+            continue;
+        }
+        let mut dh = Mat::zeros(d, dv_dim);
+        let mut dz = vec![0.0f32; d];
+        for &bi in &mask.marg_cols[bj] {
+            dh.add_assign(&dhi[bi as usize]);
+            for (a, &b) in dz.iter_mut().zip(dzi.row(bi as usize)) {
+                *a += b;
+            }
+        }
+        // dK^phi_j = V_j dH^T + dZ^T (broadcast); dV_j += K^phi_j dH
+        for c in 0..cfg.bkv {
+            let vrow = v.row(c0 + c);
+            let dkprow = dkphi.row_mut(c0 + c);
+            for t in 0..d {
+                dkprow[t] = mk::dot(vrow, dh.row(t)) + dz[t];
+            }
+            let kprow = fwd.kphi.row(c0 + c);
+            let dvrow = dv.row_mut(c0 + c);
+            for (t, &kv) in kprow.iter().enumerate() {
+                if kv == 0.0 {
+                    continue;
+                }
+                mk::axpy(dvrow, kv, dh.row(t));
+            }
+        }
+    }
 
-        SlaGrads { dq, dk, dv, dproj }
-    })
+    // chain dQ^phi / dK^phi through phi
+    let dq_phi = cfg.phi.vjp(&q.to_mat(), &dqphi);
+    let dk_phi = cfg.phi.vjp(&k.to_mat(), &dkphi);
+    dq.add_assign(&dq_phi);
+    dk.add_assign(&dk_phi);
+
+    SlaGrads { dq, dk, dv, dproj }
 }
 
 /// The fused kernel object: holds config + the learnable proj (d x d).
@@ -633,6 +677,79 @@ mod tests {
                     "dk" => (loss(&q, &plus, &v, &kern.proj), loss(&q, &minus, &v, &kern.proj)),
                     "dv" => (loss(&q, &k, &plus, &kern.proj), loss(&q, &k, &minus, &kern.proj)),
                     _ => (loss(&q, &k, &v, &plus), loss(&q, &k, &v, &minus)),
+                };
+                let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let ana = grad.data[idx];
+                assert!(
+                    (num - ana).abs() < 3e-2 * num.abs().max(1.0),
+                    "{name}[{idx}]: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fg_all_ones_occupancy_matches_dense_blocks_bitwise() {
+        let (q, k, v) = qkv(64, 8, 30);
+        let mut rng = Rng::new(31);
+        let proj = Mat::randn(8, 8, &mut rng).scaled(0.3);
+        let dense = sla_forward(&cfg(8), &proj, &q, &k, &v, None);
+        // a huge margin keeps every sub-tile occupied: the occupancy-
+        // restricted path must collapse to the dense-block path bit for bit
+        let c = SlaConfig { fg: Some(FgConfig { sub: 4, margin: 1e9 }), ..cfg(8) };
+        let out = sla_forward(&c, &proj, &q, &k, &v, None);
+        assert!(out.mask.occupancy().is_some(), "fg config must attach occupancy");
+        assert_eq!(out.o.data, dense.o.data);
+        assert_eq!(out.lse, dense.lse);
+        let g_dense = sla_backward(&cfg(8), &proj, &q, &k, &v, &dense, &dense.o);
+        let g_fg = sla_backward(&c, &proj, &q, &k, &v, &out, &out.o);
+        assert_eq!(g_fg.dq.data, g_dense.dq.data);
+        assert_eq!(g_fg.dk.data, g_dense.dk.data);
+        assert_eq!(g_fg.dv.data, g_dense.dv.data);
+    }
+
+    #[test]
+    fn fg_backward_matches_finite_differences() {
+        let n = 32;
+        let d = 8;
+        let (q, k, v) = qkv(n, d, 40);
+        let mut rng = Rng::new(41);
+        let c = SlaConfig { fg: Some(FgConfig { sub: 4, margin: 0.15 }), ..cfg(8) };
+        let mut kern = SlaKernel::new(c.clone(), d);
+        kern.proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+        let fwd = kern.forward(&q, &k, &v, None);
+        // the tight margin must actually prune sub-tiles for this to bite
+        let mut pruned = false;
+        for bi in 0..fwd.mask.tm {
+            for &bj in &fwd.mask.crit_rows[bi] {
+                if fwd.mask.occupied_block_fraction(bi, bj as usize) < 1.0 {
+                    pruned = true;
+                }
+            }
+        }
+        assert!(pruned, "margin 0.15 should prune at least one sub-tile");
+        let mask = Arc::clone(&fwd.mask);
+        let grads = kern.backward(&q, &k, &v, &fwd, &fwd.o);
+        let loss = |q: &Mat, k: &Mat, v: &Mat| -> f64 {
+            let kk = SlaKernel::with_proj(c.clone(), kern.proj.clone());
+            let out = kk.forward(q, k, v, Some(&mask));
+            out.o.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>() / 2.0
+        };
+        let eps = 3e-3f32;
+        let mut prng = Rng::new(42);
+        let checks: [(&Mat, &Mat, &str); 3] =
+            [(&q, &grads.dq, "dq"), (&k, &grads.dk, "dk"), (&v, &grads.dv, "dv")];
+        for (mat, grad, name) in checks {
+            for _ in 0..5 {
+                let idx = prng.below(mat.data.len());
+                let mut plus = mat.clone();
+                plus.data[idx] += eps;
+                let mut minus = mat.clone();
+                minus.data[idx] -= eps;
+                let (lp, lm) = match name {
+                    "dq" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    "dk" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
                 };
                 let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
                 let ana = grad.data[idx];

@@ -4,7 +4,7 @@
 
 use super::full::{online_softmax_step, EPS, NEG_INF};
 use super::mask::CompressedMask;
-use crate::tensor::Mat;
+use crate::tensor::{microkernel as mk, Mat};
 use crate::util::threadpool;
 
 /// Sparse forward: softmax restricted to critical blocks. Returns (O, lse).
@@ -41,6 +41,7 @@ pub fn sparse_forward_threads(
     {
         let o_ptr = SendSlice(o.data.as_mut_ptr());
         let lse_ptr = SendSlice(lse.as_mut_ptr());
+        let (qv, kv, vv) = (q.view(), k.view(), v.view());
         threadpool::parallel_for_chunks(tm, threads, |b0, b1| {
             let mut s = vec![0.0f32; bq * bkv];
             for bi in b0..b1 {
@@ -48,13 +49,31 @@ pub fn sparse_forward_threads(
                 let mut m = vec![NEG_INF; bq];
                 let mut l = vec![0.0f32; bq];
                 let mut acc = vec![0.0f32; bq * dv];
-                // lookup table: only critical blocks are touched
+                // lookup table: only critical blocks are touched, and within
+                // one only its occupied sub-tile runs (a full run when the
+                // mask carries no occupancy)
                 for &bj in &mask.crit_rows[bi] {
-                    let c0 = bj as usize * bkv;
-                    online_softmax_step(
-                        q, k, v, r0, c0, bq, bkv, dv, scale, &mut s, &mut m, &mut l,
-                        &mut acc,
-                    );
+                    let bj = bj as usize;
+                    let c0 = bj * bkv;
+                    for (roff, rlen) in mask.occ_row_runs(bi, bj, bq) {
+                        for (coff, clen) in mask.occ_col_runs(bi, bj, bkv) {
+                            online_softmax_step(
+                                qv,
+                                kv,
+                                vv,
+                                r0 + roff,
+                                c0 + coff,
+                                rlen,
+                                clen,
+                                dv,
+                                scale,
+                                &mut s,
+                                &mut m[roff..roff + rlen],
+                                &mut l[roff..roff + rlen],
+                                &mut acc[roff * dv..(roff + rlen) * dv],
+                            );
+                        }
+                    }
                 }
                 for r in 0..bq {
                     // SAFETY: disjoint row ranges per chunk.
@@ -115,78 +134,47 @@ pub fn sparse_backward(
     // D^s = rowsum(dO ⊙ O)
     let mut dsum = vec![0.0f32; n];
     for r in 0..n {
-        dsum[r] = dout.row(r).iter().zip(o.row(r)).map(|(a, b)| a * b).sum();
+        dsum[r] = mk::dot(dout.row(r), o.row(r));
     }
 
     let mut dq = Mat::zeros(n, d);
     let mut dk = Mat::zeros(n, d);
     let mut dv = Mat::zeros(n, dv_dim);
 
-    // Column-major pass (per KV block) using the column lookup tables.
-    let mut p = vec![0.0f32; bq * bkv];
-    let mut dp = vec![0.0f32; bq * bkv];
+    // Column-major pass (per KV block) using the column lookup tables:
+    // fused recompute-and-accumulate per occupied sub-tile run (no P / dP
+    // staging tiles). Rows the forward never touched (unoccupied in every
+    // critical block) keep lse = -inf and are skipped by the same runs here.
     for bj in 0..tn {
         let c0 = bj * bkv;
         for &bi in &mask.crit_cols[bj] {
-            let r0 = bi as usize * bq;
-            // recompute P_ij = exp(S - lse)
-            for r in 0..bq {
-                let qrow = q.row(r0 + r);
-                let li = lse[r0 + r];
-                for c in 0..bkv {
-                    let krow = k.row(c0 + c);
-                    let mut s = 0.0f32;
-                    for t in 0..d {
-                        s += qrow[t] * krow[t];
-                    }
-                    // lse is finite here: this row-block has >= 1 critical block
-                    p[r * bkv + c] = (s * scale - li).exp();
-                }
-            }
-            // dV_j += P^T dO_i ; dP = dO_i V_j^T
-            for r in 0..bq {
-                let dorow = dout.row(r0 + r);
-                for c in 0..bkv {
-                    let pv = p[r * bkv + c];
-                    if pv != 0.0 {
-                        let dvrow = dv.row_mut(c0 + c);
-                        for (dvv, &dov) in dvrow.iter_mut().zip(dorow) {
-                            *dvv += pv * dov;
-                        }
-                    }
-                    let vrow = v.row(c0 + c);
-                    let mut acc = 0.0f32;
-                    for (a, b) in dorow.iter().zip(vrow) {
-                        acc += a * b;
-                    }
-                    dp[r * bkv + c] = acc;
-                }
-            }
-            // dS = P ⊙ (dP - D^s); dQ_i += dS K_j * scale; dK_j += dS^T Q_i * scale
-            for r in 0..bq {
-                let ds_row = dsum[r0 + r];
-                let dqrow = dq.row_mut(r0 + r);
-                for c in 0..bkv {
-                    let ds = p[r * bkv + c] * (dp[r * bkv + c] - ds_row) * scale;
-                    if ds == 0.0 {
-                        continue;
-                    }
-                    let krow = k.row(c0 + c);
-                    for (dqv, &kv) in dqrow.iter_mut().zip(krow) {
-                        *dqv += ds * kv;
-                    }
-                }
-            }
-            for c in 0..bkv {
-                let dkrow = dk.row_mut(c0 + c);
-                for r in 0..bq {
-                    let ds = p[r * bkv + c] * (dp[r * bkv + c] - dsum[r0 + r]) * scale;
-                    if ds == 0.0 {
-                        continue;
-                    }
+            let bi = bi as usize;
+            let r0 = bi * bq;
+            for (roff, rlen) in mask.occ_row_runs(bi, bj, bq) {
+                for r in roff..roff + rlen {
                     let qrow = q.row(r0 + r);
-                    for (dkv, &qv) in dkrow.iter_mut().zip(qrow) {
-                        *dkv += ds * qv;
+                    let li = lse[r0 + r]; // finite: this row has >= 1 occupied run
+                    let dorow = dout.row(r0 + r);
+                    let dsr = dsum[r0 + r];
+                    let dqrow = dq.row_mut(r0 + r);
+                    for (coff, clen) in mask.occ_col_runs(bi, bj, bkv) {
+                        for c in coff..coff + clen {
+                            let krow = k.row(c0 + c);
+                            let pv = (mk::dot(qrow, krow) * scale - li).exp();
+                            if pv != 0.0 {
+                                // dV_j += P^T dO_i
+                                mk::axpy(dv.row_mut(c0 + c), pv, dorow);
+                            }
+                            // dS = P ⊙ (dP - D^s); dQ_i += dS K_j * scale;
+                            // dK_j += dS^T Q_i * scale
+                            let dpv = mk::dot(dorow, v.row(c0 + c));
+                            let ds = pv * (dpv - dsr) * scale;
+                            if ds == 0.0 {
+                                continue;
+                            }
+                            mk::axpy(dqrow, ds, krow);
+                            mk::axpy(dk.row_mut(c0 + c), ds, qrow);
+                        }
                     }
                 }
             }

@@ -122,6 +122,13 @@ pub struct ServeReport {
     /// Per-connection I/O errors survived by the TCP front-end (always 0
     /// for virtual-clock traces).
     pub conn_errors: u64,
+    /// Kernel threadpool utilization over this trace (deltas of the
+    /// process-wide `util::threadpool` counters): chunks executed by pool
+    /// workers, work items run inline on submitting threads, and total
+    /// worker idle-wait seconds.
+    pub pool_chunks: u64,
+    pub pool_inline: u64,
+    pub pool_idle_s: f64,
 }
 
 impl ServeReport {
@@ -155,6 +162,15 @@ impl ServeReport {
             return 0.0;
         }
         self.queue_wait_s / self.stats.len() as f64
+    }
+
+    /// Fraction of executed threadpool work that landed on pool workers.
+    pub fn pool_fraction(&self) -> f64 {
+        let total = self.pool_chunks + self.pool_inline;
+        if total == 0 {
+            return 0.0;
+        }
+        self.pool_chunks as f64 / total as f64
     }
 
     /// Fraction of plan lookups served from cache.
@@ -193,6 +209,15 @@ impl ServeReport {
                 self.queue_depth_max,
                 self.compute_s,
                 self.conn_errors,
+            ));
+        }
+        if self.pool_chunks + self.pool_inline > 0 {
+            s.push_str(&format!(
+                " pool[chunks={} inline={} pooled={:.0}% idle={:.2}s]",
+                self.pool_chunks,
+                self.pool_inline,
+                100.0 * self.pool_fraction(),
+                self.pool_idle_s,
             ));
         }
         if self.plan_hits + self.plan_misses > 0 {
@@ -354,6 +379,7 @@ impl<'b> Coordinator<'b> {
         let plan0 = self.backend.plan_stats().unwrap_or_default();
         let delta0 = self.backend.plan_delta().unwrap_or_default();
         let layers0 = self.backend.plan_layers();
+        let pool0 = crate::util::threadpool::pool_stats();
 
         while !pending.is_empty() || !active.is_empty() {
             // admit arrivals under the backpressure cap
@@ -429,6 +455,10 @@ impl<'b> Coordinator<'b> {
         report.stats.sort_by_key(|s| s.id);
         report.queue_wait_s = report.stats.iter().map(|s| s.wait_s).sum();
         report.compute_s = report.denoise_s;
+        let pd = crate::util::threadpool::pool_stats().delta(pool0);
+        report.pool_chunks = pd.pooled_chunks;
+        report.pool_inline = pd.inline_chunks;
+        report.pool_idle_s = pd.idle_wait_ns as f64 / 1e9;
         if let Some(p1) = self.backend.plan_stats() {
             report.plan_hits = p1.hits - plan0.hits;
             report.plan_misses = p1.misses - plan0.misses;
@@ -967,6 +997,20 @@ mod tests {
         );
         // an all-zero breakdown stays out of the summary
         assert!(!ServeReport::default().summary().contains("queue["));
+    }
+
+    #[test]
+    fn summary_surfaces_pool_utilization() {
+        let rep = ServeReport {
+            pool_chunks: 6,
+            pool_inline: 2,
+            pool_idle_s: 0.25,
+            ..Default::default()
+        };
+        let s = rep.summary();
+        assert!(s.contains("pool[chunks=6 inline=2 pooled=75% idle=0.25s]"), "{s}");
+        // an all-zero pool breakdown stays out of the summary
+        assert!(!ServeReport::default().summary().contains("pool["));
     }
 
     #[test]

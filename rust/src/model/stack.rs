@@ -48,7 +48,7 @@ use crate::attention::mask::CompressedMask;
 use crate::attention::plan::{RequestPlanCache, ServingPlanCache, SharedPlanCache, StackPlanner};
 use crate::attention::{BatchSlaEngine, BatchSlaOutput, SlaConfig};
 use crate::model::ParamStore;
-use crate::tensor::{Mat, Tens4};
+use crate::tensor::{microkernel as mk, Mat, Tens4};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 
@@ -62,7 +62,7 @@ pub fn rms_norm_rows(x: &Mat, eps: f32) -> Mat {
     let inv_c = 1.0 / x.cols as f32;
     for r in 0..x.rows {
         let row = x.row(r);
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() * inv_c;
+        let ms = mk::dot(row, row) * inv_c;
         let inv = 1.0 / (ms + eps).sqrt();
         for (o, &v) in out.row_mut(r).iter_mut().zip(row) {
             *o = v * inv;
@@ -91,9 +91,9 @@ pub fn rms_norm_backward(x: &Mat, dy: &Mat, eps: f32) -> Mat {
     for r in 0..x.rows {
         let xr = x.row(r);
         let dyr = dy.row(r);
-        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() * inv_c;
+        let ms = mk::dot(xr, xr) * inv_c;
         let s = 1.0 / (ms + eps).sqrt();
-        let dot: f32 = dyr.iter().zip(xr).map(|(a, b)| a * b).sum();
+        let dot = mk::dot(dyr, xr);
         let coef = dot * s * s * s * inv_c;
         for ((o, &dv), &xv) in out.row_mut(r).iter_mut().zip(dyr).zip(xr) {
             *o = s * dv - coef * xv;
@@ -567,8 +567,7 @@ impl DitStack {
                     let mut du = dq.matmul_nt(&lay.wq); // (N, C)
                     du.add_assign(&dk.matmul_nt(&lay.wk));
                     du.add_assign(&dv.matmul_nt(&lay.wv));
-                    let dmod: f32 =
-                        du.data.iter().zip(&nrm.data).map(|(a, c)| a * c).sum();
+                    let dmod = mk::dot(&du.data, &nrm.data);
                     du.scale(mods[bi]);
                     let dx = rms_norm_backward(&tape.h_in[bi], &du, self.norm_eps);
                     (dwq_i, dwk_i, dwv_i, dx, dmod)

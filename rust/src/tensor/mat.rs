@@ -1,5 +1,9 @@
-//! Row-major dense f32 matrix.
+//! Row-major dense f32 matrix, plus the zero-copy `MatView` the kernel hot
+//! path runs on. `Mat` and `MatView` share one set of matmul cores (the
+//! private `mm_*` functions below), so owning vs borrowing is purely a
+//! memory-traffic decision — numerics are identical.
 
+use crate::tensor::microkernel as mk;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -7,6 +11,107 @@ pub struct Mat {
     pub rows: usize,
     pub cols: usize,
     pub data: Vec<f32>,
+}
+
+/// Borrowed row-major `(rows x cols)` window over contiguous f32 data.
+///
+/// This is how the batched engine hands `Tens4` head slabs and row-block
+/// panels to the per-head kernels without materializing per-task copies:
+/// `Tens4::head_view` and `MatView::rows_view` are both O(1) pointer math.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Zero-copy sub-view of rows `[r0, r1)` (rows are contiguous).
+    #[inline]
+    pub fn rows_view(&self, r0: usize, r1: usize) -> MatView<'a> {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        MatView { rows: r1 - r0, cols: self.cols, data: &self.data[r0 * self.cols..r1 * self.cols] }
+    }
+
+    /// Materialize an owned copy (the boundary back into `Mat` land).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+
+    /// C = A @ B.
+    pub fn matmul(&self, b: MatView<'_>) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        mm_nn(self.rows, self.cols, self.data, b.cols, b.data)
+    }
+
+    /// C = A @ B^T (B given untransposed) — the QK^T shape.
+    pub fn matmul_nt(&self, b: MatView<'_>) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
+        mm_nt(self.rows, self.cols, self.data, b.rows, b.data)
+    }
+
+    /// C = A^T @ B (A given untransposed) — the K^T V shape.
+    pub fn matmul_tn(&self, b: MatView<'_>) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
+        mm_tn(self.rows, self.cols, self.data, b.cols, b.data)
+    }
+}
+
+/// C[i][j] = sum_k A[i][k] B[k][j]. i-k-j loop order: streams B rows through
+/// the `axpy` micro-kernel (bitwise-identical to the historical scalar loop).
+fn mm_nn(ar: usize, ac: usize, a: &[f32], bc: usize, b: &[f32]) -> Mat {
+    let mut out = Mat::zeros(ar, bc);
+    for i in 0..ar {
+        let arow = &a[i * ac..(i + 1) * ac];
+        let orow = &mut out.data[i * bc..(i + 1) * bc];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            mk::axpy(orow, av, &b[kk * bc..(kk + 1) * bc]);
+        }
+    }
+    out
+}
+
+/// C[i][j] = a_row(i) . b_row(j) via the 1x4-blocked laned GEMM tile
+/// (reduction-reordering: tolerance-gated callers only — see microkernel.rs).
+fn mm_nt(ar: usize, k: usize, a: &[f32], br: usize, b: &[f32]) -> Mat {
+    let mut out = Mat::zeros(ar, br);
+    mk::gemm_nt(a, ar, b, br, k, &mut out.data);
+    out
+}
+
+/// C[k][j] = sum_r A[r][k] B[r][j], axpy-accumulated over r (bitwise-identical
+/// to the historical scalar loop).
+fn mm_tn(ar: usize, ac: usize, a: &[f32], bc: usize, b: &[f32]) -> Mat {
+    let mut out = Mat::zeros(ac, bc);
+    for r in 0..ar {
+        let arow = &a[r * ac..(r + 1) * ac];
+        let brow = &b[r * bc..(r + 1) * bc];
+        for (ka, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            mk::axpy(&mut out.data[ka * bc..(ka + 1) * bc], av, brow);
+        }
+    }
+    out
 }
 
 impl Mat {
@@ -58,6 +163,12 @@ impl Mat {
         Mat::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
     }
 
+    /// Zero-copy borrowed view of the whole matrix.
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -70,61 +181,17 @@ impl Mat {
 
     /// C = A @ B.
     pub fn matmul(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, b.cols);
-        // i-k-j loop order: streams B rows, vectorizes the inner j loop.
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[kk * b.cols..(kk + 1) * b.cols];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += a * bv;
-                }
-            }
-        }
-        out
+        self.view().matmul(b.view())
     }
 
     /// C = A @ B^T (B given untransposed) — the QK^T shape.
     pub fn matmul_nt(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
-        let mut out = Mat::zeros(self.rows, b.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for j in 0..b.rows {
-                let brow = b.row(j);
-                let mut acc = 0.0f32;
-                for (x, y) in arow.iter().zip(brow) {
-                    acc += x * y;
-                }
-                out.data[i * b.rows + j] = acc;
-            }
-        }
-        out
+        self.view().matmul_nt(b.view())
     }
 
     /// C = A^T @ B (A given untransposed) — the K^T V shape.
     pub fn matmul_tn(&self, b: &Mat) -> Mat {
-        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
-        let mut out = Mat::zeros(self.cols, b.cols);
-        for r in 0..self.rows {
-            let arow = self.row(r);
-            let brow = b.row(r);
-            for (ka, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[ka * b.cols..(ka + 1) * b.cols];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += a * bv;
-                }
-            }
-        }
-        out
+        self.view().matmul_tn(b.view())
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
@@ -153,20 +220,13 @@ impl Mat {
         m
     }
 
-    /// Row-wise softmax in place.
+    /// Row-wise softmax in place (max / exp+sum / scale micro-kernels).
     pub fn softmax_rows(&mut self) {
         for r in 0..self.rows {
             let row = self.row_mut(r);
-            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0;
-            for x in row.iter_mut() {
-                *x = (*x - mx).exp();
-                sum += *x;
-            }
-            let inv = 1.0 / sum;
-            for x in row.iter_mut() {
-                *x *= inv;
-            }
+            let mx = mk::max(row, f32::NEG_INFINITY);
+            let sum = mk::exp_sub_sum(row, mx);
+            mk::scale(row, 1.0 / sum);
         }
     }
 
@@ -265,5 +325,28 @@ mod tests {
         let a = Mat::zeros(2, 3);
         let b = Mat::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn view_matmuls_are_bitwise_equal_to_owned() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(5, 7, &mut rng);
+        let b = Mat::randn(7, 4, &mut rng);
+        assert_eq!(a.view().matmul(b.view()), a.matmul(&b));
+        let c = Mat::randn(9, 7, &mut rng);
+        assert_eq!(a.view().matmul_nt(c.view()), a.matmul_nt(&c));
+        let d = Mat::randn(5, 3, &mut rng);
+        assert_eq!(a.view().matmul_tn(d.view()), a.matmul_tn(&d));
+    }
+
+    #[test]
+    fn rows_view_is_zero_copy_and_matches_rows_slice() {
+        let mut rng = Rng::new(7);
+        let m = Mat::randn(8, 5, &mut rng);
+        let v = m.view().rows_view(2, 6);
+        assert_eq!(v.to_mat(), m.rows_slice(2, 6));
+        // zero-copy: the sub-view aliases the parent allocation
+        assert_eq!(v.row(0).as_ptr(), m.row(2).as_ptr());
+        assert_eq!(v.at(1, 3), m.at(3, 3));
     }
 }

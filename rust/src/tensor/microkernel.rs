@@ -1,0 +1,395 @@
+//! Fixed-width f32 micro-kernels for the attention hot path.
+//!
+//! Every primitive here is written as 8-lane chunked-slice code that stable
+//! rustc/LLVM reliably autovectorizes (the offline toolchain has no crates.io
+//! and no nightly `std::simd`). Two numeric disciplines coexist:
+//!
+//! * **Bitwise-preserving** (`axpy`, `scale`, `max`): same per-element
+//!   operations in an order-independent or order-identical form — safe to
+//!   substitute under the repo's `assert_eq!`-level differential tests.
+//!   `axpy` deliberately uses plain `y += a * x` (NOT `mul_add`): FMA changes
+//!   rounding and would break bitwise parity with the scalar loops it
+//!   replaced.
+//! * **Reduction-reordering** (`dot`, `dot4`, `gemm_nt`, `exp_sub_sum`):
+//!   lane-array accumulation + pairwise tree reduce changes summation order
+//!   vs a sequential fold, introducing ~1e-6-scale relative differences.
+//!   Callers on tolerance-gated paths only; `dot_scalar` is retained as the
+//!   sequential reference for differential tests.
+//!
+//! The optional `arch-simd` cargo feature adds an AVX2/FMA intrinsic dot
+//! product behind runtime detection (`is_x86_feature_detected!`). It is OFF
+//! by default so default-build numerics are identical across hosts; FMA
+//! contracts `a*b + acc` into one rounding, so its results sit inside the
+//! same documented tolerance band, not the bitwise band.
+
+/// Fixed autovectorization width: 8 f32 lanes (one AVX2 register, two NEON).
+pub const LANES: usize = 8;
+
+/// Pairwise tree reduction of one lane array — fixed order, so a given
+/// input always reduces to the same bits.
+#[inline]
+fn reduce_lanes(l: [f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Sequential left-to-right dot product: the scalar reference the laned
+/// kernels are differentially tested against.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Laned dot product (8 parallel accumulators + tree reduce + scalar tail).
+/// With the `arch-simd` feature on an AVX2+FMA host this dispatches to the
+/// intrinsic path.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
+    {
+        if avx::usable() {
+            // SAFETY: avx2+fma presence checked at runtime just above.
+            return unsafe { avx::dot_fma(a, b) };
+        }
+    }
+    dot_portable(a, b)
+}
+
+/// The portable laned dot product (always available; `dot` without the
+/// arch-intrinsic dispatch).
+#[inline]
+pub fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for t in 0..LANES {
+            lanes[t] += xa[t] * xb[t];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    reduce_lanes(lanes) + tail
+}
+
+/// Four dot products sharing one load of the `a` row: the 1x4 register tile
+/// `gemm_nt` is built from. Purely portable (LLVM keeps all four lane arrays
+/// in registers); the `arch-simd` dispatch lives in `dot` only.
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32, f32, f32) {
+    let n = a.len();
+    debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+    let mut l0 = [0.0f32; LANES];
+    let mut l1 = [0.0f32; LANES];
+    let mut l2 = [0.0f32; LANES];
+    let mut l3 = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut c0 = b0.chunks_exact(LANES);
+    let mut c1 = b1.chunks_exact(LANES);
+    let mut c2 = b2.chunks_exact(LANES);
+    let mut c3 = b3.chunks_exact(LANES);
+    for ((((xa, x0), x1), x2), x3) in (&mut ca).zip(&mut c0).zip(&mut c1).zip(&mut c2).zip(&mut c3)
+    {
+        for t in 0..LANES {
+            let av = xa[t];
+            l0[t] += av * x0[t];
+            l1[t] += av * x1[t];
+            l2[t] += av * x2[t];
+            l3[t] += av * x3[t];
+        }
+    }
+    let mut s0 = reduce_lanes(l0);
+    let mut s1 = reduce_lanes(l1);
+    let mut s2 = reduce_lanes(l2);
+    let mut s3 = reduce_lanes(l3);
+    let ra = ca.remainder();
+    let (r0, r1, r2, r3) = (c0.remainder(), c1.remainder(), c2.remainder(), c3.remainder());
+    for (t, &av) in ra.iter().enumerate() {
+        s0 += av * r0[t];
+        s1 += av * r1[t];
+        s2 += av * r2[t];
+        s3 += av * r3[t];
+    }
+    (s0, s1, s2, s3)
+}
+
+/// `out[i*br + j] = a_row(i) . b_row(j)` — the A @ B^T (QK^T-shaped) GEMM on
+/// raw row-major panels, 1x4 column-blocked so each pass over the `a` row
+/// feeds four accumulator tiles. Overwrites `out`.
+pub fn gemm_nt(a: &[f32], ar: usize, b: &[f32], br: usize, kdim: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), ar * kdim);
+    debug_assert_eq!(b.len(), br * kdim);
+    debug_assert_eq!(out.len(), ar * br);
+    let br4 = br - br % 4;
+    for i in 0..ar {
+        let arow = &a[i * kdim..(i + 1) * kdim];
+        let orow = &mut out[i * br..(i + 1) * br];
+        let mut j = 0;
+        while j < br4 {
+            let (d0, d1, d2, d3) = dot4(
+                arow,
+                &b[j * kdim..(j + 1) * kdim],
+                &b[(j + 1) * kdim..(j + 2) * kdim],
+                &b[(j + 2) * kdim..(j + 3) * kdim],
+                &b[(j + 3) * kdim..(j + 4) * kdim],
+            );
+            orow[j] = d0;
+            orow[j + 1] = d1;
+            orow[j + 2] = d2;
+            orow[j + 3] = d3;
+            j += 4;
+        }
+        while j < br {
+            orow[j] = dot(arow, &b[j * kdim..(j + 1) * kdim]);
+            j += 1;
+        }
+    }
+}
+
+/// `y += a * x`, elementwise. Bitwise-identical to the scalar loop it
+/// replaces (no FMA in the portable build), and in vectorizable form.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// `y *= s`, elementwise (bitwise-identical to the scalar loop).
+#[inline]
+pub fn scale(y: &mut [f32], s: f32) {
+    for v in y.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Max over a slice folded from `lo`. `f32::max` follows IEEE-754
+/// maximumNumber, which is associative and commutative over the values the
+/// kernels feed it, so the laned fold is bitwise-equal to the sequential one.
+#[inline]
+pub fn max(xs: &[f32], lo: f32) -> f32 {
+    let mut lanes = [lo; LANES];
+    let mut cx = xs.chunks_exact(LANES);
+    for xa in &mut cx {
+        for t in 0..LANES {
+            lanes[t] = lanes[t].max(xa[t]);
+        }
+    }
+    let mut m = lo;
+    for &x in cx.remainder() {
+        m = m.max(x);
+    }
+    for &l in &lanes {
+        m = m.max(l);
+    }
+    m
+}
+
+/// In place `v = exp(v - mx)` per element, returning the laned sum. The
+/// exponentials are bitwise-identical to the scalar path (elementwise); only
+/// the returned sum reorders, so callers comparing outputs bitwise must share
+/// this code path on both sides (they do: every kernel routes through here).
+#[inline]
+pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut cx = row.chunks_exact_mut(LANES);
+    for xa in &mut cx {
+        for t in 0..LANES {
+            xa[t] = (xa[t] - mx).exp();
+            lanes[t] += xa[t];
+        }
+    }
+    let mut tail = 0.0f32;
+    for x in cx.into_remainder() {
+        *x = (*x - mx).exp();
+        tail += *x;
+    }
+    reduce_lanes(lanes) + tail
+}
+
+/// AVX2/FMA intrinsic path, compiled only under `--features arch-simd` on
+/// x86_64 and entered only after `is_x86_feature_detected!` confirms support.
+#[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
+pub mod avx {
+    use core::arch::x86_64::*;
+
+    #[inline]
+    pub fn usable() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support at runtime (`usable()`).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot_fma(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let main = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+            i += 8;
+        }
+        // horizontal reduce: 256 -> 128 -> 64 -> 32 bits
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let lo = _mm256_castps256_ps128(acc);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        let mut out = _mm_cvtss_f32(s);
+        while i < n {
+            out += a[i] * b[i];
+            i += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const SIZES: [usize; 7] = [0, 1, 7, 8, 9, 31, 64];
+
+    #[test]
+    fn dot_matches_scalar_reference_within_tolerance() {
+        let mut rng = Rng::new(11);
+        for &n in &SIZES {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let laned = dot(&a, &b);
+            let seq = dot_scalar(&a, &b);
+            let scale = 1.0f32.max(seq.abs());
+            assert!(
+                (laned - seq).abs() <= 1e-5 * scale,
+                "n={n}: laned {laned} vs scalar {seq}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_portable_is_deterministic() {
+        let mut rng = Rng::new(12);
+        let a = rng.normal_vec(37);
+        let b = rng.normal_vec(37);
+        assert_eq!(dot_portable(&a, &b), dot_portable(&a, &b));
+    }
+
+    #[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
+    #[test]
+    fn arch_dot_within_tolerance_of_portable() {
+        let mut rng = Rng::new(13);
+        let a = rng.normal_vec(100);
+        let b = rng.normal_vec(100);
+        let d = dot(&a, &b);
+        let p = dot_portable(&a, &b);
+        assert!((d - p).abs() <= 1e-4 * 1.0f32.max(p.abs()), "{d} vs {p}");
+    }
+
+    #[test]
+    fn dot4_matches_four_dots() {
+        let mut rng = Rng::new(14);
+        for &n in &SIZES {
+            let a = rng.normal_vec(n);
+            let bs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+            let (d0, d1, d2, d3) = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for (got, b) in [d0, d1, d2, d3].iter().zip(&bs) {
+                let want = dot_scalar(&a, b);
+                assert!((got - want).abs() <= 1e-5 * 1.0f32.max(want.abs()), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_per_cell_dot() {
+        let mut rng = Rng::new(15);
+        for &(ar, br, k) in &[(3usize, 5usize, 17usize), (4, 4, 8), (1, 6, 3), (5, 1, 9)] {
+            let a = rng.normal_vec(ar * k);
+            let b = rng.normal_vec(br * k);
+            let mut out = vec![0.0f32; ar * br];
+            gemm_nt(&a, ar, &b, br, k, &mut out);
+            for i in 0..ar {
+                for j in 0..br {
+                    let want = dot_scalar(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                    let got = out[i * br + j];
+                    assert!(
+                        (got - want).abs() <= 1e-5 * 1.0f32.max(want.abs()),
+                        "({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_is_bitwise_identical_to_scalar_loop() {
+        let mut rng = Rng::new(16);
+        for &n in &SIZES {
+            let x = rng.normal_vec(n);
+            let y0 = rng.normal_vec(n);
+            let a = 0.37f32;
+            let mut y1 = y0.clone();
+            axpy(&mut y1, a, &x);
+            let mut y2 = y0.clone();
+            for (yv, &xv) in y2.iter_mut().zip(&x) {
+                *yv += a * xv;
+            }
+            assert_eq!(y1, y2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn max_is_bitwise_identical_to_sequential_fold() {
+        let mut rng = Rng::new(17);
+        for &n in &SIZES {
+            let xs = rng.normal_vec(n);
+            let laned = max(&xs, f32::NEG_INFINITY);
+            let seq = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(laned.to_bits(), seq.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn exp_sub_sum_exponentials_bitwise_sum_tolerant() {
+        let mut rng = Rng::new(18);
+        for &n in &SIZES {
+            let base = rng.normal_vec(n);
+            let mx = max(&base, f32::NEG_INFINITY);
+            let mut laned_row = base.clone();
+            let laned_sum = exp_sub_sum(&mut laned_row, mx);
+            let mut seq_row = base.clone();
+            let mut seq_sum = 0.0f32;
+            for v in seq_row.iter_mut() {
+                *v = (*v - mx).exp();
+                seq_sum += *v;
+            }
+            assert_eq!(laned_row, seq_row, "n={n}: exponentials must be elementwise-exact");
+            if n > 0 {
+                assert!((laned_sum - seq_sum).abs() <= 1e-5 * seq_sum.abs(), "n={n}");
+            } else {
+                assert_eq!(laned_sum, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_matches_scalar() {
+        let mut rng = Rng::new(19);
+        let base = rng.normal_vec(23);
+        let mut a = base.clone();
+        scale(&mut a, 0.125);
+        let b: Vec<f32> = base.iter().map(|v| v * 0.125).collect();
+        assert_eq!(a, b);
+    }
+}

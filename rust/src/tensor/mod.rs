@@ -5,9 +5,10 @@
 //! fans out over. No external dependencies.
 
 mod mat;
+pub mod microkernel;
 mod ops;
 mod tens4;
 
-pub use mat::Mat;
+pub use mat::{Mat, MatView};
 pub use ops::{spectral_norm, stable_rank};
 pub use tens4::Tens4;

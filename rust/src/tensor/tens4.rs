@@ -5,7 +5,7 @@
 //! side, and it matches how the packed token layout `[B, N, H*d]` used by
 //! the DiT qkv projections interleaves heads (see `from_packed`).
 
-use super::Mat;
+use super::{Mat, MatView};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -72,9 +72,18 @@ impl Tens4 {
         &mut self.data[r]
     }
 
-    /// Head `(bi, hi)` as an owned `Mat` (the per-head kernels take `&Mat`).
+    /// Head `(bi, hi)` as an owned `Mat` (for callers that need ownership;
+    /// the kernel hot path uses `head_view` instead).
     pub fn head_mat(&self, bi: usize, hi: usize) -> Mat {
         Mat::from_vec(self.n, self.d, self.head(bi, hi).to_vec())
+    }
+
+    /// Zero-copy `(n x d)` view of head `(bi, hi)` — the slab is contiguous,
+    /// so this is pure pointer math. The batched engine fans these out to
+    /// the per-head kernels without materializing per-task copies.
+    #[inline]
+    pub fn head_view(&self, bi: usize, hi: usize) -> MatView<'_> {
+        MatView { rows: self.n, cols: self.d, data: self.head(bi, hi) }
     }
 
     pub fn set_head(&mut self, bi: usize, hi: usize, m: &Mat) {
@@ -191,6 +200,19 @@ mod tests {
         // layout check: data is [b0h0, b0h1, b0h2, b1h0, ...]
         for (i, chunk) in t.data.chunks(4 * 5).enumerate() {
             assert!(chunk.iter().all(|&x| x == i as f32));
+        }
+    }
+
+    #[test]
+    fn head_view_aliases_head_mat() {
+        let mut rng = Rng::new(9);
+        let t = Tens4::randn(2, 3, 6, 4, &mut rng);
+        for bi in 0..2 {
+            for hi in 0..3 {
+                let v = t.head_view(bi, hi);
+                assert_eq!(v.to_mat(), t.head_mat(bi, hi));
+                assert_eq!(v.data.as_ptr(), t.head(bi, hi).as_ptr());
+            }
         }
     }
 

@@ -17,7 +17,7 @@
 //! in-flight chunk can outlive the stack frame that owns its closure.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
 use super::sendptr::SendPtr;
@@ -68,6 +68,62 @@ struct Pool {
 static POOL: OnceLock<&'static Pool> = OnceLock::new();
 static POOL_THREADS: AtomicUsize = AtomicUsize::new(0);
 
+// Utilization counters (process-wide, monotone; Relaxed — observability
+// only, never used for synchronization). "Pooled" chunks ran on a worker
+// thread; "inline" work ran on the submitting thread, either as a
+// fast-path whole call (tiny n, single thread, nested call) or as a chunk
+// the submitter drained while waiting for its own job.
+static POOLED_CHUNKS: AtomicU64 = AtomicU64::new(0);
+static INLINE_CHUNKS: AtomicU64 = AtomicU64::new(0);
+static IDLE_WAIT_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide pool utilization counters. Counters are
+/// monotone; subtract two snapshots (`delta`) to attribute work to a
+/// region, e.g. one serving trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Chunks executed by persistent pool workers.
+    pub pooled_chunks: u64,
+    /// Work items executed on the submitting thread (fast paths + drains).
+    pub inline_chunks: u64,
+    /// Total ns pool workers spent blocked waiting for work.
+    pub idle_wait_ns: u64,
+    /// Persistent worker threads spawned so far.
+    pub threads: usize,
+}
+
+impl PoolStats {
+    /// Counter increments since `base` (saturating; counters are monotone
+    /// so saturation only guards against snapshot misuse).
+    pub fn delta(self, base: PoolStats) -> PoolStats {
+        PoolStats {
+            pooled_chunks: self.pooled_chunks.saturating_sub(base.pooled_chunks),
+            inline_chunks: self.inline_chunks.saturating_sub(base.inline_chunks),
+            idle_wait_ns: self.idle_wait_ns.saturating_sub(base.idle_wait_ns),
+            threads: self.threads,
+        }
+    }
+
+    /// Fraction of executed chunks that landed on pool workers.
+    pub fn pooled_fraction(&self) -> f64 {
+        let total = self.pooled_chunks + self.inline_chunks;
+        if total == 0 {
+            return 0.0;
+        }
+        self.pooled_chunks as f64 / total as f64
+    }
+}
+
+/// Current utilization counters.
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        pooled_chunks: POOLED_CHUNKS.load(Ordering::Relaxed),
+        inline_chunks: INLINE_CHUNKS.load(Ordering::Relaxed),
+        idle_wait_ns: IDLE_WAIT_NS.load(Ordering::Relaxed),
+        threads: POOL_THREADS.load(Ordering::Relaxed),
+    }
+}
+
 thread_local! {
     static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
@@ -103,10 +159,15 @@ fn worker_loop(p: &'static Pool) {
         match q.pop_front() {
             Some(c) => {
                 drop(q);
+                POOLED_CHUNKS.fetch_add(1, Ordering::Relaxed);
                 run_chunk(c);
                 q = p.queue.lock().unwrap();
             }
-            None => q = p.cv.wait(q).unwrap(),
+            None => {
+                let t0 = std::time::Instant::now();
+                q = p.cv.wait(q).unwrap();
+                IDLE_WAIT_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -155,12 +216,14 @@ where
     }
     let threads = threads.max(1).min(n);
     if threads <= 1 || n <= 1 || IS_POOL_WORKER.with(|x| x.get()) {
+        INLINE_CHUNKS.fetch_add(1, Ordering::Relaxed);
         f(0, n);
         return;
     }
     let chunk = n.div_ceil(threads);
     let nchunks = n.div_ceil(chunk);
     if nchunks <= 1 {
+        INLINE_CHUNKS.fetch_add(1, Ordering::Relaxed);
         f(0, n);
         return;
     }
@@ -189,7 +252,10 @@ where
     loop {
         let c = p.queue.lock().unwrap().pop_front();
         match c {
-            Some(c) => run_chunk(c),
+            Some(c) => {
+                INLINE_CHUNKS.fetch_add(1, Ordering::Relaxed);
+                run_chunk(c);
+            }
             None => break,
         }
     }
@@ -314,6 +380,22 @@ mod tests {
         });
         let v = parallel_map(100, 4, |i| i * 2);
         assert_eq!(v, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_stats_count_executed_work() {
+        let before = pool_stats();
+        // fast path: single-thread call counts as one inline item
+        parallel_for_chunks(32, 1, |_, _| {});
+        // pooled path: chunks land on workers and/or the draining submitter
+        parallel_for_chunks(256, 4, |_, _| {});
+        let d = pool_stats().delta(before);
+        assert!(d.inline_chunks >= 1, "fast path must count inline: {d:?}");
+        assert!(
+            d.pooled_chunks + d.inline_chunks >= 2,
+            "dispatched chunks must be counted: {d:?}"
+        );
+        assert!(d.pooled_fraction() >= 0.0 && d.pooled_fraction() <= 1.0);
     }
 
     #[test]

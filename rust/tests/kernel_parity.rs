@@ -1,0 +1,345 @@
+//! Differential parity for the vectorized kernel hot path against a
+//! scalar reference implementation written with plain index loops and
+//! `microkernel::dot_scalar` — the retained scalar path the SIMD
+//! primitives are audited against.
+//!
+//! Discipline mirrors the kernel docs: paths that preserve summation
+//! order are compared BITWISE (forward-only vs full forward, all-occupied
+//! occupancy vs no occupancy, batched views vs per-head copies); paths
+//! where blocking/laning reorders f32 reductions are compared under a
+//! documented tolerance (scalar reference vs tiled kernel: 1e-4 on these
+//! shapes). Also: sub-block occupancy property tests and FD gradient
+//! checks re-run through the vectorized backward.
+
+use std::sync::Arc;
+
+use sla_dit::attention::full::EPS;
+use sla_dit::attention::mask::{predict_mask, predict_mask_fg};
+use sla_dit::attention::opt::AggStrategy;
+use sla_dit::attention::{
+    sla_backward, sla_forward, sla_forward_only, BatchSlaEngine, CompressedMask, FgConfig,
+    MaskPolicy, Phi, SlaConfig, SubBlockOcc,
+};
+use sla_dit::tensor::microkernel::dot_scalar;
+use sla_dit::tensor::{Mat, Tens4};
+use sla_dit::util::rng::Rng;
+
+fn cfg(block: usize) -> SlaConfig {
+    SlaConfig {
+        bq: block,
+        bkv: block,
+        kh_pct: 25.0,
+        kl_pct: 25.0,
+        threads: 3, // results must not depend on the fan-out
+        ..Default::default()
+    }
+}
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(n, d, &mut rng),
+        Mat::randn(n, d, &mut rng),
+        Mat::randn(n, d, &mut rng),
+    )
+}
+
+/// Scalar reference of the full SLA forward semantics (Algorithm 1 +
+/// Eq. 6), honoring per-critical-block occupancy runs: per-row softmax
+/// over the occupied critical columns, the marginal linear branch via
+/// explicitly materialized H_i/z_i, then O = O^s + O^l proj.
+fn reference_sla(cfg: &SlaConfig, proj: &Mat, q: &Mat, k: &Mat, v: &Mat,
+                 mask: &CompressedMask) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    let dv = v.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let qphi = cfg.phi.apply(q);
+    let kphi = cfg.phi.apply(k);
+    let tm = n / cfg.bq;
+    let mut o = Mat::zeros(n, dv);
+    for bi in 0..tm {
+        let r0 = bi * cfg.bq;
+        let mut h = Mat::zeros(d, dv);
+        let mut z = vec![0.0f32; d];
+        for &bj in &mask.marg_rows[bi] {
+            let c0 = bj as usize * cfg.bkv;
+            for c in c0..c0 + cfg.bkv {
+                for t in 0..d {
+                    z[t] += kphi.at(c, t);
+                    for u in 0..dv {
+                        *h.at_mut(t, u) += kphi.at(c, t) * v.at(c, u);
+                    }
+                }
+            }
+        }
+        let have_marg = !mask.marg_rows[bi].is_empty();
+        for rr in 0..cfg.bq {
+            let r = r0 + rr;
+            // occupied critical columns of this row
+            let mut cols: Vec<usize> = Vec::new();
+            for &bj in &mask.crit_rows[bi] {
+                let bj = bj as usize;
+                let row_occupied = mask
+                    .occ_row_runs(bi, bj, cfg.bq)
+                    .any(|(off, len)| rr >= off && rr < off + len);
+                if !row_occupied {
+                    continue;
+                }
+                let c0 = bj * cfg.bkv;
+                for (off, len) in mask.occ_col_runs(bi, bj, cfg.bkv) {
+                    cols.extend(c0 + off..c0 + off + len);
+                }
+            }
+            let mut orow = vec![0.0f32; dv];
+            if !cols.is_empty() {
+                let s: Vec<f32> =
+                    cols.iter().map(|&c| dot_scalar(q.row(r), k.row(c)) * scale).collect();
+                let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let l: f32 = s.iter().map(|&x| (x - mx).exp()).sum();
+                if l > 0.0 {
+                    for (si, &c) in s.iter().zip(&cols) {
+                        let w = (si - mx).exp() / l.max(EPS);
+                        for u in 0..dv {
+                            orow[u] += w * v.at(c, u);
+                        }
+                    }
+                }
+            }
+            if have_marg {
+                let den = dot_scalar(qphi.row(r), &z) + EPS;
+                let mut ol = vec![0.0f32; dv];
+                for t in 0..d {
+                    let a = qphi.at(r, t);
+                    for u in 0..dv {
+                        ol[u] += a * h.at(t, u);
+                    }
+                }
+                for x in &mut ol {
+                    *x /= den;
+                }
+                for u2 in 0..dv {
+                    let mut acc = 0.0f32;
+                    for (u, olv) in ol.iter().enumerate() {
+                        acc += olv * proj.at(u, u2);
+                    }
+                    orow[u2] += acc;
+                }
+            }
+            o.row_mut(r).copy_from_slice(&orow);
+        }
+    }
+    o
+}
+
+#[test]
+fn sla_forward_matches_scalar_reference_across_phi_and_agg() {
+    let (n, d) = (64usize, 8usize);
+    for (pi, phi) in [Phi::Softmax, Phi::Elu1, Phi::Relu].into_iter().enumerate() {
+        for (ai, agg) in [
+            AggStrategy::Naive,
+            AggStrategy::PreAggregate,
+            AggStrategy::FourRussians { g: 4 },
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let seed = 500 + (pi * 10 + ai) as u64;
+            let (q, k, v) = qkv(n, d, seed);
+            let c = SlaConfig { phi, agg, ..cfg(8) };
+            let mut rng = Rng::new(seed ^ 0x55);
+            let proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+            let mask = Arc::new(predict_mask(
+                &q,
+                &k,
+                c.bq,
+                c.bkv,
+                MaskPolicy::Sla { kh_pct: c.kh_pct, kl_pct: c.kl_pct },
+            ));
+            let out = sla_forward(&c, &proj, &q, &k, &v, Some(&mask));
+            let reference = reference_sla(&c, &proj, &q, &k, &v, &mask);
+            let diff = out.o.max_abs_diff(&reference);
+            assert!(diff <= 1e-4, "{phi:?}/{agg:?}: scalar-ref diff {diff}");
+        }
+    }
+}
+
+#[test]
+fn fg_forward_matches_scalar_reference_on_occupied_runs() {
+    let (n, d) = (64usize, 8usize);
+    let (q, k, v) = qkv(n, d, 611);
+    let c = SlaConfig { fg: Some(FgConfig { sub: 4, margin: 0.2 }), ..cfg(8) };
+    let mut rng = Rng::new(612);
+    let proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+    let mask = Arc::new(predict_mask_fg(
+        &q,
+        &k,
+        c.bq,
+        c.bkv,
+        MaskPolicy::Sla { kh_pct: c.kh_pct, kl_pct: c.kl_pct },
+        c.fg,
+    ));
+    assert!(mask.occupancy().is_some(), "fg config must populate occupancy");
+    let out = sla_forward(&c, &proj, &q, &k, &v, Some(&mask));
+    let reference = reference_sla(&c, &proj, &q, &k, &v, &mask);
+    let diff = out.o.max_abs_diff(&reference);
+    assert!(diff <= 1e-4, "fg scalar-ref diff {diff}");
+}
+
+#[test]
+fn forward_only_matches_full_forward_bitwise_across_phi_and_fg() {
+    let (n, d) = (64usize, 8usize);
+    for (pi, phi) in [Phi::Softmax, Phi::Elu1, Phi::Relu].into_iter().enumerate() {
+        for fg in [None, Some(FgConfig { sub: 4, margin: 0.2 })] {
+            let (q, k, v) = qkv(n, d, 700 + pi as u64);
+            let c = SlaConfig { phi, fg, ..cfg(8) };
+            let mut rng = Rng::new(701 + pi as u64);
+            let proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+            let full = sla_forward(&c, &proj, &q, &k, &v, None);
+            let light = sla_forward_only(&c, &proj, &q, &k, &v, Some(&full.mask));
+            assert_eq!(
+                full.o.data, light.o.data,
+                "{phi:?} fg={}: forward-only must be bitwise",
+                fg.is_some()
+            );
+        }
+    }
+}
+
+#[test]
+fn gqa_batched_matches_per_head_kernel_bitwise_with_fg() {
+    // 4 query heads sharing 2 K/V heads, fine-grained sparsity on: the
+    // batched zero-copy view path must agree bitwise with per-head Mat
+    // copies through the same kernel.
+    let (b, h, kvh, n, d) = (2usize, 4usize, 2usize, 64usize, 8usize);
+    let base = SlaConfig { fg: Some(FgConfig { sub: 4, margin: 0.2 }), ..cfg(8) };
+    let mut rng = Rng::new(811);
+    let (q, k, v) = (
+        Tens4::randn(b, h, n, d, &mut rng),
+        Tens4::randn(b, kvh, n, d, &mut rng),
+        Tens4::randn(b, kvh, n, d, &mut rng),
+    );
+    let engine = BatchSlaEngine::with_projs(
+        base.clone(),
+        kvh,
+        (0..h).map(|_| Mat::randn(d, d, &mut rng).scaled(0.25)).collect(),
+    );
+    let out = engine.forward(&q, &k, &v);
+    let gsz = h / kvh;
+    for bi in 0..b {
+        for hi in 0..h {
+            let per = &out.per_head[bi * h + hi];
+            let (qm, km, vm) =
+                (q.head_mat(bi, hi), k.head_mat(bi, hi / gsz), v.head_mat(bi, hi / gsz));
+            let inner = SlaConfig { threads: 1, ..base.clone() };
+            let single = sla_forward(&inner, &engine.projs[hi], &qm, &km, &vm, Some(&per.mask));
+            assert_eq!(per.o.data, single.o.data, "head ({bi},{hi}) diverged");
+        }
+    }
+}
+
+#[test]
+fn occupancy_properties_hold_across_seeds() {
+    let (n, d, blk, sub) = (64usize, 8usize, 8usize, 4usize);
+    for seed in 0..10u64 {
+        let (q, k, _v) = qkv(n, d, 900 + seed);
+        let mask = predict_mask_fg(
+            &q,
+            &k,
+            blk,
+            blk,
+            MaskPolicy::Sla { kh_pct: 25.0, kl_pct: 25.0 },
+            Some(FgConfig { sub, margin: 0.5 }),
+        );
+        assert!(mask.occupancy().is_some());
+        for bi in 0..mask.tm {
+            for &bj in &mask.crit_rows[bi] {
+                let bj = bj as usize;
+                // a critical block is never fully dark: the argmax sub-tile
+                // is always kept on both axes
+                let mut prev_end = 0usize;
+                let mut covered = 0usize;
+                for (off, len) in mask.occ_row_runs(bi, bj, blk) {
+                    assert!(off >= prev_end, "runs must be disjoint and ascending");
+                    assert!(len > 0 && off + len <= blk, "run out of block bounds");
+                    assert_eq!(off % sub, 0, "runs start on sub-tile boundaries");
+                    prev_end = off + len;
+                    covered += len;
+                }
+                assert!(covered > 0, "critical block ({bi},{bj}) went dark");
+                assert!(mask.occ_col_runs(bi, bj, blk).count() > 0);
+                let frac = mask.occupied_block_fraction(bi, bj);
+                assert!(frac > 0.0 && frac <= 1.0, "fraction {frac} out of range");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_occupied_bitmap_collapses_to_dense_block_bitwise() {
+    let (n, d) = (64usize, 8usize);
+    let (q, k, v) = qkv(n, d, 1001);
+    let c = cfg(8);
+    let mut rng = Rng::new(1002);
+    let proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+    let policy = MaskPolicy::Sla { kh_pct: c.kh_pct, kl_pct: c.kl_pct };
+    let dense = Arc::new(predict_mask(&q, &k, c.bq, c.bkv, policy));
+    let occ = SubBlockOcc::all_occupied(dense.tm, dense.tn, 4, c.bq, c.bkv);
+    let tagged = Arc::new((*dense).clone().with_occupancy(occ));
+    let a = sla_forward(&c, &proj, &q, &k, &v, Some(&dense));
+    let b = sla_forward(&c, &proj, &q, &k, &v, Some(&tagged));
+    assert_eq!(a.o.data, b.o.data, "all-occupied forward must be dense-bitwise");
+    assert_eq!(a.lse, b.lse);
+    let dout = Mat::randn(n, d, &mut rng).scaled(0.1);
+    let ga = sla_backward(&c, &proj, &q, &k, &v, &a, &dout);
+    let gb = sla_backward(&c, &proj, &q, &k, &v, &b, &dout);
+    assert_eq!(ga.dq.data, gb.dq.data);
+    assert_eq!(ga.dk.data, gb.dk.data);
+    assert_eq!(ga.dv.data, gb.dv.data);
+}
+
+#[test]
+fn fd_gradients_through_vectorized_backward_across_phi() {
+    let (n, d) = (32usize, 8usize);
+    let eps = 3e-3f32;
+    let tol = 3e-2f32;
+    for (pi, phi) in [Phi::Elu1, Phi::Relu].into_iter().enumerate() {
+        let seed = 1100 + pi as u64 * 7;
+        let (q, k, v) = qkv(n, d, seed);
+        let c = SlaConfig { phi, threads: 1, ..cfg(8) };
+        let mut rng = Rng::new(seed ^ 0x77);
+        let proj = Mat::randn(d, d, &mut rng).scaled(0.3);
+        let w = Mat::randn(n, d, &mut rng);
+        let fwd = sla_forward(&c, &proj, &q, &k, &v, None);
+        let mask = Arc::clone(&fwd.mask);
+        let grads = sla_backward(&c, &proj, &q, &k, &v, &fwd, &w);
+        let loss = |q: &Mat, k: &Mat, v: &Mat| -> f32 {
+            let o = sla_forward(&c, &proj, q, k, v, Some(&mask)).o;
+            o.data.iter().zip(&w.data).map(|(a, b)| a * b).sum()
+        };
+        let check = |name: &str, x: &Mat, g: &Mat, idx: usize| {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let (lp, lm) = match name {
+                "dq" => (loss(&xp, &k, &v), loss(&xm, &k, &v)),
+                "dk" => (loss(&q, &xp, &v), loss(&q, &xm, &v)),
+                _ => (loss(&q, &k, &xp), loss(&q, &k, &xm)),
+            };
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = g.data[idx];
+            let denom = fd.abs().max(an.abs()).max(1.0);
+            assert!(
+                (fd - an).abs() / denom <= tol,
+                "{phi:?} {name}[{idx}]: fd {fd} vs analytic {an}"
+            );
+        };
+        let mut probe_rng = Rng::new(seed ^ 0x99);
+        for _ in 0..5 {
+            let idx = (probe_rng.normal_f32().abs() * 1e4) as usize % (n * d);
+            check("dq", &q, &grads.dq, idx);
+            check("dk", &k, &grads.dk, idx);
+            check("dv", &v, &grads.dv, idx);
+        }
+    }
+}
