@@ -6,8 +6,8 @@
 //!   cargo bench -- table1 fig6a  # a subset
 //!
 //! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack,
-//! stack_backward, adaptive_plan, serve, table1, table2, table3, perf,
-//! kernel. `batch`
+//! stack_backward, adaptive_plan, serve, routing, quant, table1, table2,
+//! table3, perf, kernel. `batch`
 //! compares the batched multi-head SLA engine against a serial per-head
 //! kernel loop on a [B=4, H=8, N=1024, d=64] workload; `plan` measures
 //! fresh-predict vs cached-plan step latency across plan refresh
@@ -39,6 +39,10 @@ mod microbench;
 mod perf;
 #[path = "harness/plans.rs"]
 mod plans;
+#[path = "harness/quant.rs"]
+mod quant;
+#[path = "harness/routing.rs"]
+mod routing;
 #[path = "harness/serve.rs"]
 mod serve;
 #[path = "harness/stack_backward.rs"]
@@ -64,6 +68,8 @@ fn main() {
         "stack_backward",
         "adaptive_plan",
         "serve",
+        "routing",
+        "quant",
         "table1",
         "table2",
         "table3",
@@ -90,6 +96,8 @@ fn main() {
             "stack_backward" => stack_backward::stack_backward(),
             "adaptive_plan" => adaptive_plan::adaptive_plan(),
             "serve" => serve::serve(),
+            "routing" => routing::routing(),
+            "quant" => quant::quant(),
             "table1" => tables::table1(),
             "table2" => tables::table2(),
             "table3" => tables::table3(),

@@ -1,0 +1,103 @@
+//! `quant` experiment: f32 vs f16-storage K/V + linear-state kernel path.
+//!
+//! Runs the same `[B, H, N, d]` workload through `BatchSlaEngine::forward`
+//! twice — `KvPrecision::F32` (the bitwise-reference default) and
+//! `KvPrecision::F16` (u16-stored K/V, kphi, H_i, Z_i with f32 accumulate) —
+//! and reports per-path latency plus the accuracy of the reduced-precision
+//! output against the f32 reference as `rel_l2` and `psnr`. Those two
+//! fields are gated by bench-compare's ABSOLUTE quality floors
+//! (`--rel-l2-max` / `--psnr-min`), so a quantization change that wrecks
+//! accuracy fails CI even on a seed run.
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes; the
+//! `BENCH_quant.json` artifact feeds both the perf and quality gates.
+
+use anyhow::Result;
+
+use sla_dit::attention::{BatchSlaEngine, KvPrecision, SlaConfig};
+use sla_dit::tensor::Tens4;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+use crate::common::{env_usize, log_result, shape_json, time_median, write_bench_json};
+
+pub fn quant() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (bsz, heads, n, d, blk, reps) = if smoke {
+        (2usize, 2usize, 128usize, 16usize, 16usize, 3usize)
+    } else {
+        (2, 8, env_usize("SLA_BENCH_PLAN_N", 1024), 64, 64, 5)
+    };
+    let base = SlaConfig {
+        bq: blk,
+        bkv: blk,
+        kh_pct: 5.0,
+        kl_pct: 10.0,
+        threads: sla_dit::util::threadpool::default_threads().min(8),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(950);
+    let q4 = Tens4::randn(bsz, heads, n, d, &mut rng);
+    let k4 = Tens4::randn(bsz, heads, n, d, &mut rng);
+    let v4 = Tens4::randn(bsz, heads, n, d, &mut rng);
+    println!(
+        "workload: B={bsz} H={heads} N={n} d={d} block={blk}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let eng_f32 = BatchSlaEngine::new(base.clone(), heads, d);
+    let eng_f16 = BatchSlaEngine::new(
+        SlaConfig { kv_precision: KvPrecision::F16, ..base.clone() },
+        heads,
+        d,
+    );
+    let t_f32 = time_median(reps, || {
+        let _ = eng_f32.forward(&q4, &k4, &v4);
+    });
+    let t_f16 = time_median(reps, || {
+        let _ = eng_f16.forward(&q4, &k4, &v4);
+    });
+
+    // accuracy of the reduced-precision path against the f32 reference.
+    // Mask prediction runs on un-quantized q/k in both configs, so the two
+    // outputs are the same sparse/linear mixture — the delta is purely the
+    // storage precision.
+    let ref_o = eng_f32.forward(&q4, &k4, &v4).o;
+    let f16_o = eng_f16.forward(&q4, &k4, &v4).o;
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    let mut peak = 0.0f64;
+    for (a, b) in f16_o.data.iter().zip(ref_o.data.iter()) {
+        let e = (*a as f64) - (*b as f64);
+        num += e * e;
+        den += (*b as f64) * (*b as f64);
+        peak = peak.max((*b as f64).abs());
+    }
+    let rel_l2 = (num / den.max(1e-30)).sqrt();
+    let mse = num / ref_o.data.len().max(1) as f64;
+    let psnr = if mse > 0.0 {
+        10.0 * (peak * peak / mse).log10()
+    } else {
+        99.0 // bit-identical outputs: report a capped ceiling, not inf
+    };
+
+    println!("\n{:<24} {:>12}", "kv precision", "ms/step");
+    println!("{:<24} {:>12.3}", "f32 (reference)", t_f32 * 1e3);
+    println!("{:<24} {:>12.3}", "f16 storage", t_f16 * 1e3);
+    println!("\nf16 vs f32: rel_l2 {rel_l2:.2e}, psnr {psnr:.1} dB");
+
+    let payload = Json::obj(vec![
+        ("shape", shape_json(bsz, heads, n, d, blk)),
+        ("f32_ns_per_step", Json::num(t_f32 * 1e9)),
+        ("f16_ns_per_step", Json::num(t_f16 * 1e9)),
+        ("f16_vs_f32", Json::num(t_f32 / t_f16)),
+        ("rel_l2", Json::num(rel_l2)),
+        ("psnr", Json::num(psnr)),
+    ]);
+    log_result("quant", payload.clone());
+    write_bench_json("quant", payload);
+    println!("\nexpected shape: f16 at or near f32 latency on this scalar testbed");
+    println!("(the win is the halved K/V + linear-state footprint) with rel_l2");
+    println!("around 1e-3 — far inside the bench-compare quality floors");
+    Ok(())
+}

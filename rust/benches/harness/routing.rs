@@ -1,0 +1,106 @@
+//! `routing` experiment: static Eq. 2-3 mask prediction vs the learnable
+//! `MaskRouter` scorer as the plan source.
+//!
+//! Both sources produce a full `AttentionPlan` for the same `[B, H, N, d]`
+//! workload; we time each predictor, time kernel execution under the routed
+//! plan, and report the label-agreement fraction between the untrained
+//! router (teacher-aligned init) and the static classifier. No `rel_l2`
+//! field on purpose: the router here is untrained, so an accuracy floor
+//! would gate noise — quality floors ride on the `quant` experiment, where
+//! the comparison is well-defined.
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes; the
+//! `BENCH_routing.json` artifact feeds the bench-compare perf gate.
+
+use anyhow::Result;
+
+use sla_dit::attention::{AttentionPlan, BatchSlaEngine, MaskRouter, SlaConfig};
+use sla_dit::tensor::Tens4;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+use crate::common::{env_usize, log_result, shape_json, time_median, write_bench_json};
+
+pub fn routing() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (bsz, heads, n, d, blk, rank, reps) = if smoke {
+        (2usize, 2usize, 128usize, 16usize, 16usize, 4usize, 3usize)
+    } else {
+        (2, 8, env_usize("SLA_BENCH_PLAN_N", 1024), 64, 64, 8, 5)
+    };
+    let cfg = SlaConfig {
+        bq: blk,
+        bkv: blk,
+        kh_pct: 5.0,
+        kl_pct: 10.0,
+        threads: sla_dit::util::threadpool::default_threads().min(8),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(940);
+    let q4 = Tens4::randn(bsz, heads, n, d, &mut rng);
+    let k4 = Tens4::randn(bsz, heads, n, d, &mut rng);
+    let v4 = Tens4::randn(bsz, heads, n, d, &mut rng);
+    let router = MaskRouter::new(heads, d, rank, 941);
+    println!(
+        "workload: B={bsz} H={heads} N={n} d={d} block={blk} rank={rank}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let t_static = time_median(reps, || {
+        let _ = AttentionPlan::predict(&cfg, &q4, &k4);
+    });
+    let t_router = time_median(reps, || {
+        let _ = router.predict_plan(&cfg, &q4, &k4);
+    });
+
+    // untimed side runs: agreement + routed-plan execution
+    let static_plan = AttentionPlan::predict(&cfg, &q4, &k4);
+    let routed_plan = router.predict_plan(&cfg, &q4, &k4);
+    let (mut agree, mut total) = (0usize, 0usize);
+    for bi in 0..bsz {
+        for hi in 0..heads {
+            let (sm, rm) = (static_plan.mask(bi, hi), routed_plan.mask(bi, hi));
+            for i in 0..sm.tm {
+                for j in 0..sm.tn {
+                    total += 1;
+                    if sm.label(i, j) == rm.label(i, j) {
+                        agree += 1;
+                    }
+                }
+            }
+        }
+    }
+    let agreement = agree as f64 / total.max(1) as f64;
+    let engine = BatchSlaEngine::new(cfg.clone(), heads, d);
+    let t_exec = time_median(reps, || {
+        let _ = engine.forward_plan(&q4, &k4, &v4, &routed_plan);
+    });
+
+    println!("\n{:<28} {:>12}", "predictor", "ms/plan");
+    println!("{:<28} {:>12.3}", "static Eq. 2-3", t_static * 1e3);
+    println!("{:<28} {:>12.3}", "learnable router", t_router * 1e3);
+    println!(
+        "\nrouter/static label agreement: {:.1}% over {} blocks; routed-plan \
+         forward {:.2} ms (sparsity {:.3})",
+        100.0 * agreement,
+        total,
+        t_exec * 1e3,
+        routed_plan.mean_sparsity
+    );
+
+    let payload = Json::obj(vec![
+        ("shape", shape_json(bsz, heads, n, d, blk)),
+        ("rank", Json::num(rank as f64)),
+        ("static_predict_ns_per_step", Json::num(t_static * 1e9)),
+        ("router_predict_ns_per_step", Json::num(t_router * 1e9)),
+        ("routed_forward_ns_per_step", Json::num(t_exec * 1e9)),
+        ("router_agreement", Json::num(agreement)),
+        ("routed_sparsity", Json::num(routed_plan.mean_sparsity)),
+    ]);
+    log_result("routing", payload.clone());
+    write_bench_json("routing", payload);
+    println!("\nexpected shape: router prediction within a small factor of the");
+    println!("static classifier (both are pooled-stat bound); agreement well");
+    println!("above chance at the teacher-aligned init, rising under training");
+    Ok(())
+}

@@ -131,6 +131,50 @@ pub fn precompute_state_view(kphi: &Mat, v: MatView<'_>, bkv: usize, threads: us
     LinearState { h, z }
 }
 
+/// Reduced-precision `precompute_state`: `kphi` and `v` arrive as f16
+/// storage (u16 bit patterns), products and accumulation run in f32
+/// (`microkernel::axpy_f16`), and the resulting `H_j`/`Z_j` state is
+/// quantized back to f16-representable values — so every storage surface
+/// of the linear branch sits at half precision while no arithmetic does
+/// (the `kv_precision = f16` path of `SlaConfig`).
+pub fn precompute_state_f16(
+    kphi: &crate::tensor::F16Mat,
+    v: &crate::tensor::F16Mat,
+    bkv: usize,
+    threads: usize,
+) -> LinearState {
+    let n = kphi.rows;
+    let d = kphi.cols;
+    let dv = v.cols;
+    let tn = n / bkv;
+    let h: Vec<Mat> = crate::util::threadpool::parallel_map(tn, threads, |bj| {
+        let mut hb = Mat::zeros(d, dv);
+        for r in bj * bkv..(bj + 1) * bkv {
+            let vrow = v.row(r);
+            for (t, &kb) in kphi.row(r).iter().enumerate() {
+                let a = crate::tensor::f16::f16_bits_to_f32(kb);
+                if a == 0.0 {
+                    continue;
+                }
+                mk::axpy_f16(hb.row_mut(t), a, vrow);
+            }
+        }
+        crate::tensor::f16::quantize_slice(&mut hb.data);
+        hb
+    });
+    let mut z = Mat::zeros(tn, d);
+    for bj in 0..tn {
+        let zrow = z.row_mut(bj);
+        for r in bj * bkv..(bj + 1) * bkv {
+            for (zc, &kb) in zrow.iter_mut().zip(kphi.row(r)) {
+                *zc += crate::tensor::f16::f16_bits_to_f32(kb);
+            }
+        }
+    }
+    crate::tensor::f16::quantize_slice(&mut z.data);
+    LinearState { h, z }
+}
+
 /// Global (unmasked) linear attention — the Linear-Only baseline.
 /// Inputs are already feature-mapped.
 pub fn linear_forward_global(qphi: &Mat, kphi: &Mat, v: &Mat) -> Mat {

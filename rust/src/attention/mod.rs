@@ -29,6 +29,7 @@ pub mod linear;
 pub mod mask;
 pub mod opt;
 pub mod plan;
+pub mod routing;
 pub mod sla;
 pub mod sparse;
 
@@ -44,7 +45,8 @@ pub use plan::{
     RefreshPolicy, RequestPlanCache, ServingPlanCache, ShareConfig, SharedPlanCache,
     SlaWorkspace, StackPlanner,
 };
+pub use routing::{MaskRouter, RouterGradients};
 pub use sla::{
     sla_backward, sla_backward_view, sla_forward, sla_forward_only, sla_forward_only_view,
-    sla_forward_view, SlaConfig, SlaKernel, SlaLightOutput, SlaOutput,
+    sla_forward_view, KvPrecision, SlaConfig, SlaKernel, SlaLightOutput, SlaOutput,
 };

@@ -47,6 +47,7 @@ use std::sync::{Arc, Mutex};
 use super::full::NEG_INF;
 use super::mask::{mask_churn, predict_mask_fg, CompressedMask, MaskPolicy};
 use super::opt::AggStrategy;
+use super::routing::MaskRouter;
 use super::sla::SlaConfig;
 use crate::tensor::Tens4;
 use crate::util::threadpool;
@@ -487,6 +488,11 @@ pub struct MaskPlanner {
     last_step: Option<u64>,
     stats: PlanStats,
     delta: PlanDeltaStats,
+    /// Alternative prediction source: when set, refreshes route through the
+    /// learnable scorer instead of the static Eq. 2-3 classifier. Cache
+    /// policy, aging, churn observation, and sharing are unchanged either
+    /// way - the router only swaps WHAT a refresh predicts, never WHEN.
+    router: Option<Arc<MaskRouter>>,
 }
 
 impl MaskPlanner {
@@ -508,7 +514,24 @@ impl MaskPlanner {
             last_step: None,
             stats: PlanStats::default(),
             delta: PlanDeltaStats::default(),
+            router: None,
         }
+    }
+
+    /// Route refreshes through a learnable mask router. Dropping the plan
+    /// here means the next step re-predicts under the new source instead of
+    /// serving a stale static plan.
+    pub fn with_router(mut self, router: Arc<MaskRouter>) -> Self {
+        self.router = Some(router);
+        self.plan = None;
+        self.age = 0;
+        self.last_step = None;
+        self
+    }
+
+    /// The learnable prediction source, if one is installed.
+    pub fn router(&self) -> Option<&Arc<MaskRouter>> {
+        self.router.as_ref()
     }
 
     /// Planner that predicts once and then keeps the plan frozen — the
@@ -551,7 +574,10 @@ impl MaskPlanner {
                 self.stats.refreshes += 1;
             }
             self.stats.misses += 1;
-            let fresh = Arc::new(AttentionPlan::predict(&self.cfg, q, k));
+            let fresh = Arc::new(match &self.router {
+                Some(rt) => rt.predict_plan(&self.cfg, q, k),
+                None => AttentionPlan::predict(&self.cfg, q, k),
+            });
             // churn vs the replaced plan is a pure OBSERVATION (it can
             // steer the NEXT interval, never which masks execute now) —
             // so Fixed policies stay bitwise-identical to the historical
@@ -1469,6 +1495,26 @@ impl StackPlanner {
     /// mask-frozen fine-tune regime, stack-wide.
     pub fn frozen(cfg: SlaConfig, depth: usize) -> Self {
         Self::new(cfg, depth, usize::MAX)
+    }
+
+    /// Install per-layer learnable routers (`routers.len()` = depth; a
+    /// `None` slot keeps that layer on the static Eq. 2-3 predictor).
+    pub fn with_routers(mut self, routers: &[Option<Arc<MaskRouter>>]) -> Self {
+        assert_eq!(
+            routers.len(),
+            self.planners.len(),
+            "one router slot per stack layer"
+        );
+        self.planners = self
+            .planners
+            .drain(..)
+            .zip(routers)
+            .map(|(p, r)| match r {
+                Some(rt) => p.with_router(Arc::clone(rt)),
+                None => p,
+            })
+            .collect();
+        self
     }
 
     pub fn depth(&self) -> usize {

@@ -1,0 +1,398 @@
+//! Learnable mask routing (SLA2-style): a small per-head scoring module
+//! that replaces the static Eq. 2–3 top-k classification as the plan
+//! prediction source.
+//!
+//! Per head `h`, pooled block statistics `qc_i = mean(Q-block i)` and
+//! `kc_j = mean(K-block j)` are projected through low-rank maps
+//! `Wq_h, Wk_h ∈ (d × r)` into a bilinear block score
+//! `s_ij = (qc_i Wq_h) · (kc_j Wk_h) / √r`, and three per-head affine
+//! heads turn the score into 3-way logits
+//! `logit_c = a_h[c] · s_ij + b_h[c]` over {critical, marginal,
+//! negligible}.
+//!
+//! Inference takes the **argmax** label per block (straight-through: the
+//! executed mask is hard, so the whole PR-2/5/6 plan-cache / governance /
+//! sharing machinery replays router plans unchanged). Training uses the
+//! **soft relaxation**: `softmax(logits)` is distilled against the static
+//! Eq. 2–3 teacher labels with a cross-entropy loss whose analytic
+//! gradients ([`MaskRouter::loss_and_grads`]) flow into per-layer
+//! `StackGradients` leaves through `DitStack::backward` — the executed
+//! masks stay frozen during a distillation run (the paper's mask-frozen
+//! regime), which is exactly the straight-through estimator: hard routing
+//! forward, soft gradients backward.
+//!
+//! Determinism: per-(batch, head) work fans out over the threadpool but
+//! all reductions run in slot-index order, so plans and gradients are
+//! thread-count invariant (pinned in `tests/routing_quant.rs`).
+
+use std::sync::Arc;
+
+use super::mask::{classify, pool_tokens, predict_occupancy, CompressedMask, Label, MaskPolicy};
+use super::plan::AttentionPlan;
+use super::sla::SlaConfig;
+use crate::tensor::{microkernel as mk, Mat, Tens4};
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// Gradients for every learnable router leaf (one entry per head), plus the
+/// soft-routing distillation loss they descend.
+#[derive(Clone, Debug)]
+pub struct RouterGradients {
+    pub dwq: Vec<Mat>,
+    pub dwk: Vec<Mat>,
+    pub da: Vec<[f32; 3]>,
+    pub db: Vec<[f32; 3]>,
+    pub loss: f32,
+}
+
+/// The learnable per-head 3-way block router.
+#[derive(Clone, Debug)]
+pub struct MaskRouter {
+    pub heads: usize,
+    pub d: usize,
+    pub rank: usize,
+    /// Per-head (d × rank) low-rank projections of the pooled Q stats.
+    pub wq: Vec<Mat>,
+    /// Per-head (d × rank) low-rank projections of the pooled K stats.
+    pub wk: Vec<Mat>,
+    /// Per-head class scales over the bilinear score [crit, marg, neg].
+    pub a: Vec<[f32; 3]>,
+    /// Per-head class biases [crit, marg, neg].
+    pub b: Vec<[f32; 3]>,
+}
+
+const CLASS_LABELS: [Label; 3] = [Label::Critical, Label::Marginal, Label::Negligible];
+
+impl MaskRouter {
+    /// Deterministic init: random low-rank maps scaled to O(1) scores, and
+    /// class heads `a = [1, 0, -1]`, `b = [0, 1/4, 0]` — high score →
+    /// critical, low → negligible, |s| < 1/4 → marginal — so an untrained
+    /// router already produces plausible 3-way masks.
+    pub fn new(heads: usize, d: usize, rank: usize, seed: u64) -> Self {
+        assert!(rank >= 1, "router rank must be >= 1");
+        let mut rng = Rng::new(seed ^ 0x526f_7574);
+        let sc = 1.0 / (d as f32).sqrt();
+        let mk_proj = |rng: &mut Rng| {
+            let mut w = Mat::randn(d, rank, rng);
+            w.scale(sc);
+            w
+        };
+        MaskRouter {
+            heads,
+            d,
+            rank,
+            wq: (0..heads).map(|_| mk_proj(&mut rng)).collect(),
+            wk: (0..heads).map(|_| mk_proj(&mut rng)).collect(),
+            a: vec![[1.0, 0.0, -1.0]; heads],
+            b: vec![[0.0, 0.25, 0.0]; heads],
+        }
+    }
+
+    /// Per-block bilinear scores for one head: (tm × tn).
+    fn scores(&self, hi: usize, qc: &Mat, kc: &Mat) -> Mat {
+        let eq = qc.matmul(&self.wq[hi]);
+        let ek = kc.matmul(&self.wk[hi]);
+        let mut s = eq.matmul_nt(&ek);
+        s.scale(1.0 / (self.rank as f32).sqrt());
+        s
+    }
+
+    /// Hard-routed mask for one head (straight-through argmax), mirroring
+    /// `predict_mask_fg`'s contract: like the static `counts_for` path, at
+    /// least one block per query row stays critical (the row's best-scoring
+    /// block), so no row ever loses its exact branch entirely; with an
+    /// `fg` config the critical blocks carry occupancy bitmaps.
+    pub fn route_head(&self, hi: usize, q: &Mat, k: &Mat, cfg: &SlaConfig) -> CompressedMask {
+        assert!(hi < self.heads, "head {hi} out of range");
+        assert_eq!(q.cols, self.d, "router trained for d={}, got {}", self.d, q.cols);
+        let qc = pool_tokens(q, cfg.bq);
+        let kc = pool_tokens(k, cfg.bkv);
+        let (tm, tn) = (qc.rows, kc.rows);
+        let s = self.scores(hi, &qc, &kc);
+        let (a, b) = (&self.a[hi], &self.b[hi]);
+        let mut labels = vec![0i8; tm * tn];
+        for i in 0..tm {
+            let srow = s.row(i);
+            let mut any_crit = false;
+            let mut best_j = 0usize;
+            for (j, &sv) in srow.iter().enumerate() {
+                // first-max argmax over the 3 logits (strict >: ties break
+                // toward the more conservative lower class index)
+                let logits = [a[0] * sv + b[0], a[1] * sv + b[1], a[2] * sv + b[2]];
+                let mut cls = 0usize;
+                for c in 1..3 {
+                    if logits[c] > logits[cls] {
+                        cls = c;
+                    }
+                }
+                labels[i * tn + j] = CLASS_LABELS[cls].to_i8();
+                if cls == 0 {
+                    any_crit = true;
+                }
+                if sv > srow[best_j] {
+                    best_j = j;
+                }
+            }
+            if !any_crit {
+                labels[i * tn + best_j] = Label::Critical.to_i8();
+            }
+        }
+        let mask = CompressedMask::from_labels(tm, tn, labels);
+        match cfg.fg {
+            Some(fg) => {
+                let occ = predict_occupancy(q, k, &mask, cfg.bq, cfg.bkv, fg);
+                mask.with_occupancy(occ)
+            }
+            None => mask,
+        }
+    }
+
+    /// Routed masks for every head of one batch item (GQA-aware); the
+    /// serving path uses this to resolve plan-cache misses before the
+    /// engine fan-out.
+    pub fn route_item(
+        &self,
+        cfg: &SlaConfig,
+        q: &Tens4,
+        k: &Tens4,
+        bi: usize,
+    ) -> Vec<Arc<CompressedMask>> {
+        let h = q.h;
+        assert_eq!(h, self.heads, "router trained for {} heads, got {h}", self.heads);
+        let gsz = h / k.h.max(1);
+        (0..h)
+            .map(|hi| {
+                Arc::new(self.route_head(
+                    hi,
+                    &q.head_mat(bi, hi),
+                    &k.head_mat(bi, hi / gsz.max(1)),
+                    cfg,
+                ))
+            })
+            .collect()
+    }
+
+    /// Routed counterpart of [`AttentionPlan::predict`]: one hard-routed
+    /// mask per (batch, head), fanned over the threadpool. Plans are
+    /// thread-count invariant (pure per-slot closures, slot-ordered
+    /// collection).
+    pub fn predict_plan(&self, cfg: &SlaConfig, q: &Tens4, k: &Tens4) -> AttentionPlan {
+        let (b, h, n, _d) = q.dims();
+        let (kb, kvh, kn, _kd) = k.dims();
+        assert_eq!(kb, b, "q/k batch mismatch");
+        assert_eq!(kn, n, "q/k sequence-length mismatch");
+        assert!(kvh > 0 && h % kvh == 0, "heads {h} % kv_heads {kvh} != 0");
+        assert_eq!(h, self.heads, "router trained for {} heads, got {h}", self.heads);
+        let gsz = h / kvh;
+        let fan = cfg.threads.max(1);
+        let masks: Vec<Arc<CompressedMask>> = threadpool::parallel_map_send(b * h, fan, |i| {
+            let (bi, hi) = (i / h, i % h);
+            let qm = q.head_mat(bi, hi);
+            let km = k.head_mat(bi, hi / gsz);
+            Arc::new(self.route_head(hi, &qm, &km, cfg))
+        });
+        AttentionPlan::from_masks(b, h, cfg.bq, cfg.bkv, masks)
+    }
+
+    /// Soft-relaxation distillation: mean cross-entropy of
+    /// `softmax(logits)` against the static Eq. 2–3 teacher labels over
+    /// every (batch, head, block), plus analytic gradients for every
+    /// router leaf. Per-(batch, head) partials fan over the threadpool and
+    /// reduce in slot-index order, so the result is thread-count invariant
+    /// — and smooth in the weights, which is what the Richardson-FD
+    /// harness in `tests/stack_grad.rs` checks.
+    pub fn loss_and_grads(&self, cfg: &SlaConfig, q: &Tens4, k: &Tens4) -> RouterGradients {
+        let (b, h, _n, d) = q.dims();
+        assert_eq!(h, self.heads, "router trained for {} heads, got {h}", self.heads);
+        let gsz = h / k.h.max(1);
+        let policy = MaskPolicy::Sla { kh_pct: cfg.kh_pct, kl_pct: cfg.kl_pct };
+        let fan = cfg.threads.max(1);
+        let inv_sqrt_r = 1.0 / (self.rank as f32).sqrt();
+
+        struct Partial {
+            dwq: Mat,
+            dwk: Mat,
+            da: [f32; 3],
+            db: [f32; 3],
+            loss: f64,
+            blocks: usize,
+        }
+        let partials: Vec<Partial> = threadpool::parallel_map_send(b * h, fan, |slot| {
+            let (bi, hi) = (slot / h, slot % h);
+            let qm = q.head_mat(bi, hi);
+            let km = k.head_mat(bi, hi / gsz.max(1));
+            let qc = pool_tokens(&qm, cfg.bq);
+            let kc = pool_tokens(&km, cfg.bkv);
+            let (tm, tn) = (qc.rows, kc.rows);
+            // teacher: the static pooled-QK top-k classification
+            let pc = super::mask::predict_pc(&qm, &km, cfg.bq, cfg.bkv);
+            let teacher = classify(&pc, policy);
+            let eq = qc.matmul(&self.wq[hi]); // (tm, r)
+            let ek = kc.matmul(&self.wk[hi]); // (tn, r)
+            let (a, bb) = (&self.a[hi], &self.b[hi]);
+            let mut deq = Mat::zeros(tm, self.rank);
+            let mut dek = Mat::zeros(tn, self.rank);
+            let mut da = [0.0f32; 3];
+            let mut db = [0.0f32; 3];
+            let mut loss = 0.0f64;
+            for i in 0..tm {
+                for j in 0..tn {
+                    let s = mk::dot(eq.row(i), ek.row(j)) * inv_sqrt_r;
+                    let logits = [a[0] * s + bb[0], a[1] * s + bb[1], a[2] * s + bb[2]];
+                    let mx = logits[0].max(logits[1]).max(logits[2]);
+                    let e = [
+                        (logits[0] - mx).exp(),
+                        (logits[1] - mx).exp(),
+                        (logits[2] - mx).exp(),
+                    ];
+                    let z = e[0] + e[1] + e[2];
+                    // labels are stored as i8: 1 critical, 0 marginal, -1 negligible
+                    let y = match teacher.label(i, j) {
+                        1 => 0usize,
+                        0 => 1,
+                        _ => 2,
+                    };
+                    loss += -((e[y] / z).max(f32::MIN_POSITIVE).ln()) as f64;
+                    let mut ds = 0.0f32;
+                    for c in 0..3 {
+                        let dl = e[c] / z - if c == y { 1.0 } else { 0.0 };
+                        da[c] += dl * s;
+                        db[c] += dl;
+                        ds += dl * a[c];
+                    }
+                    ds *= inv_sqrt_r;
+                    mk::axpy(deq.row_mut(i), ds, ek.row(j));
+                    mk::axpy(dek.row_mut(j), ds, eq.row(i));
+                }
+            }
+            Partial {
+                dwq: qc.transpose().matmul(&deq),
+                dwk: kc.transpose().matmul(&dek),
+                da,
+                db,
+                loss,
+                blocks: tm * tn,
+            }
+        });
+
+        // slot-ordered reduction, normalized by the total block count
+        let total_blocks: usize = partials.iter().map(|p| p.blocks).sum();
+        let norm = 1.0 / (total_blocks.max(1) as f32);
+        let mut dwq: Vec<Mat> = (0..h).map(|_| Mat::zeros(d, self.rank)).collect();
+        let mut dwk: Vec<Mat> = (0..h).map(|_| Mat::zeros(d, self.rank)).collect();
+        let mut da = vec![[0.0f32; 3]; h];
+        let mut db = vec![[0.0f32; 3]; h];
+        let mut loss = 0.0f64;
+        for (slot, p) in partials.iter().enumerate() {
+            let hi = slot % h;
+            dwq[hi].add_assign(&p.dwq);
+            dwk[hi].add_assign(&p.dwk);
+            for c in 0..3 {
+                da[hi][c] += p.da[c];
+                db[hi][c] += p.db[c];
+            }
+            loss += p.loss;
+        }
+        for hi in 0..h {
+            dwq[hi].scale(norm);
+            dwk[hi].scale(norm);
+            for c in 0..3 {
+                da[hi][c] *= norm;
+                db[hi][c] *= norm;
+            }
+        }
+        RouterGradients {
+            dwq,
+            dwk,
+            da,
+            db,
+            loss: (loss * norm as f64) as f32,
+        }
+    }
+
+    /// SGD step over every router leaf.
+    pub fn apply_grads(&mut self, g: &RouterGradients, lr: f32) {
+        assert_eq!(g.dwq.len(), self.heads);
+        for hi in 0..self.heads {
+            for (w, gw) in self.wq[hi].data.iter_mut().zip(&g.dwq[hi].data) {
+                *w -= lr * gw;
+            }
+            for (w, gw) in self.wk[hi].data.iter_mut().zip(&g.dwk[hi].data) {
+                *w -= lr * gw;
+            }
+            for c in 0..3 {
+                self.a[hi][c] -= lr * g.da[hi][c];
+                self.b[hi][c] -= lr * g.db[hi][c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::sla::SlaConfig;
+
+    fn cfg(b: usize) -> SlaConfig {
+        SlaConfig { bq: b, bkv: b, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() }
+    }
+
+    fn qk(b: usize, h: usize, n: usize, d: usize, seed: u64) -> (Tens4, Tens4) {
+        let mut rng = Rng::new(seed);
+        (Tens4::randn(b, h, n, d, &mut rng), Tens4::randn(b, h, n, d, &mut rng))
+    }
+
+    #[test]
+    fn routed_masks_keep_at_least_one_critical_block_per_row() {
+        let (q, k) = qk(2, 2, 64, 8, 7);
+        let rt = MaskRouter::new(2, 8, 4, 1);
+        let plan = rt.predict_plan(&cfg(8), &q, &k);
+        for bi in 0..2 {
+            for hi in 0..2 {
+                let m = plan.mask(bi, hi);
+                for i in 0..m.tm {
+                    assert!(!m.crit_rows[i].is_empty(), "row {i} lost its exact branch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn router_init_is_deterministic() {
+        let a = MaskRouter::new(3, 16, 4, 42);
+        let b = MaskRouter::new(3, 16, 4, 42);
+        assert_eq!(a.wq[2].data, b.wq[2].data);
+        assert_eq!(a.wk[0].data, b.wk[0].data);
+    }
+
+    #[test]
+    fn loss_decreases_under_sgd_on_the_teacher_objective() {
+        let (q, k) = qk(2, 2, 64, 8, 11);
+        let c = cfg(8);
+        let mut rt = MaskRouter::new(2, 8, 4, 3);
+        let mut losses = Vec::new();
+        for _ in 0..12 {
+            let g = rt.loss_and_grads(&c, &q, &k);
+            losses.push(g.loss);
+            rt.apply_grads(&g, 0.5);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "router CE did not improve: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn gradients_are_zero_when_router_matches_teacher_hard() {
+        // sanity on shapes: gradients exist for every head and have the
+        // projection shapes
+        let (q, k) = qk(1, 3, 32, 8, 5);
+        let rt = MaskRouter::new(3, 8, 2, 9);
+        let g = rt.loss_and_grads(&cfg(8), &q, &k);
+        assert_eq!(g.dwq.len(), 3);
+        assert_eq!(g.dwk.len(), 3);
+        assert_eq!(g.dwq[0].rows, 8);
+        assert_eq!(g.dwq[0].cols, 2);
+        assert!(g.loss.is_finite() && g.loss > 0.0);
+    }
+}

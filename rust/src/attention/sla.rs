@@ -22,13 +22,44 @@
 use std::sync::Arc;
 
 use super::full::{online_softmax_step, EPS, NEG_INF};
-use super::linear::{apply_linear_into, precompute_state_view, Phi};
+use super::linear::{apply_linear_into, precompute_state_f16, precompute_state_view, Phi};
 use super::mask::{predict_mask_fg, CompressedMask, FgConfig, MaskPolicy};
 use super::opt::{aggregate_marginal, AggStrategy};
 use super::plan::with_workspace;
-use crate::tensor::{microkernel as mk, Mat, MatView};
+use crate::tensor::{microkernel as mk, F16Mat, Mat, MatView};
 use crate::util::sendptr::SendPtr;
 use crate::util::threadpool;
+
+/// Storage precision of K/V and the linear-branch `kphi`/`H_i`/`Z_i` state.
+///
+/// `F16` round-trips those surfaces through explicit u16 binary16 storage
+/// (`tensor::f16`) while every arithmetic loop accumulates in f32 — the
+/// quantized-paged-attention discipline. `F32` (the default) takes exactly
+/// the historical code path: no round-trip happens at all, so outputs are
+/// bit-for-bit identical to builds that predate the knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvPrecision {
+    #[default]
+    F32,
+    F16,
+}
+
+impl KvPrecision {
+    pub fn parse(s: &str) -> anyhow::Result<KvPrecision> {
+        Ok(match s {
+            "f32" => KvPrecision::F32,
+            "f16" => KvPrecision::F16,
+            _ => anyhow::bail!("unknown kv precision {s:?} (f32|f16)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "f32",
+            KvPrecision::F16 => "f16",
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct SlaConfig {
@@ -44,6 +75,9 @@ pub struct SlaConfig {
     /// sparse branch (forward AND backward) skips unoccupied sub-tile runs.
     /// `None` (default) keeps the dense-block behaviour bit for bit.
     pub fg: Option<FgConfig>,
+    /// Storage precision of K/V and the linear-branch state (`F32` default:
+    /// bitwise-identical to the pre-quantization kernels).
+    pub kv_precision: KvPrecision,
 }
 
 impl Default for SlaConfig {
@@ -57,6 +91,7 @@ impl Default for SlaConfig {
             agg: AggStrategy::PreAggregate,
             threads: 1,
             fg: None,
+            kv_precision: KvPrecision::F32,
         }
     }
 }
@@ -175,11 +210,34 @@ fn forward_impl(
             cfg.fg,
         )),
     };
+    // Reduced-precision storage: round-trip K/V through u16 half storage
+    // (exact decode; every arithmetic loop below stays f32). F32 skips the
+    // round-trip entirely — the default path is bit-for-bit the
+    // pre-quantization kernel.
+    let (kq16, vq16);
+    let (k, v) = match cfg.kv_precision {
+        KvPrecision::F32 => (k, v),
+        KvPrecision::F16 => {
+            kq16 = F16Mat::from_view(k).to_mat();
+            vq16 = F16Mat::from_view(v).to_mat();
+            (kq16.view(), vq16.view())
+        }
+    };
     let qphi = cfg.phi.apply_view(q);
-    let kphi = cfg.phi.apply_view(k);
+    let mut kphi = cfg.phi.apply_view(k);
 
     // --- linear path: precompute h_j/z_j, aggregate per row block ---
-    let state = precompute_state_view(&kphi, v, cfg.bkv, cfg.threads);
+    let state = match cfg.kv_precision {
+        KvPrecision::F32 => precompute_state_view(&kphi, v, cfg.bkv, cfg.threads),
+        KvPrecision::F16 => {
+            // kphi is itself an f16 storage surface; the H_j/Z_j state
+            // comes out of the mixed-precision micro-kernels already
+            // quantized back to half storage.
+            let kphi16 = F16Mat::from_mat(&kphi);
+            kphi = kphi16.to_mat();
+            precompute_state_f16(&kphi16, &F16Mat::from_view(v), cfg.bkv, cfg.threads)
+        }
+    };
     let mask_ref: &CompressedMask = &mask;
     let (hi, zi) = aggregate_marginal(&state, mask_ref, cfg.agg);
 
@@ -317,6 +375,19 @@ pub fn sla_backward_view(
     let tn = n / cfg.bkv;
     let scale = 1.0 / (d as f32).sqrt();
     let mask: &CompressedMask = &fwd.mask;
+
+    // The F16 forward executed on quantized K/V (and saved quantized kphi);
+    // replay the same storage values so the recomputed probabilities match
+    // the saved lse. Gradients pass straight through the quantizer (STE).
+    let (kq16, vq16);
+    let (k, v) = match cfg.kv_precision {
+        KvPrecision::F32 => (k, v),
+        KvPrecision::F16 => {
+            kq16 = F16Mat::from_view(k).to_mat();
+            vq16 = F16Mat::from_view(v).to_mat();
+            (kq16.view(), vq16.view())
+        }
+    };
 
     // chain through O = O^s + O^l proj
     let dos = dout; // dO^s = dO

@@ -1,12 +1,14 @@
 //! Velocity-model backends for the coordinator.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::attention::plan::{
     ChurnEvent, PlanCacheStats, PlanDeltaStats, RefreshPolicy, RequestPlanCache, ShareConfig,
     SharedPlanCache,
 };
-use crate::attention::{BatchSlaEngine, SlaConfig};
+use crate::attention::{BatchSlaEngine, KvPrecision, MaskRouter, SlaConfig};
 use crate::model::{DitStack, ParamStore};
 use crate::runtime::{Artifact, HostTensor, Runtime, TensorSpec};
 use crate::tensor::Mat;
@@ -88,6 +90,18 @@ pub trait VelocityBackend: Send + Sync {
     /// this across a trace to surface per-layer churn/sharing.
     fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
         Vec::new()
+    }
+
+    /// Number of stack layers whose plan refreshes route through a
+    /// learnable mask router (0 for backends without one).
+    fn router_layers(&self) -> usize {
+        0
+    }
+
+    /// Storage precision of the K/V + linear-branch state ("f32" unless a
+    /// reduced-precision kernel path is active).
+    fn kv_precision_label(&self) -> &'static str {
+        "f32"
     }
 
     /// (seq_len, channels, cond_dim) of the model this backend serves.
@@ -231,6 +245,10 @@ pub struct NativeSlaBackend {
     /// plan without a global lock — this is what makes the backend
     /// `Send + Sync` (asserted at compile time in the tests).
     plan_cache: SharedPlanCache,
+    /// Learnable mask-routing knob: `(rank, seed)` when enabled. Routers
+    /// are deterministically re-derived from this after checkpoint
+    /// rebuilds (router weights are not checkpoint leaves).
+    router_cfg: Option<(usize, u64)>,
 }
 
 const NATIVE_BASE: &str = "params.native";
@@ -353,6 +371,7 @@ impl NativeSlaBackend {
             forward_only,
             plan_shards,
             plan_cache: cache,
+            router_cfg: None,
         }
     }
 
@@ -435,6 +454,51 @@ impl NativeSlaBackend {
     /// as the fine-tune-adjacent path.
     pub fn with_forward_only(mut self, forward_only: bool) -> Self {
         self.forward_only = forward_only;
+        self
+    }
+
+    fn install_routers(&mut self, rank: usize, seed: u64) {
+        for li in 0..self.depth {
+            let r = MaskRouter::new(
+                self.heads,
+                self.head_dim,
+                rank,
+                seed.wrapping_add(li as u64),
+            );
+            self.stack.set_router(li, Arc::new(r));
+        }
+    }
+
+    /// Route every layer's plan refreshes through a learnable mask router
+    /// (deterministic init from `(rank, seed)`; serving cache misses
+    /// resolve through it instead of the static Eq. 2-3 predictor). The
+    /// knob survives checkpoint rebuilds by re-deriving the same routers.
+    /// Resets the cache so no static-predicted plan outlives the switch.
+    pub fn with_mask_routing(mut self, rank: usize, seed: u64) -> Self {
+        self.router_cfg = Some((rank, seed));
+        self.install_routers(rank, seed);
+        self.reset_cache();
+        self
+    }
+
+    /// Adopt externally trained routers (e.g. from a `StackFineTuner`
+    /// routing run), one per layer. Resets the cache.
+    pub fn set_routers(&mut self, routers: Vec<Arc<MaskRouter>>) {
+        assert_eq!(routers.len(), self.depth, "one router per layer");
+        for (li, r) in routers.into_iter().enumerate() {
+            self.stack.set_router(li, r);
+        }
+        self.reset_cache();
+    }
+
+    /// Switch the K/V + linear-state storage precision of every layer
+    /// engine. `F32` (default) is bitwise-identical to pre-precision code;
+    /// the knob rides in each engine's `SlaConfig`, so it survives
+    /// checkpoint rebuilds. Resets the cache (plans are precision-
+    /// agnostic, but a fresh run keeps counters interpretable).
+    pub fn with_kv_precision(mut self, p: KvPrecision) -> Self {
+        self.stack.set_kv_precision(p);
+        self.reset_cache();
         self
     }
 
@@ -527,7 +591,7 @@ impl NativeSlaBackend {
             }
         }
         let loaded = self.params.load_from(&ckpt);
-        let refreshed = Self::from_params(
+        let mut refreshed = Self::from_params(
             self.video,
             self.channels,
             self.cond_dim,
@@ -542,6 +606,12 @@ impl NativeSlaBackend {
             self.forward_only,
             self.plan_shards,
         );
+        // kv_precision rides inside the engine cfg cloned above; routers
+        // must be re-derived from the knob (their weights are not leaves)
+        refreshed.router_cfg = self.router_cfg;
+        if let Some((rank, seed)) = refreshed.router_cfg {
+            refreshed.install_routers(rank, seed);
+        }
         *self = refreshed;
         Ok(loaded)
     }
@@ -678,6 +748,14 @@ impl VelocityBackend for NativeSlaBackend {
         (0..self.plan_cache.layers_tracked())
             .map(|li| (self.plan_cache.layer_stats(li), self.plan_cache.layer_delta_stats(li)))
             .collect()
+    }
+
+    fn router_layers(&self) -> usize {
+        self.stack.router_layers()
+    }
+
+    fn kv_precision_label(&self) -> &'static str {
+        self.stack.kv_precision().label()
     }
 
     fn shape(&self) -> (usize, usize, usize) {

@@ -129,6 +129,15 @@ pub struct ServeReport {
     pub pool_chunks: u64,
     pub pool_inline: u64,
     pub pool_idle_s: f64,
+    /// Stack layers whose plan refreshes route through a learnable mask
+    /// router (0 unless the backend enabled routing).
+    pub router_layers: usize,
+    /// Plan predictions this trace that went through the router (== the
+    /// planned-mask delta when routing is on for every layer; 0 otherwise).
+    pub routed_predictions: u64,
+    /// K/V + linear-state storage precision label ("f32" / "f16"; empty
+    /// only on a default-constructed report).
+    pub kv_precision: String,
 }
 
 impl ServeReport {
@@ -242,6 +251,12 @@ impl ServeReport {
                     self.plan_share_hits, self.plan_shares, self.plan_unshares,
                 ));
             }
+            if self.router_layers > 0 {
+                s.push_str(&format!(
+                    " router[layers={} routed={}]",
+                    self.router_layers, self.routed_predictions,
+                ));
+            }
             for (li, l) in self.plan_layers.iter().enumerate() {
                 s.push_str(&format!(
                     " L{li}[hits={} misses={} churn={:.1}%{}]",
@@ -255,6 +270,9 @@ impl ServeReport {
                     },
                 ));
             }
+        }
+        if !self.kv_precision.is_empty() && self.kv_precision != "f32" {
+            s.push_str(&format!(" kv_precision={}", self.kv_precision));
         }
         s
     }
@@ -452,6 +470,8 @@ impl<'b> Coordinator<'b> {
             }
         }
         report.total_s = clock;
+        report.router_layers = self.backend.router_layers();
+        report.kv_precision = self.backend.kv_precision_label().to_string();
         report.stats.sort_by_key(|s| s.id);
         report.queue_wait_s = report.stats.iter().map(|s| s.wait_s).sum();
         report.compute_s = report.denoise_s;
@@ -473,6 +493,9 @@ impl<'b> Coordinator<'b> {
             report.plan_share_hits = p1.share_hits - plan0.share_hits;
             report.plan_shares = p1.shares - plan0.shares;
             report.plan_unshares = p1.unshares - plan0.unshares;
+            if report.router_layers > 0 {
+                report.routed_predictions = planned;
+            }
         }
         if let Some(d1) = self.backend.plan_delta() {
             let d = d1.delta_since(&delta0);
@@ -582,6 +605,27 @@ mod tests {
                 arrival_s: id as f64 * 0.0, // all at t=0
             })
             .collect()
+    }
+
+    #[test]
+    fn summary_reports_router_and_precision_segments() {
+        let rep = ServeReport {
+            plan_hits: 1,
+            plan_misses: 1,
+            router_layers: 2,
+            routed_predictions: 8,
+            kv_precision: "f16".to_string(),
+            ..Default::default()
+        };
+        let s = rep.summary();
+        assert!(s.contains("router[layers=2 routed=8]"), "{s}");
+        assert!(s.contains("kv_precision=f16"), "{s}");
+        // a plain f32 / router-less report stays byte-identical in shape:
+        // neither segment appears
+        let plain = ServeReport { plan_hits: 1, plan_misses: 1, ..Default::default() };
+        let ps = plain.summary();
+        assert!(!ps.contains("router["), "{ps}");
+        assert!(!ps.contains("kv_precision"), "{ps}");
     }
 
     #[test]

@@ -117,7 +117,10 @@ fn cli() -> Cli {
             )
             .flag("old", "prev_bench", "previous run's artifact dir (absent = seed run)")
             .flag("new", "rust/bench_results", "fresh artifact dir")
-            .flag("threshold", "15.0", "max allowed ns/step regression, percent"),
+            .flag("threshold", "15.0", "max allowed ns/step regression, percent")
+            .flag("quality", "1", "quality-floor gating on fresh payloads (1 = on, 0 = off)")
+            .flag("rel-l2-max", "0.15", "quality floor: max allowed rel_l2 in any fresh payload")
+            .flag("psnr-min", "20.0", "quality floor: min allowed psnr (dB) in any fresh payload"),
         )
 }
 
@@ -522,6 +525,49 @@ fn cmd_bench_compare(args: &sla_dit::util::cli::Args) -> Result<()> {
         !news.is_empty(),
         "no BENCH_*.json artifacts under {new_dir:?} — run `cargo bench` first"
     );
+    // quality floors are ABSOLUTE, not a ratchet: fresh payloads carrying
+    // `rel_l2` / `psnr` fields are gated against fixed bounds regardless of
+    // whether a previous artifact exists, so a kernel change that wrecks
+    // accuracy while staying fast cannot ride a seed run (or a rename) in.
+    if args.get_str("quality") != "0" {
+        let rel_l2_max = args.get_f64("rel-l2-max")?;
+        let psnr_min = args.get_f64("psnr-min")?;
+        let mut quality_failures: Vec<String> = Vec::new();
+        let mut quality_checked = 0usize;
+        for (exp, newv) in &news {
+            let np = newv.get("payload");
+            if let Some(v) = np.get("rel_l2").as_f64() {
+                quality_checked += 1;
+                let bad = v > rel_l2_max;
+                let verdict = if bad { "QUALITY FAIL" } else { "ok" };
+                println!("{exp:<10} rel_l2 {v:>10.5} (floor <= {rel_l2_max})  {verdict}");
+                if bad {
+                    quality_failures.push(format!("{exp}/rel_l2: {v:.5} > {rel_l2_max}"));
+                }
+            }
+            if let Some(v) = np.get("psnr").as_f64() {
+                quality_checked += 1;
+                let bad = v < psnr_min;
+                let verdict = if bad { "QUALITY FAIL" } else { "ok" };
+                println!("{exp:<10} psnr   {v:>10.2} dB (floor >= {psnr_min})  {verdict}");
+                if bad {
+                    quality_failures.push(format!("{exp}/psnr: {v:.2} < {psnr_min}"));
+                }
+            }
+        }
+        if quality_checked == 0 {
+            println!(
+                "bench-compare: no rel_l2/psnr fields in any fresh payload — \
+                 quality floors not exercised this run"
+            );
+        }
+        anyhow::ensure!(
+            quality_failures.is_empty(),
+            "{} quality-floor violation(s): {}",
+            quality_failures.len(),
+            quality_failures.join(", ")
+        );
+    }
     let olds = load(&old_dir)?;
     if olds.is_empty() {
         println!(
@@ -612,6 +658,13 @@ fn cmd_bench_compare(args: &sla_dit::util::cli::Args) -> Result<()> {
              renamed, or reshaped); the gate was VACUOUS this run and the next \
              comparison starts from this run's artifacts"
         );
+        // GitHub Actions annotation: surfaces the vacuous verdict on the run
+        // summary / PR checks page instead of burying it in the job log. On a
+        // plain terminal this is one extra harmless line.
+        println!(
+            "::warning title=bench-compare vacuous::perf gate compared 0 metrics \
+             this run; the ratchet re-seeds from these artifacts"
+        );
         return Ok(());
     }
     println!(
@@ -629,6 +682,10 @@ mod tests {
         a.values.insert("old".into(), old.into());
         a.values.insert("new".into(), new.into());
         a.values.insert("threshold".into(), threshold.into());
+        // cli() fills these defaults in real runs; hand-built Args need them
+        a.values.insert("quality".into(), "1".into());
+        a.values.insert("rel-l2-max".into(), "0.15".into());
+        a.values.insert("psnr-min".into(), "20.0".into());
         a
     }
 
@@ -698,6 +755,45 @@ mod tests {
         cmd_bench_compare(&bc_args(nope.to_str().unwrap(), n, "15.0")).unwrap();
         // but an empty NEW dir is an error (the bench step did not run)
         assert!(cmd_bench_compare(&bc_args(o, nope.to_str().unwrap(), "15.0")).is_err());
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn bench_compare_quality_floor_gates_injected_regression() {
+        let base =
+            std::env::temp_dir().join(format!("sla_bcq_{}", std::process::id()));
+        let new = base.join("new");
+        std::fs::create_dir_all(&new).unwrap();
+        let rec = |rel_l2: f64, psnr: f64| {
+            format!(
+                r#"{{"experiment":"quant","smoke":true,"payload":{{"shape":{{"b":1,"h":2,"n":64,"d":16,"block":16}},"f16_ns_per_step":100.0,"rel_l2":{rel_l2},"psnr":{psnr}}}}}"#
+            )
+        };
+        // healthy quality passes — even on a seed run (no old dir at all)
+        std::fs::write(new.join("BENCH_quant.json"), rec(0.002, 55.0)).unwrap();
+        let nope = base.join("nope");
+        let (o, n) = (nope.to_str().unwrap(), new.to_str().unwrap());
+        cmd_bench_compare(&bc_args(o, n, "15.0")).unwrap();
+        // injected accuracy regression fails the ABSOLUTE floor, seed run or not
+        std::fs::write(new.join("BENCH_quant.json"), rec(0.9, 55.0)).unwrap();
+        let err = cmd_bench_compare(&bc_args(o, n, "15.0")).unwrap_err();
+        assert!(err.to_string().contains("quality-floor"), "{err}");
+        assert!(err.to_string().contains("rel_l2"), "{err}");
+        // psnr below its floor fails on its own too
+        std::fs::write(new.join("BENCH_quant.json"), rec(0.002, 5.0)).unwrap();
+        let err = cmd_bench_compare(&bc_args(o, n, "15.0")).unwrap_err();
+        assert!(err.to_string().contains("psnr"), "{err}");
+        // --quality 0 switches the floors off entirely
+        let mut off = bc_args(o, n, "15.0");
+        off.values.insert("quality".into(), "0".into());
+        cmd_bench_compare(&off).unwrap();
+        // payloads with no quality fields are untouched by the gate
+        std::fs::write(
+            new.join("BENCH_quant.json"),
+            r#"{"experiment":"quant","smoke":true,"payload":{"shape":{"n":64},"f16_ns_per_step":100.0}}"#,
+        )
+        .unwrap();
+        cmd_bench_compare(&bc_args(o, n, "15.0")).unwrap();
         std::fs::remove_dir_all(&base).ok();
     }
 }

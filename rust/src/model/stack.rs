@@ -46,7 +46,9 @@ use std::sync::Arc;
 
 use crate::attention::mask::CompressedMask;
 use crate::attention::plan::{RequestPlanCache, ServingPlanCache, SharedPlanCache, StackPlanner};
-use crate::attention::{BatchSlaEngine, BatchSlaOutput, SlaConfig};
+use crate::attention::{
+    BatchSlaEngine, BatchSlaOutput, KvPrecision, MaskRouter, RouterGradients, SlaConfig,
+};
 use crate::model::ParamStore;
 use crate::tensor::{microkernel as mk, Mat, Tens4};
 use crate::util::rng::Rng;
@@ -108,6 +110,9 @@ pub fn rms_norm_backward(x: &Mat, dy: &Mat, eps: f32) -> Mat {
 #[derive(Clone)]
 pub struct DitLayer {
     pub engine: BatchSlaEngine,
+    /// Learnable mask router for this layer's plan refreshes; `None` keeps
+    /// the static Eq. 2-3 predictor (bitwise-identical to pre-router code).
+    pub router: Option<Arc<MaskRouter>>,
     /// `(C, heads * d)` query projection.
     pub wq: Mat,
     /// `(C, kv_heads * d)` key projection.
@@ -169,6 +174,9 @@ pub struct LayerGradients {
     pub dwv: Mat,
     /// `(heads * d, C)` output-projection gradient.
     pub dwo: Mat,
+    /// Mask-router gradients (routing loss vs the static teacher on this
+    /// layer's taped q/k), present only when the layer has a router.
+    pub drouter: Option<RouterGradients>,
 }
 
 /// Everything a stack backward produces: gradients w.r.t. the inputs (for
@@ -232,6 +240,7 @@ impl DitStack {
                 let projs = store.sla_layer_projs(base, li, heads, head_dim);
                 DitLayer {
                     engine: BatchSlaEngine::with_projs(cfg.clone(), kv_heads, projs),
+                    router: None,
                     wq,
                     wk,
                     wv,
@@ -283,6 +292,7 @@ impl DitStack {
         let layers = (0..depth)
             .map(|_| DitLayer {
                 engine: BatchSlaEngine::with_kv_heads(cfg.clone(), heads, kv_heads, head_dim),
+                router: None,
                 wq: Mat::randn(channels, hd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
                 wk: Mat::randn(channels, kvd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
                 wv: Mat::randn(channels, kvd, &mut rng).scaled(1.0 / (channels as f32).sqrt()),
@@ -312,6 +322,52 @@ impl DitStack {
     pub fn set_layer_projs(&mut self, li: usize, projs: Vec<Mat>) {
         assert_eq!(projs.len(), self.heads, "one projection per query head");
         self.layers[li].engine.projs = projs;
+    }
+
+    /// Install (or replace) layer `li`'s learnable mask router.
+    pub fn set_router(&mut self, li: usize, router: Arc<MaskRouter>) {
+        self.layers[li].router = Some(router);
+    }
+
+    /// Per-layer router handles, `depth()` slots — the shape
+    /// [`StackPlanner::with_routers`] consumes.
+    pub fn routers(&self) -> Vec<Option<Arc<MaskRouter>>> {
+        self.layers.iter().map(|l| l.router.clone()).collect()
+    }
+
+    /// Number of layers with a learnable router installed.
+    pub fn router_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.router.is_some()).count()
+    }
+
+    /// Switch every layer's K/V + linear-state storage precision. `F32`
+    /// (the default) keeps all paths bitwise-identical to pre-precision
+    /// code; `F16` round-trips K/V and the linear branch through IEEE
+    /// half-precision storage with f32 accumulation.
+    pub fn set_kv_precision(&mut self, p: KvPrecision) {
+        for lay in &mut self.layers {
+            lay.engine.cfg.kv_precision = p;
+        }
+    }
+
+    /// The stack-wide K/V storage precision (layers always agree; set via
+    /// [`DitStack::set_kv_precision`]).
+    pub fn kv_precision(&self) -> KvPrecision {
+        self.layers[0].engine.cfg.kv_precision
+    }
+
+    /// Layer `li`'s full-state forward under its prediction source: routed
+    /// plan execution when a router is installed, the engine's fresh static
+    /// prediction otherwise.
+    fn layer_forward(&self, li: usize, q4: &Tens4, k4: &Tens4, v4: &Tens4) -> BatchSlaOutput {
+        let lay = &self.layers[li];
+        match &lay.router {
+            Some(rt) => {
+                let plan = rt.predict_plan(&lay.engine.cfg, q4, k4);
+                lay.engine.forward_plan(q4, k4, v4, &plan)
+            }
+            None => lay.engine.forward(q4, k4, v4),
+        }
     }
 
     /// Normalize + modulate + project one layer's inputs for every batch
@@ -381,7 +437,7 @@ impl DitStack {
         let mut per_layer = Vec::with_capacity(self.depth());
         for li in 0..self.depth() {
             let (q4, k4, v4) = self.project_layer(li, &hs, mods);
-            let out = self.layers[li].engine.forward(&q4, &k4, &v4);
+            let out = self.layer_forward(li, &q4, &k4, &v4);
             self.apply_output(li, &mut hs, &out.o);
             per_layer.push(out);
         }
@@ -466,7 +522,7 @@ impl DitStack {
                     let plan = p.plan_for(li, &q4, &k4);
                     self.layers[li].engine.forward_plan(&q4, &k4, &v4, &plan)
                 }
-                None => self.layers[li].engine.forward(&q4, &k4, &v4),
+                None => self.layer_forward(li, &q4, &k4, &v4),
             };
             self.apply_output(li, &mut hs, &out.o);
             tape.push(LayerTape { h_in, q4, k4, v4, out });
@@ -582,7 +638,15 @@ impl DitStack {
                 dh[bi].add_assign(dx);
                 dmods[bi] += dmod;
             }
-            layer_grads.push(LayerGradients { dproj: g.dproj, dwq, dwk, dwv, dwo });
+            // ---- router gradients (mask-frozen regime: the routing loss
+            // is scored against the static teacher on the SAME taped q/k
+            // the layer consumed; it never perturbs the kernel gradients
+            // above because executed masks are replayed from the tape) ----
+            let drouter = lay
+                .router
+                .as_ref()
+                .map(|rt| rt.loss_and_grads(&lay.engine.cfg, &tape.q4, &tape.k4));
+            layer_grads.push(LayerGradients { dproj: g.dproj, dwq, dwk, dwv, dwo, drouter });
         }
         layer_grads.reverse();
         StackGradients { dhs: dh, dmods, layers: layer_grads }
@@ -596,7 +660,14 @@ impl DitStack {
         let mut hs = hs.to_vec();
         for li in 0..self.depth() {
             let (q4, k4, v4) = self.project_layer(li, &hs, mods);
-            let out = self.layers[li].engine.forward_only(&q4, &k4, &v4);
+            let lay = &self.layers[li];
+            let out = match &lay.router {
+                Some(rt) => {
+                    let plan = rt.predict_plan(&lay.engine.cfg, &q4, &k4);
+                    lay.engine.forward_plan_only(&q4, &k4, &v4, &plan)
+                }
+                None => lay.engine.forward_only(&q4, &k4, &v4),
+            };
             self.apply_output(li, &mut hs, &out.o);
         }
         hs
@@ -684,6 +755,18 @@ impl DitStack {
                     None => {
                         missing.push(bi);
                         slots.extend((0..heads).map(|_| None));
+                    }
+                }
+            }
+            // routed layers resolve misses through the learnable router
+            // BEFORE the execution fan (the in-task fallback predicts the
+            // static Eq. 2-3 masks, which would bypass the router); the
+            // harvest below still stores whatever masks executed.
+            if let Some(rt) = &self.layers[li].router {
+                for &bi in &missing {
+                    let ms = rt.route_item(&self.layers[li].engine.cfg, &q4, &k4, bi);
+                    for (hi, m) in ms.into_iter().enumerate() {
+                        slots[bi * heads + hi] = Some(m);
                     }
                 }
             }

@@ -1,0 +1,128 @@
+//! IEEE 754 binary16 storage helpers: bit-exact f32 <-> u16 conversion
+//! (round-to-nearest-even, subnormals and Inf handled; NaNs canonicalized)
+//! plus a compact row-major `F16Mat` container.
+//!
+//! This is the storage side of the reduced-precision kernel path
+//! (`SlaConfig.kv_precision`): K/V and the linear-branch `kphi`/`H_i`/`Z_i`
+//! state are held as u16 half floats, while every arithmetic loop decodes
+//! on load and accumulates in f32 (see `microkernel::{dot_f16, axpy_f16}`).
+//! `quantize` (encode + decode) is the fake-quant operator QAT uses: it is
+//! idempotent, monotone, and exact on every f16-representable value.
+
+/// Convert an f32 to f16 bits with round-to-nearest-even.
+///
+/// Overflow saturates to +/-Inf, values below the smallest subnormal round
+/// to +/-0, and every NaN maps to one canonical quiet NaN (payloads are not
+/// preserved — storage does not need them and canonical NaNs keep the
+/// round-trip property testable over all 65536 bit patterns).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf stays Inf; NaN canonicalizes.
+        return if abs > 0x7f80_0000 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+    let exp = (abs >> 23) as i32 - 127 + 15;
+    let man = abs & 0x007f_ffff;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> Inf
+    }
+    if exp <= 0 {
+        // Subnormal range. Below 2^-24 - ulp/2 everything rounds to zero.
+        if exp < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // implicit leading 1
+        let shift = (14 - exp) as u32; // 14..=24
+        let round = (1u32 << (shift - 1)) - 1;
+        let odd = (man >> shift) & 1;
+        return sign | ((man + round + odd) >> shift) as u16;
+    }
+    // Normal: drop 13 mantissa bits with nearest-even; a mantissa carry
+    // rolls into the exponent field (and on to Inf) arithmetically.
+    let odd = (man >> 13) & 1;
+    let rounded = (man + 0x0fff + odd) >> 13;
+    sign | (((exp as u32) << 10) + rounded) as u16
+}
+
+/// Convert f16 bits back to the exactly-represented f32 value.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // +/-0
+        } else {
+            // Subnormal: normalize into an f32 with an implicit bit.
+            let n = man.leading_zeros() - 21; // shifts to put the MSB at bit 10
+            sign | ((113 - n) << 23) | (((man << n) & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Fake-quant operator: round-trip through f16 storage. Idempotent and
+/// monotone; identity on every f16-representable value.
+#[inline]
+pub fn quantize(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Quantize a slice in place (storage-boundary round-trip).
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize(*x);
+    }
+}
+
+/// Encode a slice to f16 bit patterns.
+pub fn encode_slice(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16_bits(x)).collect()
+}
+
+/// Row-major matrix of f16 bit patterns — the storage form of K/V and the
+/// linear-branch state on the reduced-precision path.
+#[derive(Clone, Debug)]
+pub struct F16Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: Vec<u16>,
+}
+
+impl F16Mat {
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        F16Mat { rows, cols, bits: encode_slice(data) }
+    }
+
+    pub fn from_mat(m: &super::Mat) -> Self {
+        Self::from_slice(m.rows, m.cols, &m.data)
+    }
+
+    pub fn from_view(v: super::MatView<'_>) -> Self {
+        let mut bits = Vec::with_capacity(v.rows * v.cols);
+        for r in 0..v.rows {
+            bits.extend(v.row(r).iter().map(|&x| f32_to_f16_bits(x)));
+        }
+        F16Mat { rows: v.rows, cols: v.cols, bits }
+    }
+
+    pub fn row(&self, r: usize) -> &[u16] {
+        &self.bits[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Decode back to a dense f32 matrix.
+    pub fn to_mat(&self) -> super::Mat {
+        super::Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.bits.iter().map(|&b| f16_bits_to_f32(b)).collect(),
+        )
+    }
+}

@@ -214,6 +214,39 @@ pub fn exp_sub_sum(row: &mut [f32], mx: f32) -> f32 {
     reduce_lanes(lanes) + tail
 }
 
+/// Mixed-precision dot product: `a` is f16-encoded storage (u16 bit
+/// patterns), `b` is f32; every product and the accumulation run in f32
+/// after an exact per-element decode. Laned like `dot_portable` so the
+/// reduction order matches the rest of the reduction-reordering family.
+#[inline]
+pub fn dot_f16(a_bits: &[u16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a_bits.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a_bits.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for t in 0..LANES {
+            lanes[t] += super::f16::f16_bits_to_f32(xa[t]) * xb[t];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += super::f16::f16_bits_to_f32(x) * y;
+    }
+    reduce_lanes(lanes) + tail
+}
+
+/// `y += a * decode(x)` with f16-encoded `x` and f32 accumulate. Like
+/// `axpy`, deliberately no FMA: the decode is exact, so this is
+/// bitwise-identical to decoding `x` up front and calling `axpy`.
+#[inline]
+pub fn axpy_f16(y: &mut [f32], a: f32, x_bits: &[u16]) {
+    debug_assert_eq!(y.len(), x_bits.len());
+    for (yv, &xv) in y.iter_mut().zip(x_bits) {
+        *yv += a * super::f16::f16_bits_to_f32(xv);
+    }
+}
+
 /// AVX2/FMA intrinsic path, compiled only under `--features arch-simd` on
 /// x86_64 and entered only after `is_x86_feature_detected!` confirms support.
 #[cfg(all(feature = "arch-simd", target_arch = "x86_64"))]
@@ -380,6 +413,36 @@ mod tests {
             } else {
                 assert_eq!(laned_sum, 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn dot_f16_matches_decode_then_dot_portable() {
+        use crate::tensor::f16;
+        let mut rng = Rng::new(21);
+        for &n in &SIZES {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let bits = f16::encode_slice(&a);
+            let deq: Vec<f32> = bits.iter().map(|&x| f16::f16_bits_to_f32(x)).collect();
+            assert_eq!(dot_f16(&bits, &b), dot_portable(&deq, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_f16_is_bitwise_identical_to_decode_then_axpy() {
+        use crate::tensor::f16;
+        let mut rng = Rng::new(22);
+        for &n in &SIZES {
+            let x = rng.normal_vec(n);
+            let y0 = rng.normal_vec(n);
+            let bits = f16::encode_slice(&x);
+            let deq: Vec<f32> = bits.iter().map(|&b| f16::f16_bits_to_f32(b)).collect();
+            let mut y1 = y0.clone();
+            axpy_f16(&mut y1, 0.37, &bits);
+            let mut y2 = y0.clone();
+            axpy(&mut y2, 0.37, &deq);
+            assert_eq!(y1, y2, "n={n}");
         }
     }
 

@@ -4,11 +4,13 @@
 //! (`[B, H, N, d]`, contiguous per-head slabs) the batched SLA engine
 //! fans out over. No external dependencies.
 
+pub mod f16;
 mod mat;
 pub mod microkernel;
 mod ops;
 mod tens4;
 
+pub use f16::F16Mat;
 pub use mat::{Mat, MatView};
 pub use ops::{spectral_norm, stable_rank};
 pub use tens4::Tens4;

@@ -18,11 +18,12 @@
 //! Python is never on any path.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::attention::plan::{MaskPlanner, StackPlanner};
-use crate::attention::{full, BatchSlaEngine, SlaConfig};
+use crate::attention::{full, BatchSlaEngine, KvPrecision, MaskRouter, SlaConfig};
 use crate::model::{DitStack, ParamStore};
 use crate::runtime::{Artifact, HostTensor, Runtime};
 use crate::tensor::{Mat, Tens4};
@@ -355,6 +356,12 @@ pub struct StackFineTuner {
     pub lr: f32,
     /// Total (summed over layers) distillation loss per step.
     pub losses: Vec<f32>,
+    /// Learning rate for the mask routers (only used with
+    /// [`StackFineTuner::with_routing`]).
+    pub router_lr: f32,
+    /// Total (summed over layers) router cross-entropy per step; empty
+    /// unless routing is enabled.
+    pub router_losses: Vec<f32>,
 }
 
 impl StackFineTuner {
@@ -362,7 +369,54 @@ impl StackFineTuner {
     /// [`NativeFineTuner::for_stack`], which clones).
     pub fn new(stack: DitStack, lr: f32) -> Self {
         let planner = StackPlanner::frozen(stack.layers[0].engine.cfg.clone(), stack.depth());
-        StackFineTuner { stack, planner, lr, losses: Vec::new() }
+        StackFineTuner {
+            stack,
+            planner,
+            lr,
+            losses: Vec::new(),
+            router_lr: 0.5,
+            router_losses: Vec::new(),
+        }
+    }
+
+    /// Joint routing: install a fresh learnable [`MaskRouter`] on every
+    /// layer and route the frozen planner through it, so the distilled
+    /// masks are the ROUTER's straight-through predictions while its soft
+    /// relaxation trains against the static teacher in the same backward
+    /// sweep as the projections ([`DitStack::backward_with_attn_grads`]
+    /// fills `LayerGradients::drouter` from each layer's tape).
+    pub fn with_routing(mut self, rank: usize, seed: u64) -> Self {
+        for li in 0..self.stack.depth() {
+            let r = MaskRouter::new(
+                self.stack.heads,
+                self.stack.head_dim,
+                rank,
+                seed.wrapping_add(li as u64),
+            );
+            self.stack.set_router(li, Arc::new(r));
+        }
+        self.planner = StackPlanner::frozen(
+            self.stack.layers[0].engine.cfg.clone(),
+            self.stack.depth(),
+        )
+        .with_routers(&self.stack.routers());
+        self
+    }
+
+    /// Quantization-aware distillation: the student runs the reduced-
+    /// precision kernel path (f16 K/V + linear-state storage, f32
+    /// accumulate) while the dense teacher stays f32 — the fake-quant
+    /// noise is inside the training loop, so the projections learn to
+    /// compensate it.
+    pub fn with_qat(mut self) -> Self {
+        self.stack.set_kv_precision(KvPrecision::F16);
+        self
+    }
+
+    /// Router learning rate (SGD on the routing cross-entropy).
+    pub fn with_router_lr(mut self, lr: f32) -> Self {
+        self.router_lr = lr;
+        self
     }
 
     /// Per-layer dense-attention teacher outputs on the student's current
@@ -403,12 +457,30 @@ impl StackFineTuner {
         let zero_dout: Vec<Mat> =
             fwd.hs.iter().map(|h| Mat::zeros(h.rows, h.cols)).collect();
         let grads = self.stack.backward_with_attn_grads(&fwd, mods, &zero_dout, &attn_douts);
+        let mut router_loss = 0.0f32;
+        let mut any_router = false;
         for (li, lg) in grads.layers.iter().enumerate() {
             for (p, g) in self.stack.layers[li].engine.projs.iter_mut().zip(&lg.dproj) {
                 for (pv, &gv) in p.data.iter_mut().zip(&g.data) {
                     *pv -= self.lr * gv;
                 }
             }
+            if let Some(rg) = &lg.drouter {
+                // the planner's frozen plans keep replaying the masks the
+                // run started with (mask-frozen regime), so updating the
+                // layer's router here never perturbs the executed masks —
+                // Arc::make_mut leaves the planner's clone untouched.
+                let rt = self.stack.layers[li]
+                    .router
+                    .as_mut()
+                    .expect("drouter implies a layer router");
+                Arc::make_mut(rt).apply_grads(rg, self.router_lr);
+                router_loss += rg.loss;
+                any_router = true;
+            }
+        }
+        if any_router {
+            self.router_losses.push(router_loss);
         }
         self.losses.push(loss);
         loss

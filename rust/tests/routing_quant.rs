@@ -1,0 +1,311 @@
+//! Properties and parities for PR 8's two new knobs — the learnable mask
+//! router and the reduced-precision (f16 storage) kernel path:
+//!
+//! * f16 conversion properties: exact round-trip on every non-NaN bit
+//!   pattern, monotonicity, idempotence, exactness on representables, and
+//!   the half-ulp relative error bound on the normal range;
+//! * router plans and gradients are thread-count invariant;
+//! * the OFF-state is bitwise: with no router installed and
+//!   `KvPrecision::F32` (both defaults), engine, stack, and backend
+//!   outputs are identical to a build that never mentions either knob —
+//!   the differential acceptance criterion for this PR;
+//! * the f16 path differs from f32 (it really quantizes) but only at
+//!   storage-precision scale;
+//! * a routed backend serves: deterministic outputs, cache replay, and
+//!   the router/precision telemetry surfaced through `VelocityBackend`.
+
+use sla_dit::attention::{AttentionPlan, BatchSlaEngine, KvPrecision, MaskRouter, SlaConfig};
+use sla_dit::coordinator::{NativeSlaBackend, VelocityBackend};
+use sla_dit::model::DitStack;
+use sla_dit::runtime::HostTensor;
+use sla_dit::tensor::f16::{f16_bits_to_f32, f32_to_f16_bits, quantize};
+use sla_dit::tensor::{Mat, Tens4};
+use sla_dit::util::rng::Rng;
+
+fn cfg(threads: usize) -> SlaConfig {
+    SlaConfig {
+        bq: 8,
+        bkv: 8,
+        kh_pct: 25.0,
+        kl_pct: 25.0,
+        threads,
+        ..Default::default()
+    }
+}
+
+fn qkv(b: usize, h: usize, n: usize, d: usize, seed: u64) -> (Tens4, Tens4, Tens4) {
+    let mut rng = Rng::new(seed);
+    (
+        Tens4::randn(b, h, n, d, &mut rng),
+        Tens4::randn(b, h, n, d, &mut rng),
+        Tens4::randn(b, h, n, d, &mut rng),
+    )
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let e = (*x as f64) - (*y as f64);
+        num += e * e;
+        den += (*y as f64) * (*y as f64);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// f16 conversion properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f16_round_trip_is_exact_on_every_non_nan_bit_pattern() {
+    // decode -> encode must reproduce all 63490 non-NaN f16 bit patterns
+    // exactly (NaNs canonicalize by design, so payloads are excluded)
+    for h in 0u16..=u16::MAX {
+        let exp = (h >> 10) & 0x1f;
+        let man = h & 0x3ff;
+        if exp == 0x1f && man != 0 {
+            continue; // NaN: canonicalized, not round-tripped
+        }
+        let x = f16_bits_to_f32(h);
+        assert_eq!(
+            f32_to_f16_bits(x),
+            h,
+            "bit pattern {h:#06x} (decoded {x}) did not round-trip"
+        );
+    }
+}
+
+#[test]
+fn f16_quantize_is_idempotent_and_exact_on_representables() {
+    let mut rng = Rng::new(17);
+    for v in rng.normal_vec(4096) {
+        let x = 10.0 * v;
+        let q = quantize(x);
+        // idempotence: a second trip through storage changes nothing
+        assert_eq!(quantize(q).to_bits(), q.to_bits(), "quantize not idempotent at {x}");
+    }
+    // exactness on representables, including the awkward ends of the range
+    let reps = [
+        0.0f32, -0.0, 1.0, -1.0, 0.5, 1024.0, 65504.0, 6.1035156e-5, 5.9604645e-8,
+    ];
+    for x in reps {
+        assert_eq!(quantize(x), x, "representable {x} not preserved");
+    }
+}
+
+#[test]
+fn f16_quantize_is_monotone() {
+    // monotone non-decreasing over a dense sweep crossing subnormals, the
+    // normal range, and the saturation boundary
+    let mut xs: Vec<f32> = Vec::new();
+    let mut rng = Rng::new(18);
+    for v in rng.normal_vec(4096) {
+        xs.push(v * 3.0);
+        xs.push(v * 1e-6); // subnormal territory
+        xs.push(v * 4e4); // near the f16 overflow boundary
+    }
+    xs.sort_by(f32::total_cmp);
+    for w in xs.windows(2) {
+        assert!(
+            quantize(w[0]) <= quantize(w[1]),
+            "monotonicity violated: q({}) > q({})",
+            w[0],
+            w[1]
+        );
+    }
+}
+
+#[test]
+fn f16_relative_error_is_half_ulp_on_the_normal_range() {
+    // |q(x) - x| / |x| <= 2^-11 for x in the f16 normal range (RNE rounds
+    // to within half a ulp; ulp/x <= 2^-10)
+    let bound = (2.0f64).powi(-11);
+    let mut rng = Rng::new(19);
+    for v in rng.normal_vec(8192) {
+        let x = v * 100.0;
+        if x.abs() < 6.2e-5 {
+            continue; // subnormal: absolute, not relative, error regime
+        }
+        let rel = ((quantize(x) as f64) - (x as f64)).abs() / (x as f64).abs();
+        assert!(rel <= bound, "rel error {rel:.3e} > 2^-11 at {x}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_plans_and_grads_are_thread_count_invariant() {
+    let (q, k, _v) = qkv(2, 4, 64, 8, 31);
+    let rt = MaskRouter::new(4, 8, 4, 5);
+    let p1 = rt.predict_plan(&cfg(1), &q, &k);
+    let p4 = rt.predict_plan(&cfg(4), &q, &k);
+    for bi in 0..2 {
+        for hi in 0..4 {
+            let (m1, m4) = (p1.mask(bi, hi), p4.mask(bi, hi));
+            for i in 0..m1.tm {
+                for j in 0..m1.tn {
+                    assert_eq!(m1.label(i, j), m4.label(i, j), "(b{bi} h{hi} {i},{j})");
+                }
+            }
+        }
+    }
+    let g1 = rt.loss_and_grads(&cfg(1), &q, &k);
+    let g4 = rt.loss_and_grads(&cfg(4), &q, &k);
+    assert_eq!(g1.loss.to_bits(), g4.loss.to_bits(), "loss not thread invariant");
+    for hi in 0..4 {
+        assert_eq!(g1.dwq[hi].data, g4.dwq[hi].data, "dwq[{hi}]");
+        assert_eq!(g1.dwk[hi].data, g4.dwk[hi].data, "dwk[{hi}]");
+        assert_eq!(g1.da[hi], g4.da[hi], "da[{hi}]");
+        assert_eq!(g1.db[hi], g4.db[hi], "db[{hi}]");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OFF-state differentials: defaults must be bitwise-identical to code that
+// never heard of routing or precision
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_f32_precision_is_bitwise_default() {
+    let (q, k, v) = qkv(2, 2, 64, 8, 41);
+    let base = BatchSlaEngine::new(cfg(2), 2, 8);
+    let explicit = BatchSlaEngine::new(
+        SlaConfig { kv_precision: KvPrecision::F32, ..cfg(2) },
+        2,
+        8,
+    );
+    assert_eq!(base.cfg.kv_precision, KvPrecision::F32, "default must be f32");
+    let a = base.forward(&q, &k, &v);
+    let b = explicit.forward(&q, &k, &v);
+    assert_eq!(a.o.data, b.o.data, "explicit F32 must be bitwise the default path");
+    // and a plan replay under F32 matches the fused forward exactly
+    let plan = AttentionPlan::predict(&base.cfg, &q, &k);
+    let c = base.forward_plan(&q, &k, &v, &plan);
+    assert_eq!(a.o.data, c.o.data);
+}
+
+#[test]
+fn stack_off_state_is_bitwise_under_both_knobs() {
+    // two stacks from the same seed; one has the knobs touched in their
+    // OFF positions — every serving-facing path must agree bitwise
+    let stack_a = DitStack::random(cfg(2), 2, 2, 4, 10, 51);
+    let mut stack_b = DitStack::random(cfg(2), 2, 2, 4, 10, 51);
+    stack_b.set_kv_precision(KvPrecision::F32); // explicit OFF
+    assert_eq!(stack_b.router_layers(), 0);
+    assert_eq!(stack_b.kv_precision(), KvPrecision::F32);
+    let mut rng = Rng::new(52);
+    let hs: Vec<Mat> = (0..2).map(|_| Mat::randn(32, 10, &mut rng)).collect();
+    let mods = vec![0.9f32, 1.1];
+    let fa = stack_a.forward_fresh(&hs, &mods);
+    let fb = stack_b.forward_fresh(&hs, &mods);
+    for (a, b) in fa.hs.iter().zip(&fb.hs) {
+        assert_eq!(a.data, b.data, "forward_fresh diverged with knobs OFF");
+    }
+    let oa = stack_a.forward_only(&hs, &mods);
+    let ob = stack_b.forward_only(&hs, &mods);
+    for (a, b) in oa.iter().zip(&ob) {
+        assert_eq!(a.data, b.data, "forward_only diverged with knobs OFF");
+    }
+}
+
+#[test]
+fn backend_off_state_is_bitwise_and_telemetry_reads_off() {
+    let mk = || {
+        NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+    };
+    let plain = mk();
+    let touched = mk().with_kv_precision(KvPrecision::F32);
+    assert_eq!(plain.router_layers(), 0);
+    assert_eq!(plain.kv_precision_label(), "f32");
+    let mut rng = Rng::new(53);
+    let x = HostTensor::new(vec![32, 4], rng.normal_vec(32 * 4));
+    let c = HostTensor::new(vec![6], rng.normal_vec(6));
+    let va = plain.velocity(&x, 0.5, &c).unwrap();
+    let vb = touched.velocity(&x, 0.5, &c).unwrap();
+    assert_eq!(va.data, vb.data, "explicit F32 backend diverged from default");
+}
+
+// ---------------------------------------------------------------------------
+// the ON states: f16 really quantizes (but small), routing really serves
+// ---------------------------------------------------------------------------
+
+#[test]
+fn f16_path_differs_from_f32_only_at_storage_precision() {
+    let (q, k, v) = qkv(2, 2, 64, 8, 61);
+    let e32 = BatchSlaEngine::new(cfg(2), 2, 8);
+    let e16 = BatchSlaEngine::new(
+        SlaConfig { kv_precision: KvPrecision::F16, ..cfg(2) },
+        2,
+        8,
+    );
+    let o32 = e32.forward(&q, &k, &v).o;
+    let o16 = e16.forward(&q, &k, &v).o;
+    assert_ne!(o32.data, o16.data, "f16 path must actually quantize");
+    let r = rel_l2(&o16.data, &o32.data);
+    assert!(r < 0.02, "f16 path too far from f32: rel_l2 {r:.3e}");
+    assert!(o16.data.iter().all(|x| x.is_finite()));
+    // mask prediction runs pre-quantization: both paths pick the same plan
+    let m32 = e32.forward(&q, &k, &v).masks();
+    let m16 = e16.forward(&q, &k, &v).masks();
+    for (a, b) in m32.iter().zip(&m16) {
+        for i in 0..a.tm {
+            for j in 0..a.tn {
+                assert_eq!(a.label(i, j), b.label(i, j), "plan drifted under f16");
+            }
+        }
+    }
+}
+
+#[test]
+fn routed_backend_serves_deterministically_with_telemetry() {
+    let mk = || {
+        NativeSlaBackend::new(
+            (2, 4, 4),
+            4,
+            6,
+            2,
+            4,
+            SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+            7,
+        )
+    };
+    let routed = mk()
+        .with_mask_routing(4, 99)
+        .with_kv_precision(KvPrecision::F16)
+        .with_plan_refresh(4);
+    assert_eq!(routed.router_layers(), 2, "both layers must carry a router");
+    assert_eq!(routed.kv_precision_label(), "f16");
+    let mut rng = Rng::new(63);
+    let x = HostTensor::new(vec![32, 4], rng.normal_vec(32 * 4));
+    let c = HostTensor::new(vec![6], rng.normal_vec(6));
+    let v1 = routed.velocity(&x, 0.5, &c).unwrap();
+    let v2 = routed.velocity(&x, 0.5, &c).unwrap();
+    assert_eq!(v1.data, v2.data, "routed serving must be deterministic");
+    assert!(v1.data.iter().all(|f| f.is_finite()));
+    // the routed keyed path replays cached plans across steps
+    let calls = [(&x, 0.7f32, &c)];
+    let keys = [Some(5u64)];
+    let s0 = [Some(0u64)];
+    let s1 = [Some(1u64)];
+    let o0 = routed.velocity_batch_stamped(&calls, &keys, &s0).unwrap();
+    let o1 = routed.velocity_batch_stamped(&calls, &keys, &s1).unwrap();
+    assert_eq!(o0[0].data, o1[0].data, "same inputs, cached plan: same output");
+    let stats = routed.plan_cache_stats();
+    assert!(stats.misses >= 1, "first stamped step must route a fresh plan");
+    assert!(stats.hits >= 1, "second stamped step must replay it");
+    // routing changes plan selection: identical init, routers vs static
+    let static_b = mk();
+    let vs = static_b.velocity(&x, 0.5, &c).unwrap();
+    assert_eq!(vs.shape, v1.shape);
+}

@@ -25,7 +25,7 @@
 //! gradient term shows up at O(0.1..1).
 
 use sla_dit::attention::plan::StackPlanner;
-use sla_dit::attention::SlaConfig;
+use sla_dit::attention::{MaskRouter, SlaConfig};
 use sla_dit::model::{rms_norm_backward, rms_norm_rows, DitStack};
 use sla_dit::tensor::{Mat, Tens4};
 use sla_dit::train::NativeFineTuner;
@@ -423,6 +423,102 @@ fn joint_for_stack_at_depth_one_matches_for_stack_layer_bitwise() {
         }
     }
     assert!(joint_ft.losses[5] < joint_ft.losses[0], "distillation must descend");
+}
+
+#[test]
+fn fd_router_gradients() {
+    // the router's soft-relaxation CE is smooth in every leaf (the teacher
+    // labels are static and the executed masks are frozen elsewhere), so
+    // its analytic gradients are checkable with the same Richardson
+    // harness as the stack backward — run at the default F32 precision
+    // (the f16 quantizer is piecewise constant, so FD through it is
+    // meaningless by construction; QAT is validated empirically below)
+    let (b, h, n, d, rank) = (2usize, 2usize, 32usize, 4usize, 3usize);
+    let c = cfg(3);
+    let mut rng = Rng::new(800);
+    let q = Tens4::randn(b, h, n, d, &mut rng);
+    let k = Tens4::randn(b, h, n, d, &mut rng);
+    let mut rt = MaskRouter::new(h, d, rank, 801);
+    let g = rt.loss_and_grads(&c, &q, &k);
+    let mut drng = Rng::new(802);
+    for hi in 0..h {
+        for which in 0..2 {
+            let (name, base, ana_dir) = if which == 0 {
+                (format!("router/dwq[{hi}]"), rt.wq[hi].clone(), g.dwq[hi].clone())
+            } else {
+                (format!("router/dwk[{hi}]"), rt.wk[hi].clone(), g.dwk[hi].clone())
+            };
+            let dir = Mat::randn(base.rows, base.cols, &mut drng);
+            let ana = dot64(&ana_dir, &dir);
+            richardson_check(&name, ana, |t| {
+                {
+                    let w = if which == 0 { &mut rt.wq[hi] } else { &mut rt.wk[hi] };
+                    for ((wv, &bv), &dv) in
+                        w.data.iter_mut().zip(&base.data).zip(&dir.data)
+                    {
+                        *wv = bv + t * dv;
+                    }
+                }
+                let l = rt.loss_and_grads(&c, &q, &k).loss as f64;
+                let w = if which == 0 { &mut rt.wq[hi] } else { &mut rt.wk[hi] };
+                w.data.copy_from_slice(&base.data);
+                l
+            });
+        }
+        for cls in 0..3 {
+            let base_a = rt.a[hi][cls];
+            richardson_check(&format!("router/da[{hi}][{cls}]"), g.da[hi][cls] as f64, |t| {
+                rt.a[hi][cls] = base_a + t;
+                let l = rt.loss_and_grads(&c, &q, &k).loss as f64;
+                rt.a[hi][cls] = base_a;
+                l
+            });
+            let base_b = rt.b[hi][cls];
+            richardson_check(&format!("router/db[{hi}][{cls}]"), g.db[hi][cls] as f64, |t| {
+                rt.b[hi][cls] = base_b + t;
+                let l = rt.loss_and_grads(&c, &q, &k).loss as f64;
+                rt.b[hi][cls] = base_b;
+                l
+            });
+        }
+    }
+}
+
+#[test]
+fn joint_distillation_with_routing_and_qat_stays_monotone() {
+    // the PR-8 acceptance run: L=3, masks routed by the learnable scorer
+    // (frozen for the whole run — the straight-through regime), student on
+    // the f16 storage path, teacher dense f32. The distillation loss must
+    // stay strictly monotone over >= 10 steps (the fake-quant noise lives
+    // in the kernel inputs, not in the loss-vs-projection curvature) and
+    // the router's CE against the static teacher must also descend.
+    let (b, n, c, heads, d, depth) = (1usize, 32usize, 8usize, 2usize, 4usize, 3usize);
+    let stack = DitStack::random(cfg(3), depth, heads, d, c, 900);
+    let hs = items(b, n, c, 901);
+    let mods = vec![1.0f32];
+    let mut ft = NativeFineTuner::for_stack(&stack, 1.0).with_routing(3, 902).with_qat();
+    for _ in 0..13 {
+        let l = ft.step(&hs, &mods);
+        assert!(l.is_finite() && l > 0.0);
+    }
+    for (i, w) in ft.losses.windows(2).enumerate() {
+        assert!(
+            w[1] < w[0],
+            "QAT+routing loss must decrease monotonically: step {i} {} -> step {} {}",
+            w[0],
+            i + 1,
+            w[1]
+        );
+    }
+    assert_eq!(ft.router_losses.len(), 13, "router CE recorded every step");
+    assert!(
+        ft.router_losses.last().unwrap() < ft.router_losses.first().unwrap(),
+        "router CE did not improve: {:?}",
+        ft.router_losses
+    );
+    // every layer kept its router and the f16 knob
+    assert_eq!(ft.stack.router_layers(), depth);
+    assert_eq!(ft.stack.kv_precision().label(), "f16");
 }
 
 #[test]
