@@ -1,16 +1,19 @@
 //! `serve` experiment: concurrent TCP serving throughput.
 //!
-//! Stands up the real JSON-lines `Server` (connection-handler pool +
-//! bounded admission queue + `max_active` compute workers) over a shared
-//! `NativeSlaBackend` and pushes the SAME total request load through 1 vs 4
-//! client threads. Kernel threading is pinned to 1 so any speedup comes
-//! from request-level parallelism — the `Send + Sync` backend refactor —
-//! not from the intra-call threadpool. Also splits per-request latency into
-//! queue wait vs compute (the `ServeReport` breakdown).
+//! Stands up the real JSON-lines `Server` over a shared `NativeSlaBackend`
+//! and pushes the SAME total request load through 1 vs 4 client threads on
+//! the batch-of-one worker-pool path (the legacy `clients{1,4}` metrics),
+//! then re-runs the 4-client load through the continuous-batching executor
+//! (`batched4_*` metrics) — an A/B pair that isolates what sharing each
+//! denoise tick's `advance_batch` call across connections buys. Kernel
+//! threading is pinned to 1 so any speedup comes from request-level
+//! parallelism and per-call amortization, not the intra-call threadpool.
+//! Also splits per-request latency into queue wait vs compute (the
+//! `ServeReport` breakdown) and reports batched tick occupancy.
 //!
 //! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes; the
 //! `BENCH_serve.json` artifact feeds the bench-compare perf gate via its
-//! `clients{1,4}_ns_per_step` metrics.
+//! `clients{1,4}_ns_per_step` + `batched4_ns_per_step` metrics.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -26,15 +29,22 @@ use crate::common::{env_usize, log_result, shape_json, write_bench_json};
 
 /// Serve `total_requests` (split evenly across `clients` connections)
 /// through a fresh server over `backend`; returns (wall seconds, report).
+/// `batched` toggles the continuous-batching executor vs the batch-of-one
+/// worker pool (identical samples either way — only the schedule differs).
 fn run_serving(
     backend: &NativeSlaBackend,
     clients: usize,
     total_requests: usize,
     steps: usize,
+    batched: bool,
 ) -> Result<(f64, ServeReport)> {
-    let srv = Server::new(backend, CoordinatorConfig { max_active: 4, ..Default::default() })
-        .with_accept_threads(4)
-        .with_queue_depth(8);
+    let srv = Server::new(
+        backend,
+        CoordinatorConfig { max_active: 4, batch_per_tick: 4, ..Default::default() },
+    )
+    .with_accept_threads(4)
+    .with_queue_depth(8)
+    .with_batching(batched);
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let per_client = total_requests / clients;
@@ -75,12 +85,13 @@ fn run_median(
     clients: usize,
     total_requests: usize,
     steps: usize,
+    batched: bool,
     reps: usize,
 ) -> Result<(f64, ServeReport)> {
     let mut walls = Vec::new();
     let mut last = None;
     for _ in 0..reps.max(1) {
-        let (w, rep) = run_serving(backend, clients, total_requests, steps)?;
+        let (w, rep) = run_serving(backend, clients, total_requests, steps, batched)?;
         walls.push(w);
         last = Some(rep);
     }
@@ -127,35 +138,46 @@ pub fn serve() -> Result<()> {
     .with_plan_refresh(steps.max(1));
     println!(
         "workload: L={depth} H={heads} N={n} d={d} C={c} block={blk}, {requests} requests x \
-         {steps} steps, 4 workers{}",
+         {steps} steps, in-flight cap 4{}",
         if smoke { " [smoke]" } else { "" }
     );
 
-    let (w1, rep1) = run_median(&backend, 1, requests, steps, reps)?;
-    let (w4, rep4) = run_median(&backend, 4, requests, steps, reps)?;
+    // legacy worker-pool pair (kept workload- and mode-identical so the
+    // clients{1,4}_ns_per_step ratchet history stays comparable)
+    let (w1, rep1) = run_median(&backend, 1, requests, steps, false, reps)?;
+    let (w4, rep4) = run_median(&backend, 4, requests, steps, false, reps)?;
+    // the same 4-client load through the continuous-batching executor
+    let (wb, repb) = run_median(&backend, 4, requests, steps, true, reps)?;
     let denom = (requests * steps) as f64;
     let (rps1, rps4) = (requests as f64 / w1, requests as f64 / w4);
+    let rpsb = requests as f64 / wb;
 
     println!(
-        "\n{:<18} {:>12} {:>10} {:>14} {:>14}",
-        "clients", "ms total", "req/s", "wait ms/req", "compute ms/req"
+        "\n{:<22} {:>12} {:>10} {:>14} {:>14} {:>8}",
+        "mode", "ms total", "req/s", "wait ms/req", "compute ms/req", "occ"
     );
-    for (label, w, rps, rep) in
-        [("1 (serial)", w1, rps1, &rep1), ("4 (parallel)", w4, rps4, &rep4)]
-    {
+    for (label, w, rps, rep) in [
+        ("pool, 1 client", w1, rps1, &rep1),
+        ("pool, 4 clients", w4, rps4, &rep4),
+        ("batched, 4 clients", wb, rpsb, &repb),
+    ] {
         println!(
-            "{:<18} {:>12.2} {:>10.2} {:>14.3} {:>14.3}",
+            "{:<22} {:>12.2} {:>10.2} {:>14.3} {:>14.3} {:>8.2}",
             label,
             w * 1e3,
             rps,
             1e3 * rep.queue_wait_s / requests as f64,
             1e3 * rep.compute_s / requests as f64,
+            rep.mean_batch_occupancy(),
         );
     }
     println!(
-        "\nspeedup: {:.2}x req/s going 1 -> 4 client threads (queue depth max {})",
+        "\nspeedup: {:.2}x req/s going 1 -> 4 clients (pool); {:.2}x req/s batched vs \
+         pool at 4 clients (tick occupancy {:.2}, {} ticks)",
         rps4 / rps1,
-        rep4.queue_depth_max
+        rpsb / rps4,
+        repb.mean_batch_occupancy(),
+        repb.ticks,
     );
 
     let payload = Json::obj(vec![
@@ -165,18 +187,27 @@ pub fn serve() -> Result<()> {
         ("requests", Json::num(requests as f64)),
         ("clients1_ns_per_step", Json::num(w1 * 1e9 / denom)),
         ("clients4_ns_per_step", Json::num(w4 * 1e9 / denom)),
+        ("batched4_ns_per_step", Json::num(wb * 1e9 / denom)),
         ("rps_1", Json::num(rps1)),
         ("rps_4", Json::num(rps4)),
+        ("batched4_rps", Json::num(rpsb)),
         ("speedup_rps", Json::num(rps4 / rps1)),
+        ("batched_speedup_rps", Json::num(rpsb / rps4)),
+        ("batched4_occ_mean", Json::num(repb.mean_batch_occupancy())),
+        ("batched4_ticks", Json::num(repb.ticks as f64)),
         ("queue_wait_ns_mean_4", Json::num(rep4.queue_wait_s * 1e9 / requests as f64)),
         ("compute_ns_mean_4", Json::num(rep4.compute_s * 1e9 / requests as f64)),
         ("queue_depth_max_4", Json::num(rep4.queue_depth_max as f64)),
-        ("conn_errors", Json::num((rep1.conn_errors + rep4.conn_errors) as f64)),
+        (
+            "conn_errors",
+            Json::num((rep1.conn_errors + rep4.conn_errors + repb.conn_errors) as f64),
+        ),
     ]);
     log_result("serve", payload.clone());
     write_bench_json("serve", payload);
-    println!("\nexpected shape: >1x req/s from 1 -> 4 clients (the backend is shared");
-    println!("Send + Sync, so 4 workers compute concurrently); per-request compute");
-    println!("stays flat while queue wait absorbs the contention");
+    println!("\nexpected shape: >1x req/s from 1 -> 4 clients on the worker pool (the");
+    println!("backend is shared Send + Sync), and a further gain from the batching");
+    println!("executor folding all 4 connections into each tick's ONE advance_batch");
+    println!("call — per-call fixed costs amortize across the batch entries");
     Ok(())
 }

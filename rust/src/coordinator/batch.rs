@@ -1,0 +1,242 @@
+//! Shared denoise-step batching core.
+//!
+//! `BatchCore` owns the three operations that define continuous batching at
+//! denoise-step granularity — seeding a request's sampling state
+//! (`fresh_request_state`), advancing a heterogeneous batch of in-flight
+//! requests one step through a SINGLE keyed+stamped
+//! `VelocityBackend::velocity_batch_stamped` call (`advance_batch`), and
+//! evicting a finished/failed request's plan-cache streams
+//! (`evict_request_streams`). Both consumers — the virtual-clock scheduler
+//! (`Coordinator::run_trace`) and the TCP server's batching executor —
+//! delegate here, so the stream-key layout, step-index stamps, and the
+//! Euler/CFG update math cannot drift between the offline and online
+//! serving paths. The per-entry update is elementwise and carries its own
+//! stream key + step stamp, so a request's output depends only on
+//! `(prompt_seed, steps, cfg)` — never on which other requests shared its
+//! tick. That batch-composition invariance is what makes batched serving
+//! f64-exactly equal to the sequential reference (pinned by tests at the
+//! scheduler, server, and TCP-client levels).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::VelocityBackend;
+use super::scheduler::{PlanLayerReport, ServeReport};
+use crate::diffusion;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{self, PoolStats};
+use crate::workload::{Corpus, CorpusConfig, VideoRequest};
+
+/// One in-flight request's sampling state between ticks.
+pub(crate) struct ActiveReq {
+    pub req: VideoRequest,
+    pub x: HostTensor,
+    pub cond: HostTensor,
+    pub uncond: HostTensor,
+    pub ts: Vec<f32>,
+    pub step_idx: usize,
+    /// Virtual-clock admission time (`run_trace`); 0 for wall-clock users.
+    pub admitted_clock: f64,
+}
+
+impl ActiveReq {
+    /// `ts` has `steps + 1` entries; the request is done once the next
+    /// advance would step off the grid.
+    pub fn finished(&self) -> bool {
+        self.step_idx + 1 >= self.ts.len()
+    }
+}
+
+/// Backend + sampling-state factory shared by the scheduler and the TCP
+/// server's batching executor.
+pub(crate) struct BatchCore<'b> {
+    backend: &'b dyn VelocityBackend,
+    seed: u64,
+    shift: f32,
+    corpus: Corpus,
+}
+
+impl<'b> BatchCore<'b> {
+    pub fn new(backend: &'b dyn VelocityBackend, seed: u64, shift: f32) -> Self {
+        let (_, channels, cond_dim) = backend.shape();
+        let corpus = Corpus::new(CorpusConfig::from_video(
+            backend.video(),
+            channels,
+            cond_dim,
+            seed,
+        ));
+        BatchCore { backend, seed, shift, corpus }
+    }
+
+    pub fn backend(&self) -> &'b dyn VelocityBackend {
+        self.backend
+    }
+
+    /// Seed a request's sampling state: noise + conditioning depend only on
+    /// `(core seed, prompt_seed)`, never on scheduling.
+    pub fn fresh_request_state(&self, req: &VideoRequest, clock: f64) -> ActiveReq {
+        let (n, c, cond_dim) = self.backend.shape();
+        let mut rng = Rng::new(self.seed ^ req.prompt_seed);
+        let noise = HostTensor::new(vec![n, c], rng.normal_vec(n * c));
+        let (_, cond) = self.corpus.sample(req.prompt_seed);
+        ActiveReq {
+            ts: diffusion::timesteps(req.steps, self.shift),
+            req: req.clone(),
+            x: noise,
+            cond,
+            uncond: HostTensor::zeros(vec![cond_dim]),
+            step_idx: 0,
+            admitted_clock: clock,
+        }
+    }
+
+    /// The plan-cache stream key for one request's cond / uncond branch —
+    /// each CFG branch has its own attention geometry, so its own plan.
+    pub fn stream_key(req_id: u64, uncond: bool) -> u64 {
+        (req_id << 1) | uncond as u64
+    }
+
+    /// Evict both of a request's plan-cache streams (single source of truth
+    /// for the key layout across the finish / error / generate_one paths).
+    pub fn evict_request_streams(&self, req_id: u64) {
+        self.backend.end_request(Self::stream_key(req_id, false));
+        self.backend.end_request(Self::stream_key(req_id, true));
+    }
+
+    /// Advance every request in `batch` by one denoise step (Euler, CFG
+    /// when requested) through a SINGLE keyed `velocity_batch` call, so a
+    /// plan-caching backend reuses each request's attention plan across
+    /// denoise steps. Every entry carries its request's own denoise-step
+    /// index as the plan-aging stamp (requests in one tick sit at different
+    /// steps), so step-indexed backends age each stream per STEP — under
+    /// the Euler schedulers built on this core that coincides with per-call
+    /// aging, which the plan-stat regression tests pin down. Returns
+    /// measured model-call seconds.
+    pub fn advance_batch(&self, batch: &mut [&mut ActiveReq], nfe: &mut usize) -> Result<f64> {
+        if batch.is_empty() {
+            return Ok(0.0);
+        }
+        let start = Instant::now();
+        let vs = {
+            let mut calls: Vec<(&HostTensor, f32, &HostTensor)> =
+                Vec::with_capacity(batch.len());
+            let mut keys: Vec<Option<u64>> = Vec::with_capacity(batch.len());
+            let mut stamps: Vec<Option<u64>> = Vec::with_capacity(batch.len());
+            for a in batch.iter() {
+                let t0 = a.ts[a.step_idx];
+                calls.push((&a.x, t0, &a.cond));
+                keys.push(Some(Self::stream_key(a.req.id, false)));
+                stamps.push(Some(a.step_idx as u64));
+                if a.req.uses_cfg() {
+                    calls.push((&a.x, t0, &a.uncond));
+                    keys.push(Some(Self::stream_key(a.req.id, true)));
+                    stamps.push(Some(a.step_idx as u64));
+                }
+            }
+            *nfe += calls.len();
+            self.backend.velocity_batch_stamped(&calls, &keys, &stamps)?
+        };
+        let dur = start.elapsed().as_secs_f64();
+        let mut vi = 0usize;
+        for a in batch.iter_mut() {
+            let t0 = a.ts[a.step_idx];
+            let t1 = a.ts[a.step_idx + 1];
+            let dt = t0 - t1; // positive
+            if !a.req.uses_cfg() {
+                for (xv, &vv) in a.x.data.iter_mut().zip(&vs[vi].data) {
+                    *xv -= dt * vv;
+                }
+                vi += 1;
+            } else {
+                let (vc, vu) = (&vs[vi], &vs[vi + 1]);
+                let w = a.req.cfg_weight;
+                for ((xv, &c), &u) in a.x.data.iter_mut().zip(&vc.data).zip(&vu.data) {
+                    *xv -= dt * (u + w * (c - u));
+                }
+                vi += 2;
+            }
+            a.step_idx += 1;
+        }
+        Ok(dur)
+    }
+}
+
+/// Snapshot of the backend's cumulative plan-cache / churn / threadpool
+/// counters, taken at the start of a trace (or at `Server` construction).
+/// `fill_report` turns the current counters minus this snapshot into the
+/// per-trace deltas `ServeReport` carries — one implementation shared by
+/// `run_trace` and `Server::report`, so the two serving tiers report plan
+/// traffic identically.
+pub(crate) struct TelemetrySnapshot {
+    plan0: crate::attention::plan::PlanCacheStats,
+    delta0: crate::attention::plan::PlanDeltaStats,
+    layers0: Vec<(crate::attention::plan::PlanCacheStats, crate::attention::plan::PlanDeltaStats)>,
+    pool0: PoolStats,
+}
+
+impl TelemetrySnapshot {
+    pub fn capture(backend: &dyn VelocityBackend) -> Self {
+        TelemetrySnapshot {
+            plan0: backend.plan_stats().unwrap_or_default(),
+            delta0: backend.plan_delta().unwrap_or_default(),
+            layers0: backend.plan_layers(),
+            pool0: threadpool::pool_stats(),
+        }
+    }
+
+    /// Fill the plan / pool / router / precision sections of `report` with
+    /// deltas since this snapshot. Leaves the latency / queue fields alone.
+    pub fn fill_report(&self, backend: &dyn VelocityBackend, report: &mut ServeReport) {
+        report.router_layers = backend.router_layers();
+        report.kv_precision = backend.kv_precision_label().to_string();
+        let pd = threadpool::pool_stats().delta(self.pool0);
+        report.pool_chunks = pd.pooled_chunks;
+        report.pool_inline = pd.inline_chunks;
+        report.pool_idle_s = pd.idle_wait_ns as f64 / 1e9;
+        if let Some(p1) = backend.plan_stats() {
+            report.plan_hits = p1.hits - self.plan0.hits;
+            report.plan_misses = p1.misses - self.plan0.misses;
+            report.plan_refreshes = p1.refreshes - self.plan0.refreshes;
+            // delta, like the counters: only THIS trace's predictions
+            let planned = p1.planned - self.plan0.planned;
+            report.plan_mean_sparsity = if planned == 0 {
+                0.0
+            } else {
+                (p1.sparsity_sum - self.plan0.sparsity_sum) / planned as f64
+            };
+            report.plan_share_hits = p1.share_hits - self.plan0.share_hits;
+            report.plan_shares = p1.shares - self.plan0.shares;
+            report.plan_unshares = p1.unshares - self.plan0.unshares;
+            if report.router_layers > 0 {
+                report.routed_predictions = planned;
+            }
+        }
+        if let Some(d1) = backend.plan_delta() {
+            let d = d1.delta_since(&self.delta0);
+            report.plan_churn_observed = d.observed;
+            report.plan_mean_churn = d.mean_churn();
+            report.plan_max_churn = d.max_churn;
+        }
+        // per-layer deltas: the layer vector can have grown during the
+        // trace, so pad the starting snapshot with zeros
+        let layers1 = backend.plan_layers();
+        report.plan_layers = layers1
+            .iter()
+            .enumerate()
+            .map(|(li, (s1, d1))| {
+                let (s0, d0) = self.layers0.get(li).copied().unwrap_or_default();
+                let d = d1.delta_since(&d0);
+                PlanLayerReport {
+                    hits: s1.hits - s0.hits,
+                    misses: s1.misses - s0.misses,
+                    refreshes: s1.refreshes - s0.refreshes,
+                    share_hits: s1.share_hits - s0.share_hits,
+                    churn_observed: d.observed,
+                    mean_churn: d.mean_churn(),
+                }
+            })
+            .collect();
+    }
+}

@@ -10,6 +10,7 @@
 //! batched multi-head SLA engine call. The TCP `Server` shares one backend
 //! across a pool of connection handlers and `max_active` compute workers.
 
+mod batch;
 mod engine;
 mod scheduler;
 mod server;

@@ -18,12 +18,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::batch::{ActiveReq, BatchCore, TelemetrySnapshot};
 use super::engine::VelocityBackend;
-use crate::diffusion;
 use crate::runtime::HostTensor;
-use crate::util::rng::Rng;
 use crate::util::stats::percentile;
-use crate::workload::{Corpus, CorpusConfig, VideoRequest};
+use crate::workload::VideoRequest;
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -40,16 +39,6 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig { max_active: 8, batch_per_tick: 4, shift: 1.0, seed: 7 }
     }
-}
-
-struct ActiveReq {
-    req: VideoRequest,
-    x: HostTensor,
-    cond: HostTensor,
-    uncond: HostTensor,
-    ts: Vec<f32>,
-    step_idx: usize,
-    admitted_clock: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -88,6 +77,11 @@ pub struct ServeReport {
     pub idle_s: f64,
     pub nfe: usize,
     pub ticks: usize,
+    /// Request-step advances summed over all ticks: `batch_entries /
+    /// ticks` is the mean batch occupancy — how full the shared ticks ran.
+    /// Filled by both `run_trace` and the TCP server's batching executor
+    /// (stays 0 on the batch-of-one worker-pool path).
+    pub batch_entries: usize,
     /// Plan-cache accounting over this trace (zero when the backend does
     /// not cache attention plans): (step, layer) lookups served by a cached
     /// plan / lookups that predicted / predictions that replaced a stale
@@ -122,6 +116,9 @@ pub struct ServeReport {
     /// Per-connection I/O errors survived by the TCP front-end (always 0
     /// for virtual-clock traces).
     pub conn_errors: u64,
+    /// Over-long request lines rejected (and skipped) by the TCP front-end
+    /// without dropping their connection (always 0 for virtual traces).
+    pub line_overflows: u64,
     /// Kernel threadpool utilization over this trace (deltas of the
     /// process-wide `util::threadpool` counters): chunks executed by pool
     /// workers, work items run inline on submitting threads, and total
@@ -182,6 +179,14 @@ impl ServeReport {
         self.pool_chunks as f64 / total as f64
     }
 
+    /// Mean number of requests advanced per tick (0 when no ticks ran).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.ticks == 0 {
+            return 0.0;
+        }
+        self.batch_entries as f64 / self.ticks as f64
+    }
+
     /// Fraction of plan lookups served from cache.
     pub fn plan_hit_rate(&self) -> f64 {
         let total = self.plan_hits + self.plan_misses;
@@ -207,10 +212,18 @@ impl ServeReport {
             self.latency_percentile(95.0),
             self.throughput_rps(),
         );
+        if self.batch_entries > 0 && self.ticks > 0 {
+            s.push_str(&format!(
+                " batch[entries={} occ_mean={:.2}]",
+                self.batch_entries,
+                self.mean_batch_occupancy(),
+            ));
+        }
         if self.queue_wait_s > 0.0
             || self.compute_s > 0.0
             || self.queue_depth_max > 0
             || self.conn_errors > 0
+            || self.line_overflows > 0
         {
             s.push_str(&format!(
                 " queue[wait_mean={:.2}s depth_max={}] compute={:.2}s conn_errors={}",
@@ -219,6 +232,9 @@ impl ServeReport {
                 self.compute_s,
                 self.conn_errors,
             ));
+            if self.line_overflows > 0 {
+                s.push_str(&format!(" line_overflows={}", self.line_overflows));
+            }
         }
         if self.pool_chunks + self.pool_inline > 0 {
             s.push_str(&format!(
@@ -279,107 +295,21 @@ impl ServeReport {
 }
 
 pub struct Coordinator<'b> {
-    backend: &'b dyn VelocityBackend,
+    /// The shared batching core (`fresh_request_state` / `advance_batch` /
+    /// stream-key eviction) — also used directly by the TCP server's
+    /// batching executor, so the two serving tiers cannot drift.
+    pub(crate) core: BatchCore<'b>,
     pub cfg: CoordinatorConfig,
-    corpus: Corpus,
 }
 
 impl<'b> Coordinator<'b> {
     pub fn new(backend: &'b dyn VelocityBackend, cfg: CoordinatorConfig) -> Self {
-        let (_, channels, cond_dim) = backend.shape();
-        let corpus = Corpus::new(CorpusConfig::from_video(
-            backend.video(),
-            channels,
-            cond_dim,
-            cfg.seed,
-        ));
-        Coordinator { backend, cfg, corpus }
+        let core = BatchCore::new(backend, cfg.seed, cfg.shift);
+        Coordinator { core, cfg }
     }
 
-    fn fresh_request_state(&self, req: &VideoRequest, clock: f64) -> ActiveReq {
-        let (n, c, cond_dim) = self.backend.shape();
-        let mut rng = Rng::new(self.cfg.seed ^ req.prompt_seed);
-        let noise = HostTensor::new(vec![n, c], rng.normal_vec(n * c));
-        let (_, cond) = self.corpus.sample(req.prompt_seed);
-        ActiveReq {
-            ts: diffusion::timesteps(req.steps, self.cfg.shift),
-            req: req.clone(),
-            x: noise,
-            cond,
-            uncond: HostTensor::zeros(vec![cond_dim]),
-            step_idx: 0,
-            admitted_clock: clock,
-        }
-    }
-
-    /// The plan-cache stream key for one request's cond / uncond branch —
-    /// each CFG branch has its own attention geometry, so its own plan.
-    fn stream_key(req_id: u64, uncond: bool) -> u64 {
-        (req_id << 1) | uncond as u64
-    }
-
-    /// Evict both of a request's plan-cache streams (single source of truth
-    /// for the key layout across the finish / error / generate_one paths).
-    fn evict_request_streams(&self, req_id: u64) {
-        self.backend.end_request(Self::stream_key(req_id, false));
-        self.backend.end_request(Self::stream_key(req_id, true));
-    }
-
-    /// Advance every request in `batch` by one denoise step (Euler, CFG
-    /// when requested) through a SINGLE keyed `velocity_batch` call, so a
-    /// plan-caching backend reuses each request's attention plan across
-    /// denoise steps. Every entry carries its request's own denoise-step
-    /// index as the plan-aging stamp (requests in one tick sit at different
-    /// steps), so step-indexed backends age each stream per STEP — under
-    /// this Euler scheduler that coincides with per-call aging, which the
-    /// plan-stat regression tests pin down. Returns measured model-call
-    /// seconds.
-    fn advance_batch(&self, batch: &mut [ActiveReq], nfe: &mut usize) -> Result<f64> {
-        if batch.is_empty() {
-            return Ok(0.0);
-        }
-        let start = Instant::now();
-        let vs = {
-            let mut calls: Vec<(&HostTensor, f32, &HostTensor)> =
-                Vec::with_capacity(batch.len());
-            let mut keys: Vec<Option<u64>> = Vec::with_capacity(batch.len());
-            let mut stamps: Vec<Option<u64>> = Vec::with_capacity(batch.len());
-            for a in batch.iter() {
-                let t0 = a.ts[a.step_idx];
-                calls.push((&a.x, t0, &a.cond));
-                keys.push(Some(Self::stream_key(a.req.id, false)));
-                stamps.push(Some(a.step_idx as u64));
-                if a.req.uses_cfg() {
-                    calls.push((&a.x, t0, &a.uncond));
-                    keys.push(Some(Self::stream_key(a.req.id, true)));
-                    stamps.push(Some(a.step_idx as u64));
-                }
-            }
-            *nfe += calls.len();
-            self.backend.velocity_batch_stamped(&calls, &keys, &stamps)?
-        };
-        let dur = start.elapsed().as_secs_f64();
-        let mut vi = 0usize;
-        for a in batch.iter_mut() {
-            let t0 = a.ts[a.step_idx];
-            let t1 = a.ts[a.step_idx + 1];
-            let dt = t0 - t1; // positive
-            if !a.req.uses_cfg() {
-                for (xv, &vv) in a.x.data.iter_mut().zip(&vs[vi].data) {
-                    *xv -= dt * vv;
-                }
-                vi += 1;
-            } else {
-                let (vc, vu) = (&vs[vi], &vs[vi + 1]);
-                let w = a.req.cfg_weight;
-                for ((xv, &c), &u) in a.x.data.iter_mut().zip(&vc.data).zip(&vu.data) {
-                    *xv -= dt * (u + w * (c - u));
-                }
-                vi += 2;
-            }
-            a.step_idx += 1;
-        }
-        Ok(dur)
+    fn backend(&self) -> &'b dyn VelocityBackend {
+        self.core.backend()
     }
 
     /// Serve a full request trace; returns stats plus (optionally) finished
@@ -394,10 +324,7 @@ impl<'b> Coordinator<'b> {
         let mut report = ServeReport::default();
         let mut clock = 0.0f64;
         // plan-cache counters are cumulative on the backend; report deltas
-        let plan0 = self.backend.plan_stats().unwrap_or_default();
-        let delta0 = self.backend.plan_delta().unwrap_or_default();
-        let layers0 = self.backend.plan_layers();
-        let pool0 = crate::util::threadpool::pool_stats();
+        let snap = TelemetrySnapshot::capture(self.backend());
 
         while !pending.is_empty() || !active.is_empty() {
             // admit arrivals under the backpressure cap
@@ -405,7 +332,7 @@ impl<'b> Coordinator<'b> {
                 match pending.front() {
                     Some(r) if r.arrival_s <= clock => {
                         let r = pending.pop_front().unwrap();
-                        active.push_back(self.fresh_request_state(r, clock));
+                        active.push_back(self.core.fresh_request_state(r, clock));
                     }
                     _ => break,
                 }
@@ -426,25 +353,30 @@ impl<'b> Coordinator<'b> {
             report.ticks += 1;
             let tick_start = Instant::now();
             let todo = active.len().min(self.cfg.batch_per_tick);
+            report.batch_entries += todo;
             let mut batch: Vec<ActiveReq> = Vec::with_capacity(todo);
             for _ in 0..todo {
                 batch.push(active.pop_front().unwrap());
             }
-            let model_time = match self.advance_batch(&mut batch, &mut report.nfe) {
-                Ok(t) => t,
-                Err(e) => {
-                    // evict every in-flight stream so a later trace reusing
-                    // the same request ids cannot replay this trace's plans
-                    for a in batch.iter().chain(active.iter()) {
-                        self.evict_request_streams(a.req.id);
+            let model_time = {
+                let mut refs: Vec<&mut ActiveReq> = batch.iter_mut().collect();
+                match self.core.advance_batch(&mut refs, &mut report.nfe) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        // evict every in-flight stream so a later trace
+                        // reusing the same request ids cannot replay this
+                        // trace's plans
+                        for a in batch.iter().chain(active.iter()) {
+                            self.core.evict_request_streams(a.req.id);
+                        }
+                        return Err(e);
                     }
-                    return Err(e);
                 }
             };
             report.denoise_s += model_time;
             let mut finished = Vec::new();
             for a in batch {
-                if a.step_idx + 1 >= a.ts.len() {
+                if a.finished() {
                     finished.push(a);
                 } else {
                     active.push_back(a); // round-robin: go to the back
@@ -456,7 +388,7 @@ impl<'b> Coordinator<'b> {
             clock += tick_wall.max(model_time);
             for a in finished {
                 // the request's plan-cache streams are dead — evict them
-                self.evict_request_streams(a.req.id);
+                self.core.evict_request_streams(a.req.id);
                 report.stats.push(ReqStat {
                     id: a.req.id,
                     wait_s: a.admitted_clock - a.req.arrival_s,
@@ -470,58 +402,10 @@ impl<'b> Coordinator<'b> {
             }
         }
         report.total_s = clock;
-        report.router_layers = self.backend.router_layers();
-        report.kv_precision = self.backend.kv_precision_label().to_string();
         report.stats.sort_by_key(|s| s.id);
         report.queue_wait_s = report.stats.iter().map(|s| s.wait_s).sum();
         report.compute_s = report.denoise_s;
-        let pd = crate::util::threadpool::pool_stats().delta(pool0);
-        report.pool_chunks = pd.pooled_chunks;
-        report.pool_inline = pd.inline_chunks;
-        report.pool_idle_s = pd.idle_wait_ns as f64 / 1e9;
-        if let Some(p1) = self.backend.plan_stats() {
-            report.plan_hits = p1.hits - plan0.hits;
-            report.plan_misses = p1.misses - plan0.misses;
-            report.plan_refreshes = p1.refreshes - plan0.refreshes;
-            // delta, like the counters: only THIS trace's predictions
-            let planned = p1.planned - plan0.planned;
-            report.plan_mean_sparsity = if planned == 0 {
-                0.0
-            } else {
-                (p1.sparsity_sum - plan0.sparsity_sum) / planned as f64
-            };
-            report.plan_share_hits = p1.share_hits - plan0.share_hits;
-            report.plan_shares = p1.shares - plan0.shares;
-            report.plan_unshares = p1.unshares - plan0.unshares;
-            if report.router_layers > 0 {
-                report.routed_predictions = planned;
-            }
-        }
-        if let Some(d1) = self.backend.plan_delta() {
-            let d = d1.delta_since(&delta0);
-            report.plan_churn_observed = d.observed;
-            report.plan_mean_churn = d.mean_churn();
-            report.plan_max_churn = d.max_churn;
-        }
-        // per-layer deltas: the layer vector can have grown during the
-        // trace, so pad the starting snapshot with zeros
-        let layers1 = self.backend.plan_layers();
-        report.plan_layers = layers1
-            .iter()
-            .enumerate()
-            .map(|(li, (s1, d1))| {
-                let (s0, d0) = layers0.get(li).copied().unwrap_or_default();
-                let d = d1.delta_since(&d0);
-                PlanLayerReport {
-                    hits: s1.hits - s0.hits,
-                    misses: s1.misses - s0.misses,
-                    refreshes: s1.refreshes - s0.refreshes,
-                    share_hits: s1.share_hits - s0.share_hits,
-                    churn_observed: d.observed,
-                    mean_churn: d.mean_churn(),
-                }
-            })
-            .collect();
+        snap.fill_report(self.backend(), &mut report);
         Ok(report)
     }
 
@@ -544,7 +428,7 @@ impl<'b> Coordinator<'b> {
         cfg_weight: f32,
     ) -> Result<HostTensor> {
         let req = VideoRequest { id: req_id, prompt_seed, steps, cfg_weight, arrival_s: 0.0 };
-        let mut a = self.fresh_request_state(&req, 0.0);
+        let mut a = self.core.fresh_request_state(&req, 0.0);
         let mut nfe = 0;
         // ts has steps+1 entries: the loop runs exactly `steps` advances,
         // the last of which lands on t=0. Batch of one keeps a single copy
@@ -552,12 +436,12 @@ impl<'b> Coordinator<'b> {
         // a leaked entry would be replayed by the NEXT generation reusing
         // the same request id with a different prompt.
         let advanced = (|| -> Result<()> {
-            while a.step_idx + 1 < a.ts.len() {
-                self.advance_batch(std::slice::from_mut(&mut a), &mut nfe)?;
+            while !a.finished() {
+                self.core.advance_batch(&mut [&mut a], &mut nfe)?;
             }
             Ok(())
         })();
-        self.evict_request_streams(req.id);
+        self.core.evict_request_streams(req.id);
         advanced?;
         Ok(a.x)
     }
@@ -638,6 +522,13 @@ mod tests {
         assert_eq!(rep.nfe, 5 * 4);
         assert_eq!(mock.calls.load(Ordering::Relaxed), 20);
         assert!(rep.stats.iter().all(|s| s.steps == 4));
+        // every request advances once per (request, step): the occupancy
+        // telemetry must account for exactly steps * requests entry-slots
+        assert_eq!(rep.batch_entries, 5 * 4);
+        assert!(rep.ticks >= 5); // 5 reqs / batch_per_tick=4 -> >=2 ticks/step
+        let occ = rep.mean_batch_occupancy();
+        assert!((occ - rep.batch_entries as f64 / rep.ticks as f64).abs() < 1e-12);
+        assert!(occ > 1.0, "5 concurrent reqs must batch: occ={occ}");
     }
 
     #[test]

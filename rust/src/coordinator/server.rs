@@ -17,29 +17,64 @@
 //! Threading: the native backend is `Send + Sync` (sharded-mutex plan
 //! cache, `Arc`-shared executable handles), so the server runs a pool of
 //! `accept_threads` connection handlers feeding a bounded job queue
-//! (capacity `queue_depth`, blocking producers = backpressure) drained by
-//! `max_active` compute workers. Each connection is served in request
-//! order; distinct connections proceed in parallel. One bad client costs
-//! its own connection only: per-connection I/O errors are logged with the
-//! peer address, counted (`connection_errors`), and the accept loop keeps
-//! serving everyone else. Every request runs under a fresh internal plan
-//! stream key, so concurrent generations can never collide in the plan
-//! cache and outputs depend only on `(prompt_seed, steps, cfg)`.
+//! (capacity `queue_depth`, blocking producers = backpressure). Admitted
+//! jobs are executed in one of two modes:
+//!
+//!  * **continuous batching** (default): ONE executor thread owns every
+//!    in-flight request and advances them all one denoise step per tick
+//!    through a single shared `BatchCore::advance_batch` call — concurrent
+//!    connections share each tick's batched backend invocation exactly the
+//!    way `run_trace` streams do. In-flight requests tick ahead of new
+//!    admits (priority admission — no convoy), and a request's output
+//!    still depends only on `(prompt_seed, steps, cfg)` because the
+//!    per-entry update is elementwise under per-request stream keys.
+//!  * **worker pool** (`with_batching(false)`): `max_active` workers each
+//!    run one `generate_one_keyed` per job — the pre-batching behavior,
+//!    kept bitwise for comparison and fallback.
+//!
+//! Connection lifecycle hardening: request lines are read through a
+//! bounded `read_until` (an over-long line is answered with
+//! `{"ok": false, "error": "request line too long"}`, counted, and
+//! skipped — never buffered whole), an optional per-connection read
+//! timeout evicts slow-loris clients holding idle connections, and
+//! per-job backend panics are contained by `catch_unwind` (the request is
+//! answered with an error; the executor/worker survives). One bad client
+//! costs its own connection only: per-connection I/O errors are logged
+//! with the peer address, counted (`connection_errors`), and the accept
+//! loop keeps serving everyone else.
 
 use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{mpsc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use super::batch::{ActiveReq, TelemetrySnapshot};
 use super::engine::VelocityBackend;
 use super::scheduler::{Coordinator, CoordinatorConfig, ReqStat, ServeReport};
 use crate::metrics;
 use crate::runtime::HostTensor;
 use crate::util::json::Json;
+use crate::workload::VideoRequest;
+
+/// Poison-proof lock: a panicking worker must not turn every later
+/// telemetry access into a second panic (the data under these locks is a
+/// plain counter or stat list — there is no invariant a panic can tear).
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "unknown panic payload".to_string())
+}
 
 /// A validated request line. The output is a pure function of these three
 /// sampling fields; `id` is only echoed back to the client.
@@ -51,12 +86,39 @@ struct ParsedReq {
     cfg: f32,
 }
 
+impl ParsedReq {
+    /// The workload-layer request this wire request denotes; `key` becomes
+    /// the internal request id (plan-stream key base + `ReqStat` id). All
+    /// derived accounting (NFE, the CFG-branch doubling rule) lives on
+    /// `VideoRequest` — never re-derived here.
+    fn to_request(&self, key: u64) -> VideoRequest {
+        VideoRequest {
+            id: key,
+            prompt_seed: self.prompt_seed,
+            steps: self.steps,
+            cfg_weight: self.cfg,
+            arrival_s: 0.0,
+        }
+    }
+}
+
 /// One admitted unit of work: a validated request plus the channel its
 /// connection handler is blocked on.
 struct Job {
     key: u64,
     req: ParsedReq,
     enqueued: Instant,
+    resp: mpsc::Sender<Json>,
+}
+
+/// One request in flight inside the batching executor: its sampling state
+/// (`ActiveReq`, shared with the scheduler) plus the wire-side bookkeeping
+/// needed to answer its connection when it finishes.
+struct ActiveJob {
+    state: ActiveReq,
+    req: ParsedReq,
+    enqueued: Instant,
+    admitted: Instant,
     resp: mpsc::Sender<Json>,
 }
 
@@ -88,9 +150,9 @@ impl<T> Chan<T> {
     /// Blocking push; returns the queue depth after insertion, or `None`
     /// (dropping `item`) if the channel is closed.
     fn push(&self, item: T) -> Option<usize> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ok(&self.state);
         while st.items.len() >= self.cap && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         if st.closed {
             return None;
@@ -103,7 +165,7 @@ impl<T> Chan<T> {
 
     /// Blocking pop; `None` once the channel is closed AND drained.
     fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ok(&self.state);
         loop {
             if let Some(x) = st.items.pop_front() {
                 self.not_full.notify_one();
@@ -112,14 +174,52 @@ impl<T> Chan<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
+    /// Non-blocking pop: whatever is queued right now, or `None` (empty OR
+    /// closed-and-drained — the batching executor only blocks when it has
+    /// nothing in flight, so in-flight requests always tick ahead of a
+    /// convoy of fresh arrivals).
+    fn try_pop(&self) -> Option<T> {
+        let mut st = lock_ok(&self.state);
+        let x = st.items.pop_front();
+        if x.is_some() {
+            self.not_full.notify_one();
+        }
+        x
+    }
+
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_ok(&self.state).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
+    }
+}
+
+/// Consume (without buffering) the remainder of an over-long line: up to
+/// and including the next `\n`, or EOF.
+fn discard_line_remainder(reader: &mut impl BufRead) -> io::Result<()> {
+    loop {
+        let (done, used) = {
+            let avail = match reader.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if avail.is_empty() {
+                return Ok(()); // EOF ends the line too
+            }
+            match avail.iter().position(|&b| b == b'\n') {
+                Some(i) => (true, i + 1),
+                None => (false, avail.len()),
+            }
+        };
+        reader.consume(used);
+        if done {
+            return Ok(());
+        }
     }
 }
 
@@ -136,30 +236,58 @@ pub struct Server<'b> {
     frames: usize,
     accept_threads: usize,
     queue_depth: usize,
+    /// Continuous batching (default): one executor thread advances every
+    /// in-flight request per tick through a shared `advance_batch` call.
+    /// Off = the worker pool, one `generate_one_keyed` per job.
+    batching: bool,
+    /// Per-connection read timeout (None = off): a slow-loris client
+    /// holding an idle connection otherwise pins a handler forever.
+    conn_timeout: Option<Duration>,
+    /// Longest accepted request line in bytes; longer lines are rejected
+    /// and skipped without ever being buffered whole.
+    max_line_bytes: usize,
     /// Fresh plan-stream key per request; also the `ReqStat` id.
     next_key: AtomicU64,
     conn_errors: AtomicU64,
+    line_overflows: AtomicU64,
     nfe: AtomicUsize,
+    ticks: AtomicUsize,
+    batch_entries: AtomicUsize,
     depth_max: AtomicUsize,
     stats: Mutex<Vec<ReqStat>>,
     total_s: Mutex<f64>,
+    /// Model-call seconds measured inside `advance_batch` ticks (batched
+    /// mode only; the worker pool equates denoise with compute wall time).
+    denoise_s: Mutex<f64>,
+    /// Backend counters at construction — `report()` returns deltas, the
+    /// same way `run_trace` reports deltas over one trace.
+    telemetry0: TelemetrySnapshot,
 }
 
 impl<'b> Server<'b> {
     pub fn new(backend: &'b dyn VelocityBackend, cfg: CoordinatorConfig) -> Self {
         let frames = backend.video().0;
         let queue_depth = cfg.max_active.max(1) * 2;
+        let telemetry0 = TelemetrySnapshot::capture(backend);
         Server {
             coord: Coordinator::new(backend, cfg),
             frames,
             accept_threads: 4,
             queue_depth,
+            batching: true,
+            conn_timeout: None,
+            max_line_bytes: 1 << 20, // 1 MiB
             next_key: AtomicU64::new(1),
             conn_errors: AtomicU64::new(0),
+            line_overflows: AtomicU64::new(0),
             nfe: AtomicUsize::new(0),
+            ticks: AtomicUsize::new(0),
+            batch_entries: AtomicUsize::new(0),
             depth_max: AtomicUsize::new(0),
             stats: Mutex::new(Vec::new()),
             total_s: Mutex::new(0.0),
+            denoise_s: Mutex::new(0.0),
+            telemetry0,
         }
     }
 
@@ -175,30 +303,65 @@ impl<'b> Server<'b> {
         self
     }
 
-    /// Per-connection I/O errors survived so far (bad clients, resets).
+    /// Toggle the continuous-batching executor (on by default). Off runs
+    /// the legacy worker pool: `max_active` independent batch-of-one jobs.
+    pub fn with_batching(mut self, on: bool) -> Self {
+        self.batching = on;
+        self
+    }
+
+    /// Per-connection read timeout; `None` disables (the default).
+    pub fn with_conn_timeout(mut self, t: Option<Duration>) -> Self {
+        self.conn_timeout = t;
+        self
+    }
+
+    /// Cap on a single request line's length in bytes (default 1 MiB).
+    pub fn with_max_line_bytes(mut self, n: usize) -> Self {
+        self.max_line_bytes = n.max(64);
+        self
+    }
+
+    /// Per-connection I/O errors survived so far (bad clients, resets,
+    /// read timeouts).
     pub fn connection_errors(&self) -> u64 {
         self.conn_errors.load(Ordering::Relaxed)
     }
 
+    /// Over-long request lines rejected (connection kept) so far.
+    pub fn line_overflows(&self) -> u64 {
+        self.line_overflows.load(Ordering::Relaxed)
+    }
+
     /// Serving telemetry accumulated across all `serve` calls and direct
-    /// `handle` invocations: per-request queue-wait vs compute split, the
-    /// deepest the admission queue got, and connection errors survived.
+    /// `handle` invocations: per-request queue-wait vs compute split, tick
+    /// / batch-occupancy counters (batched mode), the deepest the
+    /// admission queue got, connection errors survived, and plan-cache /
+    /// threadpool deltas since construction — the same delta discipline
+    /// `run_trace` uses, so batched serving and virtual-clock traces are
+    /// directly comparable.
     pub fn report(&self) -> ServeReport {
-        let mut stats = self.stats.lock().unwrap().clone();
+        let mut stats = lock_ok(&self.stats).clone();
         stats.sort_by_key(|s| s.id);
         let queue_wait_s: f64 = stats.iter().map(|s| s.wait_s).sum();
         let compute_s: f64 = stats.iter().map(|s| s.latency_s - s.wait_s).sum();
-        ServeReport {
-            total_s: *self.total_s.lock().unwrap(),
-            denoise_s: compute_s,
+        let model_s = *lock_ok(&self.denoise_s);
+        let mut rep = ServeReport {
+            total_s: *lock_ok(&self.total_s),
+            denoise_s: if model_s > 0.0 { model_s } else { compute_s },
             nfe: self.nfe.load(Ordering::Relaxed),
+            ticks: self.ticks.load(Ordering::Relaxed),
+            batch_entries: self.batch_entries.load(Ordering::Relaxed),
             queue_wait_s,
             compute_s,
             queue_depth_max: self.depth_max.load(Ordering::Relaxed),
             conn_errors: self.conn_errors.load(Ordering::Relaxed),
+            line_overflows: self.line_overflows.load(Ordering::Relaxed),
             stats,
             ..Default::default()
-        }
+        };
+        self.telemetry0.fill_report(self.coord.core.backend(), &mut rep);
+        rep
     }
 
     /// Parse + validate one request line; `Err` carries the complete error
@@ -281,9 +444,9 @@ impl<'b> Server<'b> {
                 ("error", Json::str(format!("{e:#}"))),
             ]),
         };
-        let nfe = req.steps * if req.cfg != 1.0 { 2 } else { 1 };
+        let nfe = req.to_request(key).nfe();
         self.nfe.fetch_add(nfe, Ordering::Relaxed);
-        self.stats.lock().unwrap().push(ReqStat {
+        lock_ok(&self.stats).push(ReqStat {
             id: key,
             wait_s,
             latency_s: wait_s + compute_s,
@@ -294,7 +457,7 @@ impl<'b> Server<'b> {
     }
 
     /// Handle one request line synchronously (CLI/tests entry point; the
-    /// TCP path routes through the worker pool instead).
+    /// TCP path routes through the executor / worker pool instead).
     pub fn handle(&self, line: &str) -> Json {
         match self.parse_request(line) {
             Err(resp) => resp,
@@ -307,7 +470,7 @@ impl<'b> Server<'b> {
 
     /// Answer one request line from a connection handler: validation errors
     /// are answered immediately; valid requests go through the bounded job
-    /// queue and block here until a worker responds (so each connection
+    /// queue and block here until the executor responds (so each connection
     /// sees its responses in request order).
     fn serve_line(&self, line: &str, jobs: &Chan<Job>) -> Json {
         match self.parse_request(line) {
@@ -332,10 +495,150 @@ impl<'b> Server<'b> {
 
     fn worker_loop(&self, jobs: &Chan<Job>) {
         while let Some(job) = jobs.pop() {
-            let resp = self.execute(job.key, &job.req, job.enqueued);
+            // a panicking backend must cost ONE request, not this worker:
+            // once all `max_active` workers are dead, `jobs.push` blocks
+            // every handler forever and the server wedges silently
+            let resp = catch_unwind(AssertUnwindSafe(|| {
+                self.execute(job.key, &job.req, job.enqueued)
+            }))
+            .unwrap_or_else(|p| {
+                // the panic skipped generate_one_keyed's eviction
+                self.coord.core.evict_request_streams(job.key);
+                err_json(Some(job.req.id), format!("backend panicked: {}", panic_msg(&p)))
+            });
             // a dead receiver just means the connection went away; the
             // handler already counted the I/O error
             let _ = job.resp.send(resp);
+        }
+    }
+
+    /// Seed an admitted job's sampling state and put it in flight. A panic
+    /// while seeding costs that request (error response), not the executor.
+    fn admit(&self, job: Job, active: &mut VecDeque<ActiveJob>) {
+        let vreq = job.req.to_request(job.key);
+        let seeded = catch_unwind(AssertUnwindSafe(|| {
+            self.coord.core.fresh_request_state(&vreq, 0.0)
+        }));
+        match seeded {
+            Ok(state) => active.push_back(ActiveJob {
+                state,
+                req: job.req,
+                enqueued: job.enqueued,
+                admitted: Instant::now(),
+                resp: job.resp,
+            }),
+            Err(p) => {
+                let _ = job.resp.send(err_json(
+                    Some(job.req.id),
+                    format!("backend panicked: {}", panic_msg(&p)),
+                ));
+            }
+        }
+    }
+
+    /// A job advanced one step: requeue it behind its tick-mates
+    /// (round-robin) or, if its grid is exhausted, evict its plan streams,
+    /// record its stats, and answer its connection.
+    fn retire_or_requeue(&self, j: ActiveJob, active: &mut VecDeque<ActiveJob>) {
+        if !j.state.finished() {
+            active.push_back(j);
+            return;
+        }
+        let key = j.state.req.id;
+        self.coord.core.evict_request_streams(key);
+        let wait_s = j.admitted.duration_since(j.enqueued).as_secs_f64();
+        let latency_s = j.enqueued.elapsed().as_secs_f64();
+        let compute_s = (latency_s - wait_s).max(0.0);
+        lock_ok(&self.stats).push(ReqStat {
+            id: key,
+            wait_s,
+            latency_s,
+            steps: j.state.req.steps,
+            nfe: j.state.req.nfe(),
+        });
+        let resp = self.success_json(&j.req, &j.state.x, wait_s, compute_s);
+        let _ = j.resp.send(resp);
+    }
+
+    /// A job's advance failed (backend error or contained panic): evict its
+    /// plan streams and answer its connection with the error.
+    fn fail_job(&self, j: ActiveJob, msg: String) {
+        self.coord.core.evict_request_streams(j.state.req.id);
+        let _ = j.resp.send(err_json(Some(j.req.id), msg));
+    }
+
+    /// The continuous-batching executor. One thread owns every in-flight
+    /// request; each iteration admits queued jobs (blocking ONLY when
+    /// nothing is in flight, so in-flight requests always tick ahead of
+    /// new arrivals), then advances the front `batch_per_tick` requests by
+    /// one denoise step through a single shared `advance_batch` call. A
+    /// tick that fails (error or panic) is re-run one request at a time so
+    /// the poisoned request costs itself, never its batch-mates. Exits
+    /// when the job queue is closed, drained, and nothing is in flight —
+    /// shutdown never abandons admitted work.
+    fn batching_loop(&self, jobs: &Chan<Job>) {
+        let mut active: VecDeque<ActiveJob> = VecDeque::new();
+        loop {
+            if active.is_empty() {
+                match jobs.pop() {
+                    Some(job) => self.admit(job, &mut active),
+                    None => return,
+                }
+            }
+            while active.len() < self.coord.cfg.max_active.max(1) {
+                match jobs.try_pop() {
+                    Some(job) => self.admit(job, &mut active),
+                    None => break,
+                }
+            }
+            if active.is_empty() {
+                continue; // the lone admit failed (seeding panic)
+            }
+            let todo = active.len().min(self.coord.cfg.batch_per_tick.max(1));
+            self.ticks.fetch_add(1, Ordering::Relaxed);
+            self.batch_entries.fetch_add(todo, Ordering::Relaxed);
+            let mut tick: Vec<ActiveJob> = active.drain(..todo).collect();
+            let advanced = catch_unwind(AssertUnwindSafe(|| {
+                let mut nfe = 0usize;
+                let mut refs: Vec<&mut ActiveReq> =
+                    tick.iter_mut().map(|j| &mut j.state).collect();
+                self.coord.core.advance_batch(&mut refs, &mut nfe).map(|dt| (dt, nfe))
+            }));
+            match advanced {
+                Ok(Ok((dt, nfe))) => {
+                    self.nfe.fetch_add(nfe, Ordering::Relaxed);
+                    *lock_ok(&self.denoise_s) += dt;
+                    for j in tick {
+                        self.retire_or_requeue(j, &mut active);
+                    }
+                }
+                Ok(Err(_)) | Err(_) => {
+                    // isolation pass: state was not advanced (the batched
+                    // call fails before any per-entry update), so each
+                    // entry can be retried alone
+                    for mut j in tick {
+                        let solo = catch_unwind(AssertUnwindSafe(|| {
+                            let mut nfe = 0usize;
+                            self.coord
+                                .core
+                                .advance_batch(&mut [&mut j.state], &mut nfe)
+                                .map(|dt| (dt, nfe))
+                        }));
+                        match solo {
+                            Ok(Ok((dt, nfe))) => {
+                                self.nfe.fetch_add(nfe, Ordering::Relaxed);
+                                *lock_ok(&self.denoise_s) += dt;
+                                self.retire_or_requeue(j, &mut active);
+                            }
+                            Ok(Err(e)) => self.fail_job(j, format!("{e:#}")),
+                            Err(p) => self.fail_job(
+                                j,
+                                format!("backend panicked: {}", panic_msg(&p)),
+                            ),
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -345,11 +648,42 @@ impl<'b> Server<'b> {
     fn drain_connection(&self, stream: TcpStream, jobs: &Chan<Job>) -> usize {
         let peer = stream.peer_addr().ok();
         let mut served = 0usize;
-        let io: std::io::Result<()> = (|| {
+        let io: io::Result<()> = (|| {
+            if self.conn_timeout.is_some() {
+                stream.set_read_timeout(self.conn_timeout)?;
+            }
             let mut writer = stream.try_clone()?;
-            let reader = BufReader::new(stream);
-            for line in reader.lines() {
-                let line = line?;
+            let mut reader = BufReader::new(stream);
+            loop {
+                // bounded read: at most max_line_bytes + 1, so a client
+                // streaming bytes with no newline can never grow this
+                // buffer without limit (the old `BufRead::lines` OOM)
+                let mut buf: Vec<u8> = Vec::new();
+                let n = (&mut reader)
+                    .take(self.max_line_bytes as u64 + 1)
+                    .read_until(b'\n', &mut buf)?;
+                if n == 0 {
+                    break; // EOF
+                }
+                if buf.len() > self.max_line_bytes && !buf.ends_with(b"\n") {
+                    self.line_overflows.fetch_add(1, Ordering::Relaxed);
+                    let resp = err_json(None, "request line too long");
+                    writer.write_all(resp.to_string().as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    served += 1;
+                    // skip the rest of the oversized line; the connection
+                    // stays usable for its next request
+                    discard_line_remainder(&mut reader)?;
+                    continue;
+                }
+                // same contract as `BufRead::lines`: non-UTF-8 bytes are an
+                // InvalidData error that costs this connection (counted)
+                let line = String::from_utf8(buf).map_err(|_| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "stream did not contain valid UTF-8",
+                    )
+                })?;
                 let line = line.trim();
                 if line.is_empty() {
                     continue;
@@ -388,8 +722,12 @@ impl<'b> Server<'b> {
         let served = AtomicUsize::new(0);
         std::thread::scope(|s| {
             let mut workers = Vec::new();
-            for _ in 0..self.coord.cfg.max_active.max(1) {
-                workers.push(s.spawn(|| self.worker_loop(&jobs)));
+            if self.batching {
+                workers.push(s.spawn(|| self.batching_loop(&jobs)));
+            } else {
+                for _ in 0..self.coord.cfg.max_active.max(1) {
+                    workers.push(s.spawn(|| self.worker_loop(&jobs)));
+                }
             }
             let mut handlers = Vec::new();
             for _ in 0..self.accept_threads {
@@ -419,7 +757,7 @@ impl<'b> Server<'b> {
                 }
             }
             // shutdown: stop feeding handlers, let them finish their
-            // connections, then drain the workers
+            // connections, then drain the executor / workers
             conns.close();
             for h in handlers {
                 let _ = h.join();
@@ -429,7 +767,7 @@ impl<'b> Server<'b> {
                 let _ = w.join();
             }
         });
-        *self.total_s.lock().unwrap() += t_start.elapsed().as_secs_f64();
+        *lock_ok(&self.total_s) += t_start.elapsed().as_secs_f64();
         Ok(served.load(Ordering::Relaxed))
     }
 }
@@ -438,6 +776,7 @@ impl<'b> Server<'b> {
 mod tests {
     use super::*;
     use crate::runtime::HostTensor;
+    use crate::util::rng::Rng;
 
     struct Mock;
 
@@ -455,6 +794,46 @@ mod tests {
         }
         fn variant(&self) -> &str {
             "mock"
+        }
+        fn video(&self) -> (usize, usize, usize) {
+            (2, 2, 4)
+        }
+    }
+
+    /// Mock that panics when fed the initial noise of one specific
+    /// `(coordinator seed, prompt_seed)` pair — "one poisoned request",
+    /// addressable without the backend knowing about requests at all.
+    struct PanickyMock {
+        poison_x0: f32,
+    }
+
+    impl PanickyMock {
+        /// First noise value of `prompt_seed` under coordinator seed
+        /// `coord_seed` for the mock's (16, 2, _) shape.
+        fn poisoning(coord_seed: u64, prompt_seed: u64) -> Self {
+            let x0 = Rng::new(coord_seed ^ prompt_seed).normal_vec(16 * 2)[0];
+            PanickyMock { poison_x0: x0 }
+        }
+    }
+
+    impl VelocityBackend for PanickyMock {
+        fn velocity(&self, x: &HostTensor, t: f32, _c: &HostTensor)
+            -> anyhow::Result<HostTensor> {
+            assert!(
+                x.data[0].to_bits() != self.poison_x0.to_bits(),
+                "poisoned request hit the backend"
+            );
+            let mut v = x.clone();
+            for d in &mut v.data {
+                *d = *d * 0.1 + t;
+            }
+            Ok(v)
+        }
+        fn shape(&self) -> (usize, usize, usize) {
+            (16, 2, 4)
+        }
+        fn variant(&self) -> &str {
+            "panicky-mock"
         }
         fn video(&self) -> (usize, usize, usize) {
             (2, 2, 4)
@@ -538,6 +917,22 @@ mod tests {
     }
 
     #[test]
+    fn nfe_routes_through_request_definition() {
+        // the CFG-branch doubling rule lives on VideoRequest::nfe(); the
+        // server must not re-derive it
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let r = srv.handle(r#"{"id": 1, "prompt_seed": 5, "steps": 2}"#);
+        assert_eq!(r.get("ok"), &Json::Bool(true));
+        assert_eq!(srv.report().nfe, 2);
+        let r = srv.handle(r#"{"id": 2, "prompt_seed": 5, "steps": 2, "cfg": 3.0}"#);
+        assert_eq!(r.get("ok"), &Json::Bool(true));
+        assert_eq!(srv.report().nfe, 2 + 4);
+        let expect: usize = srv.report().stats.iter().map(|s| s.nfe).sum();
+        assert_eq!(expect, 6);
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let mock = Mock;
         let srv = Server::new(&mock, CoordinatorConfig::default());
@@ -566,65 +961,82 @@ mod tests {
         assert_eq!(r1.get("ok"), &Json::Bool(true));
         // same prompt seed + steps => identical deterministic sample stats
         assert_eq!(r1.get("mean"), r2.get("mean"));
-        // telemetry accumulated: 2 requests, compute time, no conn errors
+        // telemetry accumulated: 2 requests, compute time, no conn errors;
+        // batched mode accounts one entry per (request, step)
         let rep = srv.report();
         assert_eq!(rep.stats.len(), 2);
         assert!(rep.compute_s > 0.0);
         assert_eq!(rep.conn_errors, 0);
+        assert_eq!(rep.batch_entries, 2 * 3);
+        assert!(rep.ticks >= 3 && rep.ticks <= 6, "ticks={}", rep.ticks);
         assert!(rep.summary().contains("queue["), "{}", rep.summary());
+        assert!(rep.summary().contains("batch["), "{}", rep.summary());
     }
 
     #[test]
-    fn bad_client_does_not_kill_server() {
-        // regression: one client dying mid-request (non-UTF-8 garbage, then
-        // an abrupt drop) used to propagate its read error out of `serve`,
-        // killing the accept loop for everyone. Now it is logged, counted,
-        // and the other client is served normally.
+    fn batched_and_worker_pool_responses_agree() {
+        // the same requests produce identical samples whether they run
+        // through the batching executor or the batch-of-one worker pool
+        let run = |batching: bool| -> Vec<String> {
+            let mock = Mock;
+            let srv =
+                Server::new(&mock, CoordinatorConfig::default()).with_batching(batching);
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let client = std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(b"{\"id\": 1, \"prompt_seed\": 11, \"steps\": 4}\n").unwrap();
+                s.write_all(b"{\"id\": 2, \"prompt_seed\": 12, \"steps\": 4, \"cfg\": 2.0}\n")
+                    .unwrap();
+                s.write_all(b"quit\n").unwrap();
+                let mut lines = Vec::new();
+                let reader = BufReader::new(s);
+                for line in reader.lines().take(2) {
+                    lines.push(line.unwrap());
+                }
+                lines
+            });
+            srv.serve(listener, Some(1)).unwrap();
+            let lines = client.join().unwrap();
+            let rep = srv.report();
+            if batching {
+                assert_eq!(rep.batch_entries, 2 * 4);
+            } else {
+                assert_eq!(rep.batch_entries, 0, "worker pool runs no shared ticks");
+                assert_eq!(rep.ticks, 0);
+            }
+            lines
+        };
+        let batched = run(true);
+        let pooled = run(false);
+        assert_eq!(batched.len(), 2);
+        for (b, p) in batched.iter().zip(&pooled) {
+            let (b, p) = (Json::parse(b).unwrap(), Json::parse(p).unwrap());
+            assert_eq!(b.get("ok"), &Json::Bool(true));
+            // mean/std/temporal_consistency are pure functions of the
+            // sample: bit-identical output => identical fields
+            assert_eq!(b.get("mean"), p.get("mean"));
+            assert_eq!(b.get("std"), p.get("std"));
+            assert_eq!(b.get("temporal_consistency"), p.get("temporal_consistency"));
+        }
+    }
+
+    #[test]
+    fn oversized_line_rejected_connection_survives() {
+        // regression: a 4 MiB newline-free write used to grow the
+        // `BufRead::lines` buffer without limit; now it is answered with an
+        // error and the SAME connection still serves the next request
         let mock = Mock;
         let srv = Server::new(&mock, CoordinatorConfig::default());
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
 
-        let bad = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
-            // half a request, then bytes that can never be a JSON line
-            s.write_all(b"{\"id\": 3, \"prompt_seed\"").unwrap();
-            s.write_all(&[0xff, 0xfe, 0xfd]).unwrap();
-            // drop without newline or quit: connection dies mid-request
-        });
-        let good = std::thread::spawn(move || {
-            let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(b"{\"id\": 4, \"prompt_seed\": 2, \"steps\": 2}\n").unwrap();
-            let mut line = String::new();
-            let mut reader = BufReader::new(s.try_clone().unwrap());
-            reader.read_line(&mut line).unwrap();
-            s.write_all(b"quit\n").unwrap();
-            line
-        });
-
-        let served = srv.serve(listener, Some(2)).unwrap();
-        bad.join().unwrap();
-        let line = good.join().unwrap();
-        assert_eq!(served, 1, "the well-behaved client was served");
-        assert_eq!(srv.connection_errors(), 1, "the bad client was counted, not fatal");
-        let r = Json::parse(line.trim()).unwrap();
-        assert_eq!(r.get("ok"), &Json::Bool(true));
-        assert_eq!(r.get("id").as_f64(), Some(4.0));
-        assert_eq!(srv.report().conn_errors, 1);
-    }
-
-    #[test]
-    fn invalid_then_valid_lines_on_one_connection() {
-        // malformed lines get error responses; the connection stays usable
-        let mock = Mock;
-        let srv = Server::new(&mock, CoordinatorConfig::default()).with_accept_threads(2);
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-
         let client = std::thread::spawn(move || {
             let mut s = TcpStream::connect(addr).unwrap();
-            s.write_all(b"{\"id\": 5, \"steps\": 2}\n").unwrap(); // no prompt_seed
-            s.write_all(b"{\"id\": 6, \"prompt_seed\": 1, \"steps\": 2}\n").unwrap();
+            let blob = vec![b'a'; 4 << 20]; // 4 MiB, no newline anywhere
+            s.write_all(&blob).unwrap();
+            s.write_all(b"\n").unwrap();
+            s.write_all(b"{\"id\": 8, \"prompt_seed\": 2, \"steps\": 2}\n").unwrap();
             s.write_all(b"quit\n").unwrap();
             let mut lines = Vec::new();
             let reader = BufReader::new(s);
@@ -636,12 +1048,135 @@ mod tests {
 
         let served = srv.serve(listener, Some(1)).unwrap();
         let lines = client.join().unwrap();
-        assert_eq!(served, 2, "error responses count as served lines");
+        assert_eq!(served, 2, "error response + served request");
         let r1 = Json::parse(&lines[0]).unwrap();
         assert_eq!(r1.get("ok"), &Json::Bool(false));
-        assert_eq!(r1.get("id").as_f64(), Some(5.0));
+        assert!(
+            r1.get("error").as_str().unwrap().contains("request line too long"),
+            "{r1}"
+        );
         let r2 = Json::parse(&lines[1]).unwrap();
-        assert_eq!(r2.get("ok"), &Json::Bool(true));
-        assert_eq!(srv.connection_errors(), 0);
+        assert_eq!(r2.get("ok"), &Json::Bool(true), "connection stayed usable");
+        assert_eq!(r2.get("id").as_f64(), Some(8.0));
+        assert_eq!(srv.line_overflows(), 1);
+        assert_eq!(srv.connection_errors(), 0, "overflow keeps the connection");
+        assert_eq!(srv.report().line_overflows, 1);
+    }
+
+    #[test]
+    fn idle_connection_times_out_live_client_served() {
+        // regression: a slow-loris client holding an idle connection used
+        // to pin a handler forever; with a read timeout it is evicted
+        // (counted as a connection error) while live clients are served
+        let mock = Mock;
+        let srv = Server::new(&mock, CoordinatorConfig::default())
+            .with_conn_timeout(Some(Duration::from_millis(150)));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let idle = std::thread::spawn(move || {
+            let s = TcpStream::connect(addr).unwrap();
+            // hold the connection silently, longer than the timeout
+            std::thread::sleep(Duration::from_millis(600));
+            drop(s);
+        });
+        let live = std::thread::spawn(move || {
+            // connect second so the idle one is already pinned
+            std::thread::sleep(Duration::from_millis(30));
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 4, \"prompt_seed\": 2, \"steps\": 2}\n").unwrap();
+            let mut line = String::new();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            reader.read_line(&mut line).unwrap();
+            s.write_all(b"quit\n").unwrap();
+            line
+        });
+
+        let served = srv.serve(listener, Some(2)).unwrap();
+        idle.join().unwrap();
+        let line = live.join().unwrap();
+        assert_eq!(served, 1, "the live client was served");
+        let r = Json::parse(line.trim()).unwrap();
+        assert_eq!(r.get("ok"), &Json::Bool(true));
+        assert_eq!(r.get("id").as_f64(), Some(4.0));
+        assert_eq!(srv.connection_errors(), 1, "the idle client timed out, counted");
+    }
+
+    #[test]
+    fn panicking_backend_does_not_wedge_worker_pool() {
+        // regression: a backend panic used to kill the worker permanently —
+        // with max_active workers dead, `jobs.push` blocked every handler
+        // forever. Now the panic costs one request an error response.
+        let mock = PanickyMock::poisoning(CoordinatorConfig::default().seed, 666);
+        let srv = Server::new(&mock, CoordinatorConfig::default()).with_batching(false);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 1, \"prompt_seed\": 666, \"steps\": 2}\n").unwrap();
+            // the SAME worker must survive to serve the next request
+            s.write_all(b"{\"id\": 2, \"prompt_seed\": 5, \"steps\": 2}\n").unwrap();
+            s.write_all(b"quit\n").unwrap();
+            let mut lines = Vec::new();
+            let reader = BufReader::new(s);
+            for line in reader.lines().take(2) {
+                lines.push(line.unwrap());
+            }
+            lines
+        });
+
+        let served = srv.serve(listener, Some(1)).unwrap();
+        let lines = client.join().unwrap();
+        assert_eq!(served, 2);
+        let r1 = Json::parse(&lines[0]).unwrap();
+        assert_eq!(r1.get("ok"), &Json::Bool(false));
+        assert!(r1.get("error").as_str().unwrap().contains("panicked"), "{r1}");
+        assert_eq!(r1.get("id").as_f64(), Some(1.0));
+        let r2 = Json::parse(&lines[1]).unwrap();
+        assert_eq!(r2.get("ok"), &Json::Bool(true), "worker survived the panic");
+        // telemetry locks stayed usable (poison-proof) after the panic
+        assert!(!srv.report().stats.is_empty());
+    }
+
+    #[test]
+    fn panicking_backend_costs_only_its_request_in_batched_mode() {
+        // a poisoned request sharing a tick with an innocent one must not
+        // take the batch down: the tick is re-run per-entry, the poisoned
+        // request gets an error, the innocent one completes normally
+        let mock = PanickyMock::poisoning(CoordinatorConfig::default().seed, 666);
+        let srv = Server::new(&mock, CoordinatorConfig::default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let poisoned = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 1, \"prompt_seed\": 666, \"steps\": 4}\n").unwrap();
+            let mut line = String::new();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            reader.read_line(&mut line).unwrap();
+            s.write_all(b"quit\n").unwrap();
+            line
+        });
+        let innocent = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"id\": 2, \"prompt_seed\": 5, \"steps\": 4}\n").unwrap();
+            let mut line = String::new();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            reader.read_line(&mut line).unwrap();
+            s.write_all(b"quit\n").unwrap();
+            line
+        });
+
+        let served = srv.serve(listener, Some(2)).unwrap();
+        let p = poisoned.join().unwrap();
+        let i = innocent.join().unwrap();
+        assert_eq!(served, 2);
+        let p = Json::parse(p.trim()).unwrap();
+        assert_eq!(p.get("ok"), &Json::Bool(false));
+        assert!(p.get("error").as_str().unwrap().contains("panicked"), "{p}");
+        let i = Json::parse(i.trim()).unwrap();
+        assert_eq!(i.get("ok"), &Json::Bool(true), "batch-mate survived: {i}");
+        assert_eq!(i.get("id").as_f64(), Some(2.0));
     }
 }

@@ -70,9 +70,14 @@ fn cli() -> Cli {
                 .flag("addr", "127.0.0.1:7878", "listen address")
                 .flag("connections", "0", "stop after N connections (0 = forever)")
                 .flag("accept-threads", "4", "parallel connection handlers")
-                .flag("max-active", "8", "compute workers (admission cap)")
+                .flag("max-active", "8", "in-flight cap (admission / worker count)")
                 .flag("queue-depth", "0", "admission queue capacity (0 = 2x max-active)")
-                .flag("threads", "0", "kernel threads per model call (0 = auto)"),
+                .flag("batch-per-tick", "4", "max requests advanced per batched tick")
+                .flag("conn-timeout-s", "0", "per-connection read timeout (0 = off)")
+                .flag("max-line-kib", "1024", "request line length cap in KiB")
+                .flag("threads", "0", "kernel threads per model call (0 = auto)")
+                .switch("no-batching", "run the batch-of-one worker pool instead of \
+                         the continuous-batching executor"),
         )
         .command(
             Command::new("hlo", "analyze an HLO artifact: op counts, fusion, est FLOPs")
@@ -345,13 +350,34 @@ fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
         0 => max_active.max(1) * 2,
         n => n,
     };
+    let batch_per_tick = args.get_usize("batch-per-tick")?.max(1);
+    let batching = !args.has("no-batching");
+    let timeout_s = args.get_f64("conn-timeout-s")?;
+    let conn_timeout = if timeout_s > 0.0 {
+        Some(std::time::Duration::from_secs_f64(timeout_s))
+    } else {
+        None
+    };
+    let max_line_bytes = args.get_usize("max-line-kib")?.max(1) * 1024;
+    let mode = if batching {
+        format!("continuous batching (<= {batch_per_tick} reqs/tick)")
+    } else {
+        format!("{max_active} batch-of-one workers")
+    };
     println!(
         "listening on {addr} (one JSON request per line; `quit` ends a connection; \
-         {accept_threads} connection handlers, {max_active} workers, queue depth {queue_depth})"
+         {accept_threads} connection handlers, {mode}, in-flight cap {max_active}, \
+         queue depth {queue_depth})"
     );
-    let srv = Server::new(&backend, CoordinatorConfig { max_active, ..Default::default() })
-        .with_accept_threads(accept_threads)
-        .with_queue_depth(queue_depth);
+    let srv = Server::new(
+        &backend,
+        CoordinatorConfig { max_active, batch_per_tick, ..Default::default() },
+    )
+    .with_accept_threads(accept_threads)
+    .with_queue_depth(queue_depth)
+    .with_batching(batching)
+    .with_conn_timeout(conn_timeout)
+    .with_max_line_bytes(max_line_bytes);
     let conns = args.get_usize("connections")?;
     let max = if conns == 0 { None } else { Some(conns) };
     let served = srv.serve(listener, max)?;

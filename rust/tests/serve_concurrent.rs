@@ -13,6 +13,7 @@ use std::net::{TcpListener, TcpStream};
 use sla_dit::attention::SlaConfig;
 use sla_dit::coordinator::{Coordinator, CoordinatorConfig, NativeSlaBackend, Server};
 use sla_dit::util::json::Json;
+use sla_dit::workload::VideoRequest;
 
 fn backend() -> NativeSlaBackend {
     NativeSlaBackend::with_depth(
@@ -123,4 +124,168 @@ fn four_tcp_clients_match_single_threaded_run() {
     assert_eq!(rep.conn_errors, 0);
     assert!(rep.compute_s > 0.0);
     assert!(rep.summary().contains("conn_errors=0"), "{}", rep.summary());
+    // batching is the default TCP path: every (request, step) advance is
+    // accounted as one shared-tick entry
+    assert_eq!(rep.batch_entries, 8 * 3);
+    assert!(rep.ticks >= 3 && rep.ticks <= 8 * 3, "ticks={}", rep.ticks);
+}
+
+/// Drive the same client workload through a batched server and a
+/// worker-pool (`with_batching(false)`) server over identically-seeded
+/// fresh backends: responses must carry identical sample statistics (the
+/// samples are bitwise equal — outputs depend only on
+/// `(prompt_seed, steps, cfg)`, never on the execution schedule), and the
+/// worker-pool server must run zero shared ticks (the pre-batching
+/// behavior, preserved).
+#[test]
+fn worker_pool_and_batched_modes_serve_identical_samples() {
+    let run = |batched: bool| -> Vec<(u64, String)> {
+        let shared = backend();
+        let srv =
+            Server::new(&shared, CoordinatorConfig { max_active: 4, ..Default::default() })
+                .with_accept_threads(4)
+                .with_queue_depth(8)
+                .with_batching(batched);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let clients: Vec<_> = (0..4u64)
+            .map(|ci| {
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(s.try_clone().unwrap());
+                    let seed = 7 * ci;
+                    let line = format!(
+                        "{{\"id\": {ci}, \"prompt_seed\": {seed}, \"steps\": 3, \"cfg\": 2.0}}\n"
+                    );
+                    s.write_all(line.as_bytes()).unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    s.write_all(b"quit\n").unwrap();
+                    (seed, resp)
+                })
+            })
+            .collect();
+        let served = srv.serve(listener, Some(4)).unwrap();
+        assert_eq!(served, 4);
+        let rep = srv.report();
+        if batched {
+            assert_eq!(rep.batch_entries, 4 * 3, "one entry per (request, step)");
+        } else {
+            assert_eq!(rep.ticks, 0, "worker pool runs no shared ticks");
+            assert_eq!(rep.batch_entries, 0);
+        }
+        let mut got: Vec<(u64, String)> =
+            clients.into_iter().map(|c| c.join().unwrap()).collect();
+        got.sort_by_key(|(seed, _)| *seed);
+        got
+    };
+    let batched = run(true);
+    let pooled = run(false);
+    assert_eq!(batched.len(), 4);
+    for ((bs, b), (ps, p)) in batched.iter().zip(&pooled) {
+        assert_eq!(bs, ps);
+        let (b, p) = (Json::parse(b.trim()).unwrap(), Json::parse(p.trim()).unwrap());
+        assert_eq!(b.get("ok"), &Json::Bool(true), "seed {bs}");
+        assert_eq!(b.get("mean"), p.get("mean"), "seed {bs}");
+        assert_eq!(b.get("std"), p.get("std"), "seed {bs}");
+        assert_eq!(
+            b.get("temporal_consistency"),
+            p.get("temporal_consistency"),
+            "seed {bs}"
+        );
+    }
+}
+
+/// The batched server's `ServeReport` must agree with a `run_trace` over
+/// the same request set on an identically-seeded backend: plan-cache
+/// deltas are scheduling-invariant (one lookup per (request, branch,
+/// layer, step) regardless of tick composition), NFE accounting matches,
+/// and the tick / batch-occupancy counters balance — one entry per
+/// (request, step) on both paths.
+#[test]
+fn batched_server_report_matches_run_trace() {
+    let steps = 3usize;
+    let seeds: [u64; 4] = [3, 14, 15, 92];
+
+    // TCP side: 4 concurrent clients, one CFG request each
+    let served_backend = backend();
+    let srv = Server::new(
+        &served_backend,
+        CoordinatorConfig { max_active: 4, ..Default::default() },
+    )
+    .with_accept_threads(4)
+    .with_queue_depth(8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let clients: Vec<_> = seeds
+        .iter()
+        .map(|&seed| {
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(s.try_clone().unwrap());
+                let line = format!(
+                    "{{\"id\": 1, \"prompt_seed\": {seed}, \"steps\": {steps}, \"cfg\": 2.0}}\n"
+                );
+                s.write_all(line.as_bytes()).unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                s.write_all(b"quit\n").unwrap();
+                resp
+            })
+        })
+        .collect();
+    let served = srv.serve(listener, Some(4)).unwrap();
+    for c in clients {
+        let resp = c.join().unwrap();
+        let r = Json::parse(resp.trim()).unwrap();
+        assert_eq!(r.get("ok"), &Json::Bool(true), "{resp}");
+    }
+    assert_eq!(served, 4);
+    let srv_rep = srv.report();
+
+    // virtual-clock side: the same requests, all arriving at t=0, through
+    // a fresh identically-seeded backend
+    let trace_backend = backend();
+    let coord = Coordinator::new(&trace_backend, CoordinatorConfig::default());
+    let reqs: Vec<VideoRequest> = seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &seed)| VideoRequest {
+            id: i as u64,
+            prompt_seed: seed,
+            steps,
+            cfg_weight: 2.0,
+            arrival_s: 0.0,
+        })
+        .collect();
+    let trace_rep = coord.run_trace(&reqs, None).unwrap();
+
+    // per-(request, step) accounting balances on both paths
+    assert_eq!(srv_rep.stats.len(), trace_rep.stats.len());
+    assert_eq!(srv_rep.batch_entries, seeds.len() * steps);
+    assert_eq!(trace_rep.batch_entries, seeds.len() * steps);
+    assert_eq!(srv_rep.nfe, trace_rep.nfe, "CFG doubles NFE identically");
+    assert_eq!(srv_rep.nfe, seeds.len() * steps * 2);
+    // plan traffic is scheduling-invariant: equal hit/miss/refresh deltas
+    // even though tick composition (and wall-clock admission) differ
+    assert_eq!(srv_rep.plan_hits, trace_rep.plan_hits);
+    assert_eq!(srv_rep.plan_misses, trace_rep.plan_misses);
+    assert_eq!(srv_rep.plan_refreshes, trace_rep.plan_refreshes);
+    assert!(srv_rep.plan_misses > 0, "fresh streams must predict plans");
+    // queue-wait/compute split: latency decomposes exactly per request
+    for s in &srv_rep.stats {
+        assert!(s.wait_s >= 0.0 && s.wait_s <= s.latency_s, "{s:?}");
+    }
+    assert!(srv_rep.compute_s > 0.0);
+    assert!(srv_rep.denoise_s > 0.0, "batched mode measures model seconds");
+    assert!(srv_rep.denoise_s <= srv_rep.compute_s + 1e-9);
+    // tick counters: between full occupancy (steps ticks) and fully
+    // serial (one entry per tick)
+    assert!(
+        srv_rep.ticks >= steps && srv_rep.ticks <= seeds.len() * steps,
+        "ticks={}",
+        srv_rep.ticks
+    );
+    assert!(srv_rep.mean_batch_occupancy() >= 1.0 - 1e-12);
+    assert!(srv_rep.summary().contains("batch["), "{}", srv_rep.summary());
 }
