@@ -6,8 +6,8 @@
 //!   cargo bench -- table1 fig6a  # a subset
 //!
 //! Experiments: fig1, fig3, fig6a, fig6b, batch, plan, stack,
-//! stack_backward, adaptive_plan, serve, routing, quant, table1, table2,
-//! table3, perf, kernel. `batch`
+//! stack_backward, adaptive_plan, serve, fleet, routing, quant, table1,
+//! table2, table3, perf, kernel. `batch`
 //! compares the batched multi-head SLA engine against a serial per-head
 //! kernel loop on a [B=4, H=8, N=1024, d=64] workload; `plan` measures
 //! fresh-predict vs cached-plan step latency across plan refresh
@@ -31,6 +31,8 @@ mod adaptive_plan;
 mod common;
 #[path = "harness/figs.rs"]
 mod figs;
+#[path = "harness/fleet.rs"]
+mod fleet;
 #[path = "harness/kernels.rs"]
 mod kernels;
 #[path = "harness/microbench.rs"]
@@ -68,6 +70,7 @@ fn main() {
         "stack_backward",
         "adaptive_plan",
         "serve",
+        "fleet",
         "routing",
         "quant",
         "table1",
@@ -96,6 +99,7 @@ fn main() {
             "stack_backward" => stack_backward::stack_backward(),
             "adaptive_plan" => adaptive_plan::adaptive_plan(),
             "serve" => serve::serve(),
+            "fleet" => fleet::fleet(),
             "routing" => routing::routing(),
             "quant" => quant::quant(),
             "table1" => tables::table1(),

@@ -1,0 +1,264 @@
+//! `fleet` experiment: replicated serving throughput + checkpoint
+//! hot-swap latency.
+//!
+//! Pushes the SAME total TCP request load through a 1-replica fleet and an
+//! N-replica fleet (every replica identically seeded, so the samples are
+//! identical — only who computes them changes), reporting req/s and
+//! p50/p95 request latency for both. A third N-replica run stages a
+//! fleet-wide parameter hot-swap mid-load and measures the stage -> every-
+//! replica-flipped drain latency (swaps apply only between denoise
+//! windows, so this is the real "how long until new weights serve" number
+//! under load). Kernel threading is pinned to 1 so replica-level
+//! parallelism is the only lever.
+//!
+//! Smoke mode (`SLA_BENCH_SMOKE=1`, used by CI) shrinks the shapes; the
+//! `BENCH_fleet.json` artifact feeds the bench-compare perf gate via its
+//! `single_ns_per_step` / `multi_ns_per_step` metrics.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use sla_dit::attention::SlaConfig;
+use sla_dit::coordinator::{
+    CoordinatorConfig, Fleet, FleetReport, FleetServer, NativeSlaBackend,
+};
+use sla_dit::util::json::Json;
+
+use crate::common::{env_usize, log_result, shape_json, write_bench_json};
+
+#[allow(clippy::too_many_arguments)]
+fn mk_backend(
+    video: (usize, usize, usize),
+    c: usize,
+    heads: usize,
+    d: usize,
+    depth: usize,
+    blk: usize,
+    steps: usize,
+) -> NativeSlaBackend {
+    NativeSlaBackend::with_depth(
+        video,
+        c,
+        6,
+        heads,
+        d,
+        depth,
+        SlaConfig {
+            bq: blk,
+            bkv: blk,
+            kh_pct: 25.0,
+            kl_pct: 25.0,
+            threads: 1,
+            ..Default::default()
+        },
+        7,
+    )
+    .with_plan_refresh(steps.max(1))
+}
+
+/// Serve `total_requests` (split evenly across `clients` connections)
+/// through a fresh fleet server. When `swap` is set, a prober thread
+/// stages it fleet-wide mid-load and the stage -> all-replicas-applied
+/// latency comes back as the second tuple slot.
+fn run_fleet(
+    fleet: &Fleet<NativeSlaBackend>,
+    clients: usize,
+    total_requests: usize,
+    steps: usize,
+    swap: Option<&sla_dit::model::ParamStore>,
+) -> Result<(f64, Option<f64>, FleetReport)> {
+    let fsrv = FleetServer::new(
+        fleet,
+        CoordinatorConfig { max_active: 4, batch_per_tick: 4, ..Default::default() },
+    )
+    .configure(|s| s.with_accept_threads(4).with_queue_depth(8))
+    .with_swap_admin();
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let per_client = total_requests / clients;
+    let t0 = Instant::now();
+    let mut swap_latency = None;
+    std::thread::scope(|s| -> Result<()> {
+        let server = s.spawn(|| fsrv.serve(listener, Some(clients)));
+        let swapper = swap.map(|store| {
+            s.spawn(move || {
+                // let the load build up so the drain window is real
+                std::thread::sleep(Duration::from_millis(20));
+                let t = Instant::now();
+                let targets = fleet.stage_params(store);
+                let applied = fleet.wait_generations(&targets, Duration::from_secs(30));
+                (applied, t.elapsed().as_secs_f64())
+            })
+        });
+        let mut cs = Vec::new();
+        for ci in 0..clients as u64 {
+            cs.push(s.spawn(move || -> std::io::Result<()> {
+                let mut stream = TcpStream::connect(addr)?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                for r in 0..per_client as u64 {
+                    let seed = 100 * ci + r;
+                    let line = format!(
+                        "{{\"id\": {ci}, \"prompt_seed\": {seed}, \"steps\": {steps}}}\n"
+                    );
+                    stream.write_all(line.as_bytes())?;
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp)?;
+                }
+                stream.write_all(b"quit\n")?;
+                Ok(())
+            }));
+        }
+        for c in cs {
+            c.join().unwrap()?;
+        }
+        if let Some(sw) = swapper {
+            let (applied, secs) = sw.join().unwrap();
+            anyhow::ensure!(applied, "hot-swap never drained");
+            swap_latency = Some(secs);
+        }
+        let served = server.join().unwrap()?;
+        anyhow::ensure!(served == total_requests, "served {served} != {total_requests}");
+        Ok(())
+    })?;
+    Ok((t0.elapsed().as_secs_f64(), swap_latency, fsrv.report()))
+}
+
+/// Median wall time over `reps` runs (reports from the last run).
+fn run_median(
+    replicas: usize,
+    mk: &dyn Fn() -> NativeSlaBackend,
+    clients: usize,
+    total_requests: usize,
+    steps: usize,
+    reps: usize,
+) -> Result<(f64, FleetReport)> {
+    let mut walls = Vec::new();
+    let mut last = None;
+    for _ in 0..reps.max(1) {
+        let fleet = Fleet::new((0..replicas).map(|_| mk()).collect());
+        let (w, _, rep) = run_fleet(&fleet, clients, total_requests, steps, None)?;
+        walls.push(w);
+        last = Some(rep);
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok((walls[walls.len() / 2], last.unwrap()))
+}
+
+pub fn fleet() -> Result<()> {
+    let smoke = std::env::var("SLA_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (video, c, heads, d, depth, blk, steps, requests, replicas, reps) = if smoke {
+        ((2usize, 4usize, 4usize), 4usize, 2usize, 4usize, 1usize, 8usize, 3usize,
+         4usize, 2usize, 2usize)
+    } else {
+        (
+            (2, 8, 8),
+            8,
+            4,
+            16,
+            2,
+            16,
+            env_usize("SLA_BENCH_GEN_STEPS", 4),
+            env_usize("SLA_BENCH_FLEET_REQUESTS", 8),
+            env_usize("SLA_BENCH_FLEET_REPLICAS", 3),
+            3,
+        )
+    };
+    let n = video.0 * video.1 * video.2;
+    let clients = replicas.max(2) * 2;
+    // every client sends the same request count
+    let requests = (requests / clients).max(1) * clients;
+    let mk = || mk_backend(video, c, heads, d, depth, blk, steps);
+    println!(
+        "workload: L={depth} H={heads} N={n} d={d} C={c} block={blk}, {requests} requests x \
+         {steps} steps, {clients} clients, 1 vs {replicas} replicas{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let (w1, rep1) = run_median(1, &mk, clients, requests, steps, reps)?;
+    let (wn, repn) = run_median(replicas, &mk, clients, requests, steps, reps)?;
+
+    // hot-swap drain latency under the same load (different-seed donor so
+    // the flip is a real parameter change, not a no-op)
+    let donor = NativeSlaBackend::with_depth(
+        video,
+        c,
+        6,
+        heads,
+        d,
+        depth,
+        SlaConfig {
+            bq: blk,
+            bkv: blk,
+            kh_pct: 25.0,
+            kl_pct: 25.0,
+            threads: 1,
+            ..Default::default()
+        },
+        8,
+    );
+    let fleet = Fleet::new((0..replicas).map(|_| mk()).collect());
+    let (_, swap_latency, swrep) =
+        run_fleet(&fleet, clients, requests, steps, Some(donor.params()))?;
+    let swap_s = swap_latency.expect("swap probe ran");
+    let swaps: u64 = swrep.per_replica.iter().map(|r| r.generation).sum();
+
+    let denom = (requests * steps) as f64;
+    let (rps1, rpsn) = (requests as f64 / w1, requests as f64 / wn);
+    println!(
+        "\n{:<18} {:>12} {:>10} {:>10} {:>10}",
+        "fleet", "ms total", "req/s", "p50 ms", "p95 ms"
+    );
+    for (label, w, rps, rep) in [
+        ("1 replica", w1, rps1, &rep1),
+        ("N replicas", wn, rpsn, &repn),
+    ] {
+        println!(
+            "{:<18} {:>12.2} {:>10.2} {:>10.3} {:>10.3}",
+            label,
+            w * 1e3,
+            rps,
+            1e3 * rep.merged.latency_percentile(50.0),
+            1e3 * rep.merged.latency_percentile(95.0),
+        );
+    }
+    println!(
+        "\nspeedup: {:.2}x req/s going 1 -> {replicas} replicas; hot-swap drained in \
+         {:.1} ms across {replicas} replicas ({swaps} generations)",
+        rpsn / rps1,
+        swap_s * 1e3,
+    );
+
+    let payload = Json::obj(vec![
+        ("shape", shape_json(1, heads, n, d, blk)),
+        ("depth", Json::num(depth as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("replicas", Json::num(replicas as f64)),
+        ("single_ns_per_step", Json::num(w1 * 1e9 / denom)),
+        ("multi_ns_per_step", Json::num(wn * 1e9 / denom)),
+        ("single_rps", Json::num(rps1)),
+        ("multi_rps", Json::num(rpsn)),
+        ("speedup_rps", Json::num(rpsn / rps1)),
+        ("p50_ms_multi", Json::num(1e3 * repn.merged.latency_percentile(50.0))),
+        ("p95_ms_multi", Json::num(1e3 * repn.merged.latency_percentile(95.0))),
+        ("swap_latency_ms", Json::num(swap_s * 1e3)),
+        ("swap_generations", Json::num(swaps as f64)),
+        (
+            "conn_errors",
+            Json::num(
+                (rep1.merged.conn_errors + repn.merged.conn_errors
+                    + swrep.merged.conn_errors) as f64,
+            ),
+        ),
+    ]);
+    log_result("fleet", payload.clone());
+    write_bench_json("fleet", payload);
+    println!("\nexpected shape: >1x req/s from 1 -> N replicas (independent backends");
+    println!("remove the shared plan-cache and executor serialization), and a swap");
+    println!("latency bounded by one request's remaining denoise window — swaps");
+    println!("apply between requests, never mid-request");
+    Ok(())
+}

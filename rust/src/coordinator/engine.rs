@@ -245,6 +245,9 @@ pub struct NativeSlaBackend {
     /// plan without a global lock — this is what makes the backend
     /// `Send + Sync` (asserted at compile time in the tests).
     plan_cache: SharedPlanCache,
+    /// Layer-sharded serving stages (1 = sequential; see
+    /// `with_layer_shards`).
+    layer_shards: usize,
     /// Learnable mask-routing knob: `(rank, seed)` when enabled. Routers
     /// are deterministically re-derived from this after checkpoint
     /// rebuilds (router weights are not checkpoint leaves).
@@ -312,7 +315,22 @@ impl NativeSlaBackend {
             }
         }
         let refs: Vec<&TensorSpec> = specs.iter().collect();
-        let params = ParamStore::init(&refs, seed);
+        let mut params = ParamStore::init(&refs, seed);
+        // Per-layer q/k/v/o weight leaves, registered AFTER `init` (so the
+        // sequential RNG draw order — and with it every shared weight — is
+        // unchanged) as copies of the stack-shared set: `layer_mat` prefers
+        // per-layer leaves, so the copies keep the served function bitwise
+        // identical at init while giving the fine-tuner's per-layer
+        // `dwq/dwk/dwv/dwo` steps a persistence + hot-swap slot per layer.
+        for li in 0..depth {
+            for leaf in ["wq", "wk", "wv", "wo"] {
+                let shared = params
+                    .get(&format!("{NATIVE_BASE}.attn.{leaf}.w"))
+                    .expect("shared attn weight registered above")
+                    .clone();
+                params.upsert(&format!("{NATIVE_BASE}.layers.{li}.attn.{leaf}.w"), shared);
+            }
+        }
         Self::from_params(
             video,
             channels,
@@ -370,6 +388,7 @@ impl NativeSlaBackend {
             plan_log,
             forward_only,
             plan_shards,
+            layer_shards: 1,
             plan_cache: cache,
             router_cfg: None,
         }
@@ -454,6 +473,19 @@ impl NativeSlaBackend {
     /// as the fine-tune-adjacent path.
     pub fn with_forward_only(mut self, forward_only: bool) -> Self {
         self.forward_only = forward_only;
+        self
+    }
+
+    /// Opt-in layer-sharded serving: pipeline the stack's layers across
+    /// `stages` worker threads — single-item micro-chunks flow stage to
+    /// stage, so chunk `i` runs its next layer slice while chunk `i+1`
+    /// occupies the previous stage — reusing the per-(stream, layer)
+    /// plan-cache keys unchanged. Outputs and cache counters are bitwise
+    /// identical to the sequential path (pinned by tests); this is purely
+    /// an execution-overlap knob. `stages <= 1` (the default) keeps the
+    /// sequential path.
+    pub fn with_layer_shards(mut self, stages: usize) -> Self {
+        self.layer_shards = stages.max(1);
         self
     }
 
@@ -569,18 +601,65 @@ impl NativeSlaBackend {
         self.stack.set_layer_projs(layer, projs);
     }
 
+    /// Adopt fine-tuned q/k/v/o attention weights for one stack layer
+    /// (e.g. from a `StackFineTuner` run with `with_attn_weight_lr`),
+    /// persisting them to the layer's checkpoint leaves.
+    pub fn set_layer_attn_weights(&mut self, layer: usize, wq: Mat, wk: Mat, wv: Mat, wo: Mat) {
+        assert!(layer < self.depth, "layer {layer} out of range");
+        for (leaf, m) in [("wq", &wq), ("wk", &wk), ("wv", &wv), ("wo", &wo)] {
+            self.params.upsert(
+                &format!("{NATIVE_BASE}.layers.{layer}.attn.{leaf}.w"),
+                HostTensor::new(vec![m.rows, m.cols], m.data.clone()),
+            );
+        }
+        self.stack.set_layer_attn_weights(layer, wq, wk, wv, wo);
+    }
+
     /// Save/load the parameter store in the shared checkpoint format.
     pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         self.params.save(path)
     }
 
-    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<usize> {
-        let mut ckpt = ParamStore::read_checkpoint(path)?;
-        // Legacy migration: pre-stack checkpoints stored the (then single)
-        // layer's projections under flat `params.native.attn.sla_proj.<h>`
-        // names; the store only registers per-layer leaves, so re-home them
-        // onto layer 0 (never overriding a layer-0 leaf the checkpoint
-        // already has).
+    /// Atomically adopt a full parameter store: rebuild the stack and plan
+    /// cache under the current serving knobs (plan policy / sharing /
+    /// shards, forward-only, layer shards; kv-precision rides inside the
+    /// engine cfg) and re-derive routers from the routing knob (their
+    /// weights are not checkpoint leaves). This is the hot-swap seam: a
+    /// fleet replica flips to staged parameters through this between
+    /// requests, never mid-request.
+    pub fn set_params(&mut self, params: ParamStore) {
+        let mut refreshed = Self::from_params(
+            self.video,
+            self.channels,
+            self.cond_dim,
+            self.heads,
+            self.head_dim,
+            self.depth,
+            self.engine().cfg.clone(),
+            params,
+            self.plan_policy,
+            self.plan_share,
+            self.plan_log,
+            self.forward_only,
+            self.plan_shards,
+        );
+        refreshed.layer_shards = self.layer_shards;
+        refreshed.router_cfg = self.router_cfg;
+        if let Some((rank, seed)) = refreshed.router_cfg {
+            refreshed.install_routers(rank, seed);
+        }
+        *self = refreshed;
+    }
+
+    /// Re-home legacy checkpoint leaves onto the names this store
+    /// registers (the migration precedent from the stacked-layer PR):
+    /// flat single-layer `sla_proj` leaves land on layer 0, and a
+    /// checkpoint carrying only stack-shared q/k/v/o weights fans them
+    /// out to every layer's leaf — the store now registers per-layer
+    /// weight leaves which shadow the shared set, so without the fan-out
+    /// the stale init-time per-layer copies would win over the loaded
+    /// shared weights. Never overrides a leaf the checkpoint already has.
+    fn migrate_checkpoint(&self, ckpt: &mut std::collections::BTreeMap<String, HostTensor>) {
         for h in 0..self.heads {
             let flat = format!("{NATIVE_BASE}.attn.sla_proj.{h}");
             let layer0 = format!("{NATIVE_BASE}.layers.0.attn.sla_proj.{h}");
@@ -590,30 +669,39 @@ impl NativeSlaBackend {
                 }
             }
         }
-        let loaded = self.params.load_from(&ckpt);
-        let mut refreshed = Self::from_params(
-            self.video,
-            self.channels,
-            self.cond_dim,
-            self.heads,
-            self.head_dim,
-            self.depth,
-            self.engine().cfg.clone(),
-            self.params.clone(),
-            self.plan_policy,
-            self.plan_share,
-            self.plan_log,
-            self.forward_only,
-            self.plan_shards,
-        );
-        // kv_precision rides inside the engine cfg cloned above; routers
-        // must be re-derived from the knob (their weights are not leaves)
-        refreshed.router_cfg = self.router_cfg;
-        if let Some((rank, seed)) = refreshed.router_cfg {
-            refreshed.install_routers(rank, seed);
+        for leaf in ["wq", "wk", "wv", "wo"] {
+            let shared = format!("{NATIVE_BASE}.attn.{leaf}.w");
+            if let Some(t) = ckpt.get(&shared).cloned() {
+                for li in 0..self.depth {
+                    let name = format!("{NATIVE_BASE}.layers.{li}.attn.{leaf}.w");
+                    ckpt.entry(name).or_insert_with(|| t.clone());
+                }
+            }
         }
-        *self = refreshed;
+    }
+
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<usize> {
+        let mut ckpt = ParamStore::read_checkpoint(path)?;
+        self.migrate_checkpoint(&mut ckpt);
+        let loaded = self.params.load_from(&ckpt);
+        self.set_params(self.params.clone());
         Ok(loaded)
+    }
+
+    /// The parameter store that loading `path` into this backend would
+    /// produce, WITHOUT applying it — the staging half of checkpoint
+    /// hot-swap (apply later via [`NativeSlaBackend::set_params`], or a
+    /// fleet replica's swap machinery). Returns the store and the number
+    /// of leaves the checkpoint matched.
+    pub fn stage_checkpoint(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<(ParamStore, usize)> {
+        let mut ckpt = ParamStore::read_checkpoint(path)?;
+        self.migrate_checkpoint(&mut ckpt);
+        let mut staged = self.params.clone();
+        let loaded = staged.load_from(&ckpt);
+        Ok((staged, loaded))
     }
 }
 
@@ -707,15 +795,29 @@ impl VelocityBackend for NativeSlaBackend {
         let mods: Vec<f32> = calls.iter().map(|(_, t, _)| 0.5 + 0.5 * t).collect();
         // the L-layer stack: per layer, one batched engine call over every
         // request of the tick, masks via the sharded (request, layer) plan
-        // cache — each lookup/store locks only the owning shard
-        let hs = self.stack.forward_serving_shared(
-            &h0,
-            &mods,
-            keys,
-            stamps,
-            &self.plan_cache,
-            self.forward_only,
-        );
+        // cache — each lookup/store locks only the owning shard. With
+        // layer sharding the same work pipelines across stage threads,
+        // bitwise-identically.
+        let hs = if self.layer_shards > 1 {
+            self.stack.forward_serving_pipelined(
+                &h0,
+                &mods,
+                keys,
+                stamps,
+                &self.plan_cache,
+                self.forward_only,
+                self.layer_shards,
+            )
+        } else {
+            self.stack.forward_serving_shared(
+                &h0,
+                &mods,
+                keys,
+                stamps,
+                &self.plan_cache,
+                self.forward_only,
+            )
+        };
         // velocity head: the stack's residual delta, leaked input term kept
         // from the single-layer model (v = 0.5 * (h_L - h_0) - 0.2 * x)
         let res: Vec<HostTensor> = threadpool::parallel_map_send(bsz, threads, |bi| {
@@ -1269,5 +1371,122 @@ mod tests {
             b2.velocity(&x, 0.4, &c).unwrap().data
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn per_layer_weight_leaves_start_as_shared_copies() {
+        // registering the per-layer q/k/v/o leaves after `init` must keep
+        // them bitwise equal to the shared set (and therefore keep the
+        // served function identical to the pre-leaf model)
+        let b = backend_depth(2, 7);
+        for li in 0..2 {
+            for leaf in ["wq", "wk", "wv", "wo"] {
+                let per = b
+                    .params()
+                    .get(&format!("params.native.layers.{li}.attn.{leaf}.w"))
+                    .expect("per-layer leaf registered at init");
+                let shared = b
+                    .params()
+                    .get(&format!("params.native.attn.{leaf}.w"))
+                    .unwrap();
+                assert_eq!(per.data, shared.data, "layer {li} {leaf}");
+            }
+        }
+        // and the stack picked them up (layer weights equal across layers)
+        assert_eq!(b.stack().layers[0].wq.data, b.stack().layers[1].wq.data);
+    }
+
+    #[test]
+    fn fine_tuned_attn_weights_roundtrip_checkpoints() {
+        let mut b = backend_depth(2, 10);
+        // diverge layer 1's weights from layer 0's (the per-layer regime
+        // the fine-tuner's dwq/dwk/dwv/dwo steps produce)
+        let scale = |m: &Mat, s: f32| {
+            Mat::from_vec(m.rows, m.cols, m.data.iter().map(|&v| v * s).collect())
+        };
+        let (wq, wk, wv, wo) = {
+            let l = &b.stack().layers[1];
+            (scale(&l.wq, 1.5), scale(&l.wk, 0.5), scale(&l.wv, 2.0), scale(&l.wo, 0.25))
+        };
+        b.set_layer_attn_weights(1, wq.clone(), wk.clone(), wv.clone(), wo.clone());
+        assert_ne!(b.stack().layers[0].wq.data, b.stack().layers[1].wq.data);
+        let path = std::env::temp_dir()
+            .join(format!("sla_native_attn_w_ckpt_{}", std::process::id()));
+        b.save_checkpoint(&path).unwrap();
+        let mut b2 = backend_depth(2, 11);
+        b2.load_checkpoint(&path).unwrap();
+        assert_eq!(b2.stack().layers[1].wq.data, wq.data);
+        assert_eq!(b2.stack().layers[1].wo.data, wo.data);
+        assert_eq!(b2.stack().layers[0].wq.data, b.stack().layers[0].wq.data);
+        let (x, c) = xc(43, 32, 4, 6);
+        assert_eq!(
+            b.velocity(&x, 0.4, &c).unwrap().data,
+            b2.velocity(&x, 0.4, &c).unwrap().data
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_shared_weight_checkpoint_fans_out_to_layers() {
+        // a pre-per-layer checkpoint carries ONLY the stack-shared q/k/v/o
+        // leaves; loading it must fan them out onto every layer, or the
+        // stale init-time per-layer copies would shadow the loaded weights
+        let hd = 8; // 2 heads x dim 4
+        let legacy = crate::model::ParamStore {
+            names: vec![
+                "params.native.attn.wq.w".into(),
+                "params.native.attn.wo.w".into(),
+            ],
+            tensors: vec![
+                HostTensor::new(vec![4, hd], vec![0.2; 4 * hd]),
+                HostTensor::new(vec![hd, 4], vec![-0.1; hd * 4]),
+            ],
+        };
+        let path = std::env::temp_dir()
+            .join(format!("sla_native_shared_w_ckpt_{}", std::process::id()));
+        legacy.save(&path).unwrap();
+        let mut b = backend_depth(2, 7);
+        b.load_checkpoint(&path).unwrap();
+        for li in 0..2 {
+            assert_eq!(b.stack().layers[li].wq.data, vec![0.2; 4 * hd], "layer {li} wq");
+            assert_eq!(b.stack().layers[li].wo.data, vec![-0.1; hd * 4], "layer {li} wo");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn layer_sharded_serving_matches_sequential_bitwise() {
+        // the opt-in pipelined mode: contiguous layer ranges on stage
+        // threads, single-item chunks flowing through FIFO channels — must
+        // be bitwise identical to the sequential loop, including the keyed
+        // plan-cache trajectory across denoise steps
+        let seq = backend_depth(4, 7);
+        let pipe = backend_depth(4, 7).with_layer_shards(3);
+        let (x1, c1) = xc(50, 32, 4, 6);
+        let (x2, c2) = xc(51, 32, 4, 6);
+        let (x3, c3) = xc(52, 32, 4, 6);
+        for (step, t) in [0.9f32, 0.6, 0.3].into_iter().enumerate() {
+            let calls = [(&x1, t, &c1), (&x2, t, &c2), (&x3, t, &c3)];
+            let keys = [Some(2), Some(3), None];
+            let stamps = [Some(step as u64), Some(step as u64), None];
+            let a = seq.velocity_batch_stamped(&calls, &keys, &stamps).unwrap();
+            let b = pipe.velocity_batch_stamped(&calls, &keys, &stamps).unwrap();
+            for (i, (av, bv)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(av.data, bv.data, "step {step} item {i}");
+            }
+        }
+        seq.end_request(2);
+        pipe.end_request(2);
+        // more stages than layers clamps to depth; 1 stage is the
+        // sequential path itself
+        let clamped = backend_depth(2, 7).with_layer_shards(16);
+        let one = backend_depth(2, 7).with_layer_shards(1);
+        let a = clamped
+            .velocity_batch_stamped(&[(&x1, 0.5, &c1)], &[Some(9)], &[Some(0)])
+            .unwrap();
+        let b = one
+            .velocity_batch_stamped(&[(&x1, 0.5, &c1)], &[Some(9)], &[Some(0)])
+            .unwrap();
+        assert_eq!(a[0].data, b[0].data);
     }
 }

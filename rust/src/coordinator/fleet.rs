@@ -1,0 +1,597 @@
+//! Replicated serving fleet: N backend replicas behind a shared
+//! connection-stealing dispatcher, with atomic checkpoint hot-swap
+//! (ROADMAP direction 4).
+//!
+//! Topology: one [`Fleet`] owns N [`ReplicaBackend`]s (each wrapping an
+//! independent, identically-seeded backend), and a [`FleetServer`] runs
+//! one full [`Server`] — admission queue, batching executor, connection
+//! handlers, telemetry — per replica. All replica servers drain ONE
+//! shared bounded connection queue, so whichever replica has a free
+//! handler steals the next pending connection (work stealing at
+//! connection granularity). Every request of a stolen connection then
+//! runs on that replica for its whole lifetime: per-(request, branch,
+//! layer) plan streams and the even-cond/odd-uncond CFG-sharing pairing
+//! never cross replicas. Samples depend only on `(prompt_seed, steps,
+//! cfg)` — never on which replica served them (pinned by the serving
+//! tests) — so an N-replica fleet is sample-for-sample identical to N
+//! independent single-replica runs of its request partition.
+//!
+//! Hot-swap state machine (per replica): `stage` parks a boxed apply
+//! closure; the replica tracks the set of stream keys mid-denoise
+//! (registered at each keyed velocity call, cleared by `end_request`),
+//! and the staged swap applies — under the backend's write lock, with a
+//! generation bump — at the first moment that set is empty. A request
+//! admitted before the swap finishes runs to completion on the old
+//! parameters; a request whose first model call lands after the flip
+//! runs wholly on the new ones; no request ever observes a parameter
+//! change between its denoise steps. Under saturating load the drain
+//! window may take a while to open (admissions are not paused); the
+//! `swap-params` admin verb therefore reports *staged* generations and
+//! completion is observable via `{"admin":"generation"}`.
+
+use std::collections::HashSet;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::engine::{NativeSlaBackend, VelocityBackend};
+use super::scheduler::{CoordinatorConfig, PlanLayerReport, ServeReport};
+use super::server::{Chan, Server};
+use crate::attention::plan::{PlanCacheStats, PlanDeltaStats};
+use crate::model::ParamStore;
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn read_ok<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A staged parameter flip, applied under the replica's write lock at the
+/// next drained moment.
+pub type StagedSwap<B> = Box<dyn FnOnce(&mut B) + Send>;
+
+struct SwapState<B> {
+    /// Stream keys with in-flight denoise state on this replica: inserted
+    /// at every keyed velocity call, removed by `end_request`. A staged
+    /// swap applies only while this is empty, which is exactly the
+    /// "between denoise windows, never mid-request" guarantee.
+    live: HashSet<u64>,
+    staged: Option<StagedSwap<B>>,
+}
+
+/// One fleet replica: a backend behind a read/write lock plus the
+/// hot-swap state machine. Model calls take the read lock; a staged swap
+/// takes the write lock only while no stream is mid-denoise (see the
+/// module docs), so serving threads never observe a half-applied flip.
+pub struct ReplicaBackend<B> {
+    inner: RwLock<B>,
+    swap: Mutex<SwapState<B>>,
+    /// Signalled on every applied swap (pair of the `swap` mutex).
+    swapped: Condvar,
+    /// Completed swaps; a replica serves "generation g" parameters.
+    generation: AtomicU64,
+    /// `variant()` must return a `&str` borrowed from `self`, which the
+    /// lock guard cannot provide — cached at construction (a swap never
+    /// changes the backend kind).
+    variant: String,
+}
+
+impl<B: VelocityBackend> ReplicaBackend<B> {
+    fn new(inner: B) -> Self {
+        let variant = inner.variant().to_string();
+        ReplicaBackend {
+            inner: RwLock::new(inner),
+            swap: Mutex::new(SwapState { live: HashSet::new(), staged: None }),
+            swapped: Condvar::new(),
+            generation: AtomicU64::new(0),
+            variant,
+        }
+    }
+
+    /// Read access to the wrapped backend (reports, staging, tests).
+    pub fn read(&self) -> RwLockReadGuard<'_, B> {
+        read_ok(&self.inner)
+    }
+
+    /// Completed hot-swaps on this replica.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Whether a staged swap has not applied yet.
+    pub fn swap_pending(&self) -> bool {
+        lock_ok(&self.swap).staged.is_some()
+    }
+
+    /// Stream keys currently mid-denoise on this replica.
+    pub fn live_streams(&self) -> usize {
+        lock_ok(&self.swap).live.len()
+    }
+
+    /// Stage `apply` to run at the replica's next drained moment (which is
+    /// immediate when nothing is in flight). A newer staged swap replaces
+    /// an unapplied older one. Returns the generation the swap will carry
+    /// once applied.
+    pub fn stage_swap(&self, apply: StagedSwap<B>) -> u64 {
+        let mut st = lock_ok(&self.swap);
+        st.staged = Some(apply);
+        let target = self.generation.load(Ordering::SeqCst) + 1;
+        self.try_apply(&mut st);
+        target
+    }
+
+    /// Apply the staged swap if no stream is mid-denoise. Runs with the
+    /// swap mutex held, so no new stream can register between the
+    /// emptiness check and the write lock — the flip is atomic with
+    /// respect to request starts.
+    fn try_apply(&self, st: &mut SwapState<B>) {
+        if !st.live.is_empty() {
+            return;
+        }
+        if let Some(apply) = st.staged.take() {
+            {
+                let mut b = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+                apply(&mut b);
+            }
+            self.generation.fetch_add(1, Ordering::SeqCst);
+            self.swapped.notify_all();
+        }
+    }
+
+    /// Block until this replica has completed at least `target` swaps;
+    /// `false` on timeout. The completion barrier for tests and the fleet
+    /// bench's swap-latency probe.
+    pub fn wait_generation(&self, target: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock_ok(&self.swap);
+        while self.generation.load(Ordering::SeqCst) < target {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self
+                .swapped
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+        true
+    }
+
+    /// Register `keys` as mid-denoise BEFORE touching the backend: once a
+    /// key is live, no swap can land until its `end_request`.
+    fn register(&self, keys: &[Option<u64>]) {
+        let mut st = lock_ok(&self.swap);
+        for k in keys.iter().flatten() {
+            st.live.insert(*k);
+        }
+    }
+}
+
+impl<B: VelocityBackend> VelocityBackend for ReplicaBackend<B> {
+    fn velocity(&self, x: &HostTensor, t: f32, cond: &HostTensor) -> Result<HostTensor> {
+        // unkeyed single call: atomic under the read lock, no stream state
+        read_ok(&self.inner).velocity(x, t, cond)
+    }
+
+    fn velocity_batch(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+    ) -> Result<Vec<HostTensor>> {
+        read_ok(&self.inner).velocity_batch(calls)
+    }
+
+    fn velocity_batch_keyed(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+        keys: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        self.register(keys);
+        read_ok(&self.inner).velocity_batch_keyed(calls, keys)
+    }
+
+    fn velocity_batch_stamped(
+        &self,
+        calls: &[(&HostTensor, f32, &HostTensor)],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+    ) -> Result<Vec<HostTensor>> {
+        self.register(keys);
+        read_ok(&self.inner).velocity_batch_stamped(calls, keys, stamps)
+    }
+
+    fn end_request(&self, key: u64) {
+        read_ok(&self.inner).end_request(key);
+        let mut st = lock_ok(&self.swap);
+        st.live.remove(&key);
+        self.try_apply(&mut st);
+    }
+
+    fn plan_stats(&self) -> Option<PlanCacheStats> {
+        read_ok(&self.inner).plan_stats()
+    }
+
+    fn plan_delta(&self) -> Option<PlanDeltaStats> {
+        read_ok(&self.inner).plan_delta()
+    }
+
+    fn plan_layers(&self) -> Vec<(PlanCacheStats, PlanDeltaStats)> {
+        read_ok(&self.inner).plan_layers()
+    }
+
+    fn router_layers(&self) -> usize {
+        read_ok(&self.inner).router_layers()
+    }
+
+    fn kv_precision_label(&self) -> &'static str {
+        read_ok(&self.inner).kv_precision_label()
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        read_ok(&self.inner).shape()
+    }
+
+    fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    fn video(&self) -> (usize, usize, usize) {
+        read_ok(&self.inner).video()
+    }
+}
+
+/// N replicas of one backend. Build it from identically-constructed
+/// backends when fleet-vs-single parity matters (samples are seed-
+/// determined, so identically-seeded replicas serve identical samples).
+pub struct Fleet<B> {
+    replicas: Vec<ReplicaBackend<B>>,
+}
+
+impl<B: VelocityBackend> Fleet<B> {
+    pub fn new(backends: Vec<B>) -> Self {
+        assert!(!backends.is_empty(), "a fleet needs at least one replica");
+        Fleet { replicas: backends.into_iter().map(ReplicaBackend::new).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn replica(&self, i: usize) -> &ReplicaBackend<B> {
+        &self.replicas[i]
+    }
+
+    pub fn replicas(&self) -> &[ReplicaBackend<B>] {
+        &self.replicas
+    }
+
+    /// Stage one swap per replica (`make(i)` builds replica `i`'s apply
+    /// closure); returns the per-replica target generations.
+    pub fn stage_swap_with(&self, mut make: impl FnMut(usize) -> StagedSwap<B>) -> Vec<u64> {
+        self.replicas.iter().enumerate().map(|(i, r)| r.stage_swap(make(i))).collect()
+    }
+
+    /// Block until every replica reaches its target generation.
+    pub fn wait_generations(&self, targets: &[u64], timeout: Duration) -> bool {
+        self.replicas
+            .iter()
+            .zip(targets)
+            .all(|(r, &g)| r.wait_generation(g, timeout))
+    }
+
+    pub fn generations(&self) -> Vec<u64> {
+        self.replicas.iter().map(|r| r.generation()).collect()
+    }
+}
+
+impl Fleet<NativeSlaBackend> {
+    /// Stage an atomic parameter swap on every replica. Router weights are
+    /// not leaves — they re-derive from each backend's routing knob — and
+    /// the per-layer Eq. 6 projections and q/k/v/o weights ride in the
+    /// store; serving knobs (plan policy/sharing/shards, forward-only,
+    /// layer shards, kv-precision) are preserved by
+    /// `NativeSlaBackend::set_params`. Returns per-replica target
+    /// generations (each replica flips at its own next drained moment).
+    pub fn stage_params(&self, params: &ParamStore) -> Vec<u64> {
+        self.stage_swap_with(|_| {
+            let p = params.clone();
+            Box::new(move |b: &mut NativeSlaBackend| b.set_params(p))
+        })
+    }
+
+    /// Stage a checkpoint hot-swap (the `swap-params` admin verb):
+    /// normalize + load `path` against replica 0's current store (replicas
+    /// are identically constructed, so the staged store fits them all),
+    /// then stage it fleet-wide. Returns the per-replica target
+    /// generations and the number of leaves the checkpoint matched.
+    pub fn stage_checkpoint(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<(Vec<u64>, usize)> {
+        let (staged, loaded) = self.replicas[0].read().stage_checkpoint(path)?;
+        Ok((self.stage_params(&staged), loaded))
+    }
+}
+
+/// Per-replica slice of a [`FleetReport`].
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    /// Requests this replica answered.
+    pub requests: usize,
+    /// Completed hot-swaps (the parameter generation it serves).
+    pub generation: u64,
+    /// Stream keys mid-denoise at report time.
+    pub live_streams: usize,
+    /// Whether a staged swap is still waiting for a drain window.
+    pub swap_pending: bool,
+}
+
+/// Fleet-level serving report: every replica server's `ServeReport`
+/// deltas merged (rules on [`FleetServer::report`]) plus the per-replica
+/// request counts and swap generations.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub merged: ServeReport,
+    pub per_replica: Vec<ReplicaReport>,
+}
+
+impl FleetReport {
+    /// Total completed hot-swaps across the fleet.
+    pub fn swaps(&self) -> u64 {
+        self.per_replica.iter().map(|r| r.generation).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        let reqs: Vec<String> =
+            self.per_replica.iter().map(|r| r.requests.to_string()).collect();
+        let gens: Vec<String> =
+            self.per_replica.iter().map(|r| r.generation.to_string()).collect();
+        format!(
+            "fleet[replicas={} requests=[{}] gen=[{}]] {}",
+            self.per_replica.len(),
+            reqs.join(","),
+            gens.join(","),
+            self.merged.summary(),
+        )
+    }
+}
+
+/// The fleet front-end: one full `Server` per replica, all draining one
+/// shared accepted-connection queue (see the module docs for the
+/// dispatch/pinning contract).
+pub struct FleetServer<'f, B: VelocityBackend> {
+    fleet: &'f Fleet<B>,
+    servers: Vec<Server<'f>>,
+}
+
+impl<'f, B: VelocityBackend> FleetServer<'f, B> {
+    /// One server per replica, all with the same scheduler config — and
+    /// therefore identical per-server request-key sequences (keys are
+    /// per-server counters; samples are key-invariant, pinned by the
+    /// serving tests, so key collisions across replicas are harmless).
+    pub fn new(fleet: &'f Fleet<B>, cfg: CoordinatorConfig) -> Self {
+        let servers =
+            fleet.replicas().iter().map(|r| Server::new(r, cfg.clone())).collect();
+        FleetServer { fleet, servers }
+    }
+
+    /// Apply a `Server` builder uniformly to every replica server
+    /// (`with_accept_threads`, `with_batching`, timeouts, ...).
+    pub fn configure(mut self, mut f: impl FnMut(Server<'f>) -> Server<'f>) -> Self {
+        self.servers = self.servers.into_iter().map(&mut f).collect();
+        self
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Per-replica servers (handle-level access for tests).
+    pub fn servers(&self) -> &[Server<'f>] {
+        &self.servers
+    }
+
+    /// Accept loop + shared-queue dispatch. Stops after `max_connections`
+    /// accept attempts (None = forever). Returns the total request lines
+    /// answered across the fleet.
+    pub fn serve(
+        &self,
+        listener: TcpListener,
+        max_connections: Option<usize>,
+    ) -> Result<usize> {
+        let conns: Chan<TcpStream> = Chan::new(self.servers.len() * 16);
+        let served = std::thread::scope(|s| {
+            let drainers: Vec<_> = self
+                .servers
+                .iter()
+                .map(|srv| {
+                    let conns = &conns;
+                    s.spawn(move || srv.serve_conns(conns))
+                })
+                .collect();
+            let mut accepted = 0usize;
+            for stream in listener.incoming() {
+                accepted += 1;
+                match stream {
+                    Ok(st) => {
+                        let _ = conns.push(st);
+                    }
+                    Err(e) => eprintln!("[fleet] accept error: {e} (continuing)"),
+                }
+                if let Some(max) = max_connections {
+                    if accepted >= max {
+                        break;
+                    }
+                }
+            }
+            conns.close();
+            let mut total = 0usize;
+            let mut panicked = None;
+            for d in drainers {
+                match d.join() {
+                    Ok(n) => total += n,
+                    Err(p) => panicked = Some(p),
+                }
+            }
+            if let Some(p) = panicked {
+                std::panic::resume_unwind(p);
+            }
+            total
+        });
+        Ok(served)
+    }
+
+    /// Merge every replica server's `ServeReport` deltas into one fleet
+    /// report. Merge rules: counters that accumulate independently per
+    /// replica (nfe, ticks, batch entries, plan hits/misses/refreshes,
+    /// share counters, churn observations, queue-wait/compute seconds,
+    /// connection errors, line overflows, denoise/idle seconds, request
+    /// stats) are SUMMED; `total_s` is the MAX (replicas serve
+    /// concurrently — their walls overlap); `queue_depth_max` is the MAX;
+    /// the `pool_*` threadpool counters are process-wide deltas every
+    /// replica observed identically, so they take the MAX too (a sum
+    /// would multiply the same work by N); mean sparsity/churn are
+    /// weighted by each replica's prediction/observation counts;
+    /// router/precision labels come from replica 0 (the fleet is
+    /// homogeneous). `stats` ids are per-replica stream keys and may
+    /// collide across replicas — latency percentiles are unaffected.
+    pub fn report(&self) -> FleetReport {
+        let reps: Vec<ServeReport> = self.servers.iter().map(|s| s.report()).collect();
+        let mut merged = ServeReport::default();
+        let mut sparsity_w = 0.0f64;
+        let mut churn_w = 0.0f64;
+        for rep in &reps {
+            merged.stats.extend(rep.stats.iter().cloned());
+            merged.total_s = merged.total_s.max(rep.total_s);
+            merged.denoise_s += rep.denoise_s;
+            merged.idle_s += rep.idle_s;
+            merged.nfe += rep.nfe;
+            merged.ticks += rep.ticks;
+            merged.batch_entries += rep.batch_entries;
+            merged.plan_hits += rep.plan_hits;
+            merged.plan_misses += rep.plan_misses;
+            merged.plan_refreshes += rep.plan_refreshes;
+            sparsity_w += rep.plan_mean_sparsity * rep.plan_misses as f64;
+            merged.plan_share_hits += rep.plan_share_hits;
+            merged.plan_shares += rep.plan_shares;
+            merged.plan_unshares += rep.plan_unshares;
+            merged.plan_churn_observed += rep.plan_churn_observed;
+            churn_w += rep.plan_mean_churn * rep.plan_churn_observed as f64;
+            merged.plan_max_churn = merged.plan_max_churn.max(rep.plan_max_churn);
+            for (li, pl) in rep.plan_layers.iter().enumerate() {
+                if merged.plan_layers.len() <= li {
+                    merged.plan_layers.resize_with(li + 1, PlanLayerReport::default);
+                }
+                let m = &mut merged.plan_layers[li];
+                let mw = m.mean_churn * m.churn_observed as f64
+                    + pl.mean_churn * pl.churn_observed as f64;
+                m.hits += pl.hits;
+                m.misses += pl.misses;
+                m.refreshes += pl.refreshes;
+                m.share_hits += pl.share_hits;
+                m.churn_observed += pl.churn_observed;
+                m.mean_churn =
+                    if m.churn_observed > 0 { mw / m.churn_observed as f64 } else { 0.0 };
+            }
+            merged.queue_wait_s += rep.queue_wait_s;
+            merged.compute_s += rep.compute_s;
+            merged.queue_depth_max = merged.queue_depth_max.max(rep.queue_depth_max);
+            merged.conn_errors += rep.conn_errors;
+            merged.line_overflows += rep.line_overflows;
+            merged.pool_chunks = merged.pool_chunks.max(rep.pool_chunks);
+            merged.pool_inline = merged.pool_inline.max(rep.pool_inline);
+            merged.pool_idle_s = merged.pool_idle_s.max(rep.pool_idle_s);
+        }
+        merged.plan_mean_sparsity =
+            if merged.plan_misses > 0 { sparsity_w / merged.plan_misses as f64 } else { 0.0 };
+        merged.plan_mean_churn = if merged.plan_churn_observed > 0 {
+            churn_w / merged.plan_churn_observed as f64
+        } else {
+            0.0
+        };
+        if let Some(first) = reps.first() {
+            merged.router_layers = first.router_layers;
+            merged.kv_precision = first.kv_precision.clone();
+        }
+        merged.stats.sort_by_key(|s| s.id);
+        let per_replica = reps
+            .iter()
+            .enumerate()
+            .map(|(i, rep)| {
+                let r = self.fleet.replica(i);
+                ReplicaReport {
+                    requests: rep.stats.len(),
+                    generation: r.generation(),
+                    live_streams: r.live_streams(),
+                    swap_pending: r.swap_pending(),
+                }
+            })
+            .collect();
+        FleetReport { merged, per_replica }
+    }
+}
+
+impl<'f> FleetServer<'f, NativeSlaBackend> {
+    /// Enable the `swap-params` admin verb on every replica server:
+    /// `{"admin":"swap-params","ckpt":"<path>"}` stages a checkpoint
+    /// hot-swap FLEET-wide (whichever replica's handler owns the admin
+    /// connection swaps all replicas) and answers with the leaves loaded
+    /// plus the per-replica target generations; `{"admin":"generation"}`
+    /// reports the current (completed) generations, the completion probe.
+    pub fn with_swap_admin(mut self) -> Self {
+        let fleet = self.fleet;
+        self.servers = self
+            .servers
+            .into_iter()
+            .map(|srv| srv.with_admin_handler(move |req| fleet_admin(fleet, req)))
+            .collect();
+        self
+    }
+}
+
+fn admin_err(msg: impl Into<String>) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.into()))])
+}
+
+fn gen_arr(fleet: &Fleet<NativeSlaBackend>) -> Json {
+    Json::Arr(fleet.generations().into_iter().map(|g| Json::num(g as f64)).collect())
+}
+
+fn fleet_admin(fleet: &Fleet<NativeSlaBackend>, req: &Json) -> Json {
+    match req.get("admin").as_str() {
+        Some("swap-params") => {
+            let Some(path) = req.get("ckpt").as_str() else {
+                return admin_err("swap-params requires a string \"ckpt\" field");
+            };
+            match fleet.stage_checkpoint(path) {
+                Ok((targets, loaded)) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("admin", Json::str("swap-params")),
+                    ("loaded", Json::num(loaded as f64)),
+                    (
+                        "staged_generations",
+                        Json::Arr(targets.iter().map(|&g| Json::num(g as f64)).collect()),
+                    ),
+                ]),
+                Err(e) => admin_err(format!("swap-params failed: {e:#}")),
+            }
+        }
+        Some("generation") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("admin", Json::str("generation")),
+            ("generations", gen_arr(fleet)),
+        ]),
+        other => admin_err(format!("unknown admin verb {other:?}")),
+    }
+}

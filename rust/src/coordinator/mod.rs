@@ -8,13 +8,17 @@
 //! `ArtifactBackend` is the real PJRT implementation and `NativeSlaBackend`
 //! is the pure-Rust path that runs a whole scheduler tick through one
 //! batched multi-head SLA engine call. The TCP `Server` shares one backend
-//! across a pool of connection handlers and `max_active` compute workers.
+//! across a pool of connection handlers and `max_active` compute workers;
+//! `Fleet`/`FleetServer` replicate that whole server N times behind a
+//! shared connection-stealing queue with atomic checkpoint hot-swap.
 
 mod batch;
 mod engine;
+mod fleet;
 mod scheduler;
 mod server;
 
 pub use engine::{ArtifactBackend, NativeSlaBackend, VelocityBackend};
+pub use fleet::{Fleet, FleetReport, FleetServer, ReplicaBackend, ReplicaReport, StagedSwap};
 pub use scheduler::{Coordinator, CoordinatorConfig, PlanLayerReport, ReqStat, ServeReport};
 pub use server::Server;

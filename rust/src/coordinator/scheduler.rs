@@ -146,6 +146,11 @@ impl ServeReport {
     }
 
     pub fn latency_percentile(&self, p: f64) -> f64 {
+        // guard like mean_latency: a zero-request trace (every connection
+        // errored out) must report 0.0, not NaN, in summary()
+        if self.stats.is_empty() {
+            return 0.0;
+        }
         let mut xs: Vec<f64> = self.stats.iter().map(|s| s.latency_s).collect();
         percentile(&mut xs, p)
     }
@@ -932,6 +937,19 @@ mod tests {
         );
         // an all-zero breakdown stays out of the summary
         assert!(!ServeReport::default().summary().contains("queue["));
+    }
+
+    #[test]
+    fn zero_request_summary_has_no_nan() {
+        // regression: with no completed requests (e.g. every connection
+        // errored out), latency_percentile used to return NaN and summary()
+        // printed "p50=NaN p95=NaN"
+        let rep = ServeReport::default();
+        assert_eq!(rep.latency_percentile(50.0), 0.0);
+        assert_eq!(rep.latency_percentile(95.0), 0.0);
+        let s = rep.summary();
+        assert!(!s.contains("NaN"), "{s}");
+        assert!(s.contains("p50=0.00s p95=0.00s"), "{s}");
     }
 
     #[test]

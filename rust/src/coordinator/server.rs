@@ -125,7 +125,9 @@ struct ActiveJob {
 /// Minimal bounded MPMC channel (Mutex + two Condvars): `push` blocks while
 /// full (producer backpressure), `pop` blocks while empty, `close` wakes
 /// everyone. No external channel crates in the offline mirror.
-struct Chan<T> {
+/// `pub(crate)` so the fleet dispatcher (`coordinator::fleet`) can feed a
+/// shared connection queue into several replica servers' handler pools.
+pub(crate) struct Chan<T> {
     state: Mutex<ChanState<T>>,
     not_empty: Condvar,
     not_full: Condvar,
@@ -138,7 +140,7 @@ struct ChanState<T> {
 }
 
 impl<T> Chan<T> {
-    fn new(cap: usize) -> Self {
+    pub(crate) fn new(cap: usize) -> Self {
         Chan {
             state: Mutex::new(ChanState { items: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
@@ -149,7 +151,7 @@ impl<T> Chan<T> {
 
     /// Blocking push; returns the queue depth after insertion, or `None`
     /// (dropping `item`) if the channel is closed.
-    fn push(&self, item: T) -> Option<usize> {
+    pub(crate) fn push(&self, item: T) -> Option<usize> {
         let mut st = lock_ok(&self.state);
         while st.items.len() >= self.cap && !st.closed {
             st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
@@ -191,7 +193,7 @@ impl<T> Chan<T> {
         x
     }
 
-    fn close(&self) {
+    pub(crate) fn close(&self) {
         lock_ok(&self.state).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
@@ -262,6 +264,12 @@ pub struct Server<'b> {
     /// Backend counters at construction — `report()` returns deltas, the
     /// same way `run_trace` reports deltas over one trace.
     telemetry0: TelemetrySnapshot,
+    /// Optional admin hook: a JSON object carrying a string `"admin"`
+    /// field is handed here INSTEAD of request validation (the fleet
+    /// installs its `swap-params` verb through this). `None` (default)
+    /// means admin lines fall through to normal parsing and fail it.
+    #[allow(clippy::type_complexity)]
+    admin: Option<Box<dyn Fn(&Json) -> Json + Send + Sync + 'b>>,
 }
 
 impl<'b> Server<'b> {
@@ -288,7 +296,19 @@ impl<'b> Server<'b> {
             total_s: Mutex::new(0.0),
             denoise_s: Mutex::new(0.0),
             telemetry0,
+            admin: None,
         }
+    }
+
+    /// Install an admin hook (see the `admin` field; used by the fleet's
+    /// `swap-params` verb). The handler runs on the connection-handler
+    /// thread, synchronously, and its return value is the response line.
+    pub fn with_admin_handler(
+        mut self,
+        handler: impl Fn(&Json) -> Json + Send + Sync + 'b,
+    ) -> Self {
+        self.admin = Some(Box::new(handler));
+        self
     }
 
     /// Size of the connection-handler pool (parallel client connections).
@@ -456,9 +476,23 @@ impl<'b> Server<'b> {
         resp
     }
 
+    /// Route `line` to the admin hook when one is installed and the line
+    /// is a JSON object carrying a string `"admin"` verb; `None` falls
+    /// through to normal request handling (including malformed JSON, which
+    /// request parsing answers with its usual error).
+    fn try_admin(&self, line: &str) -> Option<Json> {
+        let handler = self.admin.as_ref()?;
+        let parsed = Json::parse(line).ok()?;
+        parsed.get("admin").as_str()?;
+        Some(handler(&parsed))
+    }
+
     /// Handle one request line synchronously (CLI/tests entry point; the
     /// TCP path routes through the executor / worker pool instead).
     pub fn handle(&self, line: &str) -> Json {
+        if let Some(resp) = self.try_admin(line) {
+            return resp;
+        }
         match self.parse_request(line) {
             Err(resp) => resp,
             Ok(req) => {
@@ -473,6 +507,9 @@ impl<'b> Server<'b> {
     /// queue and block here until the executor responds (so each connection
     /// sees its responses in request order).
     fn serve_line(&self, line: &str, jobs: &Chan<Job>) -> Json {
+        if let Some(resp) = self.try_admin(line) {
+            return resp;
+        }
         match self.parse_request(line) {
             Err(resp) => resp,
             Ok(req) => {
@@ -711,13 +748,19 @@ impl<'b> Server<'b> {
         served
     }
 
-    /// Accept loop. Stops after `max_connections` accept attempts (None =
-    /// forever). Accepted connections are dispatched to the handler pool;
-    /// accept errors and per-connection errors are counted and survived.
-    pub fn serve(&self, listener: TcpListener, max_connections: Option<usize>)
-        -> Result<usize> {
+    /// Serve already-accepted connections pushed into `conns` by an
+    /// external accept loop — the fleet dispatcher's per-replica entry
+    /// point ([`Server::serve`] is this plus its own accept loop). Spawns
+    /// the batching executor (or worker pool) and `accept_threads`
+    /// connection handlers that drain `conns` until it is closed and
+    /// empty, then shuts the executor down without abandoning admitted
+    /// work. Several servers may drain ONE shared `conns` queue: a free
+    /// handler steals the next pending connection regardless of which
+    /// replica it belongs to, and every request of that connection then
+    /// stays pinned to this server's backend. Returns the number of
+    /// request lines answered.
+    pub(crate) fn serve_conns(&self, conns: &Chan<TcpStream>) -> usize {
         let t_start = Instant::now();
-        let conns: Chan<TcpStream> = Chan::new(self.accept_threads * 4);
         let jobs: Chan<Job> = Chan::new(self.queue_depth);
         let served = AtomicUsize::new(0);
         std::thread::scope(|s| {
@@ -738,6 +781,28 @@ impl<'b> Server<'b> {
                     }
                 }));
             }
+            // shutdown: handlers exit once `conns` closes and drains, then
+            // the executor / workers finish whatever was admitted
+            for h in handlers {
+                let _ = h.join();
+            }
+            jobs.close();
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+        *lock_ok(&self.total_s) += t_start.elapsed().as_secs_f64();
+        served.load(Ordering::Relaxed)
+    }
+
+    /// Accept loop. Stops after `max_connections` accept attempts (None =
+    /// forever). Accepted connections are dispatched to the handler pool;
+    /// accept errors and per-connection errors are counted and survived.
+    pub fn serve(&self, listener: TcpListener, max_connections: Option<usize>)
+        -> Result<usize> {
+        let conns: Chan<TcpStream> = Chan::new(self.accept_threads * 4);
+        let served = std::thread::scope(|s| {
+            let drainer = s.spawn(|| self.serve_conns(&conns));
             let mut accepted = 0usize;
             for stream in listener.incoming() {
                 accepted += 1;
@@ -756,19 +821,13 @@ impl<'b> Server<'b> {
                     }
                 }
             }
-            // shutdown: stop feeding handlers, let them finish their
-            // connections, then drain the executor / workers
             conns.close();
-            for h in handlers {
-                let _ = h.join();
-            }
-            jobs.close();
-            for w in workers {
-                let _ = w.join();
+            match drainer.join() {
+                Ok(n) => n,
+                Err(p) => std::panic::resume_unwind(p),
             }
         });
-        *lock_ok(&self.total_s) += t_start.elapsed().as_secs_f64();
-        Ok(served.load(Ordering::Relaxed))
+        Ok(served)
     }
 }
 

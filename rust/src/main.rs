@@ -76,6 +76,13 @@ fn cli() -> Cli {
                 .flag("conn-timeout-s", "0", "per-connection read timeout (0 = off)")
                 .flag("max-line-kib", "1024", "request line length cap in KiB")
                 .flag("threads", "0", "kernel threads per model call (0 = auto)")
+                .flag("replicas", "1", "backend replicas behind one shared \
+                       connection-stealing queue")
+                .flag("layer-shards", "1", "pipeline stages across DiT layers \
+                       (native backend only)")
+                .flag("native-depth", "0", "serve the pure-Rust native backend at this \
+                       stack depth (0 = PJRT artifact backend); enables the \
+                       swap-params admin verb")
                 .switch("no-batching", "run the batch-of-one worker pool instead of \
                          the continuous-batching executor"),
         )
@@ -334,14 +341,9 @@ fn cmd_analyze(args: &sla_dit::util::cli::Args) -> Result<()> {
 }
 
 fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
-    use sla_dit::coordinator::Server;
+    use sla_dit::attention::SlaConfig;
+    use sla_dit::coordinator::{Fleet, FleetServer, NativeSlaBackend, Server};
     apply_thread_knob(args)?;
-    let rt = Runtime::open(args.get_str("artifacts"))?;
-    let mut backend = ArtifactBackend::new(&rt, &args.get_str("variant"), 0)?;
-    let ckpt = args.get_str("ckpt");
-    if !ckpt.is_empty() {
-        backend.load_checkpoint(&ckpt)?;
-    }
     let addr = args.get_str("addr");
     let listener = std::net::TcpListener::bind(&addr)?;
     let max_active = args.get_usize("max-active")?;
@@ -359,6 +361,15 @@ fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
         None
     };
     let max_line_bytes = args.get_usize("max-line-kib")?.max(1) * 1024;
+    let replicas = args.get_usize("replicas")?.max(1);
+    let layer_shards = args.get_usize("layer-shards")?.max(1);
+    let native_depth = args.get_usize("native-depth")?;
+    anyhow::ensure!(
+        layer_shards == 1 || native_depth > 0,
+        "--layer-shards pipelines the native DiT stack; it requires --native-depth > 0"
+    );
+    let ckpt = args.get_str("ckpt");
+    let cfg = CoordinatorConfig { max_active, batch_per_tick, ..Default::default() };
     let mode = if batching {
         format!("continuous batching (<= {batch_per_tick} reqs/tick)")
     } else {
@@ -369,17 +380,101 @@ fn cmd_serve_tcp(args: &sla_dit::util::cli::Args) -> Result<()> {
          {accept_threads} connection handlers, {mode}, in-flight cap {max_active}, \
          queue depth {queue_depth})"
     );
-    let srv = Server::new(
-        &backend,
-        CoordinatorConfig { max_active, batch_per_tick, ..Default::default() },
-    )
-    .with_accept_threads(accept_threads)
-    .with_queue_depth(queue_depth)
-    .with_batching(batching)
-    .with_conn_timeout(conn_timeout)
-    .with_max_line_bytes(max_line_bytes);
+    // generic over the server's backend lifetime: the builder chain is
+    // applied to servers borrowing three different locals below
+    fn tune<'a>(
+        srv: Server<'a>,
+        accept_threads: usize,
+        queue_depth: usize,
+        batching: bool,
+        conn_timeout: Option<std::time::Duration>,
+        max_line_bytes: usize,
+    ) -> Server<'a> {
+        srv.with_accept_threads(accept_threads)
+            .with_queue_depth(queue_depth)
+            .with_batching(batching)
+            .with_conn_timeout(conn_timeout)
+            .with_max_line_bytes(max_line_bytes)
+    }
     let conns = args.get_usize("connections")?;
     let max = if conns == 0 { None } else { Some(conns) };
+    if native_depth > 0 {
+        // Pure-Rust fleet path (no PJRT artifacts): N identically-seeded
+        // native replicas behind the shared connection-stealing queue, with
+        // the swap-params admin verb live. The small model geometry mirrors
+        // `plan-report` — the fleet tier is about dispatch and hot-swap,
+        // not model scale.
+        let sla = SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() };
+        let backends = (0..replicas)
+            .map(|_| {
+                let mut b = NativeSlaBackend::with_depth(
+                    (2, 4, 4),
+                    4,
+                    6,
+                    2,
+                    4,
+                    native_depth,
+                    sla.clone(),
+                    7,
+                )
+                .with_layer_shards(layer_shards);
+                if !ckpt.is_empty() {
+                    b.load_checkpoint(&ckpt)?;
+                }
+                Ok(b)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fleet = Fleet::new(backends);
+        println!(
+            "fleet: {replicas} native replica(s), depth {native_depth}, \
+             {layer_shards} layer shard(s), swap-params admin enabled"
+        );
+        let fsrv = FleetServer::new(&fleet, cfg)
+            .configure(|s| {
+                tune(s, accept_threads, queue_depth, batching, conn_timeout, max_line_bytes)
+            })
+            .with_swap_admin();
+        let served = fsrv.serve(listener, max)?;
+        println!("served {served} requests");
+        println!("{}", fsrv.report().summary());
+        return Ok(());
+    }
+    let rt = Runtime::open(args.get_str("artifacts"))?;
+    let variant = args.get_str("variant");
+    if replicas > 1 {
+        // Artifact fleet: replicated dispatch without the native hot-swap
+        // seam (checkpoints still load at startup, per replica).
+        let backends = (0..replicas)
+            .map(|_| {
+                let mut b = ArtifactBackend::new(&rt, &variant, 0)?;
+                if !ckpt.is_empty() {
+                    b.load_checkpoint(&ckpt)?;
+                }
+                Ok(b)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fleet = Fleet::new(backends);
+        println!("fleet: {replicas} artifact replicas (swap-params needs --native-depth)");
+        let fsrv = FleetServer::new(&fleet, cfg).configure(|s| {
+            tune(s, accept_threads, queue_depth, batching, conn_timeout, max_line_bytes)
+        });
+        let served = fsrv.serve(listener, max)?;
+        println!("served {served} requests");
+        println!("{}", fsrv.report().summary());
+        return Ok(());
+    }
+    let mut backend = ArtifactBackend::new(&rt, &variant, 0)?;
+    if !ckpt.is_empty() {
+        backend.load_checkpoint(&ckpt)?;
+    }
+    let srv = tune(
+        Server::new(&backend, cfg),
+        accept_threads,
+        queue_depth,
+        batching,
+        conn_timeout,
+        max_line_bytes,
+    );
     let served = srv.serve(listener, max)?;
     println!("served {served} requests");
     println!("{}", srv.report().summary());

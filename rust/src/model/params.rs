@@ -292,6 +292,25 @@ impl ParamStore {
         }
         loaded
     }
+
+    /// Replace `name`'s tensor, or register it as a new leaf if absent.
+    /// Replacing with a different shape panics — a leaf's shape is part of
+    /// the model geometry and every consumer asserts on it.
+    pub fn upsert(&mut self, name: &str, t: HostTensor) {
+        match self.names.iter().position(|n| n == name) {
+            Some(i) => {
+                assert_eq!(
+                    self.tensors[i].shape, t.shape,
+                    "upsert cannot change the shape of {name}"
+                );
+                self.tensors[i] = t;
+            }
+            None => {
+                self.names.push(name.to_string());
+                self.tensors.push(t);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -324,6 +324,22 @@ impl DitStack {
         self.layers[li].engine.projs = projs;
     }
 
+    /// Adopt fine-tuned q/k/v/o attention weights for one layer (e.g. from
+    /// a `StackFineTuner` run with weight training enabled).
+    pub fn set_layer_attn_weights(&mut self, li: usize, wq: Mat, wk: Mat, wv: Mat, wo: Mat) {
+        let (c, hd, kvd) =
+            (self.channels, self.heads * self.head_dim, self.kv_heads * self.head_dim);
+        assert_eq!((wq.rows, wq.cols), (c, hd), "wq shape");
+        assert_eq!((wk.rows, wk.cols), (c, kvd), "wk shape");
+        assert_eq!((wv.rows, wv.cols), (c, kvd), "wv shape");
+        assert_eq!((wo.rows, wo.cols), (hd, c), "wo shape");
+        let lay = &mut self.layers[li];
+        lay.wq = wq;
+        lay.wk = wk;
+        lay.wv = wv;
+        lay.wo = wo;
+    }
+
     /// Install (or replace) layer `li`'s learnable mask router.
     pub fn set_router(&mut self, li: usize, router: Arc<MaskRouter>) {
         self.layers[li].router = Some(router);
@@ -741,53 +757,167 @@ impl DitStack {
         let b = hs.len();
         assert_eq!(keys.len(), b, "one stream key per batch item");
         assert_eq!(stamps.len(), b, "one step stamp per batch item");
-        let heads = self.heads;
         let mut hs = hs.to_vec();
         for li in 0..self.depth() {
-            let (q4, k4, v4) = self.project_layer(li, &hs, mods);
-            let n = q4.n;
-            let tm = n / self.layers[li].engine.cfg.bq;
-            let mut slots: Vec<Option<Arc<CompressedMask>>> = Vec::with_capacity(b * heads);
-            let mut missing: Vec<usize> = Vec::new();
-            for (bi, key) in keys.iter().enumerate() {
-                match cache.lookup_stamped(*key, li, heads, tm, stamps[bi]) {
-                    Some(ms) => slots.extend(ms.into_iter().map(Some)),
-                    None => {
-                        missing.push(bi);
-                        slots.extend((0..heads).map(|_| None));
-                    }
-                }
-            }
-            // routed layers resolve misses through the learnable router
-            // BEFORE the execution fan (the in-task fallback predicts the
-            // static Eq. 2-3 masks, which would bypass the router); the
-            // harvest below still stores whatever masks executed.
-            if let Some(rt) = &self.layers[li].router {
-                for &bi in &missing {
-                    let ms = rt.route_item(&self.layers[li].engine.cfg, &q4, &k4, bi);
-                    for (hi, m) in ms.into_iter().enumerate() {
-                        slots[bi * heads + hi] = Some(m);
-                    }
-                }
-            }
-            let engine = &self.layers[li].engine;
-            let (o4, masks) = if forward_only {
-                let lo = engine.forward_only_with(&q4, &k4, &v4, &slots);
-                (lo.o, lo.masks)
-            } else {
-                let out = engine.forward_with_opt(&q4, &k4, &v4, &slots);
-                let masks = out.masks();
-                (out.o, masks)
-            };
-            for &bi in &missing {
-                let ms: Vec<Arc<CompressedMask>> = (0..heads)
-                    .map(|hi| Arc::clone(&masks[bi * heads + hi]))
-                    .collect();
-                cache.store_stamped(keys[bi], li, &ms, tm, stamps[bi]);
-            }
-            self.apply_output(li, &mut hs, &o4);
+            self.serve_layer(li, &mut hs, mods, keys, stamps, cache, forward_only);
         }
         hs
+    }
+
+    /// One serving layer: cache lookups per item, router-resolved misses,
+    /// one batched engine call, miss harvest, residual output — the unit
+    /// both the layer-sequential and the layer-pipelined paths execute.
+    /// Per-item cache traffic happens in `bi` order, so any partition of a
+    /// batch into in-order chunks performs the identical op sequence per
+    /// (key, layer) entry.
+    fn serve_layer<C: ServingPlanCache>(
+        &self,
+        li: usize,
+        hs: &mut [Mat],
+        mods: &[f32],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+        cache: &mut C,
+        forward_only: bool,
+    ) {
+        let heads = self.heads;
+        let b = hs.len();
+        let (q4, k4, v4) = self.project_layer(li, hs, mods);
+        let n = q4.n;
+        let tm = n / self.layers[li].engine.cfg.bq;
+        let mut slots: Vec<Option<Arc<CompressedMask>>> = Vec::with_capacity(b * heads);
+        let mut missing: Vec<usize> = Vec::new();
+        for (bi, key) in keys.iter().enumerate() {
+            match cache.lookup_stamped(*key, li, heads, tm, stamps[bi]) {
+                Some(ms) => slots.extend(ms.into_iter().map(Some)),
+                None => {
+                    missing.push(bi);
+                    slots.extend((0..heads).map(|_| None));
+                }
+            }
+        }
+        // routed layers resolve misses through the learnable router
+        // BEFORE the execution fan (the in-task fallback predicts the
+        // static Eq. 2-3 masks, which would bypass the router); the
+        // harvest below still stores whatever masks executed.
+        if let Some(rt) = &self.layers[li].router {
+            for &bi in &missing {
+                let ms = rt.route_item(&self.layers[li].engine.cfg, &q4, &k4, bi);
+                for (hi, m) in ms.into_iter().enumerate() {
+                    slots[bi * heads + hi] = Some(m);
+                }
+            }
+        }
+        let engine = &self.layers[li].engine;
+        let (o4, masks) = if forward_only {
+            let lo = engine.forward_only_with(&q4, &k4, &v4, &slots);
+            (lo.o, lo.masks)
+        } else {
+            let out = engine.forward_with_opt(&q4, &k4, &v4, &slots);
+            let masks = out.masks();
+            (out.o, masks)
+        };
+        for &bi in &missing {
+            let ms: Vec<Arc<CompressedMask>> =
+                (0..heads).map(|hi| Arc::clone(&masks[bi * heads + hi])).collect();
+            cache.store_stamped(keys[bi], li, &ms, tm, stamps[bi]);
+        }
+        self.apply_output(li, hs, &o4);
+    }
+
+    /// Layer-sharded serving: the `L` layers are split into `stages`
+    /// contiguous slices, each owned by one worker thread, and the batch is
+    /// split into single-item micro-chunks that flow stage-to-stage through
+    /// channels — chunk `i` runs layers `[a_s, b_s)` on stage `s` while
+    /// chunk `i+1` occupies stage `s-1` (classic pipeline parallelism over
+    /// micro-batches). Every per-(stream, layer) plan-cache key is reused
+    /// unchanged, chunks traverse each stage in batch order, and items are
+    /// independent inside the batched engine call, so outputs and cache
+    /// counters are bitwise-identical to [`DitStack::forward_serving_shared`]
+    /// (pinned by tests). `stages` is clamped to the depth; `stages <= 1`
+    /// falls through to the sequential path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_serving_pipelined(
+        &self,
+        hs: &[Mat],
+        mods: &[f32],
+        keys: &[Option<u64>],
+        stamps: &[Option<u64>],
+        cache: &SharedPlanCache,
+        forward_only: bool,
+        stages: usize,
+    ) -> Vec<Mat> {
+        let stages = stages.min(self.depth());
+        if stages <= 1 || hs.len() <= 1 {
+            return self.forward_serving_shared(hs, mods, keys, stamps, cache, forward_only);
+        }
+        self.check_inputs(hs, mods);
+        let b = hs.len();
+        assert_eq!(keys.len(), b, "one stream key per batch item");
+        assert_eq!(stamps.len(), b, "one step stamp per batch item");
+        // contiguous layer ranges, sized as evenly as the division allows
+        let depth = self.depth();
+        let base = depth / stages;
+        let extra = depth % stages;
+        let mut ranges = Vec::with_capacity(stages);
+        let mut lo = 0usize;
+        for s in 0..stages {
+            let hi = lo + base + usize::from(s < extra);
+            ranges.push(lo..hi);
+            lo = hi;
+        }
+        let mut out: Vec<Option<Mat>> = (0..b).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            // stage s reads channel s and writes channel s+1; the feeder
+            // owns channel 0's sender, the collector channel `stages`'
+            // receiver. Single-item chunks + FIFO channels + serial stage
+            // loops keep the chunks in batch order at every stage.
+            let mut senders = Vec::with_capacity(stages + 1);
+            let mut receivers = Vec::with_capacity(stages + 1);
+            for _ in 0..=stages {
+                let (tx, rx) = std::sync::mpsc::channel::<(usize, Mat)>();
+                senders.push(Some(tx));
+                receivers.push(Some(rx));
+            }
+            let feed = senders[0].take().expect("feed sender");
+            let tail = receivers[stages].take().expect("tail receiver");
+            for (s, range) in ranges.iter().enumerate() {
+                let rx = receivers[s].take().expect("stage receiver");
+                let tx = senders[s + 1].take().expect("stage sender");
+                let range = range.clone();
+                scope.spawn(move || {
+                    let mut c = cache;
+                    for (bi, h) in rx {
+                        let mut item = [h];
+                        for li in range.clone() {
+                            self.serve_layer(
+                                li,
+                                &mut item,
+                                &mods[bi..bi + 1],
+                                &keys[bi..bi + 1],
+                                &stamps[bi..bi + 1],
+                                &mut c,
+                                forward_only,
+                            );
+                        }
+                        let [done] = item;
+                        // a dropped downstream stage only happens on panic
+                        // unwinding; the scope re-raises it either way
+                        let _ = tx.send((bi, done));
+                    }
+                });
+            }
+            for (bi, h) in hs.iter().enumerate() {
+                let _ = feed.send((bi, h.clone()));
+            }
+            drop(feed);
+            for (bi, h) in tail {
+                out[bi] = Some(h);
+            }
+        });
+        out.into_iter()
+            .map(|o| o.expect("every item traverses the pipeline"))
+            .collect()
     }
 
     /// The layer-looped single-engine reference: serial per-item loops and

@@ -362,6 +362,11 @@ pub struct StackFineTuner {
     /// Total (summed over layers) router cross-entropy per step; empty
     /// unless routing is enabled.
     pub router_losses: Vec<f32>,
+    /// Learning rate for the per-layer q/k/v/o attention weights
+    /// (`None` — the default — freezes them, preserving the historical
+    /// projections-only regime bitwise; see
+    /// [`StackFineTuner::with_attn_weight_lr`]).
+    pub attn_lr: Option<f32>,
 }
 
 impl StackFineTuner {
@@ -376,7 +381,19 @@ impl StackFineTuner {
             losses: Vec::new(),
             router_lr: 0.5,
             router_losses: Vec::new(),
+            attn_lr: None,
         }
+    }
+
+    /// Also descend every layer's q/k/v/o attention weights (the
+    /// `LayerGradients` `dwq/dwk/dwv/dwo` leaves, historically computed
+    /// but never stepped) with their own SGD learning rate. Tuned weights
+    /// persist per layer via
+    /// `NativeSlaBackend::set_layer_attn_weights` /
+    /// [`StackFineTuner::layer_attn_weights`].
+    pub fn with_attn_weight_lr(mut self, lr: f32) -> Self {
+        self.attn_lr = Some(lr);
+        self
     }
 
     /// Joint routing: install a fresh learnable [`MaskRouter`] on every
@@ -465,6 +482,19 @@ impl StackFineTuner {
                     *pv -= self.lr * gv;
                 }
             }
+            if let Some(alr) = self.attn_lr {
+                let lay = &mut self.stack.layers[li];
+                for (w, g) in [
+                    (&mut lay.wq, &lg.dwq),
+                    (&mut lay.wk, &lg.dwk),
+                    (&mut lay.wv, &lg.dwv),
+                    (&mut lay.wo, &lg.dwo),
+                ] {
+                    for (wv, &gv) in w.data.iter_mut().zip(&g.data) {
+                        *wv -= alr * gv;
+                    }
+                }
+            }
             if let Some(rg) = &lg.drouter {
                 // the planner's frozen plans keep replaying the masks the
                 // run started with (mask-frozen regime), so updating the
@@ -489,6 +519,14 @@ impl StackFineTuner {
     /// Layer `li`'s current (tuned) projections.
     pub fn layer_projs(&self, li: usize) -> Vec<Mat> {
         self.stack.layers[li].engine.projs.clone()
+    }
+
+    /// Layer `li`'s current (tuned) q/k/v/o attention weights — hand them
+    /// to `NativeSlaBackend::set_layer_attn_weights` to persist a
+    /// weight-training run through checkpoints.
+    pub fn layer_attn_weights(&self, li: usize) -> (Mat, Mat, Mat, Mat) {
+        let lay = &self.stack.layers[li];
+        (lay.wq.clone(), lay.wk.clone(), lay.wv.clone(), lay.wo.clone())
     }
 
     /// Write every layer's tuned projections back into `target` (the stack
@@ -668,6 +706,46 @@ mod tests {
                 ft.stack.layers[li].engine.projs[0].data
             );
         }
+    }
+
+    #[test]
+    fn attn_weight_lr_steps_weights_and_default_stays_frozen() {
+        use crate::model::DitStack;
+        let (n, c, heads, d, depth) = (32, 8, 2, 4, 2);
+        let stack = DitStack::random(cfg(8), depth, heads, d, c, 70);
+        let mut rng = Rng::new(71);
+        let hs: Vec<Mat> = vec![Mat::randn(n, c, &mut rng)];
+        let mods = vec![1.0f32];
+        // default regime: the q/k/v/o weights stay bitwise frozen (the
+        // historical projections-only fine-tune), even though their
+        // gradients ride in every backward sweep
+        let mut frozen = NativeFineTuner::for_stack(&stack, 1.0);
+        for _ in 0..3 {
+            frozen.step(&hs, &mods);
+        }
+        for li in 0..depth {
+            assert_eq!(frozen.stack.layers[li].wq.data, stack.layers[li].wq.data);
+            assert_eq!(frozen.stack.layers[li].wo.data, stack.layers[li].wo.data);
+        }
+        // opt-in: dwq/dwk/dwv/dwo now step with their own learning rate.
+        // (Layer 0's weights see gradient from its own injection and from
+        // downstream layers' — the robust place to assert movement.)
+        let mut tuned = NativeFineTuner::for_stack(&stack, 1.0).with_attn_weight_lr(0.5);
+        let mut last = 0.0f32;
+        for _ in 0..10 {
+            last = tuned.step(&hs, &mods);
+        }
+        assert!(last.is_finite());
+        let (wq, _, _, _) = tuned.layer_attn_weights(0);
+        assert_ne!(wq.data, stack.layers[0].wq.data, "layer 0 wq must move");
+        let moved = (0..depth).any(|li| {
+            let (q, k, v, o) = tuned.layer_attn_weights(li);
+            q.data != stack.layers[li].wq.data
+                || k.data != stack.layers[li].wk.data
+                || v.data != stack.layers[li].wv.data
+                || o.data != stack.layers[li].wo.data
+        });
+        assert!(moved, "attn weights untouched despite attn_lr");
     }
 
     #[test]

@@ -39,7 +39,9 @@ pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a corrupted latency) sorts to the end
+    // instead of panicking the telemetry path
+    xs.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (xs.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -135,6 +137,18 @@ mod tests {
         assert_eq!(percentile(&mut xs, 0.0), 1.0);
         assert_eq!(percentile(&mut xs, 100.0), 4.0);
         assert!((percentile(&mut xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_sample() {
+        // regression: partial_cmp().unwrap() used to panic on any NaN
+        let mut xs = vec![3.0, f64::NAN, 1.0, 2.0];
+        let p0 = percentile(&mut xs, 0.0);
+        assert_eq!(p0, 1.0);
+        // NaN sorts last under total_cmp, so p100 is NaN — but no panic
+        assert!(percentile(&mut xs, 100.0).is_nan());
+        // finite ranks below the NaN tail stay finite
+        assert!(percentile(&mut xs, 50.0).is_finite());
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Fleet-tier integration: N replica servers behind one shared
+//! connection-stealing queue must be invisible in the samples.
+//!
+//! What these tests pin down: (1) a 1-replica fleet is f64-exactly the
+//! existing single server; (2) an N-replica fleet serves every request
+//! bitwise identically to independent single-replica runs of its request
+//! partition (samples depend only on `(prompt_seed, steps, cfg)` — never
+//! on which replica stole the connection); (3) checkpoint hot-swap is
+//! atomic per replica — an in-flight request finishes on the parameters
+//! it started with, unperturbed, and the very next request sees the new
+//! ones; (4) a poisoned replica costs its own requests only.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use sla_dit::attention::SlaConfig;
+use sla_dit::coordinator::{
+    Coordinator, CoordinatorConfig, Fleet, FleetServer, NativeSlaBackend, Server,
+    VelocityBackend,
+};
+use sla_dit::runtime::HostTensor;
+use sla_dit::util::json::Json;
+use sla_dit::util::rng::Rng;
+
+fn native(seed: u64) -> NativeSlaBackend {
+    NativeSlaBackend::with_depth(
+        (2, 4, 4),
+        4,
+        6,
+        2,
+        4,
+        2,
+        SlaConfig { bq: 8, bkv: 8, kh_pct: 25.0, kl_pct: 25.0, ..Default::default() },
+        seed,
+    )
+    .with_plan_refresh(4)
+}
+
+/// One client thread per entry; each sends its `(seed, steps, cfg)`
+/// requests on one connection (responses in request order) and returns
+/// every `(seed, parsed response)`, sorted by seed over all clients.
+fn run_clients(addr: SocketAddr, per_client: Vec<Vec<(u64, usize, f64)>>) -> Vec<(u64, Json)> {
+    let handles: Vec<_> = per_client
+        .into_iter()
+        .enumerate()
+        .map(|(ci, reqs)| {
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(s.try_clone().unwrap());
+                let mut out = Vec::new();
+                for (seed, steps, cfg) in reqs {
+                    let line = format!(
+                        "{{\"id\": {ci}, \"prompt_seed\": {seed}, \"steps\": {steps}, \
+                         \"cfg\": {cfg}}}\n"
+                    );
+                    s.write_all(line.as_bytes()).unwrap();
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).unwrap();
+                    out.push((seed, Json::parse(resp.trim()).unwrap()));
+                }
+                s.write_all(b"quit\n").unwrap();
+                out
+            })
+        })
+        .collect();
+    let mut got: Vec<(u64, Json)> =
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    got.sort_by_key(|(seed, _)| *seed);
+    got
+}
+
+#[test]
+fn one_replica_fleet_matches_plain_server_bitwise() {
+    let jobs: Vec<Vec<(u64, usize, f64)>> = (0..3u64)
+        .map(|ci| (0..2u64).map(|r| (10 * ci + r, 3, 2.0)).collect())
+        .collect();
+    // plain server reference
+    let single = native(7);
+    let srv = Server::new(&single, CoordinatorConfig { max_active: 4, ..Default::default() })
+        .with_accept_threads(3)
+        .with_queue_depth(8);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let jobs2 = jobs.clone();
+    let clients = std::thread::spawn(move || run_clients(addr, jobs2));
+    let served_single = srv.serve(listener, Some(3)).unwrap();
+    let plain = clients.join().unwrap();
+    assert_eq!(served_single, 6);
+    let plain_rep = srv.report();
+
+    // the same workload through a 1-replica fleet (identically seeded)
+    let fleet = Fleet::new(vec![native(7)]);
+    let fsrv = FleetServer::new(
+        &fleet,
+        CoordinatorConfig { max_active: 4, ..Default::default() },
+    )
+    .configure(|s| s.with_accept_threads(3).with_queue_depth(8));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let jobs2 = jobs.clone();
+    let clients = std::thread::spawn(move || run_clients(addr, jobs2));
+    let served_fleet = fsrv.serve(listener, Some(3)).unwrap();
+    let fleeted = clients.join().unwrap();
+    assert_eq!(served_fleet, 6);
+
+    for ((ps, p), (fs, f)) in plain.iter().zip(&fleeted) {
+        assert_eq!(ps, fs);
+        assert_eq!(p.get("ok"), &Json::Bool(true), "seed {ps}");
+        assert_eq!(p.get("mean"), f.get("mean"), "seed {ps}");
+        assert_eq!(p.get("std"), f.get("std"), "seed {ps}");
+        assert_eq!(
+            p.get("temporal_consistency"),
+            f.get("temporal_consistency"),
+            "seed {ps}"
+        );
+    }
+    let frep = fsrv.report();
+    assert_eq!(frep.per_replica.len(), 1);
+    assert_eq!(frep.per_replica[0].requests, 6);
+    assert_eq!(frep.per_replica[0].generation, 0);
+    assert_eq!(frep.merged.stats.len(), plain_rep.stats.len());
+    // scheduling-invariant counters agree with the plain server exactly
+    assert_eq!(frep.merged.nfe, plain_rep.nfe);
+    assert_eq!(frep.merged.batch_entries, plain_rep.batch_entries);
+    assert_eq!(frep.merged.plan_hits, plain_rep.plan_hits);
+    assert_eq!(frep.merged.plan_misses, plain_rep.plan_misses);
+    assert_eq!(frep.merged.plan_refreshes, plain_rep.plan_refreshes);
+    assert_eq!(frep.merged.conn_errors, 0);
+    assert!(frep.summary().starts_with("fleet[replicas=1"), "{}", frep.summary());
+}
+
+#[test]
+fn n_replica_fleet_matches_partitioned_sequential_runs() {
+    let seeds: [u64; 6] = [3, 14, 15, 92, 65, 35];
+    let fleet = Fleet::new(vec![native(7), native(7), native(7)]);
+    let fsrv = FleetServer::new(
+        &fleet,
+        CoordinatorConfig { max_active: 2, ..Default::default() },
+    )
+    .configure(|s| s.with_accept_threads(2).with_queue_depth(4));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let jobs: Vec<Vec<(u64, usize, f64)>> =
+        seeds.iter().map(|&s| vec![(s, 3, 2.0)]).collect();
+    let clients = std::thread::spawn(move || run_clients(addr, jobs));
+    let served = fsrv.serve(listener, Some(6)).unwrap();
+    let got = clients.join().unwrap();
+    assert_eq!(served, 6);
+
+    // partitioned reference: each request through a fresh identically-
+    // seeded single replica (requests are independent after stream
+    // eviction, so per-request fresh backends ARE the partitioned runs)
+    for (seed, resp) in &got {
+        assert_eq!(resp.get("ok"), &Json::Bool(true), "seed {seed}");
+        let ref_backend = native(7);
+        let ref_coord = Coordinator::new(&ref_backend, CoordinatorConfig::default());
+        let x = ref_coord.generate_one(*seed, 3, 2.0).unwrap();
+        let n = x.data.len() as f64;
+        let mean = x.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = x
+            .data
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / n;
+        assert_eq!(resp.get("mean").as_f64(), Some(mean), "seed {seed}");
+        assert_eq!(resp.get("std").as_f64(), Some(var.sqrt()), "seed {seed}");
+    }
+    let frep = fsrv.report();
+    assert_eq!(frep.per_replica.len(), 3);
+    let req_sum: usize = frep.per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(req_sum, 6);
+    assert_eq!(frep.merged.stats.len(), 6);
+    assert_eq!(frep.merged.conn_errors, 0);
+    assert_eq!(frep.swaps(), 0);
+    assert!(frep.summary().starts_with("fleet[replicas=3"), "{}", frep.summary());
+}
+
+#[test]
+fn hot_swap_waits_for_in_flight_streams_and_flips_atomically() {
+    let fleet = Fleet::new(vec![native(7)]);
+    let r = fleet.replica(0);
+    let mut rng = Rng::new(42);
+    let x = HostTensor::new(vec![32, 4], rng.normal_vec(32 * 4));
+    let c = HostTensor::new(vec![6], rng.normal_vec(6));
+    // keyed reference trajectory on a fresh old-params backend (plan
+    // replay across calls is part of what must not be perturbed)
+    let old_ref = native(7);
+
+    let first = r.velocity_batch_keyed(&[(&x, 0.9, &c)], &[Some(7)]).unwrap();
+    let first_ref = old_ref.velocity_batch_keyed(&[(&x, 0.9, &c)], &[Some(7)]).unwrap();
+    assert_eq!(first[0].data, first_ref[0].data);
+    assert_eq!(r.live_streams(), 1, "stream 7 is mid-denoise");
+
+    // stage new parameters (a differently-seeded model) while in flight
+    let donor = native(8);
+    let targets = fleet.stage_params(donor.params());
+    assert_eq!(targets, vec![1]);
+    assert!(r.swap_pending(), "swap must wait for the live stream");
+    assert_eq!(r.generation(), 0);
+    assert!(!r.wait_generation(1, Duration::from_millis(50)), "must not flip early");
+
+    // the in-flight request's next step still runs on the OLD parameters
+    let mid = r.velocity_batch_keyed(&[(&x, 0.5, &c)], &[Some(7)]).unwrap();
+    let mid_ref = old_ref.velocity_batch_keyed(&[(&x, 0.5, &c)], &[Some(7)]).unwrap();
+    assert_eq!(mid[0].data, mid_ref[0].data, "mid-request step perturbed by staged swap");
+    assert!(r.swap_pending());
+
+    // request ends -> the staged swap applies at the drain point
+    r.end_request(7);
+    assert!(!r.swap_pending());
+    assert_eq!(r.generation(), 1);
+    assert!(fleet.wait_generations(&targets, Duration::from_secs(1)));
+
+    // the next call serves the NEW model, bitwise
+    let after = r.velocity(&x, 0.9, &c).unwrap();
+    let new_ref = donor.velocity(&x, 0.9, &c).unwrap();
+    assert_eq!(after.data, new_ref.data);
+    assert_ne!(after.data, first[0].data, "swap must change the served function");
+}
+
+#[test]
+fn admin_swap_params_flips_between_requests_over_tcp() {
+    // checkpoint carrying a different model (differently-seeded weights)
+    let donor = native(8);
+    let path = std::env::temp_dir()
+        .join(format!("sla_fleet_swap_ckpt_{}", std::process::id()));
+    donor.save_checkpoint(&path).unwrap();
+
+    let fleet = Fleet::new(vec![native(7)]);
+    let fsrv = FleetServer::new(&fleet, CoordinatorConfig::default()).with_swap_admin();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let ckpt_line = format!(
+        "{{\"admin\": \"swap-params\", \"ckpt\": \"{}\"}}\n",
+        path.display()
+    );
+    let client = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut lines = Vec::new();
+        let send = |s: &mut TcpStream, reader: &mut BufReader<TcpStream>,
+                    lines: &mut Vec<String>, msg: &str| {
+            s.write_all(msg.as_bytes()).unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            lines.push(resp);
+        };
+        send(&mut s, &mut reader, &mut lines,
+             "{\"id\": 1, \"prompt_seed\": 5, \"steps\": 3, \"cfg\": 1.0}\n");
+        send(&mut s, &mut reader, &mut lines, &ckpt_line);
+        send(&mut s, &mut reader, &mut lines, "{\"admin\": \"generation\"}\n");
+        send(&mut s, &mut reader, &mut lines,
+             "{\"id\": 2, \"prompt_seed\": 5, \"steps\": 3, \"cfg\": 1.0}\n");
+        s.write_all(b"quit\n").unwrap();
+        lines
+    });
+    let served = fsrv.serve(listener, Some(1)).unwrap();
+    let lines = client.join().unwrap();
+    // every answered line counts toward `served`, admin verbs included
+    assert_eq!(served, 4, "4 answered lines on the connection");
+
+    let before = Json::parse(lines[0].trim()).unwrap();
+    assert_eq!(before.get("ok"), &Json::Bool(true), "{}", lines[0]);
+    let swap = Json::parse(lines[1].trim()).unwrap();
+    assert_eq!(swap.get("ok"), &Json::Bool(true), "{}", lines[1]);
+    assert_eq!(swap.get("loaded").as_f64().map(|v| v > 0.0), Some(true));
+    let gens = Json::parse(lines[2].trim()).unwrap();
+    let g = gens.get("generations").as_arr().unwrap();
+    assert_eq!(g.len(), 1);
+    assert_eq!(g[0].as_f64(), Some(1.0), "swap applied while idle");
+    let after = Json::parse(lines[3].trim()).unwrap();
+    assert_eq!(after.get("ok"), &Json::Bool(true), "{}", lines[3]);
+
+    // request 1 == old params; request 2 == params after loading the ckpt
+    let old_backend = native(7);
+    let old_coord = Coordinator::new(&old_backend, CoordinatorConfig::default());
+    let x_old = old_coord.generate_one(5, 3, 1.0).unwrap();
+    let mut new_backend = native(7);
+    new_backend.load_checkpoint(&path).unwrap();
+    let new_coord = Coordinator::new(&new_backend, CoordinatorConfig::default());
+    let x_new = new_coord.generate_one(5, 3, 1.0).unwrap();
+    let stat = |x: &HostTensor| {
+        let n = x.data.len() as f64;
+        x.data.iter().map(|&v| v as f64).sum::<f64>() / n
+    };
+    assert_eq!(before.get("mean").as_f64(), Some(stat(&x_old)));
+    assert_eq!(after.get("mean").as_f64(), Some(stat(&x_new)));
+    assert_ne!(
+        before.get("mean").as_f64(),
+        after.get("mean").as_f64(),
+        "swap must change the served samples"
+    );
+    let frep = fsrv.report();
+    assert_eq!(frep.per_replica[0].generation, 1);
+    assert_eq!(frep.swaps(), 1);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Mock that panics on the initial noise of one specific
+/// `(coordinator seed, prompt_seed)` pair — the same "one poisoned
+/// request" idiom the single-server tests use, replicated fleet-wide.
+struct PanickyMock {
+    poison_x0: f32,
+}
+
+impl PanickyMock {
+    fn poisoning(coord_seed: u64, prompt_seed: u64) -> Self {
+        let x0 = Rng::new(coord_seed ^ prompt_seed).normal_vec(16 * 2)[0];
+        PanickyMock { poison_x0: x0 }
+    }
+}
+
+impl VelocityBackend for PanickyMock {
+    fn velocity(
+        &self,
+        x: &HostTensor,
+        t: f32,
+        _c: &HostTensor,
+    ) -> anyhow::Result<HostTensor> {
+        assert!(
+            x.data[0].to_bits() != self.poison_x0.to_bits(),
+            "poisoned request hit the backend"
+        );
+        let mut v = x.clone();
+        for d in &mut v.data {
+            *d = *d * 0.1 + t;
+        }
+        Ok(v)
+    }
+    fn shape(&self) -> (usize, usize, usize) {
+        (16, 2, 4)
+    }
+    fn variant(&self) -> &str {
+        "panicky-mock"
+    }
+    fn video(&self) -> (usize, usize, usize) {
+        (2, 2, 4)
+    }
+}
+
+#[test]
+fn poisoned_replica_costs_its_own_requests_only() {
+    let coord_seed = CoordinatorConfig::default().seed;
+    let fleet = Fleet::new(vec![
+        PanickyMock::poisoning(coord_seed, 666),
+        PanickyMock::poisoning(coord_seed, 666),
+        PanickyMock::poisoning(coord_seed, 666),
+    ]);
+    let fsrv = FleetServer::new(&fleet, CoordinatorConfig::default())
+        .configure(|s| s.with_accept_threads(2));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let seeds: [u64; 6] = [1, 2, 3, 666, 4, 5];
+    let jobs: Vec<Vec<(u64, usize, f64)>> =
+        seeds.iter().map(|&s| vec![(s, 2, 1.0)]).collect();
+    let clients = std::thread::spawn(move || run_clients(addr, jobs));
+    let served = fsrv.serve(listener, Some(6)).unwrap();
+    let got = clients.join().unwrap();
+    assert_eq!(served, 6, "every request line is answered, poisoned included");
+    for (seed, resp) in &got {
+        if *seed == 666 {
+            assert_eq!(resp.get("ok"), &Json::Bool(false), "{resp}");
+            assert!(
+                resp.get("error").as_str().unwrap().contains("panicked"),
+                "{resp}"
+            );
+        } else {
+            assert_eq!(resp.get("ok"), &Json::Bool(true), "seed {seed}: {resp}");
+        }
+    }
+    // whichever replica absorbed the panic, the fleet recorded the other
+    // five successes and stayed serviceable throughout
+    let frep = fsrv.report();
+    assert_eq!(frep.merged.stats.len(), 5);
+    assert!(frep.summary().starts_with("fleet[replicas=3"), "{}", frep.summary());
+}
